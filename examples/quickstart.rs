@@ -1,0 +1,76 @@
+//! Quickstart: the NxFP public API in five minutes.
+//!
+//! Covers: configuring formats, direct-cast quantization of a tensor,
+//! per-technique error ablation, packed storage + footprint accounting,
+//! and the on-the-fly dequantization hot path (LUT + fused GEMV).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nxfp::dequant::{dequantize_packed, gemv_packed, DequantLut};
+use nxfp::formats::packed::PackedMatrix;
+use nxfp::formats::{BaseFormat, NxConfig};
+use nxfp::models::{synth_weights, ModelProfile};
+use nxfp::quant::{fake_quant, quantize_matrix};
+use nxfp::tensor::stats::{mse, sqnr_db};
+use nxfp::util::rng::Rng;
+
+fn main() {
+    println!("== nxfp quickstart ==\n");
+
+    // 1. Make some LLM-like weights (Llama3-profile synthetic tensor).
+    let profile = ModelProfile::by_name("Llama3-8B").unwrap();
+    let w = synth_weights(&profile, 64, 1024);
+    println!("weights: {}x{} (synthetic {} profile)", w.rows, w.cols, profile.name);
+
+    // 2. Direct-cast one row under different formats and compare error.
+    println!("\nper-format quantization error on one row:");
+    let row = w.row(0);
+    for cfg in [
+        NxConfig::bfp(4),
+        NxConfig::mxfp(4),
+        NxConfig::nxfp_nm(4),
+        NxConfig::nxfp_nm_am(4),
+        NxConfig::nxfp(4), // NM + AM + CR
+        NxConfig::mxfp(6),
+    ] {
+        let q = fake_quant(row, &cfg);
+        println!(
+            "  {:<18} mse {:.3e}   sqnr {:>5.1} dB   eff bits {:.2}",
+            cfg.name(),
+            mse(row, &q),
+            sqnr_db(row, &q),
+            cfg.effective_bits()
+        );
+    }
+
+    // 3. Quantize the whole matrix and pack it for deployment.
+    let cfg = NxConfig::nxfp(4);
+    let q = quantize_matrix(&w, &cfg);
+    let packed = PackedMatrix::pack(w.rows, w.cols, &cfg, &q.blocks);
+    let fp16_bytes = w.len() * 2;
+    println!(
+        "\npacked {} : {} B (FP16 would be {} B -> {:.1}% footprint)",
+        cfg.name(),
+        packed.footprint_bytes(),
+        fp16_bytes,
+        100.0 * packed.footprint_bytes() as f64 / fp16_bytes as f64
+    );
+
+    // 4. On-the-fly dequantization (Fig. 7): LUT decode of the packed form.
+    let lut = DequantLut::new(&cfg);
+    let back = dequantize_packed(&packed, &lut, cfg.base == BaseFormat::Mx);
+    println!("dequantized tensor mse: {:.3e}", mse(&w.data, &back.data));
+
+    // 5. Fused dequant+GEMV — weights never materialize in f32.
+    let mut rng = Rng::seeded(1);
+    let x: Vec<f32> = (0..w.cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut y = vec![0.0f32; w.rows];
+    gemv_packed(&packed, &lut, cfg.base == BaseFormat::Mx, &x, &mut y);
+    let mut y_ref = vec![0.0f32; w.rows];
+    for r in 0..w.rows {
+        y_ref[r] = back.row(r).iter().zip(&x).map(|(&a, &b)| a * b).sum();
+    }
+    println!("fused gemv vs dequant-then-gemv mse: {:.3e}", mse(&y, &y_ref));
+
+    println!("\nnext: `cargo run --release --example train_and_quantize` for the full pipeline");
+}

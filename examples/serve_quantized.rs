@@ -1,0 +1,79 @@
+//! Serving demo: the threaded coordinator answers batched generation
+//! requests through the AOT `decode_step`, with the KV cache stored in
+//! packed NxFP4 between steps and dequantized on the fly (paper §6).
+//! Compares KV-format footprints and reports latency/throughput.
+//!
+//! Requires `artifacts/model.ckpt` (run the train_and_quantize example
+//! first). Run: `cargo run --release --example serve_quantized`
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nxfp::coordinator::server::ServerHandle;
+use nxfp::coordinator::GenRequest;
+use nxfp::formats::NxConfig;
+use nxfp::models::corpus::Probe;
+use nxfp::models::{Checkpoint, GrammarSpec, LmSpec};
+
+fn main() -> Result<()> {
+    let spec = LmSpec::small();
+    let ckpt_path = Path::new("artifacts/model.ckpt");
+    anyhow::ensure!(
+        ckpt_path.exists(),
+        "artifacts/model.ckpt missing — run `cargo run --release --example train_and_quantize` first"
+    );
+    let ck = Checkpoint::load(ckpt_path)?;
+    let gspec = GrammarSpec::default_for_vocab(spec.vocab);
+    let probes = Probe::generate(&gspec, 12, 2024);
+
+    for (label, kv_cfg) in [
+        ("KV FP32 (baseline)", None),
+        ("KV NxFP5", Some(NxConfig::nxfp(5))),
+        ("KV NxFP4", Some(NxConfig::nxfp(4))),
+    ] {
+        println!("\n== {label} ==");
+        let server = ServerHandle::spawn(
+            PathBuf::from("artifacts"),
+            spec,
+            ck.clone(),
+            kv_cfg,
+            4,
+            Duration::from_millis(5),
+        );
+        let t0 = std::time::Instant::now();
+        for (i, p) in probes.iter().enumerate() {
+            server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new: 24 });
+        }
+        let mut latencies = Vec::new();
+        for _ in 0..probes.len() {
+            let resp = server.recv().expect("server dropped");
+            latencies.push(resp.latency);
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown()?;
+        latencies.sort();
+        println!(
+            "  {} requests, {} tokens in {:.2?}  ({:.1} tok/s, {} decode steps)",
+            m.requests,
+            m.tokens_generated,
+            wall,
+            m.tokens_generated as f64 / wall.as_secs_f64(),
+            m.decode_steps
+        );
+        println!(
+            "  latency p50 {:?}  p99 {:?}",
+            latencies[latencies.len() / 2],
+            latencies[latencies.len() - 1]
+        );
+        if m.kv_bits_fp16 > 0 {
+            println!(
+                "  KV footprint: {} KiB packed vs {} KiB FP16 ({:.1}% saved)",
+                m.kv_bits_peak / 8 / 1024,
+                m.kv_bits_fp16 / 8 / 1024,
+                m.kv_savings() * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! END-TO-END DRIVER (deliverable (b) / EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//! 1. **Train** the in-repo transformer LM (~3.4M params) for a few hundred
+//!    steps on the synthetic grammar corpus, driving the AOT-compiled JAX
+//!    `train_step` from Rust and logging the loss curve.
+//! 2. **Direct-cast quantize** the trained weights into BFP / MxFP / NxFP at
+//!    4/5/6 bits (the paper's Table 1 setting) with the Rust quantizer.
+//! 3. **Evaluate** held-out perplexity for every format through the AOT
+//!    `eval_step`, and weight+KV perplexity through the Pallas-backed
+//!    `eval_step_kvq_*` artifacts.
+//!
+//! The trained checkpoint is saved to `artifacts/model.ckpt` and reused by
+//! the paper-figure benches. Run: `cargo run --release --example train_and_quantize`
+//! (optionally `NXFP_TRAIN_STEPS=400`).
+
+use anyhow::Result;
+use std::path::Path;
+
+use nxfp::bench_util::Table;
+use nxfp::eval::{perplexity, quantize_checkpoint};
+use nxfp::formats::NxConfig;
+use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec};
+use nxfp::runtime::Runtime;
+use nxfp::train::{TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let spec = LmSpec::small();
+    let steps: u32 = std::env::var("NXFP_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let corpus = Corpus::generate(GrammarSpec::default_for_vocab(spec.vocab), 400_000, 40_000, 1234);
+    let mut rt = Runtime::cpu("artifacts")?;
+    println!("== nxfp end-to-end driver ==");
+    println!("platform      : {}", rt.platform());
+    println!("model         : {} params ({} layers, d={})",
+             spec.param_count(), spec.n_layers, spec.d_model);
+    println!("corpus        : {} train / {} eval tokens", corpus.train.len(), corpus.eval.len());
+    println!("train steps   : {steps}");
+
+    // ---- 1. train ----------------------------------------------------
+    let ckpt_path = Path::new("artifacts/model.ckpt");
+    let ck = if ckpt_path.exists() && std::env::var("NXFP_RETRAIN").is_err() {
+        println!("\n[1/3] checkpoint exists, skipping training (set NXFP_RETRAIN=1 to retrain)");
+        Checkpoint::load(ckpt_path)?
+    } else {
+        println!("\n[1/3] training (loss curve):");
+        let cfg = TrainConfig { batch: 16, steps, log_every: 10, seed: 42 };
+        let t0 = std::time::Instant::now();
+        let init = Checkpoint::init(&spec, cfg.seed);
+        let mut trainer = Trainer::new(&mut rt, spec, &init, &cfg)?;
+        trainer.train(&corpus, &cfg, |step, loss| {
+            println!("  step {step:>5}  loss {loss:.4}");
+        })?;
+        let ck = trainer.checkpoint()?;
+        ck.save(ckpt_path)?;
+        println!("  trained {} steps in {:.1?} ({:.2} steps/s), saved to {ckpt_path:?}",
+                 steps, t0.elapsed(), steps as f64 / t0.elapsed().as_secs_f64());
+        ck
+    };
+
+    // ---- 2+3. quantize every format and evaluate ----------------------
+    println!("\n[2/3] direct-cast quantization + held-out perplexity (weight-only):");
+    let eval_step = rt.load("eval_step")?;
+    let quantizable = spec.quantizable();
+    let fp16 = perplexity(&eval_step, &ck, &corpus, spec.seq_len, 8)?;
+    let mut table = Table::new(&["bits", "format", "ppl", "Δ vs FP16", "eff.bits"]);
+    table.row(&["16".into(), "FP16".into(), format!("{:.4}", fp16.ppl()), "—".into(), "16".into()]);
+    let mut results = vec![("FP16".to_string(), 16.0, fp16.ppl())];
+    for bits in [6u8, 5, 4] {
+        for cfg in [
+            NxConfig::bfp(bits),
+            NxConfig::mxfp(bits),
+            NxConfig::nxfp_nm(bits),
+            NxConfig::nxfp_nm_am(bits),
+            NxConfig::nxfp(bits),
+        ] {
+            let qck = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let p = perplexity(&eval_step, &qck, &corpus, spec.seq_len, 8)?;
+            table.row(&[
+                bits.to_string(),
+                cfg.name(),
+                format!("{:.4}", p.ppl()),
+                format!("{:+.4}", p.ppl() - fp16.ppl()),
+                format!("{:.2}", cfg.effective_bits()),
+            ]);
+            results.push((cfg.name(), cfg.effective_bits(), p.ppl()));
+        }
+    }
+    table.print();
+
+    println!("\n[3/3] weight + KV-cache quantization (Pallas kvq artifacts):");
+    let mut kv_table = Table::new(&["bits", "format", "ppl (W+KV)", "Δ vs FP16"]);
+    for bits in [6u8, 5, 4] {
+        for (label, artifact, cfg) in [
+            ("BFP", format!("eval_step_kvq_bfp{bits}"), NxConfig::bfp(bits)),
+            ("MxFP", format!("eval_step_kvq_mxfp{bits}"), NxConfig::mxfp(bits)),
+            ("NxFP", format!("eval_step_kvq_nxfp{bits}"), NxConfig::nxfp(bits)),
+        ] {
+            let step = rt.load(&artifact)?;
+            let qck = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let p = perplexity(&step, &qck, &corpus, spec.seq_len, 8)?;
+            kv_table.row(&[
+                bits.to_string(),
+                format!("{label}{bits}"),
+                format!("{:.4}", p.ppl()),
+                format!("{:+.4}", p.ppl() - fp16.ppl()),
+            ]);
+        }
+    }
+    kv_table.print();
+
+    // sanity summary for EXPERIMENTS.md
+    let get = |name: &str| results.iter().find(|(n, ..)| n.contains(name)).map(|r| r.2);
+    if let (Some(mx4), Some(nx4)) = (get("MxFP4"), get("NxFP4 (NM+AM+CR)")) {
+        println!("\nheadline: NxFP4 improves ppl by {:.3} over MxFP4 (paper: up to 0.64)",
+                 mx4 - nx4);
+    }
+    println!("done.");
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT lowering: jit every step function, lower to HLO **text**, write
+artifacts/*.hlo.txt, and dump golden cross-check vectors from the NumPy
+oracle for the Rust test suite.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the rust `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--tiny] [--skip-kvq]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# batch sizes baked into each artifact (the rust drivers must match;
+# rust reads these from artifacts/manifest.txt)
+TRAIN_BATCH = 16
+EVAL_BATCH = 8
+DECODE_BATCH = 4
+
+KVQ_CONFIGS = {
+    "bfp4": ref.NxConfig.bfp(4),
+    "mxfp4": ref.NxConfig.mxfp(4),
+    "nxfp4": ref.NxConfig.nxfp(4),
+    "bfp5": ref.NxConfig.bfp(5),
+    "mxfp5": ref.NxConfig.mxfp(5),
+    "nxfp5": ref.NxConfig.nxfp(5),
+    "bfp6": ref.NxConfig.bfp(6),
+    "mxfp6": ref.NxConfig.mxfp(6),
+    "nxfp6": ref.NxConfig.nxfp(6),
+}
+
+# configs exercised by the golden cross-check (rust <-> numpy oracle)
+GOLDEN_CONFIGS = {
+    "bfp4": ref.NxConfig.bfp(4),
+    "bfp5": ref.NxConfig.bfp(5),
+    "bfp6": ref.NxConfig.bfp(6),
+    "mxfp4": ref.NxConfig.mxfp(4),
+    "mxfp5": ref.NxConfig.mxfp(5),
+    "mxfp6": ref.NxConfig.mxfp(6),
+    "nxfp4": ref.NxConfig.nxfp(4),
+    "nxfp5": ref.NxConfig.nxfp(5),
+    "nxfp6": ref.NxConfig.nxfp(6),
+    "nxfp4_nm": ref.NxConfig.nxfp_nm(4),
+    "nxfp4_nm_am": ref.NxConfig.nxfp_nm_am(4),
+    "mxfp8": ref.NxConfig(bits=8, elem_mx=(4, 3), base_mx=True),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_structs(spec: model.LmSpec):
+    shapes = model.param_shapes(spec)
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in model.param_names(spec)]
+
+
+def lower_and_write(name, fn, args, out_dir):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text")
+
+
+def write_golden(out_dir, n_blocks=24, ks=(32, 17, 1, 64)):
+    """Golden fake-quant vectors from the NumPy oracle. Format per line:
+    `<cfg_id> <k> <in_hex...> <out_hex...>` with f32 little-endian hex words.
+    Verified bit-for-bit by rust/tests/golden_cross_check.rs."""
+    rng = np.random.default_rng(20240713)
+    path = os.path.join(out_dir, "golden_fakequant.txt")
+    lines = []
+    for cfg_id, cfg in GOLDEN_CONFIGS.items():
+        for k in ks:
+            for i in range(n_blocks):
+                # vary dynamic range and shape of the distribution
+                scale = np.float32(2.0 ** rng.integers(-12, 12))
+                if i % 4 == 3:
+                    v = (rng.standard_t(2, size=k) * scale).astype(np.float32)
+                else:
+                    v = rng.normal(0, scale, size=k).astype(np.float32)
+                if i % 7 == 0:
+                    v[rng.integers(0, k)] = 0.0
+                if i == 5:
+                    v[:] = 0.0
+                cfg_k = ref.NxConfig(**{**cfg.__dict__, "block_size": k})
+                out = ref.fake_quant(v, cfg_k)
+                ih = "".join(f"{w:08x}" for w in v.view(np.uint32))
+                oh = "".join(f"{w:08x}" for w in out.view(np.uint32))
+                lines.append(f"{cfg_id} {k} {ih} {oh}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  golden_fakequant.txt: {len(lines)} vectors")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--tiny", action="store_true", help="tiny spec (fast tests)")
+    ap.add_argument("--skip-kvq", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    spec = model.LmSpec.tiny() if args.tiny else model.LmSpec.small()
+    n = len(model.param_names(spec))
+    params = param_structs(spec)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    tok_train = jax.ShapeDtypeStruct((TRAIN_BATCH, spec.seq_len + 1), i32)
+    tok_eval = jax.ShapeDtypeStruct((EVAL_BATCH, spec.seq_len + 1), i32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    print(f"lowering artifacts to {out_dir} (spec={spec})")
+    lower_and_write("train_step", model.make_train_step(spec),
+                    params + params + params + [scalar, tok_train], out_dir)
+    lower_and_write("eval_step", model.make_eval_step(spec),
+                    params + [tok_eval], out_dir)
+    lower_and_write("score_step", model.make_score_step(spec),
+                    params + [tok_eval], out_dir)
+    if not args.skip_kvq:
+        for fname, cfg in KVQ_CONFIGS.items():
+            lower_and_write(f"eval_step_kvq_{fname}",
+                            model.make_eval_step(spec, kv_cfg=cfg),
+                            params + [tok_eval], out_dir)
+    L, S, D = spec.n_layers, spec.seq_len, spec.d_model
+    decode_args = params + [
+        jax.ShapeDtypeStruct((DECODE_BATCH,), i32),
+        jax.ShapeDtypeStruct((DECODE_BATCH,), i32),
+        jax.ShapeDtypeStruct((DECODE_BATCH, L, S, D), f32),
+        jax.ShapeDtypeStruct((DECODE_BATCH, L, S, D), f32),
+    ]
+    lower_and_write("decode_step", model.make_decode_step(spec), decode_args, out_dir)
+
+    write_golden(out_dir)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"spec vocab={spec.vocab} d_model={spec.d_model} "
+                f"n_layers={spec.n_layers} n_heads={spec.n_heads} "
+                f"d_ff={spec.d_ff} seq_len={spec.seq_len}\n")
+        f.write(f"train_batch {TRAIN_BATCH}\neval_batch {EVAL_BATCH}\n"
+                f"decode_batch {DECODE_BATCH}\n")
+        f.write(f"params {n}\n")
+        f.write("kvq " + " ".join(KVQ_CONFIGS) + "\n")
+    print("  manifest.txt written")
+
+
+if __name__ == "__main__":
+    main()

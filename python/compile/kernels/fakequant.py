@@ -1,0 +1,207 @@
+"""L1 Pallas kernel: block fake-quantization (quantize + on-the-fly
+dequantize) for BFP / MxFP / NxFP, used inside the L2 graph to quantize the
+KV cache (paper §7.4) and exported standalone for kernel benchmarking.
+
+TPU mapping of the paper's GPU/off-the-shelf decode flow (DESIGN.md §7):
+
+* one VMEM tile holds ``(block_rows, k)`` values — the shared-exponent max
+  is a lane reduction over the k axis (no warp shuffles needed);
+* element projection is **arithmetic RTNE** (exponent-field extraction +
+  scale-round-rescale), not a table lookup: no gathers, no L-wide
+  broadcasts, pure VPU element ops;
+* the dequantized tile feeds the MXU matmul downstream (step ⑥ of Fig. 7).
+
+Must be lowered with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+
+IMPORTANT compile-target note: an earlier table-based projection
+(|a - L| argmin + gather) executed correctly under jaxlib but was
+**miscompiled by xla_extension 0.5.1** (the PJRT the Rust runtime binds)
+for tables with ≥16 entries. The arithmetic form below avoids the
+offending argmax/gather pattern entirely and is verified against the
+oracle both under jaxlib (pytest) and under 0.5.1 (rust e2e test).
+
+Numerics: identical algorithm to ``ref.py`` (and the Rust crate), except
+SSE accumulation for the Algorithm-1 candidate search runs in f32 with
+XLA's reduction order, so the AM/NM *choice* can flip on knife-edge blocks;
+the pytest comparator treats a block as correct if its values match the
+oracle OR its block MSE is as good (see python/tests/test_kernel.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# rows of blocks processed per pallas grid step
+BLOCK_ROWS = 64
+
+
+def _candidates(cfg: ref.NxConfig):
+    """Static (fmt_mx, BlockFormat) candidate list for a config."""
+    fmts = [True, False] if cfg.enable_am else [cfg.base_mx]
+    return [(f, ref.block_format(cfg, f)) for f in fmts]
+
+
+def _exp2i(e):
+    """2^e for integer e in [-126, 127], exact, via bit assembly."""
+    e = jnp.clip(e, -126, 127)
+    return jax.lax.bitcast_convert_type(((e + 127) << 23).astype(jnp.int32), jnp.float32)
+
+
+def _floor_log2(x):
+    """floor(log2(x)) for positive normal f32 via exponent-field extraction
+    (safe where jnp.floor(jnp.log2(x)) misrounds near powers of two)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _project(a, bf: ref.BlockFormat):
+    """Map scaled values `a` to the nearest representable element value —
+    round-to-nearest, ties to even mantissa code, saturating at the top
+    level. Arithmetic mirror of ref.project_magnitude (jnp.round is RTNE,
+    and even integer mantissas are exactly the even level indices).
+
+    The recycled level (if any) competes with a strict `<`, losing ties to
+    the grid (same rule as the oracle/rust).
+    """
+    ebits, mbits = _elem_of(bf)
+    top = jnp.float32(bf.top)
+    if ebits == 0:
+        # BFP: integer grid with RTNE, saturate at ±top
+        val = jnp.clip(jnp.round(a), -top, top)
+    else:
+        bias = (1 << (ebits - 1)) - 1
+        absa = jnp.abs(a)
+        # element exponent clamped to the subnormal floor
+        e = _floor_log2(jnp.maximum(absa, jnp.float32(1e-30)))
+        e = jnp.maximum(e, 1 - bias)
+        step = _exp2i(e - mbits)          # grid step within this binade
+        inv_step = _exp2i(mbits - e)
+        mag = jnp.round(absa * inv_step) * step
+        mag = jnp.minimum(mag, top)       # saturate (covers E4M3/E5M2 too)
+        val = jnp.where(a < 0.0, -mag, mag)
+    if bf.recycle is not None:
+        r = jnp.float32(bf.recycle)
+        val = jnp.where(jnp.abs(a - r) < jnp.abs(a - val), r, val)
+    return val
+
+
+def _elem_of(bf: ref.BlockFormat):
+    """Recover (ebits, mbits) from a BlockFormat (static python ints)."""
+    n = len(bf.lv)
+    if bf.lv[1] == 1.0 and bf.lv[-1] == np.float32(n - 1):
+        # integer grid -> BFP element
+        return 0, int(np.log2(n))
+    # minifloat: levels per binade = 2^mbits; bits = log2(#codes incl. specials)
+    for ebits in range(1, 6):
+        for mbits in range(0, 4):
+            cand = ref.levels(ebits, mbits)
+            if len(cand) == n and np.array_equal(cand, bf.lv):
+                return ebits, mbits
+    raise ValueError("unrecognized level table")
+
+
+def _fakequant_math(v, cfg: ref.NxConfig):
+    """Shared math for the pallas kernel body and the pure-jnp path:
+    fake-quantize rows of `v` (…, k) as independent blocks."""
+    maxabs = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    nonzero = maxabs > 0.0
+    safe_max = jnp.where(nonzero, maxabs, 1.0)
+    e = jnp.clip(_floor_log2(safe_max), ref.E_SHARED_MIN, ref.E_SHARED_MAX)
+    best_sse = jnp.full(v.shape[:-1] + (1,), jnp.inf, dtype=jnp.float32)
+    best_back = jnp.zeros_like(v)
+    for fmt_mx, bf in _candidates(cfg):
+        x_scale = _exp2i(e + bf.offset)
+        if cfg.enable_nm:
+            cap = jnp.float32(bf.top) * x_scale
+            ratio = safe_max / cap
+            m_cand = jnp.clip(jnp.floor((ratio - 1.0) * 4.0 + 0.5), 0.0, 3.0)
+            m_cand = jnp.where(ratio > 1.0, m_cand, 0.0)
+            nanos = [m_cand, jnp.zeros_like(m_cand)]
+        else:
+            nanos = [jnp.zeros_like(x_scale)]
+        for nano in nanos:
+            scale = (1.0 + nano / 4.0) * x_scale
+            inv = 1.0 / scale
+            back = _project(v * inv, bf) * scale
+            sse = jnp.sum(jnp.square(v - back), axis=-1, keepdims=True)
+            take = sse < best_sse
+            best_sse = jnp.where(take, sse, best_sse)
+            best_back = jnp.where(take, back, best_back)
+    return jnp.where(nonzero, best_back, 0.0)
+
+
+def _fakequant_kernel(x_ref, o_ref, *, cfg: ref.NxConfig):
+    """Pallas kernel body: tile (BLOCK_ROWS, k) of independent blocks."""
+    o_ref[...] = _fakequant_math(x_ref[...], cfg)
+
+
+def fakequant_blocks(x, cfg: ref.NxConfig):
+    """Fake-quantize `x` of shape (n_blocks, k) row-wise via the Pallas
+    kernel (interpret mode). n_blocks must be a multiple of BLOCK_ROWS or
+    smaller than it (pad upstream with zeros — zero blocks are exact)."""
+    n, k = x.shape
+    rows = min(BLOCK_ROWS, n)
+    if n % rows != 0:
+        raise ValueError(f"n_blocks {n} not a multiple of tile rows {rows}")
+    kernel = functools.partial(_fakequant_kernel, cfg=cfg)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, k), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def fakequant_tensor(x, cfg: ref.NxConfig):
+    """Fake-quantize an arbitrary-shaped tensor whose last dimension is a
+    multiple of the block size (blocks never straddle the last dim)."""
+    k = cfg.block_size
+    shape = x.shape
+    if shape[-1] % k != 0:
+        raise ValueError(f"last dim {shape[-1]} not a multiple of block {k}")
+    flat = x.reshape(-1, k)
+    # pad the block count up to a tile multiple with zero blocks (exact)
+    n = flat.shape[0]
+    rows = min(BLOCK_ROWS, n)
+    pad = (-n) % rows
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, k), jnp.float32)], axis=0)
+    out = fakequant_blocks(flat, cfg)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)
+
+
+def fakequant_ref_jnp(x, cfg: ref.NxConfig):
+    """Pure-jnp (non-pallas) version of the same computation, used as a
+    tracing cross-check in tests."""
+    k = cfg.block_size
+    shape = x.shape
+    return _fakequant_math(x.reshape(-1, k), cfg).reshape(shape)
+
+
+def vmem_estimate_bytes(cfg: ref.NxConfig, k: int = 32) -> int:
+    """Static VMEM footprint estimate of one kernel tile (DESIGN.md §7):
+    input + output tiles plus ~6 tile-sized temporaries for the widest
+    candidate path (arithmetic projection needs no level table)."""
+    tile = BLOCK_ROWS * k * 4
+    return 8 * tile
+
+
+if __name__ == "__main__":
+    # smoke: all 4/5/6-bit formats on random data, compare against the oracle
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 2.0, size=(128, 32)).astype(np.float32)
+    for bits in (4, 5, 6):
+        for cfg in (ref.NxConfig.bfp(bits), ref.NxConfig.mxfp(bits), ref.NxConfig.nxfp(bits)):
+            got = np.asarray(fakequant_blocks(jnp.asarray(x), cfg))
+            want = np.stack([ref.fake_quant(r, cfg) for r in x])
+            print(f"{cfg.name():<18} max |pallas - oracle|: {np.abs(got - want).max()}")

@@ -1,0 +1,283 @@
+"""Pure-NumPy oracle for the NxFP / MxFP / BFP block formats.
+
+This file is a **bit-exact mirror of the Rust implementation**
+(`rust/src/formats/`): same level tables, same round-to-nearest-ties-to-even
+-index projection, same NanoMantissa candidate rule, same Adaptive
+Microexponent / Code Recycling semantics, and the same f32 arithmetic with
+sequential f64 SSE accumulation for the Algorithm-1 candidate search.
+`aot.py` dumps golden vectors from this oracle that the Rust test suite
+(`rust/tests/golden_cross_check.rs`) verifies bit-for-bit, and the Pallas
+kernel (`fakequant.py`) is validated against it by pytest.
+"""
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import numpy as np
+
+E_SHARED_MIN = -127
+E_SHARED_MAX = 127
+
+
+def levels(ebits: int, mbits: int) -> np.ndarray:
+    """Sorted positive magnitudes of the element format (float32).
+
+    ``ebits == 0`` denotes the BFP all-mantissa element (integer grid).
+    Non-finite codes (E4M3 NaN, E5M2 inf/NaN) are excluded.
+    """
+    if ebits == 0:
+        return np.arange(1 << mbits, dtype=np.float32)
+    bias = (1 << (ebits - 1)) - 1
+    out = []
+    for code in range(1 << (ebits + mbits)):
+        exp_field = code >> mbits
+        m_field = code & ((1 << mbits) - 1)
+        frac = np.float32(m_field) / np.float32(1 << mbits)
+        if ebits == 4 and mbits == 3 and code == (1 << (ebits + mbits)) - 1:
+            break  # OCP E4M3 NaN code
+        if ebits == 5 and exp_field == (1 << ebits) - 1:
+            break  # E5M2 inf/NaN codes
+        if exp_field == 0:
+            v = frac * np.float32(2.0 ** (1 - bias))
+        else:
+            v = (np.float32(1.0) + frac) * np.float32(2.0 ** (exp_field - bias))
+        out.append(np.float32(v))
+    return np.array(out, dtype=np.float32)
+
+
+def mx_default_elem(bits: int) -> tuple:
+    """OCP default minifloat (ebits, mbits) per total bitwidth."""
+    return {3: (2, 0), 4: (2, 1), 5: (2, 2), 6: (2, 3), 7: (3, 3), 8: (4, 3)}[bits]
+
+
+def scale_exp_offset(ebits: int, mbits: int) -> int:
+    """Block scale is 2^(E_shared + offset); mirror of rust."""
+    if ebits == 0:
+        return 1 - mbits
+    top = levels(ebits, mbits)[-1]
+    return -int(np.floor(np.log2(float(top))))
+
+
+@dataclass(frozen=True)
+class NxConfig:
+    """Mirror of rust `NxConfig` (the subset the oracle/kernels need)."""
+
+    bits: int
+    elem_mx: tuple  # (ebits, mbits) of the Mx path
+    base_mx: bool   # base format when AM disabled
+    block_size: int = 32
+    enable_nm: bool = False
+    enable_am: bool = False
+    enable_cr: bool = False
+    # recycle target: "half_min", ("mid_pair", i), or a float (scaled domain)
+    recycle: object = "half_min"
+
+    @staticmethod
+    def bfp(bits: int) -> "NxConfig":
+        return NxConfig(bits=bits, elem_mx=mx_default_elem(max(bits, 3)), base_mx=False)
+
+    @staticmethod
+    def mxfp(bits: int) -> "NxConfig":
+        return NxConfig(bits=bits, elem_mx=mx_default_elem(bits), base_mx=True)
+
+    @staticmethod
+    def nxfp(bits: int) -> "NxConfig":
+        return replace(NxConfig.mxfp(bits), enable_nm=True, enable_am=True, enable_cr=True)
+
+    @staticmethod
+    def nxfp_nm(bits: int) -> "NxConfig":
+        return replace(NxConfig.mxfp(bits), enable_nm=True)
+
+    @staticmethod
+    def nxfp_nm_am(bits: int) -> "NxConfig":
+        return replace(NxConfig.mxfp(bits), enable_nm=True, enable_am=True)
+
+    def name(self) -> str:
+        if not (self.enable_nm or self.enable_am or self.enable_cr):
+            return f"MxFP{self.bits}" if self.base_mx else f"BFP{self.bits}"
+        techs = [t for t, on in
+                 [("NM", self.enable_nm), ("AM", self.enable_am), ("CR", self.enable_cr)] if on]
+        return f"NxFP{self.bits} ({'+'.join(techs)})"
+
+
+def resolve_recycle(target, lv: np.ndarray) -> np.float32:
+    """Signed scaled-domain value decoded for the recycled -0 code."""
+    if target == "half_min":
+        return np.float32(-(lv[1] / np.float32(2.0)))
+    if isinstance(target, tuple) and target[0] == "mid_pair":
+        i = target[1]
+        return np.float32(-((lv[i] + lv[i + 1]) / np.float32(2.0)))
+    return np.float32(target)
+
+
+@dataclass
+class BlockFormat:
+    lv: np.ndarray
+    offset: int
+    bits: int
+    recycle: Optional[np.float32]
+
+    @property
+    def top(self) -> np.float32:
+        return self.lv[-1]
+
+
+def block_format(cfg: NxConfig, mx_path: bool) -> BlockFormat:
+    if mx_path:
+        e, m = cfg.elem_mx
+    else:
+        e, m = 0, cfg.bits - 1
+    lv = levels(e, m)
+    rec = resolve_recycle(cfg.recycle, lv) if cfg.enable_cr else None
+    return BlockFormat(lv=lv, offset=scale_exp_offset(e, m), bits=1 + e + m, recycle=rec)
+
+
+def exp2i(e: int) -> np.float32:
+    """2^e as f32 with gradual underflow (mirror of rust `util::exp2i`)."""
+    if -126 <= e <= 127:
+        return np.uint32((e + 127) << 23).view(np.float32)
+    if e < -126:
+        if e < -149:
+            return np.float32(0.0)
+        return np.uint32(1 << (e + 149)).view(np.float32)
+    return np.float32(np.inf)
+
+
+def floor_log2(x: float) -> Optional[int]:
+    """floor(log2(|x|)) — exact via frexp, handles subnormals."""
+    a = abs(float(x))
+    if a == 0.0 or not np.isfinite(a):
+        return None
+    _, e = np.frexp(a)  # a = m * 2^e with m in [0.5, 1)
+    return int(e) - 1
+
+
+def project_magnitude(lv: np.ndarray, a: np.float32) -> int:
+    """Nearest level index, ties to even index, saturating (mirror of rust)."""
+    if np.isnan(a):
+        return len(lv) - 1
+    i = int(np.searchsorted(lv, a, side="left"))  # first idx with lv[i] >= a
+    if i == 0:
+        return 0
+    if i == len(lv):
+        return len(lv) - 1
+    dl = np.float32(a - lv[i - 1])
+    dh = np.float32(lv[i] - a)
+    if dl < dh:
+        return i - 1
+    if dh < dl:
+        return i
+    return i - 1 if (i - 1) % 2 == 0 else i
+
+
+def encode(bf: BlockFormat, a: np.float32) -> int:
+    """Scaled-domain value -> sign-magnitude code (mirror of rust)."""
+    sign = bool(a < 0.0)
+    idx = project_magnitude(bf.lv, np.float32(abs(a)))
+    grid = np.float32(-bf.lv[idx]) if sign else bf.lv[idx]
+    if bf.recycle is not None:
+        if abs(np.float32(a - bf.recycle)) < abs(np.float32(a - grid)):
+            return 1 << (bf.bits - 1)  # sign=1, magnitude=0
+    if idx == 0:
+        return 0
+    return (int(sign) << (bf.bits - 1)) | idx
+
+
+def decode(bf: BlockFormat, code: int) -> np.float32:
+    sign_bit = 1 << (bf.bits - 1)
+    idx = code & (sign_bit - 1)
+    neg = bool(code & sign_bit)
+    if neg and idx == 0:
+        return bf.recycle if bf.recycle is not None else np.float32(0.0)
+    idx = min(idx, len(bf.lv) - 1)
+    v = bf.lv[idx]
+    return np.float32(-v) if neg else v
+
+
+def shared_exponent(v: np.ndarray) -> Optional[int]:
+    finite = v[np.isfinite(v)]
+    if finite.size == 0:
+        return None
+    e = floor_log2(float(np.max(np.abs(finite))))
+    if e is None:
+        return None
+    return max(E_SHARED_MIN, min(E_SHARED_MAX, e))
+
+
+def nano_candidate(vmax: np.float32, bf: BlockFormat, e_shared: int) -> int:
+    """Fig. 4 rule: round the block max against the format's top level.
+
+    All arithmetic is f32 to match rust bit-for-bit.
+    """
+    cap = np.float32(bf.top * exp2i(e_shared + bf.offset))
+    if cap <= 0.0 or not np.isfinite(cap):
+        return 0
+    ratio = np.float32(np.float32(vmax) / cap)
+    if ratio <= np.float32(1.0):
+        return 0
+    # rust f32::round is half-away-from-zero; ratio > 1 here so +0.5/floor
+    r = np.float32((ratio - np.float32(1.0)) * np.float32(4.0))
+    return max(0, min(3, int(np.floor(float(r) + 0.5))))
+
+
+def quantize_block_fixed(v: np.ndarray, bf: BlockFormat, e_shared: int, nano: int):
+    """Returns (codes, back, sse): f32 element math, sequential f64 SSE —
+    exactly like rust ``quantize_block_fixed``."""
+    scale = np.float32(np.float32(1.0 + nano / 4.0) * exp2i(e_shared + bf.offset))
+    inv = np.float32(np.float32(1.0) / scale)
+    codes = np.zeros(len(v), dtype=np.uint8)
+    back = np.zeros(len(v), dtype=np.float32)
+    sse = 0.0
+    for i, x in enumerate(np.asarray(v, dtype=np.float32)):
+        c = encode(bf, np.float32(x * inv))
+        b = np.float32(decode(bf, c) * scale)
+        codes[i] = c
+        back[i] = b
+        d = float(np.float32(x - b))
+        sse += d * d
+    return codes, back, sse
+
+
+def quantize_block(v: np.ndarray, cfg: NxConfig):
+    """Algorithm 1 (generalized to the ablation toggles); mirror of rust
+    ``quantize_block``. Returns dict(e, nano, fmt_mx, codes, back, sse)."""
+    v = np.asarray(v, dtype=np.float32)
+    e = shared_exponent(v)
+    if e is None:
+        return dict(e=E_SHARED_MIN, nano=0, fmt_mx=cfg.base_mx or cfg.enable_am,
+                    codes=np.zeros(len(v), np.uint8),
+                    back=np.zeros(len(v), np.float32), sse=0.0)
+    vmax = np.float32(np.max(np.abs(v[np.isfinite(v)])))
+    fmts = [True, False] if cfg.enable_am else [cfg.base_mx]
+    best = None
+    for fmt_mx in fmts:
+        bf = block_format(cfg, fmt_mx)
+        if cfg.enable_nm:
+            m = nano_candidate(vmax, bf, e)
+            nanos = [m, 0] if m != 0 else [0]
+        else:
+            nanos = [0]
+        for nano in nanos:
+            codes, back, sse = quantize_block_fixed(v, bf, e, nano)
+            if best is None or sse < best["sse"]:
+                best = dict(e=e, nano=nano, fmt_mx=fmt_mx, codes=codes, back=back, sse=sse)
+    return best
+
+
+def fake_quant(v: np.ndarray, cfg: NxConfig) -> np.ndarray:
+    """Quantize-dequantize a 1-D array block-by-block (oracle version of
+    rust ``quant::fake_quant``)."""
+    v = np.asarray(v, dtype=np.float32)
+    out = np.zeros_like(v)
+    k = cfg.block_size
+    for start in range(0, len(v), k):
+        out[start:start + k] = quantize_block(v[start:start + k], cfg)["back"]
+    return out
+
+
+def footprint_bits(cfg: NxConfig, n: int) -> int:
+    """Bit-true storage cost (mirror of rust ``NxConfig::footprint_bits``)."""
+    k = cfg.block_size
+    blocks = (n + k - 1) // k
+    overhead = 8 + (2 if cfg.enable_nm else 0) + (1 if cfg.enable_am else 0)
+    return blocks * overhead + n * cfg.bits

@@ -1,0 +1,252 @@
+"""L2: the in-repo transformer LM (decoder-only, pre-LN, learned positions)
+and its train / eval / score / kv-quantized-eval / decode step functions.
+
+**Contract with the Rust L3 driver** (see `rust/src/models/transformer.rs`
+`LmSpec::param_specs` and `rust/src/train`): parameters travel as a flat
+list of 2-D f32 arrays in the order produced by `param_names(spec)`; norm
+gains are shaped (1, d). Step signatures:
+
+* train_step(params…, m…, v…, t, tokens[B,S+1]) -> (params…, m…, v…, loss)
+* eval_step(params…, tokens[B,S+1])             -> (sum_nll, count)
+* score_step(params…, tokens[B,S+1])            -> (nll[B,S],)
+* eval_step_kvq_<fmt>(params…, tokens[B,S+1])   -> (sum_nll, count)
+* decode_step(params…, tok[B], pos[B], k_cache[B,L,S,D], v_cache[B,L,S,D])
+    -> (logits[B,V], k_new[B,L,D], v_new[B,L,D])
+
+Python never runs at serving/training time — these functions exist to be
+AOT-lowered to HLO text by `aot.py`.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fakequant, ref
+
+
+@dataclass(frozen=True)
+class LmSpec:
+    """Mirror of rust `LmSpec`."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @staticmethod
+    def small() -> "LmSpec":
+        return LmSpec()
+
+    @staticmethod
+    def tiny() -> "LmSpec":
+        return LmSpec(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16)
+
+
+# Adam hyperparameters (traced into the artifact)
+LR = 2.5e-3
+WARMUP = 30.0
+BETA1, BETA2, EPS = 0.9, 0.95, 1e-9
+
+
+def param_names(spec: LmSpec):
+    """Flattening order — must equal rust `LmSpec::param_specs`."""
+    names = ["embed", "pos_embed"]
+    for l in range(spec.n_layers):
+        names += [f"l{l}.ln1", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv",
+                  f"l{l}.wo", f"l{l}.ln2", f"l{l}.w1", f"l{l}.w2"]
+    names += ["lnf", "unembed"]
+    return names
+
+
+def param_shapes(spec: LmSpec):
+    d, v, f, s = spec.d_model, spec.vocab, spec.d_ff, spec.seq_len
+    shapes = {"embed": (v, d), "pos_embed": (s, d), "lnf": (1, d), "unembed": (d, v)}
+    for l in range(spec.n_layers):
+        shapes[f"l{l}.ln1"] = (1, d)
+        shapes[f"l{l}.ln2"] = (1, d)
+        for w in ["wq", "wk", "wv", "wo"]:
+            shapes[f"l{l}.{w}"] = (d, d)
+        shapes[f"l{l}.w1"] = (d, f)
+        shapes[f"l{l}.w2"] = (f, d)
+    return shapes
+
+
+def unflatten(spec: LmSpec, flat):
+    return dict(zip(param_names(spec), flat))
+
+
+def _rmsnorm(x, g):
+    # g is (1, d)
+    return x * g[0] * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + 1e-6)
+
+
+def _attention(spec: LmSpec, p, l, x, kv_quant=None):
+    """Causal self-attention over a full sequence. `kv_quant` optionally
+    fake-quantizes K and V (the paper's KV-cache compression) via the L1
+    Pallas kernel."""
+    b, s, d = x.shape
+    h, hd = spec.n_heads, spec.head_dim
+    q = x @ p[f"l{l}.wq"]
+    k = x @ p[f"l{l}.wk"]
+    v = x @ p[f"l{l}.wv"]
+    if kv_quant is not None:
+        k = kv_quant(k)
+        v = kv_quant(v)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[f"l{l}.wo"]
+
+
+def forward(spec: LmSpec, flat_params, tokens, kv_quant=None):
+    """Token ids (B, S) -> logits (B, S, V)."""
+    p = unflatten(spec, flat_params)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][None, :s]
+    for l in range(spec.n_layers):
+        x = x + _attention(spec, p, l, _rmsnorm(x, p[f"l{l}.ln1"]), kv_quant)
+        hmid = jax.nn.gelu(_rmsnorm(x, p[f"l{l}.ln2"]) @ p[f"l{l}.w1"])
+        x = x + hmid @ p[f"l{l}.w2"]
+    return _rmsnorm(x, p["lnf"]) @ p["unembed"]
+
+
+def _nll(spec: LmSpec, flat_params, tokens, kv_quant=None):
+    """Per-position negative log-likelihood (B, S) of predicting
+    tokens[:, 1:] from tokens[:, :-1]."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(spec, flat_params, x, kv_quant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(spec: LmSpec, flat_params, tokens):
+    return jnp.mean(_nll(spec, flat_params, tokens))
+
+
+def make_train_step(spec: LmSpec):
+    """(params…, m…, v…, t, tokens) -> (params…, m…, v…, loss) with AdamW
+    (no decay) and linear warmup. Flat-list in/out, tuple-returned."""
+
+    n = len(param_names(spec))
+
+    def train_step(*args):
+        params = list(args[:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        t = args[3 * n]
+        tokens = args[3 * n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(spec, ps, tokens))(params)
+        lr = LR * jnp.minimum(1.0, t / WARMUP)
+        new_p, new_m, new_v = [], [], []
+        for pi, gi, mi, vi in zip(params, grads, m, v):
+            mi = BETA1 * mi + (1.0 - BETA1) * gi
+            vi = BETA2 * vi + (1.0 - BETA2) * jnp.square(gi)
+            mhat = mi / (1.0 - BETA1 ** t)
+            vhat = vi / (1.0 - BETA2 ** t)
+            new_p.append(pi - lr * mhat / (jnp.sqrt(vhat) + EPS))
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return train_step
+
+
+def make_eval_step(spec: LmSpec, kv_cfg: ref.NxConfig = None, use_pallas=True):
+    """(params…, tokens) -> (sum_nll, count). With `kv_cfg`, K/V activations
+    are fake-quantized through the Pallas kernel (the paper's weight+KV
+    setting — weights are quantized on the Rust side before being fed)."""
+
+    n = len(param_names(spec))
+    kv_quant = None
+    if kv_cfg is not None:
+        fq = fakequant.fakequant_tensor if use_pallas else fakequant.fakequant_ref_jnp
+        kv_quant = lambda x: fq(x, kv_cfg)
+
+    def eval_step(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        nll = _nll(spec, params, tokens, kv_quant)
+        return (jnp.sum(nll), jnp.float32(nll.size))
+
+    return eval_step
+
+
+def make_score_step(spec: LmSpec):
+    """(params…, tokens) -> (nll[B, S],) for multiple-choice scoring."""
+
+    n = len(param_names(spec))
+
+    def score_step(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (_nll(spec, params, tokens),)
+
+    return score_step
+
+
+def make_decode_step(spec: LmSpec):
+    """Single-token decode with an external KV cache (owned, quantized and
+    dequantized by the Rust coordinator — paper §6 deployment).
+
+    (params…, tok[B], pos[B], k_cache[B,L,S,D], v_cache[B,L,S,D])
+      -> (logits[B,V], k_new[B,L,D], v_new[B,L,D])
+
+    Attention covers cache rows `< pos[b]` plus the current token.
+    """
+
+    n = len(param_names(spec))
+    L, S, D = spec.n_layers, spec.seq_len, spec.d_model
+    h, hd = spec.n_heads, spec.head_dim
+
+    def decode_step(*args):
+        params = list(args[:n])
+        tok, pos, k_cache, v_cache = args[n], args[n + 1], args[n + 2], args[n + 3]
+        p = unflatten(spec, params)
+        b = tok.shape[0]
+        x = p["embed"][tok] + p["pos_embed"][jnp.clip(pos, 0, S - 1)]
+        k_rows, v_rows = [], []
+        for l in range(L):
+            xn = _rmsnorm(x, p[f"l{l}.ln1"])
+            q = xn @ p[f"l{l}.wq"]
+            k = xn @ p[f"l{l}.wk"]
+            v = xn @ p[f"l{l}.wv"]
+            k_rows.append(k)
+            v_rows.append(v)
+            qh = q.reshape(b, h, hd)
+            kh_c = k_cache[:, l].reshape(b, S, h, hd).transpose(0, 2, 1, 3)
+            vh_c = v_cache[:, l].reshape(b, S, h, hd).transpose(0, 2, 1, 3)
+            scores_c = jnp.einsum("bhd,bhsd->bhs", qh, kh_c) / jnp.sqrt(jnp.float32(hd))
+            mask = jnp.arange(S)[None, :] < pos[:, None]          # (b, S)
+            scores_c = jnp.where(mask[:, None, :], scores_c, -1e30)
+            kh = k.reshape(b, h, hd)
+            vh = v.reshape(b, h, hd)
+            score_self = jnp.einsum("bhd,bhd->bh", qh, kh)[..., None] / jnp.sqrt(
+                jnp.float32(hd))
+            scores = jnp.concatenate([scores_c, score_self], axis=-1)  # (b,h,S+1)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhs,bhsd->bhd", probs[..., :S], vh_c) \
+                + probs[..., S:] * vh
+            attn = ctx.reshape(b, D) @ p[f"l{l}.wo"]
+            x = x + attn
+            hmid = jax.nn.gelu(_rmsnorm(x, p[f"l{l}.ln2"]) @ p[f"l{l}.w1"])
+            x = x + hmid @ p[f"l{l}.w2"]
+        logits = _rmsnorm(x, p["lnf"]) @ p["unembed"]
+        k_new = jnp.stack(k_rows, axis=1)  # (b, L, D)
+        v_new = jnp.stack(v_rows, axis=1)
+        return (logits, k_new, v_new)
+
+    return decode_step

@@ -1,0 +1,141 @@
+"""L1 kernel correctness: the Pallas fake-quant kernel vs the NumPy oracle.
+
+The CORE correctness signal for the compute hot-spot. The kernel accumulates
+the Algorithm-1 SSE in f32 with XLA reduction order, so on knife-edge blocks
+the AM/NM *choice* may differ from the oracle's sequential-f64 choice; a
+block is accepted if its values match the oracle OR its MSE is at least as
+good (both choices are then valid minimizers up to float rounding).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fakequant, ref
+
+CONFIGS = {
+    "bfp4": ref.NxConfig.bfp(4),
+    "mxfp4": ref.NxConfig.mxfp(4),
+    "mxfp6": ref.NxConfig.mxfp(6),
+    "nxfp4": ref.NxConfig.nxfp(4),
+    "nxfp5": ref.NxConfig.nxfp(5),
+    "nxfp4_nm": ref.NxConfig.nxfp_nm(4),
+    "nxfp4_nm_am": ref.NxConfig.nxfp_nm_am(4),
+}
+
+
+def oracle_blocks(x, cfg):
+    return np.stack([ref.fake_quant(row, cfg) for row in x])
+
+
+def assert_blocks_equivalent(x, got, want, cfg, atol=1e-6):
+    """Per-block: bitwise match, or equal-or-better MSE within tolerance."""
+    for b in range(x.shape[0]):
+        if np.array_equal(got[b], want[b]):
+            continue
+        mse_got = float(np.mean((x[b] - got[b]) ** 2))
+        mse_want = float(np.mean((x[b] - want[b]) ** 2))
+        assert mse_got <= mse_want * (1 + 1e-4) + atol, (
+            f"block {b}: kernel mse {mse_got} worse than oracle {mse_want}\n"
+            f"in={x[b]}\ngot={got[b]}\nwant={want[b]}"
+        )
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_kernel_matches_oracle_gaussian(name):
+    cfg = CONFIGS[name]
+    rng = np.random.default_rng(42)
+    x = rng.normal(0, 1.3, size=(64, 32)).astype(np.float32)
+    got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+    want = oracle_blocks(x, cfg)
+    assert_blocks_equivalent(x, got, want, cfg)
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_kernel_wide_dynamic_range(name):
+    cfg = CONFIGS[name]
+    rng = np.random.default_rng(7)
+    scales = 2.0 ** rng.integers(-20, 20, size=(64, 1))
+    x = (rng.normal(size=(64, 32)) * scales).astype(np.float32)
+    got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+    want = oracle_blocks(x, cfg)
+    assert_blocks_equivalent(x, got, want, cfg)
+
+
+def test_kernel_zero_blocks():
+    x = np.zeros((64, 32), dtype=np.float32)
+    for cfg in CONFIGS.values():
+        got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+        assert np.all(got == 0.0)
+
+
+def test_kernel_heavy_tails():
+    cfg = ref.NxConfig.nxfp(4)
+    rng = np.random.default_rng(3)
+    x = rng.standard_t(2, size=(64, 32)).astype(np.float32)
+    got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+    want = oracle_blocks(x, cfg)
+    assert_blocks_equivalent(x, got, want, cfg)
+
+
+def test_pallas_and_pure_jnp_paths_agree():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(8, 16, 64)).astype(np.float32)
+    for cfg in [ref.NxConfig.mxfp(4), ref.NxConfig.nxfp(4)]:
+        a = np.asarray(fakequant.fakequant_tensor(jnp.asarray(x), cfg))
+        b = np.asarray(fakequant.fakequant_ref_jnp(jnp.asarray(x), cfg))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fakequant_tensor_shape_and_padding():
+    # 3 blocks per row * 5 rows = 15 blocks -> padded to tile multiple
+    rng = np.random.default_rng(12)
+    x = rng.normal(size=(5, 96)).astype(np.float32)
+    cfg = ref.NxConfig.nxfp(4)
+    out = np.asarray(fakequant.fakequant_tensor(jnp.asarray(x), cfg))
+    assert out.shape == x.shape
+    want = np.stack([ref.fake_quant(r, cfg) for r in x])
+    assert_blocks_equivalent(
+        x.reshape(-1, 32), out.reshape(-1, 32), want.reshape(-1, 32), cfg
+    )
+
+
+def test_rejects_non_multiple_block():
+    with pytest.raises(ValueError):
+        fakequant.fakequant_tensor(jnp.zeros((4, 33)), ref.NxConfig.nxfp(4))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n_rows=st.sampled_from([1, 2, 64]),
+    log_scale=st.integers(-30, 30),
+    cfg_name=st.sampled_from(sorted(CONFIGS)),
+)
+def test_kernel_matches_oracle_hypothesis(seed, n_rows, log_scale, cfg_name):
+    """Property sweep over shapes, dynamic ranges and configs."""
+    cfg = CONFIGS[cfg_name]
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n_rows, 32)) * 2.0 ** log_scale).astype(np.float32)
+    got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+    want = oracle_blocks(x, cfg)
+    assert_blocks_equivalent(x, got, want, cfg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_kernel_error_bounded(seed):
+    """|fakequant(x) - x| is bounded by the block's worst-case step."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(16, 32)).astype(np.float32)
+    cfg = ref.NxConfig.nxfp(4)
+    got = np.asarray(fakequant.fakequant_blocks(jnp.asarray(x), cfg))
+    maxabs = np.max(np.abs(x), axis=1, keepdims=True)
+    assert np.all(np.abs(got - x) <= maxabs / 2.0 + 1e-30)
+
+
+def test_vmem_estimate_reasonable():
+    # the tile must fit VMEM (~16 MB) with huge headroom
+    for cfg in CONFIGS.values():
+        assert fakequant.vmem_estimate_bytes(cfg) < 2 * 1024 * 1024

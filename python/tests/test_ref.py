@@ -1,0 +1,110 @@
+"""Unit tests for the NumPy oracle (mirrors rust/src/formats tests, so both
+sides of the golden contract are independently pinned)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def test_e2m1_levels_match_ocp_fp4():
+    lv = ref.levels(2, 1)
+    assert lv.tolist() == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_bfp4_levels_integer_grid():
+    assert ref.levels(0, 3).tolist() == [0, 1, 2, 3, 4, 5, 6, 7]
+
+
+def test_e4m3_max_448_no_nan():
+    lv = ref.levels(4, 3)
+    assert lv[-1] == 448.0
+    assert len(lv) == 127
+
+
+def test_offsets():
+    assert ref.scale_exp_offset(2, 1) == -2
+    assert ref.scale_exp_offset(0, 3) == -2
+    assert ref.scale_exp_offset(2, 3) == -2
+    assert ref.scale_exp_offset(3, 2) == -4
+
+
+def test_project_ties_to_even():
+    lv = ref.levels(2, 1)
+    assert ref.project_magnitude(lv, np.float32(0.25)) == 0
+    assert ref.project_magnitude(lv, np.float32(1.25)) == 2
+    assert ref.project_magnitude(lv, np.float32(2.5)) == 4
+    assert ref.project_magnitude(lv, np.float32(5.0)) == 6
+    assert ref.project_magnitude(lv, np.float32(100.0)) == 7
+
+
+def test_fig4_nanomantissa_example():
+    v = np.array([-7.4, 2.0, 1.0, 0.5, -1.5, 3.0, 0.0, 1.0], dtype=np.float32)
+    plain = ref.fake_quant(v, ref.NxConfig.mxfp(4))
+    assert plain[0] == -6.0
+    nm = ref.fake_quant(v, ref.NxConfig.nxfp_nm(4))
+    assert abs(nm[0] - -7.5) < 1e-6
+
+
+def test_recycle_half_min():
+    bf = ref.block_format(ref.NxConfig.nxfp(4), mx_path=True)
+    assert ref.decode(bf, 0b1000) == np.float32(-0.25)
+    bfb = ref.block_format(ref.NxConfig.nxfp(4), mx_path=False)
+    assert ref.decode(bfb, 0b1000) == np.float32(-0.5)
+
+
+def test_minus_zero_canonical_without_cr():
+    bf = ref.block_format(ref.NxConfig.mxfp(4), mx_path=True)
+    assert ref.encode(bf, np.float32(-0.01)) == 0
+    assert ref.decode(bf, 0b1000) == 0.0
+
+
+@pytest.mark.parametrize("bits", [4, 5, 6])
+def test_techniques_monotone_mse(bits):
+    rng = np.random.default_rng(5)
+    v = rng.normal(0, 1.5, size=32 * 64).astype(np.float32)
+
+    def m(cfg):
+        q = ref.fake_quant(v, cfg)
+        return float(np.mean((v - q) ** 2))
+
+    base = m(ref.NxConfig.mxfp(bits))
+    nm = m(ref.NxConfig.nxfp_nm(bits))
+    nm_am = m(ref.NxConfig.nxfp_nm_am(bits))
+    full = m(ref.NxConfig.nxfp(bits))
+    assert nm <= base + 1e-12
+    assert nm_am <= nm + 1e-12
+    assert full <= nm_am + 1e-12
+
+
+def test_all_zero_block():
+    v = np.zeros(32, dtype=np.float32)
+    for cfg in [ref.NxConfig.bfp(4), ref.NxConfig.mxfp(4), ref.NxConfig.nxfp(4)]:
+        assert np.all(ref.fake_quant(v, cfg) == 0.0)
+
+
+def test_footprint_matches_paper_numbers():
+    assert ref.footprint_bits(ref.NxConfig.nxfp(5), 32) == 171
+    assert ref.footprint_bits(ref.NxConfig.mxfp(6), 32) == 200
+
+
+def test_partial_tail_block():
+    rng = np.random.default_rng(6)
+    v = rng.normal(size=45).astype(np.float32)
+    out = ref.fake_quant(v, ref.NxConfig.nxfp(4))
+    assert out.shape == (45,)
+    assert np.isfinite(out).all()
+
+
+def test_exp2i_exact():
+    for e in range(-140, 128):
+        assert ref.exp2i(e) == np.float32(2.0 ** e), e
+
+
+def test_floor_log2():
+    assert ref.floor_log2(1.0) == 0
+    assert ref.floor_log2(1.5) == 0
+    assert ref.floor_log2(2.0) == 1
+    assert ref.floor_log2(0.75) == -1
+    assert ref.floor_log2(-6.0) == 2
+    assert ref.floor_log2(0.0) is None

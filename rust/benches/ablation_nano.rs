@@ -1,0 +1,62 @@
+//! §7.2 ablation — per-technique MSE contributions plus the design-choice
+//! ablations DESIGN.md calls out:
+//!
+//! * Algorithm-1's two-candidate NanoMantissa vs exhaustive 2-bit search
+//!   (how much does the paper's cheap heuristic leave on the table?);
+//! * recycled-code target (½·min vs top-gap midpoint) interaction with AM;
+//! * MxFP6 element-format choice E2M3 vs E3M2 (the paper "reports the best").
+
+use nxfp::bench_util::{banner, Table};
+use nxfp::formats::{ElementFormat, NanoMode, NxConfig, RecycleTarget};
+use nxfp::models::{synth_weights, ModelProfile};
+use nxfp::quant::fake_quant_matrix;
+use nxfp::tensor::stats::mse;
+
+fn main() {
+    banner("Ablation", "NanoMantissa search, CR target, FP6 element format");
+    let p = ModelProfile::by_name("Llama3-8B").unwrap();
+    let w = synth_weights(&p, 256, 2048);
+    let m = |cfg: &NxConfig| mse(&w.data, &fake_quant_matrix(&w, cfg).data);
+
+    println!("\n(1) NanoMantissa candidate policy (NxFP4, NM only):");
+    let two = m(&NxConfig::nxfp_nm(4));
+    let exh = m(&NxConfig::nxfp_nm(4).with_nano_mode(NanoMode::Exhaustive));
+    let mut t = Table::new(&["policy", "MSE", "vs two-candidate"]);
+    t.row(&["two-candidate (Algorithm 1)".into(), format!("{two:.3e}"), "—".into()]);
+    t.row(&["exhaustive {0,1,2,3}".into(), format!("{exh:.3e}"),
+            format!("{:+.2}%", (exh / two - 1.0) * 100.0)]);
+    t.print();
+
+    println!("\n(2) Code-recycling target under full NxFP4:");
+    let mut t = Table::new(&["target", "MSE"]);
+    for (label, target) in [
+        ("½·V_smallest (paper)", RecycleTarget::HalfMin),
+        ("mid(top, 2nd)", RecycleTarget::MidTopPair),
+    ] {
+        let cfg = NxConfig::nxfp(4).with_recycle(target);
+        t.row(&[label.into(), format!("{:.3e}", m(&cfg))]);
+    }
+    t.print();
+
+    println!("\n(3) MxFP6 element format (the paper reports the better of the two):");
+    let mut t = Table::new(&["element", "MSE"]);
+    for elem in [ElementFormat::new(2, 3), ElementFormat::new(3, 2)] {
+        let cfg = NxConfig::mxfp_elem(6, elem);
+        t.row(&[elem.name(), format!("{:.3e}", m(&cfg))]);
+    }
+    t.print();
+
+    println!("\n(4) cumulative techniques at 4/5/6 bits (MSE, Llama3 profile):");
+    let mut t = Table::new(&["bits", "BFP", "MxFP", "NM", "NM+AM", "NM+AM+CR"]);
+    for bits in [4u8, 5, 6] {
+        t.row(&[
+            bits.to_string(),
+            format!("{:.3e}", m(&NxConfig::bfp(bits))),
+            format!("{:.3e}", m(&NxConfig::mxfp(bits))),
+            format!("{:.3e}", m(&NxConfig::nxfp_nm(bits))),
+            format!("{:.3e}", m(&NxConfig::nxfp_nm_am(bits))),
+            format!("{:.3e}", m(&NxConfig::nxfp(bits))),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,51 @@
+//! Fig. 11 — sweeping the remapped value of Code Recycling on (a) MxFP4 and
+//! (b) BFP4: the recycled −0 code is remapped to each midpoint between
+//! adjacent quantization levels (plus half-of-smallest) and the resulting
+//! held-out perplexity is measured.
+//!
+//! Paper expectation: half-of-smallest is (one of) the best choices on both
+//! element formats; midpoints near the top also help MxFP4 (vacant level).
+
+use nxfp::bench_util::scenario::{default_corpus, load_or_train};
+use nxfp::bench_util::{banner, Table};
+use nxfp::eval::{perplexity, quantize_checkpoint};
+use nxfp::formats::{ElementFormat, NxConfig, RecycleTarget};
+use nxfp::models::LmSpec;
+use nxfp::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig.11", "perplexity vs recycled value (MxFP4 / BFP4 + CR)");
+    let spec = LmSpec::small();
+    let corpus = default_corpus();
+    let mut rt = Runtime::cpu("artifacts")?;
+    let ck = load_or_train(&mut rt, &corpus, 42)?;
+    let eval_step = rt.load("eval_step")?;
+    let quantizable = spec.quantizable();
+
+    let ppl_of = |cfg: &NxConfig| -> anyhow::Result<f64> {
+        let q = quantize_checkpoint(&ck, &quantizable, cfg);
+        Ok(perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl())
+    };
+
+    for (panel, base, elem) in [
+        ("(a) MxFP4 + CR", NxConfig::mxfp(4), ElementFormat::mx_default(4)),
+        ("(b) BFP4 + CR", NxConfig::bfp(4), ElementFormat::bfp(4)),
+    ] {
+        println!("\n{panel}");
+        let baseline = ppl_of(&base)?;
+        println!("  baseline (no CR): ppl {baseline:.4}  <- dotted line");
+        let mut t = Table::new(&["remap target", "ppl", "Δ vs baseline"]);
+        let mut best = (String::new(), f64::INFINITY);
+        for (label, target) in RecycleTarget::sweep_targets(&elem) {
+            let cfg = base.clone().with_recycle(target);
+            let p = ppl_of(&cfg)?;
+            if p < best.1 {
+                best = (label.clone(), p);
+            }
+            t.row(&[label, format!("{p:.4}"), format!("{:+.4}", p - baseline)]);
+        }
+        t.print();
+        println!("  best remap: {} (ppl {:.4}); paper: ½·V_smallest", best.0, best.1);
+    }
+    Ok(())
+}

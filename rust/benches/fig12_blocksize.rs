@@ -1,0 +1,49 @@
+//! Fig. 12 — perplexity-to-footprint trade-offs across block sizes
+//! (8..128) at 4 bits for BFP4 / MxFP4 / NxFP4.
+//!
+//! Paper expectation: NxFP4 dominates at every block size; MxFP4 overtakes
+//! BFP4 as the block grows (microexponents recover element-wise dynamic
+//! range when blocks are long and scattered).
+
+use nxfp::bench_util::scenario::{default_corpus, load_or_train};
+use nxfp::bench_util::{banner, Table};
+use nxfp::eval::{perplexity, quantize_checkpoint};
+use nxfp::formats::NxConfig;
+use nxfp::models::{LmSpec, NamedModel};
+use nxfp::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig.12", "block-size sweep at 4 bits (ppl + effective bits)");
+    let spec = LmSpec::small();
+    let corpus = default_corpus();
+    let mut rt = Runtime::cpu("artifacts")?;
+    let ck = load_or_train(&mut rt, &corpus, 42)?;
+    let eval_step = rt.load("eval_step")?;
+    let quantizable = spec.quantizable();
+    let llama3 = NamedModel::by_name("Llama3-8B").unwrap();
+
+    let mut t = Table::new(&[
+        "block", "format", "ppl", "eff.bits", "Llama3-8B W GB",
+    ]);
+    for k in [8usize, 16, 32, 64, 128] {
+        for cfg in [
+            NxConfig::bfp(4).with_block_size(k),
+            NxConfig::mxfp(4).with_block_size(k),
+            NxConfig::nxfp(4).with_block_size(k),
+        ] {
+            let q = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let p = perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl();
+            let gb = cfg.footprint_bits(llama3.weight_elements() as usize) as f64 / 8e9;
+            t.row(&[
+                k.to_string(),
+                cfg.name(),
+                format!("{p:.4}"),
+                format!("{:.2}", cfg.effective_bits()),
+                format!("{gb:.2}"),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper shape: NxFP4 best at all block sizes; MxFP4 > BFP4 at large blocks");
+    Ok(())
+}

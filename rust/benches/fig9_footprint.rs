@@ -1,0 +1,104 @@
+//! Fig. 9 — perplexity-to-footprint trade-offs.
+//!
+//! Two coupled outputs, as in the paper:
+//! (1) measured perplexity of the trained LM per format (weight-only and
+//!     weight+KV via the Pallas kvq artifacts), and
+//! (2) bit-true footprint in GB of the *named* published models
+//!     (Llama3-8B / Llama2-7B at 2K sequence) under the same formats —
+//!     the paper's x-axis, where absolute GB numbers are meaningful.
+//!
+//! Paper expectation: NxFP sits on the Pareto frontier; NxFP5 ≈ MxFP6
+//! perplexity at 13–16% less footprint.
+
+use nxfp::bench_util::scenario::{default_corpus, load_or_train};
+use nxfp::bench_util::{banner, Table};
+use nxfp::eval::{perplexity, quantize_checkpoint};
+use nxfp::formats::NxConfig;
+use nxfp::models::{LmSpec, NamedModel};
+use nxfp::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig.9", "perplexity-to-footprint Pareto (weights, weights+KV)");
+    let spec = LmSpec::small();
+    let corpus = default_corpus();
+    let mut rt = Runtime::cpu("artifacts")?;
+    let ck = load_or_train(&mut rt, &corpus, 42)?;
+    let quantizable = spec.quantizable();
+    let eval_step = rt.load("eval_step")?;
+    let fp16 = perplexity(&eval_step, &ck, &corpus, spec.seq_len, 8)?.ppl();
+
+    let named: Vec<NamedModel> = ["Llama3-8B", "Llama2-7B"]
+        .iter()
+        .map(|n| NamedModel::by_name(n).unwrap())
+        .collect();
+
+    // ---- (a)(c) weight-only ------------------------------------------
+    println!("\n(a)(c) weight-only: measured ppl + named-model footprints (seq 2K, KV FP16)");
+    let mut t = Table::new(&["format", "ppl", "Δppl", "Llama3-8B GB", "Llama2-7B GB"]);
+    t.row(&[
+        "FP16".into(),
+        format!("{fp16:.4}"),
+        "—".into(),
+        format!("{:.2}", named[0].footprint_gb(None, None, 2048)),
+        format!("{:.2}", named[1].footprint_gb(None, None, 2048)),
+    ]);
+    let formats: Vec<NxConfig> = vec![
+        NxConfig::bfp(4), NxConfig::bfp(5), NxConfig::bfp(6),
+        NxConfig::mxfp(4), NxConfig::mxfp(5), NxConfig::mxfp(6),
+        NxConfig::nxfp(4), NxConfig::nxfp(5), NxConfig::nxfp(6),
+    ];
+    for cfg in &formats {
+        let q = quantize_checkpoint(&ck, &quantizable, cfg);
+        let p = perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl();
+        t.row(&[
+            cfg.name(),
+            format!("{p:.4}"),
+            format!("{:+.4}", p - fp16),
+            format!("{:.2}", named[0].footprint_gb(Some(cfg), None, 2048)),
+            format!("{:.2}", named[1].footprint_gb(Some(cfg), None, 2048)),
+        ]);
+    }
+    t.print();
+
+    // ---- (b)(d) weights + KV cache -----------------------------------
+    println!("\n(b)(d) weights + KV cache (kvq artifacts; KV quantized in-graph)");
+    let mut t2 = Table::new(&["format", "ppl (W+KV)", "Δppl", "Llama3-8B GB", "Llama2-7B GB"]);
+    t2.row(&[
+        "FP16".into(),
+        format!("{fp16:.4}"),
+        "—".into(),
+        format!("{:.2}", named[0].footprint_gb(None, None, 2048)),
+        format!("{:.2}", named[1].footprint_gb(None, None, 2048)),
+    ]);
+    for bits in [4u8, 5, 6] {
+        for (fam, cfg) in [
+            ("bfp", NxConfig::bfp(bits)),
+            ("mxfp", NxConfig::mxfp(bits)),
+            ("nxfp", NxConfig::nxfp(bits)),
+        ] {
+            let step = rt.load(&format!("eval_step_kvq_{fam}{bits}"))?;
+            let q = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let p = perplexity(&step, &q, &corpus, spec.seq_len, 8)?.ppl();
+            t2.row(&[
+                cfg.name(),
+                format!("{p:.4}"),
+                format!("{:+.4}", p - fp16),
+                format!("{:.2}", named[0].footprint_gb(Some(&cfg), Some(&cfg), 2048)),
+                format!("{:.2}", named[1].footprint_gb(Some(&cfg), Some(&cfg), 2048)),
+            ]);
+        }
+    }
+    t2.print();
+
+    // headline comparison
+    let nx5 = NxConfig::nxfp(5);
+    let mx6 = NxConfig::mxfp(6);
+    let a = named[0].footprint_gb(Some(&nx5), Some(&nx5), 2048);
+    let b = named[0].footprint_gb(Some(&mx6), Some(&mx6), 2048);
+    println!(
+        "\nheadline: NxFP5 vs MxFP6 on Llama3-8B (W+KV, 2K): {a:.2} GB vs {b:.2} GB \
+         ({:.1}% smaller; paper: ~16%)",
+        (1.0 - a / b) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! In-tree benchmark harness (criterion is unavailable offline).
+//!
+//! Every `cargo bench` target uses [`bench`] for timing (warmup + fixed
+//! measurement budget, mean/p50/p99 over iterations) and [`Table`] for
+//! printing the paper-style result grids.
+
+pub mod scenario;
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+
+    /// Throughput given bytes processed per iteration.
+    pub fn gib_per_sec(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / self.mean.as_secs_f64() / (1u64 << 30) as f64
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  ({} iters)",
+            self.mean, self.p50, self.p99, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` seconds of warmup then measure for roughly
+/// `measure` seconds (at least 5 iterations). Use `std::hint::black_box` in
+/// the closure to keep work alive.
+pub fn bench<F: FnMut()>(warmup: Duration, measure: Duration, mut f: F) -> Timing {
+    let wstart = Instant::now();
+    let mut warm_iters = 0u64;
+    while wstart.elapsed() < warmup || warm_iters < 1 {
+        f();
+        warm_iters += 1;
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    Timing {
+        iters: n as u64,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p99: samples[(n * 99 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// Quick bench with default budgets (0.3s warmup / 1s measure).
+pub fn bench_quick<F: FnMut()>(f: F) -> Timing {
+    bench(Duration::from_millis(300), Duration::from_secs(1), f)
+}
+
+/// Fixed-width table printer for paper-style result grids.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard bench banner so all bench outputs are grep-able.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id} — {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_timing() {
+        let t = bench(Duration::from_millis(1), Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.iters >= 5);
+        assert!(t.min <= t.p50 && t.p50 <= t.p99);
+        assert!(t.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["fmt", "ppl"]);
+        t.row(&["MxFP4".into(), "6.95".into()]);
+        t.row(&["NxFP4 (NM+AM+CR)".into(), "6.57".into()]);
+        let s = t.render();
+        assert!(s.contains("NxFP4"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Timing {
+            iters: 1,
+            mean: Duration::from_secs(1),
+            p50: Duration::from_secs(1),
+            p99: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+        };
+        assert!((t.gib_per_sec(1 << 30) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,47 @@
+//! Shared scenario setup for the paper-figure benches: the canonical
+//! corpus, probes, and the trained checkpoint (trained on demand if the
+//! end-to-end example has not been run yet).
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::models::{Checkpoint, Corpus, GrammarSpec, LmSpec};
+use crate::runtime::Runtime;
+use crate::train::{TrainConfig, Trainer};
+
+/// The canonical corpus every experiment evaluates against (Wikitext2
+/// stand-in; see DESIGN.md §3). The bench eval split is kept small enough
+/// for the single-core PJRT CPU of this testbed (env `NXFP_EVAL_TOKENS`
+/// overrides; the e2e example uses the full 40k split).
+pub fn default_corpus() -> Corpus {
+    let eval_tokens = std::env::var("NXFP_EVAL_TOKENS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(14_000);
+    Corpus::generate(GrammarSpec::default_for_vocab(512), 400_000, eval_tokens, 1234)
+}
+
+/// Load `artifacts/model.ckpt`, or train one (fewer steps than the e2e
+/// example, still enough to separate the formats) and cache it there.
+pub fn load_or_train(rt: &mut Runtime, corpus: &Corpus, seed: u64) -> Result<Checkpoint> {
+    let spec = LmSpec::small();
+    let path = format!("artifacts/model{}.ckpt", if seed == 42 { String::new() } else { format!("_s{seed}") });
+    let path = Path::new(&path);
+    if path.exists() {
+        let ck = Checkpoint::load(path)?;
+        ck.check_spec(&spec)?;
+        return Ok(ck);
+    }
+    let steps: u32 = std::env::var("NXFP_BENCH_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    eprintln!("[bench setup] {path:?} missing — training {steps} steps (seed {seed})…");
+    let cfg = TrainConfig { batch: 16, steps, log_every: 40, seed };
+    let init = Checkpoint::init(&spec, seed);
+    let mut tr = Trainer::new(rt, spec, &init, &cfg)?;
+    tr.train(corpus, &cfg, |s, l| eprintln!("[bench setup] step {s} loss {l:.3}"))?;
+    let ck = tr.checkpoint()?;
+    ck.save(path)?;
+    Ok(ck)
+}

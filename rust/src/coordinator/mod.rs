@@ -1,0 +1,238 @@
+//! Serving coordinator: batched greedy decoding through the `decode_step`
+//! artifact with the KV cache held in **quantized packed form** between
+//! steps (paper §6 on-the-fly dequantization deployment).
+//!
+//! `decode_step` contract (pinned against `python/compile/aot.py`):
+//! inputs `P` params, `tokens [B]` (i32, current token per slot),
+//! `pos [B]` (i32, cache fill per slot), `k_cache [B, L, S, D]`,
+//! `v_cache [B, L, S, D]` (f32); outputs `logits [B, V]`,
+//! `k_new [B, L, D]`, `v_new [B, L, D]`.
+
+pub mod server;
+
+use anyhow::Result;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use crate::formats::NxConfig;
+use crate::models::{Checkpoint, LmSpec};
+use crate::quant::kv_cache::KvCache;
+use crate::runtime::{lit, Runtime, Step};
+use crate::train::params_to_literals;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// prompt + generated tokens
+    pub tokens: Vec<i32>,
+    pub generated: usize,
+    pub latency: Duration,
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub wall: Duration,
+    /// packed KV bits at peak vs what FP16 would have used
+    pub kv_bits_peak: u64,
+    pub kv_bits_fp16: u64,
+}
+
+impl Metrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn kv_savings(&self) -> f64 {
+        1.0 - self.kv_bits_peak as f64 / self.kv_bits_fp16.max(1) as f64
+    }
+}
+
+struct Slot {
+    req: GenRequest,
+    started: Instant,
+    /// next prompt token to feed (while < prompt.len() we are prefilling)
+    cursor: usize,
+    output: Vec<i32>,
+    /// per-layer quantized KV (None = slot holds FP32 cache for baselines)
+    caches: Vec<KvCache>,
+    done: bool,
+}
+
+/// Batched decode engine. `B` (max batch) and `S` (max context) are baked
+/// into the artifact; the engine pads unused slots.
+pub struct DecodeEngine {
+    pub spec: LmSpec,
+    step_fn: Rc<Step>,
+    params: Vec<xla::Literal>,
+    pub kv_cfg: Option<NxConfig>,
+    pub max_batch: usize,
+    pub metrics: Metrics,
+}
+
+impl DecodeEngine {
+    pub fn new(
+        rt: &mut Runtime,
+        spec: LmSpec,
+        ck: &Checkpoint,
+        kv_cfg: Option<NxConfig>,
+        max_batch: usize,
+    ) -> Result<Self> {
+        ck.check_spec(&spec)?;
+        let step_fn = rt.load("decode_step")?;
+        Ok(DecodeEngine {
+            spec,
+            step_fn,
+            params: params_to_literals(ck)?,
+            kv_cfg,
+            max_batch,
+            metrics: Metrics::default(),
+        })
+    }
+
+    /// Serve a wave of up to `max_batch` requests to completion.
+    pub fn serve_wave(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        assert!(reqs.len() <= self.max_batch);
+        let (bsz, l, s, d, v) = (
+            self.max_batch,
+            self.spec.n_layers,
+            self.spec.seq_len,
+            self.spec.d_model,
+            self.spec.vocab,
+        );
+        let wave_start = Instant::now();
+        let kv_cfg = self.kv_cfg.clone().unwrap_or_else(|| NxConfig::mxfp(8));
+        let quantize_kv = self.kv_cfg.is_some();
+        let mut slots: Vec<Option<Slot>> = reqs
+            .into_iter()
+            .map(|req| {
+                Some(Slot {
+                    started: Instant::now(),
+                    cursor: 0,
+                    output: req.prompt.clone(),
+                    caches: (0..l).map(|_| KvCache::new(d, kv_cfg.clone())).collect(),
+                    req,
+                    done: false,
+                })
+            })
+            .collect();
+        slots.resize_with(bsz, || None);
+        // FP32 fallback caches (baseline mode, no quantization)
+        let mut k_f32 = vec![0.0f32; bsz * l * s * d];
+        let mut v_f32 = vec![0.0f32; bsz * l * s * d];
+        let mut responses = Vec::new();
+
+        while slots.iter().flatten().any(|sl| !sl.done) {
+            // assemble step inputs
+            let mut tokens = vec![0i32; bsz];
+            let mut pos = vec![0i32; bsz];
+            for (b, sl) in slots.iter().enumerate() {
+                if let Some(sl) = sl {
+                    if sl.done {
+                        continue;
+                    }
+                    tokens[b] = if sl.cursor < sl.req.prompt.len() {
+                        sl.req.prompt[sl.cursor]
+                    } else {
+                        *sl.output.last().unwrap()
+                    };
+                    pos[b] = sl.caches[0].len as i32;
+                }
+            }
+            if quantize_kv {
+                // on-the-fly dequantize packed caches into the step tensors
+                for (b, sl) in slots.iter().enumerate() {
+                    let Some(sl) = sl else { continue };
+                    for (li, cache) in sl.caches.iter().enumerate() {
+                        let (kd, vd) = cache.dequantize(s);
+                        let base = (b * l + li) * s * d;
+                        k_f32[base..base + s * d].copy_from_slice(&kd.data);
+                        v_f32[base..base + s * d].copy_from_slice(&vd.data);
+                    }
+                }
+            }
+            let tok_lit = lit::from_i32(&tokens, &[bsz as i64])?;
+            let pos_lit = lit::from_i32(&pos, &[bsz as i64])?;
+            let k_lit = lit::from_f32(&k_f32, &[bsz as i64, l as i64, s as i64, d as i64])?;
+            let v_lit = lit::from_f32(&v_f32, &[bsz as i64, l as i64, s as i64, d as i64])?;
+            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+            args.extend([&tok_lit, &pos_lit, &k_lit, &v_lit]);
+            let out = self.step_fn.run(&args)?;
+            anyhow::ensure!(out.len() == 3, "decode_step returned {} outputs", out.len());
+            let logits = lit::to_f32(&out[0])?;
+            let k_new = lit::to_f32(&out[1])?;
+            let v_new = lit::to_f32(&out[2])?;
+            self.metrics.decode_steps += 1;
+
+            for (b, sl) in slots.iter_mut().enumerate() {
+                let Some(sl) = sl else { continue };
+                if sl.done {
+                    continue;
+                }
+                // append the new KV row (quantized or raw)
+                for li in 0..l {
+                    let row = &k_new[(b * l + li) * d..(b * l + li + 1) * d];
+                    let vow = &v_new[(b * l + li) * d..(b * l + li + 1) * d];
+                    if quantize_kv {
+                        sl.caches[li].append(row, vow);
+                    } else {
+                        let p = pos[b] as usize;
+                        let base = ((b * l + li) * s + p) * d;
+                        k_f32[base..base + d].copy_from_slice(row);
+                        v_f32[base..base + d].copy_from_slice(vow);
+                        sl.caches[li].len += 1; // track fill without storing
+                    }
+                }
+                if sl.cursor < sl.req.prompt.len() {
+                    sl.cursor += 1; // still consuming the prompt
+                    if sl.cursor < sl.req.prompt.len() {
+                        continue;
+                    }
+                }
+                // sample greedily from this slot's logits
+                let row = &logits[b * v..(b + 1) * v];
+                let next = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                sl.output.push(next);
+                self.metrics.tokens_generated += 1;
+                let generated = sl.output.len() - sl.req.prompt.len();
+                let ctx_full = sl.caches[0].len + 1 >= s;
+                if generated >= sl.req.max_new || ctx_full {
+                    sl.done = true;
+                    if quantize_kv {
+                        let bits: u64 = sl.caches.iter().map(|c| c.footprint_bits()).sum();
+                        let fp16: u64 =
+                            sl.caches.iter().map(|c| c.fp16_footprint_bits()).sum();
+                        self.metrics.kv_bits_peak += bits;
+                        self.metrics.kv_bits_fp16 += fp16;
+                    }
+                    responses.push(GenResponse {
+                        id: sl.req.id,
+                        tokens: sl.output.clone(),
+                        generated,
+                        latency: sl.started.elapsed(),
+                    });
+                    self.metrics.requests += 1;
+                }
+            }
+        }
+        self.metrics.wall += wave_start.elapsed();
+        Ok(responses)
+    }
+}

@@ -1,0 +1,112 @@
+//! Threaded serving front-end: a request queue feeding the batched decode
+//! engine on a dedicated worker thread (std::thread + mpsc; tokio is
+//! unavailable offline). Requests accumulate into waves of up to
+//! `max_batch`; the worker drains the queue between waves so bursty clients
+//! batch naturally.
+
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{DecodeEngine, GenRequest, GenResponse, Metrics};
+use crate::formats::NxConfig;
+use crate::models::{Checkpoint, LmSpec};
+use crate::runtime::Runtime;
+
+enum Msg {
+    Req(GenRequest),
+    Shutdown,
+}
+
+/// Handle to a running server worker.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    rx: mpsc::Receiver<GenResponse>,
+    join: Option<JoinHandle<Result<Metrics>>>,
+}
+
+impl ServerHandle {
+    /// Spawn the worker (builds the PJRT runtime on its own thread: the
+    /// client is not Send).
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        spec: LmSpec,
+        ck: Checkpoint,
+        kv_cfg: Option<NxConfig>,
+        max_batch: usize,
+        batch_window: Duration,
+    ) -> ServerHandle {
+        let (tx, worker_rx) = mpsc::channel::<Msg>();
+        let (resp_tx, rx) = mpsc::channel::<GenResponse>();
+        let join = std::thread::spawn(move || -> Result<Metrics> {
+            let mut rt = Runtime::cpu(artifacts_dir)?;
+            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, max_batch)?;
+            let mut pending: Vec<GenRequest> = Vec::new();
+            let mut shutting_down = false;
+            loop {
+                // block for the first request, then drain within the window
+                if pending.is_empty() && !shutting_down {
+                    match worker_rx.recv() {
+                        Ok(Msg::Req(r)) => pending.push(r),
+                        Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+                    }
+                }
+                if !shutting_down {
+                    let deadline = std::time::Instant::now() + batch_window;
+                    while pending.len() < max_batch {
+                        let left = deadline.saturating_duration_since(std::time::Instant::now());
+                        match worker_rx.recv_timeout(left) {
+                            Ok(Msg::Req(r)) => pending.push(r),
+                            Ok(Msg::Shutdown) => {
+                                shutting_down = true;
+                                break;
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                shutting_down = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if pending.is_empty() && shutting_down {
+                    return Ok(engine.metrics);
+                }
+                let wave: Vec<GenRequest> =
+                    pending.drain(..pending.len().min(max_batch)).collect();
+                if wave.is_empty() {
+                    continue;
+                }
+                for resp in engine.serve_wave(wave)? {
+                    let _ = resp_tx.send(resp);
+                }
+            }
+        });
+        ServerHandle { tx, rx, join: Some(join) }
+    }
+
+    pub fn submit(&self, req: GenRequest) {
+        let _ = self.tx.send(Msg::Req(req));
+    }
+
+    /// Blocking receive of the next completed response.
+    pub fn recv(&self) -> Option<GenResponse> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<GenResponse> {
+        self.rx.recv_timeout(d).ok()
+    }
+
+    /// Finish outstanding work and return aggregate metrics.
+    pub fn shutdown(mut self) -> Result<Metrics> {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.join
+            .take()
+            .expect("already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("server worker panicked"))?
+    }
+}

@@ -1,0 +1,243 @@
+//! On-the-fly dequantization — the deployment hot path (paper §6, Fig. 7).
+//!
+//! The six decode steps collapse into two table lookups and one FMA per
+//! element: the per-code scaled-domain value (steps ①–③: slice fields,
+//! remap the recycled code, apply sign) is precomputed into a 2^bits LUT per
+//! format path, and the block scale (step ④: shared exponent + NanoMantissa,
+//! step ⑤ padding is free in f32) multiplies the looked-up value (step ⑥
+//! feeds the MAC). `gemv_packed` fuses the decode into a dot product so
+//! weights stream from packed DRAM form straight into FLOPs, which is how
+//! the paper deploys on off-the-shelf hardware.
+
+use crate::formats::packed::{BitReader, PackedMatrix, E8M0_BIAS};
+use crate::formats::{FormatTables, NxConfig};
+use crate::tensor::Tensor2;
+use crate::util::exp2i;
+
+/// Precomputed signed decode tables for both adaptive paths.
+#[derive(Clone, Debug)]
+pub struct DequantLut {
+    pub bits: u8,
+    /// `mx[code]` = scaled-domain value for the minifloat path.
+    pub mx: Vec<f32>,
+    /// `bfp[code]` = scaled-domain value for the all-mantissa path.
+    pub bfp: Vec<f32>,
+    pub offset_mx: i32,
+    pub offset_bfp: i32,
+}
+
+impl DequantLut {
+    pub fn new(cfg: &NxConfig) -> Self {
+        let tabs = cfg.tables();
+        Self::from_tables(cfg.bits, &tabs)
+    }
+
+    pub fn from_tables(bits: u8, tabs: &FormatTables) -> Self {
+        let n = 1usize << bits;
+        let mx = (0..n).map(|c| tabs.mx.decode(c as u8)).collect();
+        let bfp = (0..n).map(|c| tabs.bfp.decode(c as u8)).collect();
+        DequantLut {
+            bits,
+            mx,
+            bfp,
+            offset_mx: tabs.mx.offset,
+            offset_bfp: tabs.bfp.offset,
+        }
+    }
+
+    #[inline]
+    pub fn table(&self, fmt_mx: bool) -> (&[f32], i32) {
+        if fmt_mx {
+            (&self.mx, self.offset_mx)
+        } else {
+            (&self.bfp, self.offset_bfp)
+        }
+    }
+}
+
+/// Decode one block's packed metadata into `(scale_mx_or_bfp, fmt_mx)`.
+#[inline]
+fn block_scale(lut: &DequantLut, e_biased: u8, nano: u8, fmt_mx: bool) -> f32 {
+    let e = e_biased as i32 - E8M0_BIAS;
+    let offset = if fmt_mx { lut.offset_mx } else { lut.offset_bfp };
+    (1.0 + nano as f32 / 4.0) * exp2i(e + offset)
+}
+
+/// Unpack `out.len()` consecutive `bits`-wide codes starting at `start_bit`
+/// (LSB-first bit stream, bits ≤ 8). A two-byte window always covers one
+/// code since `off ≤ 7` and `bits ≤ 8` → `off + bits ≤ 15`. This is the
+/// perf-critical inner decode: branch-free, no per-element function calls.
+#[inline]
+fn unpack_codes(payload: &[u8], start_bit: usize, bits: u32, out: &mut [u8]) {
+    // 4-bit byte-aligned fast path (the common case: k even, bits=4 —
+    // every block starts on a byte boundary): two codes per byte, no
+    // window shifts.
+    if bits == 4 && start_bit & 7 == 0 && out.len() & 1 == 0 {
+        let base = start_bit >> 3;
+        for (i, pair) in out.chunks_exact_mut(2).enumerate() {
+            let b = payload[base + i];
+            pair[0] = b & 0x0f;
+            pair[1] = b >> 4;
+        }
+        return;
+    }
+    let mask = ((1u16 << bits) - 1) as u16;
+    let mut bitpos = start_bit;
+    for o in out.iter_mut() {
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u16;
+        let lo = payload[byte] as u16;
+        let hi = *payload.get(byte + 1).unwrap_or(&0) as u16;
+        *o = (((lo | (hi << 8)) >> off) & mask) as u8;
+        bitpos += bits as usize;
+    }
+}
+
+/// Dequantize a full packed matrix into an f32 tensor (LUT hot path).
+pub fn dequantize_packed(p: &PackedMatrix, lut: &DequantLut, base_fmt_mx: bool) -> Tensor2 {
+    let mut out = Tensor2::zeros(p.rows, p.cols);
+    let mut meta = BitReader::new(&p.meta);
+    let bits = p.bits as u32;
+    let mut codes = vec![0u8; p.block_size];
+    let mut bitpos = 0usize;
+    for r in 0..p.rows {
+        let row = out.row_mut(r);
+        for (bi, chunk) in row.chunks_mut(p.block_size).enumerate() {
+            let flat = r * p.blocks_per_row + bi;
+            let (nano, fmt_mx) = if p.has_meta {
+                let m = meta.read(3);
+                ((m & 3) as u8, m & 4 != 0)
+            } else {
+                (0u8, base_fmt_mx)
+            };
+            let scale = block_scale(lut, p.scales[flat], nano, fmt_mx);
+            let (table, _) = lut.table(fmt_mx);
+            let c = &mut codes[..chunk.len()];
+            unpack_codes(&p.payload, bitpos, bits, c);
+            bitpos += bits as usize * chunk.len();
+            for (o, &ci) in chunk.iter_mut().zip(c.iter()) {
+                *o = table[ci as usize] * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Fused dequantize + GEMV: `y = W x` with `W` in packed quantized form.
+/// The inner dot runs in the scaled element domain; each block contributes
+/// `scale * Σ lut[code]·x[c]`, so the per-element work is one LUT load and
+/// one FMA — the weights never materialize in f32.
+pub fn gemv_packed(
+    p: &PackedMatrix,
+    lut: &DequantLut,
+    base_fmt_mx: bool,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    assert_eq!(x.len(), p.cols);
+    assert_eq!(y.len(), p.rows);
+    let bits = p.bits as u32;
+    let mut meta = BitReader::new(&p.meta);
+    let mut codes = vec![0u8; p.block_size];
+    let mut bitpos = 0usize;
+    for (r, yr) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for bi in 0..p.blocks_per_row {
+            let flat = r * p.blocks_per_row + bi;
+            let (nano, fmt_mx) = if p.has_meta {
+                let m = meta.read(3);
+                ((m & 3) as u8, m & 4 != 0)
+            } else {
+                (0u8, base_fmt_mx)
+            };
+            let scale = block_scale(lut, p.scales[flat], nano, fmt_mx);
+            let (table, _) = lut.table(fmt_mx);
+            let start = bi * p.block_size;
+            let len = p.block_size.min(p.cols - start);
+            let c = &mut codes[..len];
+            unpack_codes(&p.payload, bitpos, bits, c);
+            bitpos += bits as usize * len;
+            let mut dot = 0.0f32;
+            for (&xc, &ci) in x[start..start + len].iter().zip(c.iter()) {
+                dot += table[ci as usize] * xc;
+            }
+            acc += (scale * dot) as f64;
+        }
+        *yr = acc as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::packed::PackedMatrix;
+    use crate::formats::{BaseFormat, NxConfig};
+    use crate::quant::quantize_matrix;
+    use crate::util::proptest::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn round_trip(cfg: &NxConfig, rows: usize, cols: usize, seed: u64) {
+        let mut rng = Rng::seeded(seed);
+        let t = Tensor2::random_normal(rows, cols, 1.0, &mut rng);
+        let q = quantize_matrix(&t, cfg);
+        let reference = q.dequantize(cfg);
+        let packed = PackedMatrix::pack(t.rows, t.cols, cfg, &q.blocks);
+        let lut = DequantLut::new(cfg);
+        let fast = dequantize_packed(&packed, &lut, cfg.base == BaseFormat::Mx);
+        assert_eq!(reference.data, fast.data, "{} LUT path diverged", cfg.name());
+    }
+
+    #[test]
+    fn lut_path_bit_identical_to_reference() {
+        for (i, cfg) in [
+            NxConfig::bfp(4),
+            NxConfig::mxfp(4),
+            NxConfig::mxfp(5),
+            NxConfig::mxfp(6),
+            NxConfig::nxfp(4),
+            NxConfig::nxfp(5),
+            NxConfig::nxfp(6),
+        ]
+        .iter()
+        .enumerate()
+        {
+            round_trip(cfg, 16, 96, 40 + i as u64);
+        }
+    }
+
+    #[test]
+    fn lut_path_partial_tail_block() {
+        round_trip(&NxConfig::nxfp(4), 4, 45, 50);
+    }
+
+    #[test]
+    fn gemv_matches_dequant_then_matmul() {
+        let mut rng = Rng::seeded(51);
+        let cfg = NxConfig::nxfp(4);
+        let t = Tensor2::random_normal(24, 128, 0.5, &mut rng);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q = quantize_matrix(&t, &cfg);
+        let w = q.dequantize(&cfg);
+        let mut want = vec![0.0f32; 24];
+        for r in 0..24 {
+            want[r] = w.row(r).iter().zip(&x).map(|(&a, &b)| a * b).sum();
+        }
+        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let lut = DequantLut::new(&cfg);
+        let mut got = vec![0.0f32; 24];
+        gemv_packed(&packed, &lut, true, &x, &mut got);
+        assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn recycled_code_survives_lut() {
+        let cfg = NxConfig::nxfp(4);
+        let lut = DequantLut::new(&cfg);
+        // code 0b1000 (-0) must decode to the recycled value, not -0
+        assert_eq!(lut.mx[0b1000], -0.25);
+        assert_eq!(lut.bfp[0b1000], -0.5);
+        // without CR the code decodes to 0
+        let plain = DequantLut::new(&NxConfig::mxfp(4));
+        assert_eq!(plain.mx[0b1000], 0.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Evaluation harness: held-out perplexity (Wikitext2 stand-in) and 4-way
+//! multiple-choice reasoning accuracy (MMLU stand-in), both driven through
+//! the AOT artifacts with weights supplied as literals — so a quantized
+//! model is evaluated by dequantizing its weights (direct-cast) and feeding
+//! the same eval graph.
+
+pub mod perplexity;
+pub mod reasoning;
+
+use crate::formats::NxConfig;
+use crate::models::Checkpoint;
+use crate::quant::quantize_matrix;
+
+pub use perplexity::{perplexity, Perplexity};
+pub use reasoning::reasoning_accuracy;
+
+/// Direct-cast a checkpoint: quantize-dequantize every quantizable weight
+/// under `cfg`, leaving embeddings/norm gains in full precision (the paper's
+/// weight-only setting). Returns the degraded checkpoint the eval graph sees.
+pub fn quantize_checkpoint(ck: &Checkpoint, spec_quantizable: &[String], cfg: &NxConfig) -> Checkpoint {
+    let mut out = ck.clone();
+    for name in spec_quantizable {
+        if let Some(t) = out.get_mut(name) {
+            *t = quantize_matrix(t, cfg).dequantize(cfg);
+        }
+    }
+    out
+}
+
+/// Bit-true footprint of a checkpoint under a quantization config
+/// (quantizable weights at `cfg` bits, everything else FP16), in bytes.
+pub fn checkpoint_footprint_bytes(
+    ck: &Checkpoint,
+    spec_quantizable: &[String],
+    cfg: Option<&NxConfig>,
+) -> u64 {
+    let mut bits = 0u64;
+    for (name, t) in &ck.params {
+        let is_q = spec_quantizable.contains(name);
+        bits += match (is_q, cfg) {
+            (true, Some(c)) => c.footprint_bits(t.cols) * t.rows as u64,
+            _ => (t.len() as u64) * 16,
+        };
+    }
+    bits / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LmSpec;
+
+    #[test]
+    fn quantize_checkpoint_touches_only_quantizable() {
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 3);
+        let q = quantize_checkpoint(&ck, &spec.quantizable(), &NxConfig::nxfp(4));
+        // embeddings untouched
+        assert_eq!(q.get("embed").unwrap(), ck.get("embed").unwrap());
+        assert_eq!(q.get("l0.ln1").unwrap(), ck.get("l0.ln1").unwrap());
+        // weights changed (4-bit is lossy on random init)
+        assert_ne!(q.get("l0.wq").unwrap(), ck.get("l0.wq").unwrap());
+    }
+
+    #[test]
+    fn footprint_shrinks_with_bits() {
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 3);
+        let qn = spec.quantizable();
+        let fp16 = checkpoint_footprint_bytes(&ck, &qn, None);
+        let w4 = checkpoint_footprint_bytes(&ck, &qn, Some(&NxConfig::nxfp(4)));
+        let w6 = checkpoint_footprint_bytes(&ck, &qn, Some(&NxConfig::mxfp(6)));
+        assert!(w4 < w6 && w6 < fp16);
+    }
+}

@@ -1,0 +1,60 @@
+//! Held-out perplexity through the `eval_step` artifact.
+
+use anyhow::Result;
+
+use crate::models::{Checkpoint, Corpus};
+use crate::runtime::{lit, Step};
+use crate::train::params_to_literals;
+
+/// Perplexity result with the raw NLL aggregates.
+#[derive(Clone, Copy, Debug)]
+pub struct Perplexity {
+    pub sum_nll: f64,
+    pub tokens: u64,
+}
+
+impl Perplexity {
+    pub fn ppl(&self) -> f64 {
+        (self.sum_nll / self.tokens.max(1) as f64).exp()
+    }
+}
+
+/// Evaluate a checkpoint's perplexity over the corpus eval split.
+///
+/// `eval_step` contract: inputs `P` params + `tokens [B, S+1]` (i32);
+/// outputs `(sum_nll, count)` f32 scalars. Windows are batched `batch` at a
+/// time; a trailing partial batch is dropped (deterministic across formats,
+/// so comparisons are apples-to-apples).
+pub fn perplexity(
+    step: &Step,
+    ck: &Checkpoint,
+    corpus: &Corpus,
+    seq: usize,
+    batch: usize,
+) -> Result<Perplexity> {
+    let params = params_to_literals(ck)?;
+    let windows = corpus.eval_windows(seq);
+    anyhow::ensure!(
+        windows.len() >= batch,
+        "eval split too small: {} windows < batch {batch}",
+        windows.len()
+    );
+    let mut agg = Perplexity { sum_nll: 0.0, tokens: 0 };
+    for chunk in windows.chunks(batch) {
+        if chunk.len() < batch {
+            break; // fixed artifact batch shape
+        }
+        let mut toks = Vec::with_capacity(batch * (seq + 1));
+        for w in chunk {
+            toks.extend_from_slice(w);
+        }
+        let tok_lit = lit::from_i32(&toks, &[batch as i64, seq as i64 + 1])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&tok_lit);
+        let out = step.run(&args)?;
+        anyhow::ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        agg.sum_nll += lit::first_f32(&out[0])? as f64;
+        agg.tokens += lit::first_f32(&out[1])? as u64;
+    }
+    Ok(agg)
+}

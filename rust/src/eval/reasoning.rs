@@ -1,0 +1,68 @@
+//! Multiple-choice reasoning accuracy (MMLU stand-in) through the
+//! `score_step` artifact, scored exactly like lm-eval-harness: the choice
+//! with the highest continuation log-probability wins.
+
+use anyhow::Result;
+
+use crate::models::corpus::{GrammarSpec, Probe};
+use crate::models::Checkpoint;
+use crate::runtime::{lit, Step};
+use crate::train::params_to_literals;
+
+/// Score probes and return accuracy in [0, 1].
+///
+/// `score_step` contract: inputs `P` params + `tokens [B, S+1]` (i32);
+/// output `nll [B, S]` where `nll[b, i] = -log p(tokens[b, i+1] | tokens[b, ..=i])`.
+///
+/// Each probe contributes 4 rows (one per choice): `BOS e r choice SEP…pad`.
+/// The choice token sits at index 3, so its NLL is `nll[row, 2]`.
+pub fn reasoning_accuracy(
+    step: &Step,
+    ck: &Checkpoint,
+    probes: &[Probe],
+    seq: usize,
+    batch: usize,
+) -> Result<f64> {
+    assert!(batch % 4 == 0, "batch must pack whole probes (4 rows each)");
+    let params = params_to_literals(ck)?;
+    let probes_per_batch = batch / 4;
+    let mut correct = 0u64;
+    let mut total = 0u64;
+    for chunk in probes.chunks(probes_per_batch) {
+        if chunk.len() < probes_per_batch {
+            break;
+        }
+        let mut toks = Vec::with_capacity(batch * (seq + 1));
+        for p in chunk {
+            for &choice in &p.choices {
+                let mut row = p.prompt.clone();
+                row.push(choice);
+                row.resize(seq + 1, GrammarSpec::SEP);
+                toks.extend_from_slice(&row);
+            }
+        }
+        let tok_lit = lit::from_i32(&toks, &[batch as i64, seq as i64 + 1])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&tok_lit);
+        let out = step.run(&args)?;
+        anyhow::ensure!(out.len() == 1, "score_step returned {} outputs", out.len());
+        let nll = lit::to_f32(&out[0])?;
+        anyhow::ensure!(nll.len() == batch * seq, "nll shape mismatch");
+        for (pi, p) in chunk.iter().enumerate() {
+            let choice_pos = p.prompt.len() - 1; // nll index of the choice token
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..4 {
+                let row = pi * 4 + c;
+                let v = nll[row * seq + choice_pos];
+                if v < best.0 {
+                    best = (v, c);
+                }
+            }
+            if best.1 == p.answer {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}

@@ -1,0 +1,280 @@
+//! Element-level number formats: minifloats (ExMy, OCP Microscaling
+//! semantics) and all-mantissa fixed-point elements (BFP). An element format
+//! defines the per-element **level table** — the sorted positive magnitudes
+//! representable by its magnitude code — plus the scale convention that ties
+//! the table to a block's shared exponent.
+
+use crate::util::floor_log2;
+
+/// An element format: 1 sign bit + `ebits` exponent bits + `mbits` mantissa
+/// bits. `ebits == 0` denotes the BFP (all-mantissa, fixed-point) element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ElementFormat {
+    pub ebits: u8,
+    pub mbits: u8,
+}
+
+impl ElementFormat {
+    pub const fn new(ebits: u8, mbits: u8) -> Self {
+        ElementFormat { ebits, mbits }
+    }
+
+    /// OCP MxFP element defaults per total bitwidth (the configuration the
+    /// paper reports): FP4 = E2M1, FP5 = E2M2, FP6 = E2M3, FP8 = E4M3.
+    pub fn mx_default(bits: u8) -> Self {
+        match bits {
+            3 => ElementFormat::new(2, 0), // FP3 (Fig. 10 3-bit points)
+            4 => ElementFormat::new(2, 1),
+            5 => ElementFormat::new(2, 2),
+            6 => ElementFormat::new(2, 3),
+            7 => ElementFormat::new(3, 3),
+            8 => ElementFormat::new(4, 3),
+            _ => panic!("unsupported MxFP bitwidth {bits}"),
+        }
+    }
+
+    /// The BFP element with the same total bitwidth.
+    pub fn bfp(bits: u8) -> Self {
+        assert!(bits >= 2, "BFP needs at least sign + 1 mantissa bit");
+        ElementFormat::new(0, bits - 1)
+    }
+
+    /// Total storage bits per element (sign + exponent + mantissa).
+    pub const fn bits(&self) -> u8 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// IEEE-style exponent bias.
+    pub fn bias(&self) -> i32 {
+        if self.ebits == 0 {
+            0
+        } else {
+            (1i32 << (self.ebits - 1)) - 1
+        }
+    }
+
+    /// Sorted positive magnitudes for magnitude codes `0..len`. Monotone in
+    /// the code, so "ties to even table index" == "ties to even mantissa
+    /// code" (RTNE). Non-finite codes (E4M3 NaN, E5M2 inf/NaN) are excluded;
+    /// encoding saturates at the largest finite level.
+    pub fn levels(&self) -> Vec<f32> {
+        let e = self.ebits as u32;
+        let m = self.mbits as u32;
+        if e == 0 {
+            // fixed-point magnitudes 0, 1, .., 2^m - 1 (step applied by the
+            // block scale)
+            return (0..(1u32 << m)).map(|c| c as f32).collect();
+        }
+        let bias = self.bias();
+        let mut out = Vec::with_capacity(1 << (e + m));
+        for code in 0..(1u32 << (e + m)) {
+            let exp_field = (code >> m) as i32;
+            let m_field = (code & ((1 << m) - 1)) as f32;
+            let frac = m_field / (1u32 << m) as f32;
+            // OCP FP8 specials: E4M3 has NaN at the all-ones code; E5M2 has
+            // IEEE inf/NaN at exp field all-ones. Exclude from finite levels.
+            if self.ebits == 4 && self.mbits == 3 && code == (1 << (e + m)) - 1 {
+                break;
+            }
+            if self.ebits == 5 && exp_field == (1 << e) - 1 {
+                break;
+            }
+            let v = if exp_field == 0 {
+                // subnormal
+                frac * crate::util::exp2i(1 - bias)
+            } else {
+                (1.0 + frac) * crate::util::exp2i(exp_field - bias)
+            };
+            out.push(v);
+        }
+        out
+    }
+
+    /// Largest finite magnitude.
+    pub fn max_finite(&self) -> f32 {
+        *self.levels().last().unwrap()
+    }
+
+    /// Exponent of the largest finite magnitude (`emax` in the OCP spec).
+    pub fn emax(&self) -> i32 {
+        floor_log2(self.max_finite()).unwrap()
+    }
+
+    /// Exponent offset of the block scale: the shared scale is
+    /// `X = 2^(E_shared + offset)` so that a block max `|v| in [2^E, 2^(E+1))`
+    /// lands near the top of the level table.
+    ///
+    /// * minifloat: `offset = -emax` (OCP Microscaling rule);
+    /// * fixed-point: `offset = 1 - mbits` (top magnitude `2^m - 1` covers
+    ///   `~2^(E+1)`), i.e. the MSFP/BFP alignment.
+    pub fn scale_exp_offset(&self) -> i32 {
+        if self.ebits == 0 {
+            1 - self.mbits as i32
+        } else {
+            -self.emax()
+        }
+    }
+
+    /// Human-readable name, e.g. `E2M1` or `M3` (fixed-point).
+    pub fn name(&self) -> String {
+        if self.ebits == 0 {
+            format!("M{}", self.mbits)
+        } else {
+            format!("E{}M{}", self.ebits, self.mbits)
+        }
+    }
+}
+
+/// Project `a >= 0` onto the sorted level table: nearest, ties to the even
+/// index (== round-to-nearest-even on the magnitude code), saturating at the
+/// top. Returns the table index.
+#[inline]
+pub fn project_magnitude(levels: &[f32], a: f32) -> usize {
+    debug_assert!(a >= 0.0 || a.is_nan());
+    if a.is_nan() {
+        return levels.len() - 1; // direct-cast of NaN saturates (documented)
+    }
+    // partition point: first index with level >= a
+    let i = levels.partition_point(|&l| l < a);
+    if i == 0 {
+        return 0;
+    }
+    if i == levels.len() {
+        return levels.len() - 1;
+    }
+    let lo = levels[i - 1];
+    let hi = levels[i];
+    let dl = a - lo;
+    let dh = hi - a;
+    if dl < dh {
+        i - 1
+    } else if dh < dl {
+        i
+    } else {
+        // exact tie: even index wins
+        if (i - 1) % 2 == 0 {
+            i - 1
+        } else {
+            i
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_levels_match_ocp_fp4() {
+        let f = ElementFormat::new(2, 1);
+        assert_eq!(f.levels(), vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+        assert_eq!(f.max_finite(), 6.0);
+        assert_eq!(f.emax(), 2);
+        assert_eq!(f.scale_exp_offset(), -2);
+        assert_eq!(f.bits(), 4);
+        assert_eq!(f.name(), "E2M1");
+    }
+
+    #[test]
+    fn e2m3_levels_match_ocp_fp6() {
+        let f = ElementFormat::new(2, 3);
+        let lv = f.levels();
+        assert_eq!(lv.len(), 32);
+        assert_eq!(f.max_finite(), 7.5);
+        assert_eq!(lv[0], 0.0);
+        assert_eq!(lv[1], 0.125); // subnormal step 2^-3 * 2^0
+        assert_eq!(f.emax(), 2);
+    }
+
+    #[test]
+    fn e3m2_levels_match_ocp_fp6_alt() {
+        let f = ElementFormat::new(3, 2);
+        assert_eq!(f.max_finite(), 28.0);
+        assert_eq!(f.emax(), 4);
+        assert_eq!(f.levels().len(), 32);
+    }
+
+    #[test]
+    fn e4m3_excludes_nan_max_448() {
+        let f = ElementFormat::new(4, 3);
+        assert_eq!(f.max_finite(), 448.0);
+        assert_eq!(f.levels().len(), 127); // 128 codes minus the NaN code
+    }
+
+    #[test]
+    fn e5m2_excludes_inf_nan_max_57344() {
+        let f = ElementFormat::new(5, 2);
+        assert_eq!(f.max_finite(), 57344.0);
+        assert_eq!(f.levels().len(), 124); // 4 non-finite codes dropped
+    }
+
+    #[test]
+    fn bfp4_element_is_integer_grid() {
+        let f = ElementFormat::bfp(4);
+        assert_eq!(f.levels(), vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(f.scale_exp_offset(), -2);
+        assert_eq!(f.name(), "M3");
+    }
+
+    #[test]
+    fn levels_strictly_monotone_for_all_supported_formats() {
+        for f in [
+            ElementFormat::new(2, 1),
+            ElementFormat::new(2, 2),
+            ElementFormat::new(2, 3),
+            ElementFormat::new(3, 2),
+            ElementFormat::new(3, 3),
+            ElementFormat::new(4, 3),
+            ElementFormat::new(5, 2),
+            ElementFormat::bfp(4),
+            ElementFormat::bfp(5),
+            ElementFormat::bfp(6),
+            ElementFormat::bfp(8),
+        ] {
+            let lv = f.levels();
+            for w in lv.windows(2) {
+                assert!(w[0] < w[1], "{:?} not monotone: {:?}", f, w);
+            }
+        }
+    }
+
+    #[test]
+    fn project_nearest_and_saturates() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(project_magnitude(&lv, 0.0), 0);
+        assert_eq!(project_magnitude(&lv, 0.2), 0);
+        assert_eq!(project_magnitude(&lv, 0.3), 1);
+        assert_eq!(project_magnitude(&lv, 5.1), 7); // nearer 6 than 4
+        assert_eq!(project_magnitude(&lv, 4.9), 6);
+        assert_eq!(project_magnitude(&lv, 100.0), 7); // saturate
+    }
+
+    #[test]
+    fn project_ties_to_even_index() {
+        let lv = ElementFormat::new(2, 1).levels();
+        // 0.25 is exactly between levels 0 (0.0, even) and 1 (0.5) -> 0
+        assert_eq!(project_magnitude(&lv, 0.25), 0);
+        // 1.25 between idx 2 (1.0, even) and 3 (1.5) -> 2
+        assert_eq!(project_magnitude(&lv, 1.25), 2);
+        // 2.5 between idx 4 (2.0, even) and 5 (3.0) -> 4
+        assert_eq!(project_magnitude(&lv, 2.5), 4);
+        // 5.0 between idx 6 (4.0, even) and 7 (6.0) -> 6
+        assert_eq!(project_magnitude(&lv, 5.0), 6);
+    }
+
+    #[test]
+    fn project_exact_levels_idempotent() {
+        for f in [ElementFormat::new(2, 3), ElementFormat::bfp(6)] {
+            let lv = f.levels();
+            for (i, &l) in lv.iter().enumerate() {
+                assert_eq!(project_magnitude(&lv, l), i);
+            }
+        }
+    }
+
+    #[test]
+    fn project_nan_saturates() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(project_magnitude(&lv, f32::NAN), 7);
+    }
+}

@@ -1,0 +1,653 @@
+//! Block number formats: BFP (MSFP/MxINT-style), Microscaling MxFP, and the
+//! paper's Nanoscaling NxFP (NanoMantissa + Adaptive Microexponent + Code
+//! Recycling), all over shared-exponent blocks of `k` elements.
+//!
+//! The semantics here are **normative** for the whole repo: the Python
+//! oracle (`python/compile/kernels/ref.py`) and the Pallas kernel implement
+//! the same rules and are cross-checked bit-for-bit through golden vectors
+//! (`rust/tests/golden_cross_check.rs`).
+
+pub mod element;
+pub mod packed;
+pub mod recycle;
+
+pub use element::{project_magnitude, ElementFormat};
+pub use recycle::RecycleTarget;
+
+use crate::util::{exp2i, floor_log2};
+
+/// Shared-exponent storage range (OCP E8M0 without the NaN code).
+pub const E_SHARED_MIN: i32 = -127;
+pub const E_SHARED_MAX: i32 = 127;
+
+/// A fully-resolved per-block element format: level table + scale convention
+/// + optional recycled code value. Build once per config, reuse per block.
+#[derive(Clone, Debug)]
+pub struct BlockFormat {
+    pub elem: ElementFormat,
+    /// Sorted positive magnitudes for magnitude codes `0..levels.len()`.
+    pub levels: Vec<f32>,
+    /// Shared scale is `2^(E_shared + offset)` (NanoMantissa multiplies it).
+    pub offset: i32,
+    /// Scaled-domain value decoded for code `10…0` when Code Recycling is on.
+    pub recycle: Option<f32>,
+}
+
+impl BlockFormat {
+    pub fn new(elem: ElementFormat, recycle: Option<RecycleTarget>) -> Self {
+        let levels = elem.levels();
+        let recycle = recycle.map(|t| t.resolve(&levels));
+        BlockFormat { elem, offset: elem.scale_exp_offset(), levels, recycle }
+    }
+
+    /// Total element bits (incl. sign).
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.elem.bits()
+    }
+
+    /// Encode one scaled-domain value to a sign-magnitude code.
+    /// Nearest level, ties-to-even mantissa code, saturating; the recycled
+    /// code participates in nearest-neighbour search when enabled (grid
+    /// levels win exact ties against the recycled level).
+    #[inline]
+    pub fn encode(&self, a: f32) -> u8 {
+        let sign = a < 0.0;
+        let idx = project_magnitude(&self.levels, a.abs());
+        let grid = if sign { -self.levels[idx] } else { self.levels[idx] };
+        if let Some(r) = self.recycle {
+            if (a - r).abs() < (a - grid).abs() {
+                return 1u8 << (self.bits() - 1); // sign=1, magnitude=0
+            }
+        }
+        if idx == 0 {
+            return 0; // canonical +0 (code -0 is reserved / recycled)
+        }
+        ((sign as u8) << (self.bits() - 1)) | idx as u8
+    }
+
+    /// Decode a code back to the scaled domain.
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        let sign_bit = 1u8 << (self.bits() - 1);
+        let idx = (code & (sign_bit - 1)) as usize;
+        let neg = code & sign_bit != 0;
+        if neg && idx == 0 {
+            return self.recycle.unwrap_or(0.0);
+        }
+        let idx = idx.min(self.levels.len() - 1);
+        let v = self.levels[idx];
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Largest representable magnitude (scaled domain).
+    #[inline]
+    pub fn top(&self) -> f32 {
+        *self.levels.last().unwrap()
+    }
+}
+
+/// Which base block format a non-adaptive config uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaseFormat {
+    /// Microscaling: minifloat elements (microexponents present).
+    Mx,
+    /// Block floating point: all-mantissa elements.
+    Bfp,
+}
+
+/// NanoMantissa candidate policy (paper Algorithm 1 tries the rounded
+/// candidate and zero; the exhaustive mode is our ablation upper bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NanoMode {
+    /// `{m_candidate, 0}` — the paper's Algorithm 1.
+    TwoCandidate,
+    /// `{0, 1, 2, 3}` — exhaustive search over the 2-bit field.
+    Exhaustive,
+}
+
+/// Complete quantizer configuration for one tensor.
+#[derive(Clone, Debug)]
+pub struct NxConfig {
+    /// Element bits (4, 5, 6, … incl. sign).
+    pub bits: u8,
+    /// Minifloat element used on the Mx path.
+    pub elem_mx: ElementFormat,
+    /// Base format when Adaptive Microexponent is disabled.
+    pub base: BaseFormat,
+    /// Block size `k` (paper default 32).
+    pub block_size: usize,
+    pub enable_nm: bool,
+    pub enable_am: bool,
+    pub enable_cr: bool,
+    pub nano_mode: NanoMode,
+    pub recycle: RecycleTarget,
+}
+
+impl NxConfig {
+    /// Plain block floating point (MSFP / MxINT baseline).
+    pub fn bfp(bits: u8) -> Self {
+        NxConfig {
+            bits,
+            elem_mx: ElementFormat::mx_default(bits.max(3)),
+            base: BaseFormat::Bfp,
+            block_size: 32,
+            enable_nm: false,
+            enable_am: false,
+            enable_cr: false,
+            nano_mode: NanoMode::TwoCandidate,
+            recycle: RecycleTarget::HalfMin,
+        }
+    }
+
+    /// OCP Microscaling with the default element format for `bits`.
+    pub fn mxfp(bits: u8) -> Self {
+        NxConfig { base: BaseFormat::Mx, ..NxConfig::bfp(bits) }
+    }
+
+    /// Microscaling with an explicit element format (e.g. E3M2 for FP6).
+    pub fn mxfp_elem(bits: u8, elem: ElementFormat) -> Self {
+        assert_eq!(elem.bits(), bits);
+        NxConfig { elem_mx: elem, ..NxConfig::mxfp(bits) }
+    }
+
+    /// Full Nanoscaling: NM + AM + CR (the paper's headline format).
+    pub fn nxfp(bits: u8) -> Self {
+        NxConfig {
+            enable_nm: true,
+            enable_am: true,
+            enable_cr: true,
+            ..NxConfig::mxfp(bits)
+        }
+    }
+
+    /// Ablation: NanoMantissa only.
+    pub fn nxfp_nm(bits: u8) -> Self {
+        NxConfig { enable_nm: true, ..NxConfig::mxfp(bits) }
+    }
+
+    /// Ablation: NanoMantissa + Adaptive Microexponent.
+    pub fn nxfp_nm_am(bits: u8) -> Self {
+        NxConfig { enable_nm: true, enable_am: true, ..NxConfig::mxfp(bits) }
+    }
+
+    pub fn with_block_size(mut self, k: usize) -> Self {
+        assert!(k > 0);
+        self.block_size = k;
+        self
+    }
+
+    pub fn with_recycle(mut self, t: RecycleTarget) -> Self {
+        self.recycle = t;
+        self.enable_cr = true;
+        self
+    }
+
+    pub fn with_nano_mode(mut self, m: NanoMode) -> Self {
+        self.nano_mode = m;
+        self
+    }
+
+    /// Display name mirroring the paper's tables, e.g. `NxFP4 (NM+AM+CR)`.
+    pub fn name(&self) -> String {
+        let any_nx = self.enable_nm || self.enable_am || self.enable_cr;
+        if !any_nx {
+            return match self.base {
+                BaseFormat::Bfp => format!("BFP{}", self.bits),
+                BaseFormat::Mx => format!("MxFP{}-{}", self.bits, self.elem_mx.name()),
+            };
+        }
+        let mut techs = Vec::new();
+        if self.enable_nm {
+            techs.push("NM");
+        }
+        if self.enable_am {
+            techs.push("AM");
+        }
+        if self.enable_cr {
+            techs.push("CR");
+        }
+        format!("NxFP{} ({})", self.bits, techs.join("+"))
+    }
+
+    /// Per-block metadata bits: shared exponent (E8M0) + NanoMantissa (2) +
+    /// format index (1). Code Recycling is free.
+    pub fn overhead_bits_per_block(&self) -> u32 {
+        8 + if self.enable_nm { 2 } else { 0 } + if self.enable_am { 1 } else { 0 }
+    }
+
+    /// Bit-true storage cost of `n` elements (paper footprint accounting).
+    pub fn footprint_bits(&self, n: usize) -> u64 {
+        let k = self.block_size;
+        let blocks = n.div_ceil(k) as u64;
+        blocks * self.overhead_bits_per_block() as u64 + (n as u64) * self.bits as u64
+    }
+
+    /// Effective bits per element including metadata.
+    pub fn effective_bits(&self) -> f64 {
+        self.bits as f64 + self.overhead_bits_per_block() as f64 / self.block_size as f64
+    }
+
+    /// Resolve the (Mx, Bfp) block formats with recycling applied as
+    /// configured. Cache this per tensor — level tables allocate.
+    pub fn tables(&self) -> FormatTables {
+        let rec = if self.enable_cr { Some(self.recycle) } else { None };
+        FormatTables {
+            mx: BlockFormat::new(self.elem_mx, rec),
+            bfp: BlockFormat::new(ElementFormat::bfp(self.bits), rec),
+        }
+    }
+}
+
+/// Pre-built level tables for both adaptive paths.
+#[derive(Clone, Debug)]
+pub struct FormatTables {
+    pub mx: BlockFormat,
+    pub bfp: BlockFormat,
+}
+
+impl FormatTables {
+    #[inline]
+    pub fn get(&self, fmt_mx: bool) -> &BlockFormat {
+        if fmt_mx {
+            &self.mx
+        } else {
+            &self.bfp
+        }
+    }
+}
+
+/// One quantized block: shared exponent, 2-bit NanoMantissa, format index
+/// bit, and per-element sign-magnitude codes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockCode {
+    pub e_shared: i16,
+    pub nano: u8,
+    pub fmt_mx: bool,
+    pub codes: Vec<u8>,
+}
+
+impl BlockCode {
+    /// NanoMantissa multiplier `(1.mm)₂`.
+    #[inline]
+    pub fn nano_scale(&self) -> f32 {
+        1.0 + self.nano as f32 / 4.0
+    }
+
+    /// Full dequantization scale for this block under `tabs`.
+    #[inline]
+    pub fn scale(&self, tabs: &FormatTables) -> f32 {
+        self.nano_scale() * exp2i(self.e_shared as i32 + tabs.get(self.fmt_mx).offset)
+    }
+}
+
+/// Shared exponent of a block: `⌊log2 max|v|⌋`, clamped to E8M0 range.
+/// `None` for an all-zero (or all-nonfinite) block.
+pub fn shared_exponent(v: &[f32]) -> Option<i32> {
+    let mut maxabs = 0.0f32;
+    for &x in v {
+        let a = x.abs();
+        if a.is_finite() && a > maxabs {
+            maxabs = a;
+        }
+    }
+    floor_log2(maxabs).map(|e| e.clamp(E_SHARED_MIN, E_SHARED_MAX))
+}
+
+/// NanoMantissa candidate: round the block max against the top level of the
+/// target format (the paper's Fig. 4 rule; see DESIGN.md §4 for why the
+/// worked example, not Algorithm 1's pseudocode formula, is normative).
+pub fn nano_candidate(vmax: f32, bf: &BlockFormat, e_shared: i32) -> u8 {
+    let cap = bf.top() * exp2i(e_shared + bf.offset);
+    if cap <= 0.0 || !cap.is_finite() {
+        return 0;
+    }
+    let ratio = vmax / cap;
+    if ratio <= 1.0 {
+        return 0;
+    }
+    (((ratio - 1.0) * 4.0).round() as i32).clamp(0, 3) as u8
+}
+
+/// Quantize one block with a fixed (format, nano) choice. Returns the codes
+/// and the sum of squared errors in the **original** domain.
+pub fn quantize_block_fixed(
+    v: &[f32],
+    bf: &BlockFormat,
+    e_shared: i32,
+    nano: u8,
+) -> (Vec<u8>, f64) {
+    let scale = (1.0 + nano as f32 / 4.0) * exp2i(e_shared + bf.offset);
+    let inv = 1.0 / scale;
+    let mut codes = Vec::with_capacity(v.len());
+    let mut sse = 0.0f64;
+    for &x in v {
+        let code = bf.encode(x * inv);
+        let back = bf.decode(code) * scale;
+        let d = (x - back) as f64;
+        sse += d * d;
+        codes.push(code);
+    }
+    (codes, sse)
+}
+
+/// Quantize one block under a full config (paper Algorithm 1 generalized to
+/// the ablation toggles). Deterministic candidate order: for each format
+/// (Mx first), the rounded NanoMantissa candidate then 0; strictly smaller
+/// SSE wins.
+pub fn quantize_block(v: &[f32], cfg: &NxConfig, tabs: &FormatTables) -> BlockCode {
+    let Some(e_shared) = shared_exponent(v) else {
+        // all-zero block: canonical zero encoding
+        return BlockCode {
+            e_shared: E_SHARED_MIN as i16,
+            nano: 0,
+            fmt_mx: cfg.base == BaseFormat::Mx || cfg.enable_am,
+            codes: vec![0; v.len()],
+        };
+    };
+    let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+
+    let formats: &[bool] = if cfg.enable_am {
+        &[true, false]
+    } else {
+        match cfg.base {
+            BaseFormat::Mx => &[true],
+            BaseFormat::Bfp => &[false],
+        }
+    };
+
+    let mut best: Option<(f64, BlockCode)> = None;
+    for &fmt_mx in formats {
+        let bf = tabs.get(fmt_mx);
+        let nanos: Vec<u8> = if cfg.enable_nm {
+            match cfg.nano_mode {
+                NanoMode::TwoCandidate => {
+                    let m = nano_candidate(vmax, bf, e_shared);
+                    if m == 0 {
+                        vec![0]
+                    } else {
+                        vec![m, 0]
+                    }
+                }
+                NanoMode::Exhaustive => vec![0, 1, 2, 3],
+            }
+        } else {
+            vec![0]
+        };
+        for nano in nanos {
+            let (codes, sse) = quantize_block_fixed(v, bf, e_shared, nano);
+            let better = match &best {
+                None => true,
+                Some((b, _)) => sse < *b,
+            };
+            if better {
+                best = Some((
+                    sse,
+                    BlockCode { e_shared: e_shared as i16, nano, fmt_mx, codes },
+                ));
+            }
+        }
+    }
+    best.unwrap().1
+}
+
+/// Dequantize one block (reference path; the LUT fast path lives in
+/// [`crate::dequant`]).
+pub fn dequantize_block(block: &BlockCode, tabs: &FormatTables, out: &mut [f32]) {
+    let bf = tabs.get(block.fmt_mx);
+    let scale = block.scale(tabs);
+    for (o, &c) in out.iter_mut().zip(&block.codes) {
+        *o = bf.decode(c) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fakequant(v: &[f32], cfg: &NxConfig) -> Vec<f32> {
+        let tabs = cfg.tables();
+        let b = quantize_block(v, cfg, &tabs);
+        let mut out = vec![0.0; v.len()];
+        dequantize_block(&b, &tabs, &mut out);
+        out
+    }
+
+    fn sse(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum()
+    }
+
+    #[test]
+    fn mxfp4_quantizes_fig2_style_vector() {
+        // values already near the element domain: E=2, X=1
+        let v = [6.0, -3.0, 0.5, 1.5, 2.2, -0.1, 0.0, 4.9];
+        let cfg = NxConfig::mxfp(4);
+        let out = fakequant(&v, &cfg);
+        assert_eq!(out[0], 6.0);
+        assert_eq!(out[1], -3.0);
+        assert_eq!(out[2], 0.5);
+        assert_eq!(out[3], 1.5);
+        assert_eq!(out[4], 2.0);
+        assert_eq!(out[5], 0.0);
+        assert_eq!(out[6], 0.0);
+        assert_eq!(out[7], 4.0); // 4.9 -> nearer 4 than 6
+    }
+
+    #[test]
+    fn bfp4_integer_grid() {
+        let v = [7.0, -3.2, 1.4, 0.2];
+        let cfg = NxConfig::bfp(4);
+        let out = fakequant(&v, &cfg);
+        // E = 2, step = 1
+        assert_eq!(out, vec![7.0, -3.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn nanomantissa_reproduces_fig4_example() {
+        // Paper Fig. 4: block max -7.4 (scaled domain), MxFP4 alone gives -6
+        // (error 1.4); with NanoMantissa 1.25 it gives -7.5 (error 0.1).
+        let v = [-7.4, 2.0, 1.0, 0.5, -1.5, 3.0, 0.0, 1.0];
+        let plain = fakequant(&v, &NxConfig::mxfp(4));
+        assert_eq!(plain[0], -6.0);
+        let nm = fakequant(&v, &NxConfig::nxfp_nm(4));
+        assert!((nm[0] - -7.5).abs() < 1e-6, "got {}", nm[0]);
+    }
+
+    #[test]
+    fn nm_never_hurts_mse() {
+        let mut rng = crate::util::rng::Rng::seeded(11);
+        for _ in 0..200 {
+            let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let base = sse(&v, &fakequant(&v, &NxConfig::mxfp(4)));
+            let nm = sse(&v, &fakequant(&v, &NxConfig::nxfp_nm(4)));
+            assert!(nm <= base + 1e-9, "NM raised SSE: {nm} > {base}");
+        }
+    }
+
+    #[test]
+    fn am_never_hurts_mse() {
+        let mut rng = crate::util::rng::Rng::seeded(12);
+        for _ in 0..200 {
+            let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let nm = sse(&v, &fakequant(&v, &NxConfig::nxfp_nm(4)));
+            let nm_am = sse(&v, &fakequant(&v, &NxConfig::nxfp_nm_am(4)));
+            assert!(nm_am <= nm + 1e-9);
+        }
+    }
+
+    #[test]
+    fn cr_never_hurts_mse() {
+        let mut rng = crate::util::rng::Rng::seeded(13);
+        for _ in 0..200 {
+            let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+            let nm_am = sse(&v, &fakequant(&v, &NxConfig::nxfp_nm_am(4)));
+            let full = sse(&v, &fakequant(&v, &NxConfig::nxfp(4)));
+            assert!(full <= nm_am + 1e-9);
+        }
+    }
+
+    #[test]
+    fn exhaustive_nano_at_least_as_good_as_two_candidate() {
+        let mut rng = crate::util::rng::Rng::seeded(14);
+        for _ in 0..100 {
+            let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let two = sse(&v, &fakequant(&v, &NxConfig::nxfp(4)));
+            let exh = sse(
+                &v,
+                &fakequant(&v, &NxConfig::nxfp(4).with_nano_mode(NanoMode::Exhaustive)),
+            );
+            assert!(exh <= two + 1e-9);
+        }
+    }
+
+    #[test]
+    fn recycled_code_decodes_to_half_min() {
+        let cfg = NxConfig::nxfp(4);
+        let tabs = cfg.tables();
+        // FP4 min positive level 0.5 -> recycled value -0.25
+        assert_eq!(tabs.mx.decode(0b1000), -0.25);
+        // BFP4 min positive level 1 -> -0.5
+        assert_eq!(tabs.bfp.decode(0b1000), -0.5);
+    }
+
+    #[test]
+    fn minus_zero_is_canonicalized_without_cr() {
+        let cfg = NxConfig::mxfp(4);
+        let tabs = cfg.tables();
+        // a tiny negative value rounds to zero -> must emit +0, not -0 code
+        assert_eq!(tabs.mx.encode(-0.01), 0);
+        assert_eq!(tabs.mx.decode(0b1000), 0.0);
+    }
+
+    #[test]
+    fn all_zero_block() {
+        let v = [0.0f32; 32];
+        for cfg in [NxConfig::bfp(4), NxConfig::mxfp(4), NxConfig::nxfp(4)] {
+            let out = fakequant(&v, &cfg);
+            assert!(out.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn single_element_and_partial_blocks() {
+        let v = [3.7f32];
+        let out = fakequant(&v, &NxConfig::nxfp(4));
+        assert!((out[0] - 3.7).abs() < 0.5);
+    }
+
+    #[test]
+    fn huge_and_tiny_magnitudes_clamp_to_e8m0() {
+        let v = [3.0e38f32, 1.0];
+        let out = fakequant(&v, &NxConfig::mxfp(4));
+        assert!(out[0].is_finite());
+        let tiny = [1.0e-44f32, -1.0e-45];
+        let out = fakequant(&tiny, &NxConfig::mxfp(4));
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn footprint_accounting_matches_paper() {
+        // NxFP5 (11 + 32*5 = 171 bits/block) vs MxFP6 (8 + 32*6 = 200):
+        // 14.5% smaller — the paper's footprint win.
+        let nx5 = NxConfig::nxfp(5).footprint_bits(32);
+        let mx6 = NxConfig::mxfp(6).footprint_bits(32);
+        assert_eq!(nx5, 171);
+        assert_eq!(mx6, 200);
+        assert!((1.0 - nx5 as f64 / mx6 as f64 - 0.145).abs() < 0.01);
+    }
+
+    #[test]
+    fn effective_bits() {
+        assert!((NxConfig::mxfp(4).effective_bits() - 4.25).abs() < 1e-12);
+        assert!((NxConfig::nxfp(4).effective_bits() - (4.0 + 11.0 / 32.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(NxConfig::bfp(4).name(), "BFP4");
+        assert_eq!(NxConfig::mxfp(4).name(), "MxFP4-E2M1");
+        assert_eq!(NxConfig::nxfp(4).name(), "NxFP4 (NM+AM+CR)");
+        assert_eq!(NxConfig::nxfp_nm(5).name(), "NxFP5 (NM)");
+    }
+
+    #[test]
+    fn code_round_trip_all_formats() {
+        // decode . encode is identity on every representable value
+        for cfg in [
+            NxConfig::bfp(4),
+            NxConfig::bfp(6),
+            NxConfig::mxfp(4),
+            NxConfig::mxfp(5),
+            NxConfig::mxfp(6),
+            NxConfig::mxfp(8), // E4M3 incl. saturation below the NaN code
+            NxConfig::nxfp(4),
+        ] {
+            let tabs = cfg.tables();
+            for bf in [&tabs.mx, &tabs.bfp] {
+                for idx in 0..bf.levels.len() {
+                    for sign in [1.0f32, -1.0] {
+                        let v = sign * bf.levels[idx];
+                        let c = bf.encode(v);
+                        assert_eq!(bf.decode(c), v + 0.0, "{} idx={idx}", cfg.name());
+                    }
+                }
+                if let Some(r) = bf.recycle {
+                    let c = bf.encode(r);
+                    assert_eq!(bf.decode(c), r, "recycled value not a fixed point");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mxfp8_e4m3_block() {
+        // 8-bit path: levels up to 448, idx field 7 bits
+        let cfg = NxConfig::mxfp(8);
+        let v = [400.0f32, -0.4, 3.1, 250.0];
+        let out = fakequant(&v, &cfg);
+        // E=8, X=2^0... relative error should be tiny at 8 bits
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() <= 0.07 * a.abs().max(1.0), "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn nano_candidate_range() {
+        let bf = BlockFormat::new(ElementFormat::mx_default(4), None);
+        // vmax exactly at the cap -> 0; slightly above -> 1; way above -> 3
+        let e = 2; // cap = 6 * 2^0 = 6
+        assert_eq!(nano_candidate(6.0, &bf, e), 0);
+        assert_eq!(nano_candidate(7.4, &bf, e), 1); // the Fig. 4 example
+        assert_eq!(nano_candidate(7.9, &bf, e), 1);
+        // ratio can't reach 1.33+ for E2M1 (maxabs < 2^(E+1) = 8/6 = 1.33)
+        assert!(nano_candidate(100.0, &bf, e) == 3); // clamped anyway
+    }
+
+    #[test]
+    fn shared_exponent_cases() {
+        assert_eq!(shared_exponent(&[0.0, 0.0]), None);
+        assert_eq!(shared_exponent(&[0.5, -0.25]), Some(-1));
+        assert_eq!(shared_exponent(&[6.0]), Some(2));
+        assert_eq!(shared_exponent(&[f32::NAN, 2.0]), Some(1));
+        assert_eq!(shared_exponent(&[f32::INFINITY]), None);
+    }
+
+    #[test]
+    fn idempotent_fakequant() {
+        // quantizing an already-quantized vector is exact (non-NM formats;
+        // see quant::tests::prop_dequant_values_on_grid for why NM is
+        // excluded)
+        let mut rng = crate::util::rng::Rng::seeded(15);
+        let am_cr = NxConfig { enable_nm: false, ..NxConfig::nxfp(4) };
+        for cfg in [NxConfig::bfp(4), NxConfig::mxfp(4), am_cr] {
+            let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let q1 = fakequant(&v, &cfg);
+            let q2 = fakequant(&q1, &cfg);
+            assert_eq!(q1, q2, "{} not idempotent", cfg.name());
+        }
+    }
+}

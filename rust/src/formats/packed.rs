@@ -1,0 +1,286 @@
+//! Bit-true packed storage for quantized tensors (the paper's §6
+//! "structural memory layout"). Three tightly packed streams per tensor:
+//!
+//! * `scales`  — one E8M0 byte per block (biased shared exponent),
+//! * `meta`    — 3 bits per block (2-bit NanoMantissa + 1-bit format index),
+//!   present only for NxFP configs,
+//! * `payload` — `bits` per element, row-major.
+//!
+//! `footprint_bytes()` is exactly what a deployment would ship to DRAM, and
+//! is what the Fig. 9 / Fig. 12 footprint axes report.
+
+use super::{BlockCode, NxConfig};
+
+/// Append-only bit writer (LSB-first within each byte).
+pub struct BitWriter {
+    buf: Vec<u8>,
+    bitpos: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { buf: Vec::new(), bitpos: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, value: u32, nbits: u32) {
+        debug_assert!(nbits <= 32);
+        debug_assert!(nbits == 32 || value < (1u32 << nbits));
+        let mut v = value as u64;
+        let mut n = nbits as usize;
+        while n > 0 {
+            let byte = self.bitpos / 8;
+            let off = self.bitpos % 8;
+            if byte == self.buf.len() {
+                self.buf.push(0);
+            }
+            let take = (8 - off).min(n);
+            self.buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << off;
+            v >>= take;
+            n -= take;
+            self.bitpos += take;
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bitpos
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sequential bit reader matching [`BitWriter`].
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, bitpos: 0 }
+    }
+
+    #[inline]
+    pub fn read(&mut self, nbits: u32) -> u32 {
+        let mut out = 0u64;
+        let mut got = 0usize;
+        let mut n = nbits as usize;
+        while n > 0 {
+            let byte = self.bitpos / 8;
+            let off = self.bitpos % 8;
+            let take = (8 - off).min(n);
+            let chunk = (self.buf[byte] >> off) as u64 & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            n -= take;
+            self.bitpos += take;
+        }
+        out as u32
+    }
+
+    /// Position a reader at an absolute bit offset.
+    pub fn seek(&mut self, bit: usize) {
+        self.bitpos = bit;
+    }
+}
+
+/// A quantized 2-D tensor in packed deployable form.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub block_size: usize,
+    pub bits: u8,
+    pub has_meta: bool,
+    /// E8M0 biased shared exponents, one per block.
+    pub scales: Vec<u8>,
+    /// 3-bit (nano, fmt) records, bit-packed; empty when `!has_meta`.
+    pub meta: Vec<u8>,
+    /// Element codes, `bits` each, bit-packed row-major.
+    pub payload: Vec<u8>,
+    /// blocks per row
+    pub blocks_per_row: usize,
+}
+
+pub const E8M0_BIAS: i32 = 127;
+
+impl PackedMatrix {
+    /// Pack per-row block codes (as produced by `quant::quantize_matrix`).
+    pub fn pack(rows: usize, cols: usize, cfg: &NxConfig, blocks: &[BlockCode]) -> Self {
+        let k = cfg.block_size;
+        let bpr = cols.div_ceil(k);
+        assert_eq!(blocks.len(), rows * bpr, "block count mismatch");
+        let has_meta = cfg.enable_nm || cfg.enable_am;
+        let mut scales = Vec::with_capacity(blocks.len());
+        let mut metaw = BitWriter::new();
+        let mut payload = BitWriter::new();
+        for b in blocks {
+            scales.push((b.e_shared as i32 + E8M0_BIAS) as u8);
+            if has_meta {
+                metaw.push(b.nano as u32 | ((b.fmt_mx as u32) << 2), 3);
+            }
+            for &c in &b.codes {
+                payload.push(c as u32, cfg.bits as u32);
+            }
+        }
+        PackedMatrix {
+            rows,
+            cols,
+            block_size: k,
+            bits: cfg.bits,
+            has_meta,
+            scales,
+            meta: metaw.into_bytes(),
+            payload: payload.into_bytes(),
+            blocks_per_row: bpr,
+        }
+    }
+
+    /// Unpack back to per-block codes (inverse of [`PackedMatrix::pack`]).
+    pub fn unpack(&self) -> Vec<BlockCode> {
+        let mut out = Vec::with_capacity(self.rows * self.blocks_per_row);
+        let mut metar = BitReader::new(&self.meta);
+        let mut payr = BitReader::new(&self.payload);
+        for r in 0..self.rows {
+            for bi in 0..self.blocks_per_row {
+                let flat = r * self.blocks_per_row + bi;
+                let e = self.scales[flat] as i32 - E8M0_BIAS;
+                let (nano, fmt_mx) = if self.has_meta {
+                    let m = metar.read(3);
+                    ((m & 0b11) as u8, m & 0b100 != 0)
+                } else {
+                    (0, true) // caller's config decides the base format
+                };
+                let start = bi * self.block_size;
+                let len = self.block_size.min(self.cols - start);
+                let mut codes = Vec::with_capacity(len);
+                for _ in 0..len {
+                    codes.push(payr.read(self.bits as u32) as u8);
+                }
+                out.push(BlockCode { e_shared: e as i16, nano, fmt_mx, codes });
+            }
+        }
+        out
+    }
+
+    /// Exact stored size (what DRAM traffic/capacity accounting uses).
+    pub fn footprint_bytes(&self) -> usize {
+        self.scales.len() + self.meta.len() + self.payload.len()
+    }
+
+    /// Format-true footprint in bits (no byte rounding), matching
+    /// `NxConfig::footprint_bits`.
+    pub fn footprint_bits(&self) -> u64 {
+        let n_blocks = (self.rows * self.blocks_per_row) as u64;
+        let meta_bits = if self.has_meta { 3 } else { 0 };
+        n_blocks * (8 + meta_bits)
+            + (self.rows * self.cols) as u64 * self.bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::NxConfig;
+    use crate::quant::quantize_matrix;
+    use crate::tensor::Tensor2;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitwriter_reader_round_trip() {
+        let mut w = BitWriter::new();
+        let vals = [(5u32, 4u32), (0, 1), (1, 1), (255, 8), (6, 3), (1023, 10)];
+        for &(v, n) in &vals {
+            w.push(v, n);
+        }
+        let total: u32 = vals.iter().map(|&(_, n)| n).sum();
+        assert_eq!(w.bits(), total as usize);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.read(n), v);
+        }
+    }
+
+    #[test]
+    fn bitwriter_random_round_trip() {
+        let mut rng = Rng::seeded(21);
+        for _ in 0..50 {
+            let items: Vec<(u32, u32)> = (0..200)
+                .map(|_| {
+                    let n = 1 + rng.below(16) as u32;
+                    (rng.u32() & ((1u32 << n) - 1), n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &items {
+                w.push(v, n);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &(v, n) in &items {
+                assert_eq!(r.read(n), v);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_all_formats() {
+        let mut rng = Rng::seeded(22);
+        let t = Tensor2::random_normal(8, 70, 1.0, &mut rng); // partial tail block
+        for cfg in [
+            NxConfig::bfp(4),
+            NxConfig::mxfp(4),
+            NxConfig::mxfp(6),
+            NxConfig::nxfp(4),
+            NxConfig::nxfp(5),
+        ] {
+            let q = quantize_matrix(&t, &cfg);
+            let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+            let blocks2 = packed.unpack();
+            if cfg.enable_nm || cfg.enable_am {
+                assert_eq!(q.blocks, blocks2, "{}", cfg.name());
+            } else {
+                // base formats don't store meta; compare codes + exponents
+                for (a, b) in q.blocks.iter().zip(&blocks2) {
+                    assert_eq!(a.e_shared, b.e_shared);
+                    assert_eq!(a.codes, b.codes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_bits_match_config_accounting() {
+        let mut rng = Rng::seeded(23);
+        let t = Tensor2::random_normal(4, 64, 1.0, &mut rng);
+        for cfg in [NxConfig::mxfp(4), NxConfig::nxfp(5)] {
+            let q = quantize_matrix(&t, &cfg);
+            let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+            // per-row accounting: each row quantizes independently
+            let per_row = cfg.footprint_bits(t.cols);
+            assert_eq!(packed.footprint_bits(), per_row * t.rows as u64);
+        }
+    }
+
+    #[test]
+    fn footprint_bytes_close_to_bits() {
+        let mut rng = Rng::seeded(24);
+        let t = Tensor2::random_normal(16, 256, 1.0, &mut rng);
+        let cfg = NxConfig::nxfp(4);
+        let q = quantize_matrix(&t, &cfg);
+        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let bytes = packed.footprint_bytes() as u64;
+        let bits = packed.footprint_bits();
+        assert!(bytes * 8 >= bits);
+        assert!(bytes * 8 <= bits + 16); // only stream-tail rounding slack
+    }
+}

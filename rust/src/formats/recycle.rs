@@ -1,0 +1,98 @@
+//! Code Recycling (paper §4.3): the sign-magnitude code `10…0` (−0) is
+//! wasted; NxFP remaps it to a useful quantization level. The paper sweeps
+//! candidate remap targets (Fig. 11) and settles on half of the smallest
+//! positive level (a 1-bit right shift of the smallest level in hardware).
+
+use super::element::ElementFormat;
+
+/// Where the recycled code lands, expressed in the *scaled element domain*
+/// (the same domain as the level table).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RecycleTarget {
+    /// ½ · smallest positive level, decoded with the code's sign bit (=1):
+    /// the paper's default (`½·V_smallest`, right-shift decode).
+    HalfMin,
+    /// Midpoint between the largest and second-largest level (the other
+    /// strong candidate in Fig. 11a) — fills the "vacant level" gap.
+    MidTopPair,
+    /// Midpoint between levels `i` and `i+1` (Fig. 11 sweep points).
+    MidPair(usize),
+    /// Arbitrary signed value in the scaled domain.
+    Custom(f32),
+}
+
+impl RecycleTarget {
+    /// Resolve to the signed scaled-domain value assigned to code `10…0`.
+    /// The sign bit of the recycled code is 1, so hardware decode naturally
+    /// yields a negative value; sweep targets follow the same convention.
+    pub fn resolve(&self, levels: &[f32]) -> f32 {
+        match *self {
+            RecycleTarget::HalfMin => {
+                // smallest positive level is levels[1] (levels[0] == 0)
+                -(levels[1] / 2.0)
+            }
+            RecycleTarget::MidTopPair => {
+                let n = levels.len();
+                -((levels[n - 1] + levels[n - 2]) / 2.0)
+            }
+            RecycleTarget::MidPair(i) => {
+                assert!(i + 1 < levels.len(), "MidPair index out of range");
+                -((levels[i] + levels[i + 1]) / 2.0)
+            }
+            RecycleTarget::Custom(v) => v,
+        }
+    }
+
+    /// All midpoint sweep targets for a format (the Fig. 11 x-axis):
+    /// midpoints between every adjacent positive-level pair, plus HalfMin.
+    pub fn sweep_targets(elem: &ElementFormat) -> Vec<(String, RecycleTarget)> {
+        let levels = elem.levels();
+        let mut out = vec![("min/2".to_string(), RecycleTarget::HalfMin)];
+        for i in 1..levels.len() - 1 {
+            out.push((
+                format!("mid({},{})", levels[i], levels[i + 1]),
+                RecycleTarget::MidPair(i),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_min_on_fp4_is_quarter() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(RecycleTarget::HalfMin.resolve(&lv), -0.25);
+    }
+
+    #[test]
+    fn mid_top_pair_on_fp4_is_five() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(RecycleTarget::MidTopPair.resolve(&lv), -5.0);
+    }
+
+    #[test]
+    fn mid_pair_indices() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(RecycleTarget::MidPair(1).resolve(&lv), -0.75);
+        assert_eq!(RecycleTarget::MidPair(6).resolve(&lv), -5.0);
+    }
+
+    #[test]
+    fn sweep_covers_all_adjacent_pairs() {
+        let elem = ElementFormat::new(2, 1);
+        let sweep = RecycleTarget::sweep_targets(&elem);
+        // 8 levels -> 6 midpoints between positive pairs + half-min
+        assert_eq!(sweep.len(), 7);
+        assert_eq!(sweep[0].1, RecycleTarget::HalfMin);
+    }
+
+    #[test]
+    fn custom_passthrough() {
+        let lv = ElementFormat::new(2, 1).levels();
+        assert_eq!(RecycleTarget::Custom(1.23).resolve(&lv), 1.23);
+    }
+}

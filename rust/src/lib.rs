@@ -1,0 +1,37 @@
+//! # nxfp — Nanoscaling Floating-Point for direct-cast LLM compression
+//!
+//! Reproduction of *"Nanoscaling Floating-Point (NxFP): NanoMantissa,
+//! Adaptive Microexponents, and Code Recycling for Direct-Cast Compression
+//! of Large Language Models"* (Lo, Wei, Brooks — Harvard, 2024).
+//!
+//! The crate is the Layer-3 (deployment) half of a three-layer stack:
+//!
+//! * **L1** — a Pallas fake-quantization kernel (`python/compile/kernels/`)
+//!   that implements the same block-format semantics on the accelerator side.
+//! * **L2** — a JAX transformer LM (`python/compile/model.py`) whose
+//!   train/eval/score/decode steps are AOT-lowered to HLO text at build time.
+//! * **L3** — this crate: bit-exact format codecs, the direct-cast
+//!   quantization pipeline (Algorithm 1), the on-the-fly dequantization hot
+//!   path (paper Fig. 7), a PJRT runtime that executes the AOT artifacts, a
+//!   training/eval driver, and a serving coordinator with a quantized
+//!   KV-cache manager.
+//!
+//! See `examples/quickstart.rs` for a guided tour and `DESIGN.md` for the
+//! normative format semantics shared with the Python oracle.
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod dequant;
+pub mod eval;
+pub mod formats;
+pub mod models;
+pub mod profile;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use formats::{BlockFormat, ElementFormat, NxConfig};
+pub use quant::{quantize_matrix, quantize_vector, QuantizedMatrix};
+pub use tensor::Tensor2;

@@ -1,0 +1,337 @@
+//! `nxfp` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! nxfp train     --steps 300 --batch 16 --out ckpt.bin
+//! nxfp eval      --ckpt ckpt.bin --format nxfp4 [--kv-format nxfp4]
+//! nxfp reason    --ckpt ckpt.bin --format nxfp4 --probes 200
+//! nxfp quantize  --ckpt ckpt.bin --format nxfp4
+//! nxfp serve     --ckpt ckpt.bin --kv-format nxfp4 --requests 16
+//! nxfp profile   --model Llama3-8B
+//! nxfp info
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nxfp::coordinator::server::ServerHandle;
+use nxfp::coordinator::GenRequest;
+use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
+use nxfp::formats::NxConfig;
+use nxfp::models::corpus::Probe;
+use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec, ModelProfile};
+use nxfp::profile::profile_scaled;
+use nxfp::quant::quantize_matrix;
+use nxfp::runtime::Runtime;
+use nxfp::train::{TrainConfig, Trainer};
+use nxfp::util::cli::Args;
+
+/// Parse a format name like `fp16`, `bfp4`, `mxfp4`, `nxfp5`, `nxfp4-nm`.
+pub fn parse_format(s: &str) -> Result<Option<NxConfig>> {
+    let s = s.to_lowercase();
+    if s == "fp16" || s == "none" || s.is_empty() {
+        return Ok(None);
+    }
+    let (base, suffix) = match s.split_once('-') {
+        Some((b, s)) => (b.to_string(), Some(s.to_string())),
+        None => (s.clone(), None),
+    };
+    let bits: u8 = base
+        .trim_start_matches(|c: char| c.is_alphabetic())
+        .parse()
+        .map_err(|_| anyhow!("bad format {s}"))?;
+    let cfg = if base.starts_with("bfp") {
+        NxConfig::bfp(bits)
+    } else if base.starts_with("mxfp") {
+        NxConfig::mxfp(bits)
+    } else if base.starts_with("nxfp") {
+        match suffix.as_deref() {
+            None | Some("nm+am+cr") => NxConfig::nxfp(bits),
+            Some("nm") => NxConfig::nxfp_nm(bits),
+            Some("nm+am") => NxConfig::nxfp_nm_am(bits),
+            Some(other) => bail!("unknown NxFP variant {other}"),
+        }
+    } else {
+        bail!("unknown format {s}");
+    };
+    Ok(Some(cfg))
+}
+
+/// Name of the KV-fake-quant eval artifact for a config (see aot.py).
+pub fn kvq_artifact_name(cfg: &NxConfig) -> String {
+    let kind = if cfg.enable_nm || cfg.enable_am || cfg.enable_cr {
+        "nxfp"
+    } else {
+        match cfg.base {
+            nxfp::formats::BaseFormat::Mx => "mxfp",
+            nxfp::formats::BaseFormat::Bfp => "bfp",
+        }
+    };
+    format!("eval_step_kvq_{kind}{}", cfg.bits)
+}
+
+fn default_corpus() -> Corpus {
+    Corpus::generate(GrammarSpec::default_for_vocab(512), 400_000, 40_000, 1234)
+}
+
+fn artifacts_dir(a: &Args) -> PathBuf {
+    PathBuf::from(a.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let spec = LmSpec::small();
+    let cfg = TrainConfig {
+        steps: a.get_parsed("steps")?,
+        batch: a.get_usize("batch")?,
+        log_every: a.get_parsed("log-every")?,
+        seed: a.get_u64("seed")?,
+    };
+    let out = a.get("out").unwrap_or("artifacts/model.ckpt").to_string();
+    let corpus = default_corpus();
+    let mut rt = Runtime::cpu(artifacts_dir(a))?;
+    println!("platform: {}", rt.platform());
+    println!("params:   {}", spec.param_count());
+    let init = Checkpoint::init(&spec, cfg.seed);
+    let mut trainer = Trainer::new(&mut rt, spec, &init, &cfg)?;
+    trainer.train(&corpus, &cfg, |step, loss| {
+        println!("step {step:>5}  loss {loss:.4}");
+    })?;
+    let ck = trainer.checkpoint()?;
+    ck.save(Path::new(&out))?;
+    println!("saved checkpoint to {out}");
+    Ok(())
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let spec = LmSpec::small();
+    let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
+    ck.check_spec(&spec)?;
+    let corpus = default_corpus();
+    let mut rt = Runtime::cpu(artifacts_dir(a))?;
+    let wfmt = parse_format(&a.get_str("format"))?;
+    let kv = a.get("kv-format").map(parse_format).transpose()?.flatten();
+    let eval_ck = match &wfmt {
+        Some(cfg) => quantize_checkpoint(&ck, &spec.quantizable(), cfg),
+        None => ck.clone(),
+    };
+    let step = match &kv {
+        Some(cfg) => rt.load(&kvq_artifact_name(cfg))?,
+        None => rt.load("eval_step")?,
+    };
+    let p = perplexity(&step, &eval_ck, &corpus, spec.seq_len, 8)?;
+    println!(
+        "format {:<18} kv {:<10} ppl {:.4}  ({} tokens)",
+        wfmt.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        kv.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        p.ppl(),
+        p.tokens
+    );
+    Ok(())
+}
+
+fn cmd_reason(a: &Args) -> Result<()> {
+    let spec = LmSpec::small();
+    let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
+    let corpus = default_corpus();
+    let probes = Probe::generate(&corpus.spec, a.get_usize("probes")?, 77);
+    let mut rt = Runtime::cpu(artifacts_dir(a))?;
+    let step = rt.load("score_step")?;
+    let wfmt = parse_format(&a.get_str("format"))?;
+    let eval_ck = match &wfmt {
+        Some(cfg) => quantize_checkpoint(&ck, &spec.quantizable(), cfg),
+        None => ck.clone(),
+    };
+    let acc = reasoning_accuracy(&step, &eval_ck, &probes, spec.seq_len, 8)?;
+    println!(
+        "format {:<18} reasoning accuracy {:.1}%  ({} probes)",
+        wfmt.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        acc * 100.0,
+        probes.len()
+    );
+    Ok(())
+}
+
+fn cmd_quantize(a: &Args) -> Result<()> {
+    let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
+    let cfg = parse_format(&a.get_str("format"))?
+        .ok_or_else(|| anyhow!("--format must be a quantized format"))?;
+    let spec = LmSpec::small();
+    let mut total_fp16 = 0u64;
+    let mut total_q = 0u64;
+    for name in spec.quantizable() {
+        let t = ck.get(&name).unwrap();
+        let q = quantize_matrix(t, &cfg);
+        let packed =
+            nxfp::formats::packed::PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        total_fp16 += t.len() as u64 * 2;
+        total_q += packed.footprint_bytes() as u64;
+    }
+    println!(
+        "{}: quantizable weights {} KiB -> {} KiB ({:.1}% of FP16)",
+        cfg.name(),
+        total_fp16 / 1024,
+        total_q / 1024,
+        100.0 * total_q as f64 / total_fp16 as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let spec = LmSpec::small();
+    let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
+    let kv = parse_format(&a.get_str("kv-format"))?;
+    let n_req = a.get_usize("requests")?;
+    let max_new = a.get_usize("max-new")?;
+    let corpus = default_corpus();
+    let probes = Probe::generate(&corpus.spec, n_req, 99);
+    let server = ServerHandle::spawn(
+        artifacts_dir(a),
+        spec,
+        ck,
+        kv.clone(),
+        a.get_usize("max-batch")?,
+        Duration::from_millis(5),
+    );
+    for (i, p) in probes.iter().enumerate() {
+        server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new });
+    }
+    for _ in 0..n_req {
+        let resp = server.recv().ok_or_else(|| anyhow!("server dropped"))?;
+        println!("req {:>3}  {} tokens in {:?}", resp.id, resp.generated, resp.latency);
+    }
+    let m = server.shutdown()?;
+    println!(
+        "served {} reqs, {} tokens, {:.1} tok/s, kv savings {:.1}%",
+        m.requests,
+        m.tokens_generated,
+        m.tokens_per_sec(),
+        m.kv_savings() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_profile(a: &Args) -> Result<()> {
+    let name = a.get("model").unwrap_or("Llama3-8B");
+    let profile = ModelProfile::by_name(name)
+        .ok_or_else(|| anyhow!("unknown model {name}; see `nxfp info`"))?;
+    let w = nxfp::models::synth_weights(&profile, 256, 4096);
+    let p = profile_scaled(&w, &NxConfig::mxfp(4));
+    println!("model {name}: {} elements in scaled domain", p.n);
+    println!(
+        "above-top {:.3}%  vacant-band {:.3}%  near-zero {:.2}%",
+        p.above_top * 100.0,
+        p.vacant_band * 100.0,
+        p.near_zero * 100.0
+    );
+    print!("{}", p.hist.render(60));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("nxfp {} — Nanoscaling Floating-Point", env!("CARGO_PKG_VERSION"));
+    println!("\nsynthetic model profiles:");
+    for p in ModelProfile::all() {
+        println!("  {}", p.name);
+    }
+    println!("\nformats: fp16 bfp<B> mxfp<B> nxfp<B>[-nm|-nm+am|-nm+am+cr]");
+    println!("example: nxfp eval --ckpt artifacts/model.ckpt --format nxfp4");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_format_families() {
+        assert!(parse_format("fp16").unwrap().is_none());
+        assert!(parse_format("none").unwrap().is_none());
+        let c = parse_format("bfp4").unwrap().unwrap();
+        assert_eq!(c.name(), "BFP4");
+        let c = parse_format("mxfp6").unwrap().unwrap();
+        assert_eq!(c.name(), "MxFP6-E2M3");
+        let c = parse_format("nxfp4").unwrap().unwrap();
+        assert_eq!(c.name(), "NxFP4 (NM+AM+CR)");
+        let c = parse_format("nxfp5-nm").unwrap().unwrap();
+        assert_eq!(c.name(), "NxFP5 (NM)");
+        let c = parse_format("NXFP4-NM+AM").unwrap().unwrap();
+        assert_eq!(c.name(), "NxFP4 (NM+AM)");
+        assert!(parse_format("zfp4").is_err());
+        assert!(parse_format("nxfp4-zzz").is_err());
+        assert!(parse_format("mxfpx").is_err());
+    }
+
+    #[test]
+    fn kvq_artifact_names() {
+        assert_eq!(kvq_artifact_name(&NxConfig::nxfp(4)), "eval_step_kvq_nxfp4");
+        assert_eq!(kvq_artifact_name(&NxConfig::mxfp(5)), "eval_step_kvq_mxfp5");
+        assert_eq!(kvq_artifact_name(&NxConfig::bfp(6)), "eval_step_kvq_bfp6");
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("usage: nxfp <train|eval|reason|quantize|serve|profile|info> [--help]");
+        std::process::exit(2);
+    };
+    let common = |a: Args| a.opt("artifacts", Some("artifacts"), "artifacts directory");
+    let result = match cmd.as_str() {
+        "train" => common(Args::new("nxfp train", "train the in-repo LM via AOT train_step"))
+            .opt("steps", Some("300"), "optimizer steps")
+            .opt("batch", Some("16"), "batch size (must match artifact)")
+            .opt("log-every", Some("10"), "loss log interval")
+            .opt("seed", Some("42"), "init/data seed")
+            .opt("out", Some("artifacts/model.ckpt"), "checkpoint output")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_train(&a)),
+        "eval" => common(Args::new("nxfp eval", "held-out perplexity under a format"))
+            .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
+            .opt("format", Some("fp16"), "weight format (fp16/bfp4/mxfp4/nxfp4…)")
+            .opt("kv-format", None, "KV-cache format (uses the kvq artifact)")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_eval(&a)),
+        "reason" => common(Args::new("nxfp reason", "multiple-choice reasoning accuracy"))
+            .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
+            .opt("format", Some("fp16"), "weight format")
+            .opt("probes", Some("200"), "number of probes")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_reason(&a)),
+        "quantize" => common(Args::new("nxfp quantize", "pack a checkpoint, report footprint"))
+            .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
+            .opt("format", Some("nxfp4"), "target format")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_quantize(&a)),
+        "serve" => common(Args::new("nxfp serve", "batched decoding with quantized KV"))
+            .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
+            .opt("kv-format", Some("nxfp4"), "KV-cache storage format")
+            .opt("requests", Some("16"), "number of requests")
+            .opt("max-new", Some("32"), "tokens to generate per request")
+            .opt("max-batch", Some("4"), "wave batch size (must match artifact)")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_serve(&a)),
+        "profile" => common(Args::new("nxfp profile", "Fig.3-style scaled-weight profile"))
+            .opt("model", Some("Llama3-8B"), "synthetic model profile")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_profile(&a)),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        if let Some(nxfp::util::cli::CliError::Help(h)) = e.downcast_ref() {
+            println!("{h}");
+            return;
+        }
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Binary checkpoints: named f32 tensors saved/loaded with the in-tree
+//! serializer. Used to persist the trained LM between the training example
+//! and the evaluation benches.
+
+use crate::models::transformer::LmSpec;
+use crate::tensor::Tensor2;
+use crate::util::ser::{Reader, Writer};
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+/// An ordered set of named parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub params: Vec<(String, Tensor2)>,
+    /// training metadata: steps completed and final train loss
+    pub steps: u32,
+    pub final_loss: f32,
+}
+
+impl Checkpoint {
+    /// Initialize parameters for a spec (matches the Python initializer:
+    /// scaled-normal matmuls, ones for norm gains). Used for shape tests;
+    /// real training initializes on the JAX side.
+    pub fn init(spec: &LmSpec, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::seeded(seed);
+        let params = spec
+            .param_specs()
+            .into_iter()
+            .map(|(name, r, c)| {
+                let t = if r == 1 {
+                    Tensor2::from_vec(1, c, vec![1.0; c])
+                } else {
+                    let std = 0.02f32.min((2.0 / (r + c) as f32).sqrt());
+                    Tensor2::random_normal(r, c, std, &mut rng)
+                };
+                (name, t)
+            })
+            .collect();
+        Checkpoint { params, steps: 0, final_loss: f32::NAN }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor2> {
+        self.params.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor2> {
+        self.params.iter_mut().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Validate the checkpoint against a spec's parameter contract.
+    pub fn check_spec(&self, spec: &LmSpec) -> Result<()> {
+        let want = spec.param_specs();
+        if want.len() != self.params.len() {
+            bail!("param count mismatch: {} vs {}", self.params.len(), want.len());
+        }
+        for ((wn, wr, wc), (n, t)) in want.iter().zip(&self.params) {
+            if wn != n || *wr != t.rows || *wc != t.cols {
+                bail!("param {n} has shape {}x{}, want {wn} {wr}x{wc}", t.rows, t.cols);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = Writer::new(BufWriter::new(f))?;
+        w.u32(self.steps)?;
+        w.f32(self.final_loss)?;
+        w.u32(self.params.len() as u32)?;
+        for (name, t) in &self.params {
+            w.str(name)?;
+            w.u64(t.rows as u64)?;
+            w.u64(t.cols as u64)?;
+            w.f32_slice(&t.data)?;
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = Reader::new(BufReader::new(f))?;
+        let steps = r.u32()?;
+        let final_loss = r.f32()?;
+        let n = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let data = r.f32_slice()?;
+            if data.len() != rows * cols {
+                bail!("tensor {name}: data len {} != {rows}x{cols}", data.len());
+            }
+            params.push((name, Tensor2::from_vec(rows, cols, data)));
+        }
+        Ok(Checkpoint { params, steps, final_loss })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_spec_contract() {
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 1);
+        ck.check_spec(&spec).unwrap();
+        assert_eq!(ck.param_count(), spec.param_count());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("nxfp_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.ckpt");
+        let spec = LmSpec::tiny();
+        let mut ck = Checkpoint::init(&spec, 2);
+        ck.steps = 17;
+        ck.final_loss = 3.25;
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.steps, 17);
+        assert_eq!(back.final_loss, 3.25);
+        assert_eq!(back.params.len(), ck.params.len());
+        for ((n1, t1), (n2, t2)) in ck.params.iter().zip(&back.params) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn check_spec_catches_mismatch() {
+        let ck = Checkpoint::init(&LmSpec::tiny(), 1);
+        assert!(ck.check_spec(&LmSpec::small()).is_err());
+    }
+
+    #[test]
+    fn norm_gains_init_to_one() {
+        let ck = Checkpoint::init(&LmSpec::tiny(), 1);
+        let ln = ck.get("l0.ln1").unwrap();
+        assert!(ln.data.iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,278 @@
+//! Synthetic grammar corpus — the offline stand-in for Wikitext2 (perplexity)
+//! and MMLU (reasoning probes). See DESIGN.md §3.
+//!
+//! The grammar emits "fact" clauses `entity relation value SEP` where
+//! `value = fact(entity, relation)` is a fixed deterministic mapping, mixed
+//! with Zipf-distributed filler words. A language model must learn both the
+//! local syntax (easy; drives perplexity below the unigram bound) and the
+//! fact table (hard; probed by the multiple-choice reasoning task, which is
+//! scored exactly like lm-eval-harness: argmax of summed continuation
+//! log-probability over four candidates).
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Grammar hyperparameters. Token-id layout:
+/// `[0]=BOS [1]=SEP | entities | relations | values | fillers`.
+#[derive(Clone, Copy, Debug)]
+pub struct GrammarSpec {
+    pub vocab: usize,
+    pub n_entities: usize,
+    pub n_relations: usize,
+    pub n_values: usize,
+    /// probability a clause is a fact (vs a filler run)
+    pub fact_prob: f64,
+    /// filler run length range
+    pub filler_len: (usize, usize),
+}
+
+impl GrammarSpec {
+    pub fn default_for_vocab(vocab: usize) -> Self {
+        assert!(vocab >= 64);
+        // reserve ~1/4 of the vocab to each class, rest filler
+        let n = vocab / 4;
+        GrammarSpec {
+            vocab,
+            n_entities: n.min(64),
+            n_relations: (n / 2).min(32),
+            n_values: n.min(96),
+            fact_prob: 0.65,
+            filler_len: (2, 6),
+        }
+    }
+
+    pub const BOS: i32 = 0;
+    pub const SEP: i32 = 1;
+
+    pub fn entity(&self, i: usize) -> i32 {
+        (2 + i % self.n_entities) as i32
+    }
+
+    pub fn relation(&self, i: usize) -> i32 {
+        (2 + self.n_entities + i % self.n_relations) as i32
+    }
+
+    pub fn value(&self, i: usize) -> i32 {
+        (2 + self.n_entities + self.n_relations + i % self.n_values) as i32
+    }
+
+    pub fn first_filler(&self) -> usize {
+        2 + self.n_entities + self.n_relations + self.n_values
+    }
+
+    /// The deterministic fact table: value index for (entity, relation).
+    pub fn fact(&self, e: usize, r: usize) -> usize {
+        (e.wrapping_mul(31) ^ r.wrapping_mul(17)).wrapping_add(e * r) % self.n_values
+    }
+}
+
+/// A generated token stream split into train/eval.
+pub struct Corpus {
+    pub spec: GrammarSpec,
+    pub train: Vec<i32>,
+    pub eval: Vec<i32>,
+}
+
+impl Corpus {
+    /// Generate `n_train` + `n_eval` tokens with a seeded RNG.
+    pub fn generate(spec: GrammarSpec, n_train: usize, n_eval: usize, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let zipf = Zipf::new(spec.vocab - spec.first_filler(), 1.2);
+        let emit = |rng: &mut Rng, out: &mut Vec<i32>, n: usize| {
+            out.push(GrammarSpec::BOS);
+            while out.len() < n {
+                if rng.f64() < spec.fact_prob {
+                    let e = rng.below(spec.n_entities);
+                    let r = rng.below(spec.n_relations);
+                    let v = spec.fact(e, r);
+                    out.push(spec.entity(e));
+                    out.push(spec.relation(r));
+                    out.push(spec.value(v));
+                    out.push(GrammarSpec::SEP);
+                } else {
+                    let len = spec.filler_len.0
+                        + rng.below(spec.filler_len.1 - spec.filler_len.0 + 1);
+                    for _ in 0..len {
+                        out.push((spec.first_filler() + zipf.sample(rng)) as i32);
+                    }
+                    out.push(GrammarSpec::SEP);
+                }
+            }
+            out.truncate(n);
+        };
+        let mut train = Vec::with_capacity(n_train);
+        let mut eval = Vec::with_capacity(n_eval);
+        emit(&mut rng, &mut train, n_train);
+        emit(&mut rng, &mut eval, n_eval);
+        Corpus { spec, train, eval }
+    }
+
+    /// Sample a `(batch, seq+1)` slab of token windows from a split
+    /// (`x = [..seq]`, `y = [1..seq+1]` on the consumer side).
+    pub fn batch(&self, split: &[i32], batch: usize, seq: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let start = rng.below(split.len() - seq - 1);
+            out.extend_from_slice(&split[start..start + seq + 1]);
+        }
+        out
+    }
+
+    /// Deterministic sequential eval windows covering the eval split.
+    pub fn eval_windows(&self, seq: usize) -> Vec<Vec<i32>> {
+        self.eval
+            .chunks(seq + 1)
+            .filter(|c| c.len() == seq + 1)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+/// A 4-way multiple-choice reasoning probe (MMLU stand-in).
+#[derive(Clone, Debug)]
+pub struct Probe {
+    /// Prompt tokens: `BOS … entity relation`.
+    pub prompt: Vec<i32>,
+    /// Four candidate continuation tokens (single value token each).
+    pub choices: [i32; 4],
+    /// Index of the grammar-correct choice.
+    pub answer: usize,
+}
+
+impl Probe {
+    /// Generate `n` probes with shuffled distractor values.
+    pub fn generate(spec: &GrammarSpec, n: usize, seed: u64) -> Vec<Probe> {
+        let mut rng = Rng::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let e = rng.below(spec.n_entities);
+                let r = rng.below(spec.n_relations);
+                let v = spec.fact(e, r);
+                let mut distract = Vec::new();
+                while distract.len() < 3 {
+                    let d = rng.below(spec.n_values);
+                    if d != v && !distract.contains(&d) {
+                        distract.push(d);
+                    }
+                }
+                let answer = rng.below(4);
+                let mut choices = [0i32; 4];
+                let mut di = 0;
+                for (i, c) in choices.iter_mut().enumerate() {
+                    *c = if i == answer {
+                        spec.value(v)
+                    } else {
+                        let d = distract[di];
+                        di += 1;
+                        spec.value(d)
+                    };
+                }
+                Probe {
+                    prompt: vec![GrammarSpec::BOS, spec.entity(e), spec.relation(r)],
+                    choices,
+                    answer,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GrammarSpec {
+        GrammarSpec::default_for_vocab(512)
+    }
+
+    #[test]
+    fn token_classes_disjoint_and_in_vocab() {
+        let s = spec();
+        let e: Vec<i32> = (0..s.n_entities).map(|i| s.entity(i)).collect();
+        let r: Vec<i32> = (0..s.n_relations).map(|i| s.relation(i)).collect();
+        let v: Vec<i32> = (0..s.n_values).map(|i| s.value(i)).collect();
+        assert!(e.iter().all(|t| !r.contains(t) && !v.contains(t)));
+        assert!(r.iter().all(|t| !v.contains(t)));
+        assert!((s.first_filler() as i32) > *v.iter().max().unwrap());
+        assert!(s.first_filler() < s.vocab);
+    }
+
+    #[test]
+    fn corpus_deterministic_and_in_range() {
+        let a = Corpus::generate(spec(), 10_000, 1000, 7);
+        let b = Corpus::generate(spec(), 10_000, 1000, 7);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.train.len(), 10_000);
+        assert_eq!(a.eval.len(), 1000);
+        assert!(a.train.iter().all(|&t| t >= 0 && (t as usize) < 512));
+    }
+
+    #[test]
+    fn facts_are_deterministic_function() {
+        let s = spec();
+        for e in 0..s.n_entities {
+            for r in 0..s.n_relations {
+                assert_eq!(s.fact(e, r), s.fact(e, r));
+                assert!(s.fact(e, r) < s.n_values);
+            }
+        }
+    }
+
+    #[test]
+    fn fact_structure_present_in_stream() {
+        // every entity token is followed by a relation token then the
+        // correct value token
+        let s = spec();
+        let c = Corpus::generate(s, 50_000, 100, 9);
+        let is_entity = |t: i32| (2..2 + s.n_entities as i32).contains(&t);
+        let mut checked = 0;
+        for w in c.train.windows(3) {
+            if is_entity(w[0]) {
+                let e = (w[0] - 2) as usize;
+                let rel_base = 2 + s.n_entities as i32;
+                if w[1] >= rel_base && w[1] < rel_base + s.n_relations as i32 {
+                    let r = (w[1] - rel_base) as usize;
+                    assert_eq!(w[2], s.value(s.fact(e, r)));
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 1000, "only {checked} facts found");
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let c = Corpus::generate(spec(), 10_000, 1000, 7);
+        let mut rng = Rng::seeded(1);
+        let b = c.batch(&c.train, 4, 32, &mut rng);
+        assert_eq!(b.len(), 4 * 33);
+    }
+
+    #[test]
+    fn probes_have_unique_choices_and_correct_answer() {
+        let s = spec();
+        for p in Probe::generate(&s, 200, 3) {
+            let mut uniq = p.choices.to_vec();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 4, "duplicate choices {:?}", p.choices);
+            // answer is consistent with the grammar
+            let e = (p.prompt[1] - 2) as usize;
+            let rel_base = 2 + s.n_entities;
+            let r = (p.prompt[2] as usize) - rel_base;
+            assert_eq!(p.choices[p.answer], s.value(s.fact(e, r)));
+        }
+    }
+
+    #[test]
+    fn answer_position_balanced() {
+        let s = spec();
+        let probes = Probe::generate(&s, 1000, 5);
+        let mut counts = [0usize; 4];
+        for p in &probes {
+            counts[p.answer] += 1;
+        }
+        for c in counts {
+            assert!(c > 150, "answer positions skewed: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Model substrate: named LLM shape profiles (for bit-true footprint
+//! accounting), synthetic weight generators matched to the paper's Fig. 3
+//! distribution profile, the in-repo transformer LM spec (shared with the
+//! JAX side), binary checkpoints, and the synthetic grammar corpus that
+//! stands in for Wikitext2 / MMLU (see DESIGN.md §3 Substitutions).
+
+pub mod checkpoint;
+pub mod corpus;
+pub mod synth;
+pub mod transformer;
+
+pub use checkpoint::Checkpoint;
+pub use corpus::{Corpus, GrammarSpec, Probe};
+pub use synth::{synth_weights, ModelProfile};
+pub use transformer::{LmSpec, NamedModel};

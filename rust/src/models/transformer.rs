@@ -1,0 +1,222 @@
+//! Transformer shape specs.
+//!
+//! * [`LmSpec`] — the in-repo LM trained/evaluated through the AOT JAX
+//!   artifacts. **The parameter flattening order defined here is a contract
+//!   with `python/compile/model.py`** (`param_specs` must match the Python
+//!   `param_names()` exactly); both sides are checked by tests.
+//! * [`NamedModel`] — published-LLM shape tables used for the bit-true
+//!   footprint axes of Fig. 9 (weights + KV cache at a given sequence
+//!   length), where absolute GB numbers matter.
+
+use crate::formats::NxConfig;
+
+/// Shape of the in-repo language model (must mirror python/compile/model.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LmSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl LmSpec {
+    /// The default trained model (~3.4M params — small enough to train for
+    /// a few hundred CPU steps, big enough to show format-ordering effects).
+    pub fn small() -> Self {
+        LmSpec { vocab: 512, d_model: 256, n_layers: 4, n_heads: 4, d_ff: 1024, seq_len: 128 }
+    }
+
+    /// A tiny spec for fast integration tests.
+    pub fn tiny() -> Self {
+        LmSpec { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, seq_len: 16 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter tensors in flattening order: `(name, rows, cols)`.
+    /// 1-D tensors (norm gains) are `(1, d)`.
+    pub fn param_specs(&self) -> Vec<(String, usize, usize)> {
+        let d = self.d_model;
+        let mut out = vec![
+            ("embed".to_string(), self.vocab, d),
+            ("pos_embed".to_string(), self.seq_len, d),
+        ];
+        for l in 0..self.n_layers {
+            out.push((format!("l{l}.ln1"), 1, d));
+            out.push((format!("l{l}.wq"), d, d));
+            out.push((format!("l{l}.wk"), d, d));
+            out.push((format!("l{l}.wv"), d, d));
+            out.push((format!("l{l}.wo"), d, d));
+            out.push((format!("l{l}.ln2"), 1, d));
+            out.push((format!("l{l}.w1"), d, self.d_ff));
+            out.push((format!("l{l}.w2"), self.d_ff, d));
+        }
+        out.push(("lnf".to_string(), 1, d));
+        out.push(("unembed".to_string(), d, self.vocab));
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(|(_, r, c)| r * c).sum()
+    }
+
+    /// Names of the matmul weights that get quantized in the weight-only
+    /// experiments (norm gains and embeddings stay FP16, as in the paper's
+    /// "quantize the weights that dominate footprint" setting).
+    pub fn quantizable(&self) -> Vec<String> {
+        self.param_specs()
+            .into_iter()
+            .filter(|(n, r, _)| *r > 1 && n != "embed" && n != "pos_embed")
+            .map(|(n, _, _)| n)
+            .collect()
+    }
+}
+
+/// Published-model shape profile (decoder-only, GQA-aware) for footprint
+/// accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct NamedModel {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+}
+
+impl NamedModel {
+    pub fn all() -> Vec<NamedModel> {
+        vec![
+            NamedModel { name: "Llama3-8B",   vocab: 128_256, d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 8,  d_ff: 14336 },
+            NamedModel { name: "Llama3.1-8B", vocab: 128_256, d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 8,  d_ff: 14336 },
+            NamedModel { name: "Phi3-4B",     vocab: 32_064,  d_model: 3072, n_layers: 32, n_heads: 32, n_kv_heads: 32, d_ff: 8192 },
+            NamedModel { name: "Llama2-7B",   vocab: 32_000,  d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 32, d_ff: 11008 },
+            NamedModel { name: "Llama2-13B",  vocab: 32_000,  d_model: 5120, n_layers: 40, n_heads: 40, n_kv_heads: 40, d_ff: 13824 },
+            NamedModel { name: "Mistral-7B",  vocab: 32_000,  d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 8,  d_ff: 14336 },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<NamedModel> {
+        Self::all().into_iter().find(|m| m.name == name)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Quantizable weight-element count (attention + MLP, SwiGLU: 3 MLP
+    /// mats; embeddings/norms excluded, matching the paper's weight-only
+    /// setting).
+    pub fn weight_elements(&self) -> u64 {
+        let d = self.d_model as u64;
+        let kv = (self.n_kv_heads * self.head_dim()) as u64;
+        let per_layer = d * d        // wq
+            + d * kv                 // wk
+            + d * kv                 // wv
+            + d * d                  // wo
+            + 3 * d * self.d_ff as u64; // SwiGLU gate/up/down
+        per_layer * self.n_layers as u64
+    }
+
+    /// Embedding + unembedding elements (kept FP16).
+    pub fn embed_elements(&self) -> u64 {
+        2 * (self.vocab as u64) * self.d_model as u64
+    }
+
+    /// KV-cache element count at a sequence length (per batch=1).
+    pub fn kv_elements(&self, seq_len: usize) -> u64 {
+        2 * (self.n_layers as u64)
+            * (self.n_kv_heads as u64)
+            * (self.head_dim() as u64)
+            * seq_len as u64
+    }
+
+    /// Total footprint in GB with weights (and optionally KV) quantized
+    /// under `cfg`; embeddings stay FP16. `None` cfg means FP16 everywhere.
+    pub fn footprint_gb(&self, cfg: Option<&NxConfig>, kv_cfg: Option<&NxConfig>, seq_len: usize) -> f64 {
+        let w_bits = match cfg {
+            Some(c) => c.footprint_bits(self.weight_elements() as usize) as f64,
+            None => self.weight_elements() as f64 * 16.0,
+        };
+        let kv = self.kv_elements(seq_len);
+        let kv_bits = match kv_cfg {
+            Some(c) => c.footprint_bits(kv as usize) as f64,
+            None => kv as f64 * 16.0,
+        };
+        let embed_bits = self.embed_elements() as f64 * 16.0;
+        (w_bits + kv_bits + embed_bits) / 8.0 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_spec_param_count_about_3m() {
+        let n = LmSpec::small().param_count();
+        assert!(n > 3_000_000 && n < 4_000_000, "n={n}");
+    }
+
+    #[test]
+    fn param_specs_order_is_stable() {
+        let specs = LmSpec::tiny().param_specs();
+        assert_eq!(specs[0].0, "embed");
+        assert_eq!(specs[1].0, "pos_embed");
+        assert_eq!(specs[2].0, "l0.ln1");
+        assert_eq!(specs.last().unwrap().0, "unembed");
+        // 2 + 8 per layer + 2
+        assert_eq!(specs.len(), 2 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn quantizable_excludes_embeddings_and_norms() {
+        let q = LmSpec::tiny().quantizable();
+        assert!(q.contains(&"l0.wq".to_string()));
+        assert!(q.contains(&"unembed".to_string()));
+        assert!(!q.iter().any(|n| n.contains("ln")));
+        assert!(!q.contains(&"embed".to_string()));
+    }
+
+    #[test]
+    fn llama3_8b_weight_count_plausible() {
+        // ~8B params total; attention+MLP ≈ 6.98e9
+        let m = NamedModel::by_name("Llama3-8B").unwrap();
+        let w = m.weight_elements() as f64;
+        assert!(w > 6.0e9 && w < 7.5e9, "w={w}");
+    }
+
+    #[test]
+    fn fp16_footprint_matches_public_numbers() {
+        // Llama3-8B FP16 ≈ 16 GB of weights (+1GB embeds here); paper Fig. 9
+        // x-axis starts ~16GB at 2K sequence.
+        let m = NamedModel::by_name("Llama3-8B").unwrap();
+        let gb = m.footprint_gb(None, None, 2048);
+        assert!(gb > 14.0 && gb < 18.0, "gb={gb}");
+    }
+
+    #[test]
+    fn nxfp5_vs_mxfp6_footprint_reduction_matches_paper() {
+        // paper §7.4: NxFP5 saves ~0.93GB (13%) of quantized-weight footprint
+        // vs MxFP6 on Llama3-8B
+        let m = NamedModel::by_name("Llama3-8B").unwrap();
+        let nx5 = NxConfig::nxfp(5);
+        let mx6 = NxConfig::mxfp(6);
+        let a = nx5.footprint_bits(m.weight_elements() as usize) as f64 / 8e9;
+        let b = mx6.footprint_bits(m.weight_elements() as usize) as f64 / 8e9;
+        let saving = b - a;
+        assert!(saving > 0.7 && saving < 1.1, "saving={saving}GB");
+    }
+
+    #[test]
+    fn gqa_kv_cache_smaller_than_mha() {
+        let llama3 = NamedModel::by_name("Llama3-8B").unwrap(); // GQA 8 kv heads
+        let llama2 = NamedModel::by_name("Llama2-7B").unwrap(); // MHA
+        assert!(llama3.kv_elements(2048) < llama2.kv_elements(2048));
+    }
+}

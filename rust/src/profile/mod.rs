@@ -1,0 +1,110 @@
+//! Weight-distribution profiling (paper §3, Fig. 3): the distribution of
+//! weights after scaling by the block's shared exponent, and the three
+//! low-bit MxFP pathologies the paper identifies — outliers the top level
+//! cannot track, vacant quantization levels, and the wasted −0 code.
+
+use crate::formats::{shared_exponent, BlockFormat, NxConfig};
+use crate::tensor::stats::Histogram;
+use crate::tensor::Tensor2;
+use crate::util::exp2i;
+
+/// Profile of one tensor in the scaled element domain.
+#[derive(Clone, Debug)]
+pub struct ScaledProfile {
+    /// Histogram of `v / 2^(E_shared + offset)` over all blocks.
+    pub hist: Histogram,
+    /// Fraction of elements whose scaled magnitude exceeds the top level
+    /// (the "inaccurate outlier tracking" mass; paper: values in (6, 8)).
+    pub above_top: f64,
+    /// Fraction of elements falling in the vacant gap between the top two
+    /// levels' midpoint region (paper: (4+6)/2-ish band around 5).
+    pub vacant_band: f64,
+    /// Fraction of elements that quantize to the zero level (where the
+    /// wasted −0 code hurts most).
+    pub near_zero: f64,
+    pub n: u64,
+}
+
+/// Scale every block of `t` by its shared exponent (per the format's offset)
+/// and histogram the scaled values, mirroring Fig. 3's x-axis.
+pub fn profile_scaled(t: &Tensor2, cfg: &NxConfig) -> ScaledProfile {
+    let bf = match cfg.base {
+        crate::formats::BaseFormat::Mx => BlockFormat::new(cfg.elem_mx, None),
+        crate::formats::BaseFormat::Bfp => {
+            BlockFormat::new(crate::formats::ElementFormat::bfp(cfg.bits), None)
+        }
+    };
+    let top = bf.top();
+    let range = top * 1.4; // paper plots -8..8 for FP4 (top 6)
+    let mut hist = Histogram::new(-range, range, 160);
+    let (mut above, mut vacant, mut zeroish, mut n) = (0u64, 0u64, 0u64, 0u64);
+    let second = bf.levels[bf.levels.len() - 2];
+    let vacant_lo = (top + second) / 2.0 - (top - second) / 4.0;
+    let vacant_hi = (top + second) / 2.0 + (top - second) / 4.0;
+    let min_pos = bf.levels[1];
+    for r in 0..t.rows {
+        for block in t.row_blocks(r, cfg.block_size) {
+            let Some(e) = shared_exponent(block) else { continue };
+            let inv = 1.0 / exp2i(e + bf.offset);
+            for &x in block {
+                let a = x * inv;
+                hist.add(a);
+                n += 1;
+                let m = a.abs();
+                if m > top {
+                    above += 1;
+                }
+                if m > vacant_lo && m < vacant_hi {
+                    vacant += 1;
+                }
+                if m < min_pos / 2.0 {
+                    zeroish += 1;
+                }
+            }
+        }
+    }
+    let nf = n.max(1) as f64;
+    ScaledProfile {
+        hist,
+        above_top: above as f64 / nf,
+        vacant_band: vacant as f64 / nf,
+        near_zero: zeroish as f64 / nf,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaussian_weights_show_the_papers_three_challenges() {
+        let mut rng = Rng::seeded(61);
+        let t = Tensor2::random_normal(64, 1024, 0.02, &mut rng);
+        let p = profile_scaled(&t, &NxConfig::mxfp(4));
+        // the block max lands in [4, 8): a visible fraction exceeds top=6
+        assert!(p.above_top > 0.001, "above_top={}", p.above_top);
+        assert!(p.above_top < 0.2);
+        // mass near zero is large for a Gaussian
+        assert!(p.near_zero > 0.05);
+        // scaled values never exceed 8 = 2^(E+1)/2^(E-2)/... (range bound)
+        assert_eq!(p.hist.overflow, 0);
+        assert_eq!(p.hist.underflow, 0);
+    }
+
+    #[test]
+    fn scaled_domain_is_bounded_by_two_to_emax_plus_one() {
+        let mut rng = Rng::seeded(62);
+        let t = Tensor2::random_normal(8, 256, 3.0, &mut rng);
+        let p = profile_scaled(&t, &NxConfig::mxfp(4));
+        // |scaled| < 8 for E2M1 (offset -2): max|v| < 2^(E+1) -> v/2^(E-2) < 8.
+        // Allow one bin of slack for bins straddling ±8.
+        let half_bin = (p.hist.hi - p.hist.lo) / (2.0 * p.hist.counts.len() as f32);
+        for (c, &n) in p.hist.centers().iter().zip(&p.hist.counts) {
+            if c.abs() > 8.0 + half_bin {
+                assert_eq!(n, 0, "mass at {c}");
+            }
+        }
+    }
+}

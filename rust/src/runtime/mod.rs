@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts (produced by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor2;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Step>>,
+    artifacts_dir: PathBuf,
+}
+
+/// One compiled step function (e.g. `train_step`, `eval_step`).
+pub struct Step {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, cache: HashMap::new(), artifacts_dir: artifacts_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<artifacts_dir>/<name>.hlo.txt`, compile, and cache.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Step>> {
+        if let Some(s) = self.cache.get(name) {
+            return Ok(s.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let step = std::rc::Rc::new(self.compile_file(name, &path)?);
+        self.cache.insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+
+    /// Compile an HLO text file without caching (tests, one-offs).
+    pub fn compile_file(&self, name: &str, path: &Path) -> Result<Step> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Step { name: name.to_string(), exe })
+    }
+}
+
+impl Step {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (All artifacts are lowered with `return_tuple=True`.)
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// Literal conversion helpers shared by the training/eval/serving drivers.
+pub mod lit {
+    use super::*;
+
+    /// f32 tensor -> 2-D literal.
+    pub fn from_tensor(t: &Tensor2) -> Result<xla::Literal> {
+        xla::Literal::vec1(&t.data)
+            .reshape(&[t.rows as i64, t.cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// f32 slice -> literal with explicit dims.
+    pub fn from_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "dims {dims:?} != len {}", data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// i32 token slab -> literal with explicit dims.
+    pub fn from_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "dims {dims:?} != len {}", data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    pub fn scalar_f32(x: f32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+
+    pub fn scalar_i32(x: i32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+
+    /// literal -> f32 vec (any shape, row-major).
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        l.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e:?}"))
+    }
+
+    /// literal -> Tensor2 given expected dims.
+    pub fn to_tensor(l: &xla::Literal, rows: usize, cols: usize) -> Result<Tensor2> {
+        let v = to_f32(l)?;
+        anyhow::ensure!(v.len() == rows * cols, "len {} != {rows}x{cols}", v.len());
+        Ok(Tensor2::from_vec(rows, cols, v))
+    }
+
+    /// first element of a literal as f32 (loss scalars etc.)
+    pub fn first_f32(l: &xla::Literal) -> Result<f32> {
+        let v = to_f32(l)?;
+        v.first().copied().context("empty literal")
+    }
+}

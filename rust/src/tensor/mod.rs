@@ -1,0 +1,93 @@
+//! Minimal 2-D tensor plus the statistics the evaluation needs
+//! (MSE/SNR, histograms for the Fig. 3 profile).
+
+pub mod stats;
+
+use crate::util::rng::Rng;
+
+/// Row-major 2-D f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Tensor2 { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std) entries.
+    pub fn random_normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor2::zeros(rows, cols);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Iterate `block_size`-wide chunks of one row (tail block may be short).
+    pub fn row_blocks(&self, r: usize, block_size: usize) -> impl Iterator<Item = &[f32]> {
+        self.row(r).chunks(block_size)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_rows() {
+        let t = Tensor2::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn row_blocks_partial_tail() {
+        let t = Tensor2::from_vec(1, 5, vec![1., 2., 3., 4., 5.]);
+        let blocks: Vec<&[f32]> = t.row_blocks(0, 2).collect();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[2], &[5.]);
+    }
+
+    #[test]
+    fn random_normal_stats() {
+        let mut rng = Rng::seeded(1);
+        let t = Tensor2::random_normal(100, 100, 2.0, &mut rng);
+        let mean: f32 = t.data.iter().sum::<f32>() / t.len() as f32;
+        let var: f32 =
+            t.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,160 @@
+//! Error metrics and histograms used by the evaluation section.
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Mean absolute (L1) error.
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Signal-to-quantization-noise ratio in dB.
+pub fn sqnr_db(signal: &[f32], quantized: &[f32]) -> f64 {
+    let sig_pow: f64 = signal.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let noise: f64 = signal
+        .iter()
+        .zip(quantized)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig_pow / noise).log10()
+}
+
+/// Fixed-range histogram (used by the Fig. 3 weight profile).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f32) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        if x >= self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let f = (x - self.lo) / (self.hi - self.lo);
+        let i = ((f * self.counts.len() as f32) as usize).min(self.counts.len() - 1);
+        self.counts[i] += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin centers (for plotting/printing).
+    pub fn centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f32 + 0.5))
+            .collect()
+    }
+
+    /// Fraction of samples with |x| above `thresh` (outlier mass).
+    pub fn fraction_outside(&self, thresh: f32) -> f64 {
+        let mut out = self.underflow + self.overflow;
+        for (c, &n) in self.centers().iter().zip(&self.counts) {
+            if c.abs() > thresh {
+                out += n;
+            }
+        }
+        out as f64 / self.total.max(1) as f64
+    }
+
+    /// Render a terminal bar chart (one row per bin), used by the profile
+    /// bench to reproduce Fig. 3 visually.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut s = String::new();
+        for (c, &n) in self.centers().iter().zip(&self.counts) {
+            let bar = "#".repeat((n as usize * width / max as usize).max(usize::from(n > 0)));
+            s.push_str(&format!("{c:>7.2} | {bar} {n}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_and_l1_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(mse(&[0.0, 0.0], &[1.0, -1.0]), 1.0);
+        assert_eq!(l1(&[0.0, 0.0], &[1.0, -3.0]), 2.0);
+    }
+
+    #[test]
+    fn sqnr_infinite_when_exact() {
+        assert!(sqnr_db(&[1.0, 2.0], &[1.0, 2.0]).is_infinite());
+    }
+
+    #[test]
+    fn sqnr_reasonable_value() {
+        // noise power 1% of signal power -> 20 dB
+        let s = [10.0f32, 10.0];
+        let q = [11.0f32, 9.0];
+        assert!((sqnr_db(&s, &q) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.add_all(&[-2.0, -0.9, -0.4, 0.1, 0.6, 3.0]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts, vec![1, 1, 1, 1]);
+        assert_eq!(h.total, 6);
+    }
+
+    #[test]
+    fn histogram_outlier_fraction() {
+        let mut h = Histogram::new(-8.0, 8.0, 64);
+        for _ in 0..99 {
+            h.add(0.0);
+        }
+        h.add(7.9);
+        let f = h.fraction_outside(6.0);
+        assert!((f - 0.01).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,144 @@
+//! L3 training driver: runs the AOT-compiled `train_step` artifact in a
+//! loop, holding parameters and Adam state as XLA literals between steps.
+//!
+//! Artifact contract (pinned against `python/compile/aot.py`):
+//!
+//! * `train_step` inputs: `P` param tensors, `P` Adam-m tensors, `P` Adam-v
+//!   tensors, `step` (f32 scalar, 1-based), `tokens` (i32 `[B, S+1]`);
+//!   outputs: `P` params, `P` m, `P` v, `loss` (f32 scalar).
+//! * `eval_step` inputs: `P` params + `tokens`; outputs: `sum_nll`, `count`.
+//! * `score_step` inputs: `P` params + `tokens`; outputs `nll [B, S]`.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::models::{Checkpoint, Corpus, LmSpec};
+use crate::runtime::{lit, Runtime, Step};
+use crate::tensor::Tensor2;
+use crate::util::rng::Rng;
+
+/// Training hyperparameters (must match the values baked into the artifact
+/// only where they change shapes; lr/β are traced into the artifact).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub batch: usize,
+    pub steps: u32,
+    pub log_every: u32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { batch: 16, steps: 300, log_every: 10, seed: 42 }
+    }
+}
+
+/// Convert a checkpoint into parameter literals (flattening contract order).
+pub fn params_to_literals(ck: &Checkpoint) -> Result<Vec<xla::Literal>> {
+    ck.params.iter().map(|(_, t)| lit::from_tensor(t)).collect()
+}
+
+/// Convert parameter literals back into a checkpoint for a spec.
+pub fn literals_to_checkpoint(spec: &LmSpec, lits: &[xla::Literal]) -> Result<Checkpoint> {
+    let specs = spec.param_specs();
+    anyhow::ensure!(lits.len() == specs.len(), "literal count mismatch");
+    let params = specs
+        .into_iter()
+        .zip(lits)
+        .map(|((name, r, c), l)| Ok((name, lit::to_tensor(l, r, c)?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Checkpoint { params, steps: 0, final_loss: f32::NAN })
+}
+
+/// Stateful trainer holding params + Adam moments as literals.
+pub struct Trainer {
+    pub spec: LmSpec,
+    step_fn: Rc<Step>,
+    pub params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    pub t: u32,
+    pub losses: Vec<(u32, f32)>,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Initialize from a fresh (or resumed) checkpoint.
+    pub fn new(rt: &mut Runtime, spec: LmSpec, init: &Checkpoint, cfg: &TrainConfig) -> Result<Self> {
+        init.check_spec(&spec)?;
+        let step_fn = rt.load("train_step")?;
+        let params = params_to_literals(init)?;
+        let zeros = |spec: &LmSpec| -> Result<Vec<xla::Literal>> {
+            spec.param_specs()
+                .iter()
+                .map(|(_, r, c)| lit::from_tensor(&Tensor2::zeros(*r, *c)))
+                .collect()
+        };
+        let m = zeros(&spec)?;
+        let v = zeros(&spec)?;
+        Ok(Trainer {
+            spec,
+            step_fn,
+            params,
+            m,
+            v,
+            t: init.steps,
+            losses: Vec::new(),
+            rng: Rng::seeded(cfg.seed),
+        })
+    }
+
+    /// One optimizer step on a sampled batch; returns the loss.
+    pub fn step(&mut self, corpus: &Corpus, batch: usize) -> Result<f32> {
+        self.t += 1;
+        let tokens = corpus.batch(&corpus.train, batch, self.spec.seq_len, &mut self.rng);
+        let tok_lit =
+            lit::from_i32(&tokens, &[batch as i64, self.spec.seq_len as i64 + 1])?;
+        let p = self.params.len();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 2);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        let t_lit = lit::scalar_f32(self.t as f32);
+        args.push(&t_lit);
+        args.push(&tok_lit);
+        let mut out = self.step_fn.run(&args)?;
+        anyhow::ensure!(out.len() == 3 * p + 1, "train_step returned {} outputs", out.len());
+        let loss = lit::first_f32(&out[3 * p])?;
+        // replace state (drain from the back to avoid reallocating)
+        out.truncate(3 * p);
+        let v_new = out.split_off(2 * p);
+        let m_new = out.split_off(p);
+        self.params = out;
+        self.m = m_new;
+        self.v = v_new;
+        Ok(loss)
+    }
+
+    /// Run the full loop, recording the loss curve.
+    pub fn train(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainConfig,
+        mut on_log: impl FnMut(u32, f32),
+    ) -> Result<()> {
+        for i in 0..cfg.steps {
+            let loss = self.step(corpus, cfg.batch)?;
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {} ({loss})", self.t);
+            if i % cfg.log_every == 0 || i + 1 == cfg.steps {
+                self.losses.push((self.t, loss));
+                on_log(self.t, loss);
+            }
+        }
+        Ok(())
+    }
+
+    /// Export current parameters as a checkpoint.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let mut ck = literals_to_checkpoint(&self.spec, &self.params)?;
+        ck.steps = self.t;
+        ck.final_loss = self.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+        Ok(ck)
+    }
+}
+

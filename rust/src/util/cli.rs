@@ -1,0 +1,211 @@
+//! Minimal declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands, with typed getters and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Declared option (for help text + validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed argument bag for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+    about: &'static str,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}\n{1}")]
+    Unknown(String, String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+    #[error("{0}")]
+    Help(String),
+}
+
+impl Args {
+    pub fn new(prog: &str, about: &'static str) -> Self {
+        Args { prog: prog.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare a value-taking option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        if let Some(d) = default {
+            self.opts.insert(name.to_string(), d.to_string());
+        }
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.prog, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28} {}{def}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw argument list (without the program name).
+    pub fn parse(mut self, raw: &[String]) -> Result<Self, CliError> {
+        let known = |name: &str, specs: &[OptSpec]| specs.iter().find(|s| s.name == name).cloned();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known(&name, &self.specs)
+                    .ok_or_else(|| CliError::Unknown(name.clone(), self.usage()))?;
+                if spec.is_flag {
+                    self.flags.push(name);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    self.opts.insert(name, val);
+                }
+            } else {
+                self.positional.push(tok.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.opts.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let raw = self
+            .opts
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse()
+            .map_err(|_| CliError::BadValue(name.to_string(), raw.clone()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get_parsed(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get_parsed(name)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32, CliError> {
+        self.get_parsed(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("prog", "test")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("out", None, "output path")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse(&strs(&[])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert!(a.get("out").is_none());
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn parses_separated_and_inline_values() {
+        let a = base()
+            .parse(&strs(&["--steps", "7", "--out=x.bin", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+        assert_eq!(a.get("out"), Some("x.bin"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            base().parse(&strs(&["--bogus"])),
+            Err(CliError::Unknown(..))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            base().parse(&strs(&["--out"])),
+            Err(CliError::MissingValue(..))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = base().parse(&strs(&["--steps", "zebra"])).unwrap();
+        assert!(matches!(a.get_usize("steps"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(base().parse(&strs(&["-h"])), Err(CliError::Help(_))));
+    }
+}

@@ -1,0 +1,101 @@
+//! Offline-friendly utilities.
+//!
+//! The build sandbox has no network access and only the `xla` dependency tree
+//! in its cargo cache, so the usual ecosystem crates (clap, rand, proptest,
+//! serde, criterion) are unavailable. This module provides the small, tested
+//! replacements the rest of the crate uses:
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256** PRNG with normal + Zipf samplers.
+//! * [`cli`] — a tiny declarative command-line parser.
+//! * [`proptest`] — randomized property-test driver with failing-seed replay.
+//! * [`ser`] — a minimal length-prefixed binary serializer for checkpoints.
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod ser;
+
+/// `ldexp`-style scale: `2^e` as an `f32`, exact for the full normal range
+/// and graceful (gradual underflow / saturate to inf) outside it.
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    if e >= -126 && e <= 127 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else if e < -126 {
+        // subnormal or zero
+        if e < -149 {
+            0.0
+        } else {
+            f32::from_bits(1u32 << (e + 149) as u32)
+        }
+    } else {
+        f32::INFINITY
+    }
+}
+
+/// `floor(log2(|x|))` for finite nonzero `x`, via bit inspection (handles
+/// subnormals). Returns `None` for zero / NaN / inf.
+#[inline]
+pub fn floor_log2(x: f32) -> Option<i32> {
+    let bits = x.to_bits() & 0x7fff_ffff;
+    if bits == 0 || bits >= 0x7f80_0000 {
+        return None;
+    }
+    let exp = (bits >> 23) as i32;
+    if exp != 0 {
+        Some(exp - 127)
+    } else {
+        // subnormal: exponent of the leading fraction bit
+        let lead = 31 - (bits.leading_zeros() as i32); // position of MSB set
+        Some(lead - 149)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2i_matches_powi() {
+        for e in -140..=127 {
+            // f64 exp2 is exact over this range (f32::powi is not, for
+            // subnormal results)
+            assert_eq!(exp2i(e), (e as f64).exp2() as f32, "e={e}");
+        }
+        assert_eq!(exp2i(-150), 0.0);
+        assert!(exp2i(128).is_infinite());
+    }
+
+    #[test]
+    fn floor_log2_basics() {
+        assert_eq!(floor_log2(1.0), Some(0));
+        assert_eq!(floor_log2(1.5), Some(0));
+        assert_eq!(floor_log2(2.0), Some(1));
+        assert_eq!(floor_log2(0.75), Some(-1));
+        assert_eq!(floor_log2(-6.0), Some(2));
+        assert_eq!(floor_log2(0.0), None);
+        assert_eq!(floor_log2(f32::NAN), None);
+        assert_eq!(floor_log2(f32::INFINITY), None);
+    }
+
+    #[test]
+    fn floor_log2_subnormals() {
+        let tiny = f32::from_bits(1); // 2^-149
+        assert_eq!(floor_log2(tiny), Some(-149));
+        let sub = f32::from_bits(1 << 22); // 2^-127
+        assert_eq!(floor_log2(sub), Some(-127));
+    }
+
+    #[test]
+    fn floor_log2_random_agree_with_float_log2() {
+        let mut r = rng::Rng::seeded(7);
+        for _ in 0..10_000 {
+            let x = (r.f32() - 0.5) * r.f32() * 1e6;
+            if x == 0.0 {
+                continue;
+            }
+            let want = x.abs().log2().floor() as i32;
+            assert_eq!(floor_log2(x), Some(want), "x={x}");
+        }
+    }
+}

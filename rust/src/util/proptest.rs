@@ -1,0 +1,101 @@
+//! Tiny property-testing driver (proptest/quickcheck are unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the driver runs it for N
+//! cases with derived seeds and, on failure, reports the exact seed so the
+//! case can be replayed with `NXFP_PROP_SEED=<seed> cargo test <name>`.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `NXFP_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("NXFP_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop` for `cases` random cases. The closure returns `Err(msg)` to
+/// fail. Panics with the failing seed on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Replay mode: run exactly one pinned seed.
+    if let Ok(seed) = std::env::var("NXFP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("NXFP_PROP_SEED must be a u64");
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    let base = 0x5eed_0000_0000_0000u64 ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 NXFP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, default_cases(), prop);
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always-ok", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "NXFP_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("always-bad", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.5], 0.1, 0.0).is_err());
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
+    }
+}

@@ -1,0 +1,205 @@
+//! Minimal binary serializer for checkpoints and quantized tensors
+//! (serde is unavailable offline). Little-endian, length-prefixed, with a
+//! magic/version header per file.
+
+use std::io::{self, Read, Write};
+
+pub const MAGIC: &[u8; 4] = b"NXFP";
+pub const VERSION: u32 = 1;
+
+pub struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    pub fn new(mut w: W) -> io::Result<Self> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        Ok(Writer { w })
+    }
+
+    pub fn u8(&mut self, v: u8) -> io::Result<()> {
+        self.w.write_all(&[v])
+    }
+
+    pub fn u32(&mut self, v: u32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn i32(&mut self, v: i32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn f32(&mut self, v: f32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> io::Result<()> {
+        self.u64(b.len() as u64)?;
+        self.w.write_all(b)
+    }
+
+    pub fn f32_slice(&mut self, xs: &[f32]) -> io::Result<()> {
+        self.u64(xs.len() as u64)?;
+        // bulk write via byte view
+        let mut buf = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.w.write_all(&buf)
+    }
+
+    pub fn u8_slice(&mut self, xs: &[u8]) -> io::Result<()> {
+        self.bytes(xs)
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+pub struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    pub fn new(mut r: R) -> io::Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        }
+        let mut ver = [0u8; 4];
+        r.read_exact(&mut ver)?;
+        let v = u32::from_le_bytes(ver);
+        if v != VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unsupported version {v}"),
+            ));
+        }
+        Ok(Reader { r })
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn i32(&mut self) -> io::Result<i32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(i32::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self) -> io::Result<f32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn str(&mut self) -> io::Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let mut b = vec![0u8; n];
+        self.r.read_exact(&mut b)?;
+        Ok(b)
+    }
+
+    pub fn f32_slice(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn u8_slice(&mut self) -> io::Result<Vec<u8>> {
+        self.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_types() {
+        let mut buf = Vec::new();
+        {
+            let mut w = Writer::new(&mut buf).unwrap();
+            w.u8(7).unwrap();
+            w.u32(0xdead_beef).unwrap();
+            w.u64(u64::MAX).unwrap();
+            w.i32(-42).unwrap();
+            w.f32(3.5).unwrap();
+            w.str("héllo").unwrap();
+            w.f32_slice(&[1.0, -2.0, f32::MIN_POSITIVE]).unwrap();
+            w.u8_slice(&[1, 2, 3]).unwrap();
+            w.finish().unwrap();
+        }
+        let mut r = Reader::new(&buf[..]).unwrap();
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.f32().unwrap(), 3.5);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.f32_slice().unwrap(), vec![1.0, -2.0, f32::MIN_POSITIVE]);
+        assert_eq!(r.u8_slice().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"XXXX\x01\x00\x00\x00".to_vec();
+        assert!(Reader::new(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        assert!(Reader::new(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf = Vec::new();
+        {
+            let mut w = Writer::new(&mut buf).unwrap();
+            w.f32_slice(&[1.0; 16]).unwrap();
+            w.finish().unwrap();
+        }
+        buf.truncate(buf.len() - 3);
+        let mut r = Reader::new(&buf[..]).unwrap();
+        assert!(r.f32_slice().is_err());
+    }
+}

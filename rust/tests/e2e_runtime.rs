@@ -1,0 +1,84 @@
+//! End-to-end integration over the PJRT runtime and the real (small-spec)
+//! artifacts: load + compile every artifact, run a few train steps (loss
+//! must drop), evaluate perplexity, score reasoning probes, and run the
+//! decode engine with a quantized KV cache. Requires `make artifacts`.
+
+use nxfp::coordinator::{DecodeEngine, GenRequest};
+use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
+use nxfp::formats::NxConfig;
+use nxfp::models::corpus::Probe;
+use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec};
+use nxfp::runtime::Runtime;
+use nxfp::train::{TrainConfig, Trainer};
+
+fn artifacts() -> String {
+    std::env::var("NXFP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts()).join("train_step.hlo.txt").exists()
+}
+
+#[test]
+fn train_eval_score_decode_compose() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let spec = LmSpec::small();
+    let corpus = Corpus::generate(GrammarSpec::default_for_vocab(spec.vocab), 60_000, 12_000, 7);
+    let mut rt = Runtime::cpu(artifacts()).unwrap();
+
+    // --- train a handful of steps: loss must be finite and decreasing-ish
+    let cfg = TrainConfig { batch: 16, steps: 8, log_every: 1, seed: 5 };
+    let init = Checkpoint::init(&spec, 5);
+    let mut tr = Trainer::new(&mut rt, spec, &init, &cfg).unwrap();
+    let mut losses = Vec::new();
+    tr.train(&corpus, &cfg, |_, l| losses.push(l)).unwrap();
+    assert_eq!(losses.len(), 8);
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    assert!(
+        last < first,
+        "loss did not drop over 8 steps: {first} -> {last}"
+    );
+    // fresh init on a 512-vocab ~ uniform: loss near ln(512) = 6.24
+    assert!((first - 6.24).abs() < 1.0, "initial loss {first} implausible");
+
+    let ck = tr.checkpoint().unwrap();
+
+    // --- eval: fp16 vs quantized weights (W4 must not beat FP16)
+    let eval_step = rt.load("eval_step").unwrap();
+    let p16 = perplexity(&eval_step, &ck, &corpus, spec.seq_len, 8).unwrap();
+    assert!(p16.ppl() > 1.0 && p16.ppl() < 600.0, "ppl {}", p16.ppl());
+    let q4 = quantize_checkpoint(&ck, &spec.quantizable(), &NxConfig::nxfp(4));
+    let p4 = perplexity(&eval_step, &q4, &corpus, spec.seq_len, 8).unwrap();
+    assert!(p4.ppl() >= p16.ppl() * 0.99, "W4 ppl {} < FP16 {}", p4.ppl(), p16.ppl());
+
+    // --- kv-quantized eval artifact composes
+    let kvq = rt.load("eval_step_kvq_nxfp4").unwrap();
+    let pkv = perplexity(&kvq, &ck, &corpus, spec.seq_len, 8).unwrap();
+    assert!(pkv.ppl().is_finite());
+    assert!(pkv.ppl() >= p16.ppl() * 0.98);
+
+    // --- reasoning scorer runs and returns a probability
+    let score_step = rt.load("score_step").unwrap();
+    let probes = Probe::generate(&corpus.spec, 16, 3);
+    let acc = reasoning_accuracy(&score_step, &ck, &probes, spec.seq_len, 8).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+
+    // --- decode engine with quantized KV serves requests
+    let mut engine =
+        DecodeEngine::new(&mut rt, spec, &ck, Some(NxConfig::nxfp(4)), 4).unwrap();
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest { id: i, prompt: vec![0, 5, 70], max_new: 6 })
+        .collect();
+    let resps = engine.serve_wave(reqs).unwrap();
+    assert_eq!(resps.len(), 4);
+    for r in &resps {
+        assert_eq!(r.generated, 6);
+        assert_eq!(r.tokens.len(), 3 + 6);
+        assert!(r.tokens.iter().all(|&t| t >= 0 && (t as usize) < spec.vocab));
+    }
+    assert!(engine.metrics.kv_savings() > 0.5, "kv savings {}", engine.metrics.kv_savings());
+}

@@ -1,0 +1,91 @@
+//! Bit-exact cross-check between the Rust quantizer and the Python NumPy
+//! oracle: `make artifacts` dumps `artifacts/golden_fakequant.txt` from
+//! `python/compile/kernels/ref.py`; this test replays every vector through
+//! `nxfp::quant::fake_quant` and requires identical f32 bit patterns.
+//!
+//! This is the contract that lets the Rust-side weight quantization and the
+//! in-graph (Pallas) KV quantization be treated as the same number system.
+
+use nxfp::formats::NxConfig;
+use nxfp::quant::fake_quant;
+use std::path::PathBuf;
+
+fn cfg_by_id(id: &str) -> Option<NxConfig> {
+    Some(match id {
+        "bfp4" => NxConfig::bfp(4),
+        "bfp5" => NxConfig::bfp(5),
+        "bfp6" => NxConfig::bfp(6),
+        "mxfp4" => NxConfig::mxfp(4),
+        "mxfp5" => NxConfig::mxfp(5),
+        "mxfp6" => NxConfig::mxfp(6),
+        "mxfp8" => NxConfig::mxfp(8),
+        "nxfp4" => NxConfig::nxfp(4),
+        "nxfp5" => NxConfig::nxfp(5),
+        "nxfp6" => NxConfig::nxfp(6),
+        "nxfp4_nm" => NxConfig::nxfp_nm(4),
+        "nxfp4_nm_am" => NxConfig::nxfp_nm_am(4),
+        _ => return None,
+    })
+}
+
+fn parse_hex_f32(s: &str) -> Vec<f32> {
+    assert!(s.len() % 8 == 0, "hex length {} not a multiple of 8", s.len());
+    (0..s.len() / 8)
+        .map(|i| {
+            let word = u32::from_str_radix(&s[i * 8..(i + 1) * 8], 16).unwrap();
+            // numpy little-endian u32 view prints the native u32 value
+            f32::from_bits(word)
+        })
+        .collect()
+}
+
+fn golden_path() -> PathBuf {
+    let base = std::env::var("NXFP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    PathBuf::from(base).join("golden_fakequant.txt")
+}
+
+#[test]
+fn rust_matches_python_oracle_bit_for_bit() {
+    let path = golden_path();
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        panic!(
+            "golden vectors missing at {path:?} — run `make artifacts` first \
+             (or set NXFP_ARTIFACTS)"
+        );
+    };
+    let mut n_vec = 0usize;
+    let mut per_cfg: std::collections::BTreeMap<String, usize> = Default::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let mut parts = line.split_whitespace();
+        let (Some(id), Some(k), Some(ih), Some(oh)) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            continue;
+        };
+        let Some(cfg) = cfg_by_id(id) else {
+            panic!("line {lineno}: unknown config id {id}");
+        };
+        let k: usize = k.parse().unwrap();
+        let cfg = cfg.with_block_size(k);
+        let input = parse_hex_f32(ih);
+        let want = parse_hex_f32(oh);
+        assert_eq!(input.len(), k, "line {lineno}");
+        let got = fake_quant(&input, &cfg);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "line {lineno} ({id}, k={k}) elem {i}: rust {g} vs oracle {w} \
+                 (input {})",
+                input[i]
+            );
+        }
+        n_vec += 1;
+        *per_cfg.entry(id.to_string()).or_default() += 1;
+    }
+    assert!(n_vec >= 500, "only {n_vec} golden vectors checked");
+    // every config family must be represented
+    for fam in ["bfp4", "mxfp4", "nxfp4", "nxfp5", "nxfp6", "mxfp8"] {
+        assert!(per_cfg.contains_key(fam), "no vectors for {fam}");
+    }
+}
