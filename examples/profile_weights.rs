@@ -30,6 +30,8 @@ fn main() {
     let p = ModelProfile::by_name("Llama3-8B").unwrap();
     let w = synth_weights(&p, 192, 2048);
     let prof = profile_scaled(&w, &cfg);
-    println!("\nLlama3-8B scaled-weight histogram (quantization levels at ±{{0.5,1,1.5,2,3,4,6}}):\n");
+    println!(
+        "\nLlama3-8B scaled-weight histogram (quantization levels at ±{{0.5,1,1.5,2,3,4,6}}):\n"
+    );
     print!("{}", prof.hist.render(64));
 }

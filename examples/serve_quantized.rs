@@ -69,7 +69,7 @@ fn main() -> Result<()> {
         if m.kv_bits_fp16 > 0 {
             println!(
                 "  KV footprint: {} KiB packed vs {} KiB FP16 ({:.1}% saved)",
-                m.kv_bits_peak / 8 / 1024,
+                m.kv_bits_packed / 8 / 1024,
                 m.kv_bits_fp16 / 8 / 1024,
                 m.kv_savings() * 100.0
             );

@@ -31,12 +31,17 @@ fn main() -> Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
-    let corpus = Corpus::generate(GrammarSpec::default_for_vocab(spec.vocab), 400_000, 40_000, 1234);
+    let corpus =
+        Corpus::generate(GrammarSpec::default_for_vocab(spec.vocab), 400_000, 40_000, 1234);
     let mut rt = Runtime::cpu("artifacts")?;
     println!("== nxfp end-to-end driver ==");
     println!("platform      : {}", rt.platform());
-    println!("model         : {} params ({} layers, d={})",
-             spec.param_count(), spec.n_layers, spec.d_model);
+    println!(
+        "model         : {} params ({} layers, d={})",
+        spec.param_count(),
+        spec.n_layers,
+        spec.d_model
+    );
     println!("corpus        : {} train / {} eval tokens", corpus.train.len(), corpus.eval.len());
     println!("train steps   : {steps}");
 
@@ -56,8 +61,12 @@ fn main() -> Result<()> {
         })?;
         let ck = trainer.checkpoint()?;
         ck.save(ckpt_path)?;
-        println!("  trained {} steps in {:.1?} ({:.2} steps/s), saved to {ckpt_path:?}",
-                 steps, t0.elapsed(), steps as f64 / t0.elapsed().as_secs_f64());
+        println!(
+            "  trained {} steps in {:.1?} ({:.2} steps/s), saved to {ckpt_path:?}",
+            steps,
+            t0.elapsed(),
+            steps as f64 / t0.elapsed().as_secs_f64()
+        );
         ck
     };
 
@@ -67,7 +76,13 @@ fn main() -> Result<()> {
     let quantizable = spec.quantizable();
     let fp16 = perplexity(&eval_step, &ck, &corpus, spec.seq_len, 8)?;
     let mut table = Table::new(&["bits", "format", "ppl", "Δ vs FP16", "eff.bits"]);
-    table.row(&["16".into(), "FP16".into(), format!("{:.4}", fp16.ppl()), "—".into(), "16".into()]);
+    table.row(&[
+        "16".into(),
+        "FP16".into(),
+        format!("{:.4}", fp16.ppl()),
+        "—".into(),
+        "16".into(),
+    ]);
     let mut results = vec![("FP16".to_string(), 16.0, fp16.ppl())];
     for bits in [6u8, 5, 4] {
         for cfg in [
@@ -115,8 +130,10 @@ fn main() -> Result<()> {
     // sanity summary for EXPERIMENTS.md
     let get = |name: &str| results.iter().find(|(n, ..)| n.contains(name)).map(|r| r.2);
     if let (Some(mx4), Some(nx4)) = (get("MxFP4"), get("NxFP4 (NM+AM+CR)")) {
-        println!("\nheadline: NxFP4 improves ppl by {:.3} over MxFP4 (paper: up to 0.64)",
-                 mx4 - nx4);
+        println!(
+            "\nheadline: NxFP4 improves ppl by {:.3} over MxFP4 (paper: up to 0.64)",
+            mx4 - nx4
+        );
     }
     println!("done.");
     Ok(())

@@ -27,7 +27,9 @@ fn main() {
     }
     t.print();
 
-    println!("\nLlama3-8B histogram (paper Fig. 3 top-left; MxFP4 levels ±{{0.5,1,1.5,2,3,4,6}}):");
+    println!(
+        "\nLlama3-8B histogram (paper Fig. 3 top-left; MxFP4 levels ±{{0.5,1,1.5,2,3,4,6}}):"
+    );
     let p = ModelProfile::by_name("Llama3-8B").unwrap();
     let prof = profile_scaled(&synth_weights(&p, 192, 2048), &cfg);
     print!("{}", prof.hist.render(56));

@@ -11,7 +11,7 @@
 //!   but must stay within ~2× of the f32 GEMV to prove decode is cheap.
 
 use nxfp::bench_util::{banner, bench_quick, Table};
-use nxfp::dequant::{dequantize_packed, gemv_packed, DequantLut};
+use nxfp::dequant::{dequantize_packed, gemm_packed, gemv_packed, DequantLut};
 use nxfp::formats::packed::PackedMatrix;
 use nxfp::formats::{BaseFormat, NxConfig};
 use nxfp::quant::quantize_matrix;
@@ -28,8 +28,14 @@ fn main() {
     let bytes_f32 = rows * cols * 4;
     println!("matrix: {rows}x{cols} f32 ({} MiB)\n", bytes_f32 >> 20);
 
+    let n_rhs = 8usize;
     let mut t = Table::new(&[
-        "format", "quantize GiB/s", "dequant GiB/s", "gemv ms", "vs f32 gemv",
+        "format",
+        "quantize GiB/s",
+        "dequant GiB/s",
+        "gemv ms",
+        "gemm8/rhs ms",
+        "vs f32 gemv",
     ]);
 
     // f32 GEMV baseline
@@ -45,8 +51,11 @@ fn main() {
         }
         black_box(&y);
     });
-    println!("f32 GEMV baseline: {:.3} ms ({:.2} GiB/s weight traffic)\n",
-             base.mean.as_secs_f64() * 1e3, base.gib_per_sec(bytes_f32));
+    println!(
+        "f32 GEMV baseline: {:.3} ms ({:.2} GiB/s weight traffic)\n",
+        base.mean.as_secs_f64() * 1e3,
+        base.gib_per_sec(bytes_f32)
+    );
 
     for cfg in [
         NxConfig::bfp(4),
@@ -71,11 +80,20 @@ fn main() {
             gemv_packed(&packed, &lut, base_mx, &x, &mut yq);
             black_box(&yq);
         });
+        // batched RHS: the threaded gemm unpacks each block once for all
+        // columns, so per-RHS cost should undercut the single gemv
+        let xm: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut ym = vec![0.0f32; rows * n_rhs];
+        let tm = bench_quick(|| {
+            gemm_packed(&packed, &lut, base_mx, &xm, n_rhs, &mut ym);
+            black_box(&ym);
+        });
         t.row(&[
             cfg.name(),
             format!("{:.2}", tq.gib_per_sec(bytes_f32)),
             format!("{:.2}", td.gib_per_sec(bytes_f32)),
             format!("{:.3}", tg.mean.as_secs_f64() * 1e3),
+            format!("{:.3}", tm.mean.as_secs_f64() * 1e3 / n_rhs as f64),
             format!("{:.2}x", tg.mean.as_secs_f64() / base.mean.as_secs_f64()),
         ]);
     }

@@ -76,6 +76,28 @@ pub fn bench_quick<F: FnMut()>(f: F) -> Timing {
     bench(Duration::from_millis(300), Duration::from_secs(1), f)
 }
 
+/// Time each of `n` sequential calls `f(i)` and return the per-call
+/// durations **in call order**. For stateful workloads whose per-iteration
+/// cost may drift (e.g. a KV cache growing across decode steps), where the
+/// sorted aggregate of [`bench`] would hide the trend.
+pub fn bench_series<F: FnMut(usize)>(n: usize, mut f: F) -> Vec<Duration> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = Instant::now();
+        f(i);
+        out.push(t.elapsed());
+    }
+    out
+}
+
+/// Mean of a duration slice (empty slices -> zero).
+pub fn mean_duration(samples: &[Duration]) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    samples.iter().sum::<Duration>() / samples.len() as u32
+}
+
 /// Fixed-width table printer for paper-style result grids.
 pub struct Table {
     headers: Vec<String>,
@@ -145,6 +167,16 @@ mod tests {
         assert!(t.iters >= 5);
         assert!(t.min <= t.p50 && t.p50 <= t.p99);
         assert!(t.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_series_preserves_order() {
+        let mut seen = Vec::new();
+        let s = bench_series(4, |i| seen.push(i));
+        assert_eq!(s.len(), 4);
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert!(mean_duration(&s) <= s.iter().sum());
+        assert_eq!(mean_duration(&[]), Duration::ZERO);
     }
 
     #[test]

@@ -25,7 +25,8 @@ pub fn default_corpus() -> Corpus {
 /// example, still enough to separate the formats) and cache it there.
 pub fn load_or_train(rt: &mut Runtime, corpus: &Corpus, seed: u64) -> Result<Checkpoint> {
     let spec = LmSpec::small();
-    let path = format!("artifacts/model{}.ckpt", if seed == 42 { String::new() } else { format!("_s{seed}") });
+    let suffix = if seed == 42 { String::new() } else { format!("_s{seed}") };
+    let path = format!("artifacts/model{suffix}.ckpt");
     let path = Path::new(&path);
     if path.exists() {
         let ck = Checkpoint::load(path)?;

@@ -7,6 +7,16 @@
 //! `pos [B]` (i32, cache fill per slot), `k_cache [B, L, S, D]`,
 //! `v_cache [B, L, S, D]` (f32); outputs `logits [B, V]`,
 //! `k_new [B, L, D]`, `v_new [B, L, D]`.
+//!
+//! # Decode hot path
+//!
+//! The batched step tensors (`k_f32`/`v_f32` slabs) persist across the
+//! steps of a wave, and each slot's packed caches carry a dirty-row
+//! watermark (see [`crate::quant::kv_cache`]), so a decode step dequantizes
+//! only the rows appended since the previous step — O(new rows), not
+//! O(total fill). Finished slots release their packed and staging buffers
+//! immediately, are skipped by the assembly loop, and have their slab lanes
+//! zeroed exactly once.
 
 pub mod server;
 
@@ -18,6 +28,7 @@ use crate::formats::NxConfig;
 use crate::models::{Checkpoint, LmSpec};
 use crate::quant::kv_cache::KvCache;
 use crate::runtime::{lit, Runtime, Step};
+use crate::tensor::Tensor2;
 use crate::train::params_to_literals;
 
 /// One generation request.
@@ -45,8 +56,11 @@ pub struct Metrics {
     pub tokens_generated: u64,
     pub decode_steps: u64,
     pub wall: Duration,
-    /// packed KV bits at peak vs what FP16 would have used
-    pub kv_bits_peak: u64,
+    /// Packed KV bits summed at request **completion**: each finished
+    /// request contributes its final cache footprint once. A completion-
+    /// time total, not a live peak (formerly misnamed `kv_bits_peak`).
+    pub kv_bits_packed: u64,
+    /// FP16 bits the same completed caches would have occupied.
     pub kv_bits_fp16: u64,
 }
 
@@ -56,7 +70,99 @@ impl Metrics {
     }
 
     pub fn kv_savings(&self) -> f64 {
-        1.0 - self.kv_bits_peak as f64 / self.kv_bits_fp16.max(1) as f64
+        1.0 - self.kv_bits_packed as f64 / self.kv_bits_fp16.max(1) as f64
+    }
+}
+
+/// Per-slot quantized KV state: one packed [`KvCache`] per layer plus a
+/// persistent f32 staging mirror of the decoded prefix.
+///
+/// [`SlotKv::sync_into`] decodes only the rows appended since the previous
+/// call (the caches' dirty-row watermark) and copies exactly those rows
+/// into the slot's lane of the batched step tensors, so per-step decode
+/// work is O(new rows) instead of O(total fill). The staging mirror holds
+/// the full decoded prefix, so [`SlotKv::resync_full_into`] can move a
+/// slot to a *different* lane without re-decoding — the enabler for
+/// continuous batching. Dropping a `SlotKv` releases both the packed
+/// blocks and the staging buffers (finished slots free immediately).
+///
+/// Trade-off: the mirror is a second f32 copy of the decoded prefix on
+/// top of the slot's slab lane, bought for lane mobility. If that memory
+/// ever dominates (big `L·S·D`), the alternative is decoding straight
+/// into the lane and moving slots lane-to-lane with a slab copy — see
+/// ROADMAP "Open items".
+pub struct SlotKv {
+    caches: Vec<KvCache>,
+    stage_k: Vec<Tensor2>,
+    stage_v: Vec<Tensor2>,
+}
+
+impl SlotKv {
+    /// `n_layers` caches of feature dim `dim`, staged to `pad_len` rows
+    /// (the artifact's fixed context length `S`).
+    pub fn new(n_layers: usize, dim: usize, pad_len: usize, cfg: &NxConfig) -> Self {
+        SlotKv {
+            caches: (0..n_layers).map(|_| KvCache::new(dim, cfg.clone())).collect(),
+            stage_k: (0..n_layers).map(|_| Tensor2::zeros(pad_len, dim)).collect(),
+            stage_v: (0..n_layers).map(|_| Tensor2::zeros(pad_len, dim)).collect(),
+        }
+    }
+
+    /// Rows appended so far (cache fill; identical across layers).
+    pub fn fill(&self) -> usize {
+        self.caches[0].len
+    }
+
+    /// Quantize and append one generated (k, v) row for `layer`.
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        self.caches[layer].append(k_row, v_row);
+    }
+
+    /// Incrementally decode rows appended since the previous call and copy
+    /// them into this slot's `[L, S, D]` lanes of the batched step
+    /// tensors. The lanes must persist across steps (the coordinator
+    /// reuses the same slab for a whole wave).
+    pub fn sync_into(&mut self, k_lane: &mut [f32], v_lane: &mut [f32]) {
+        let (s, d) = (self.stage_k[0].rows, self.stage_k[0].cols);
+        debug_assert_eq!(k_lane.len(), self.caches.len() * s * d);
+        debug_assert_eq!(v_lane.len(), k_lane.len());
+        for (li, cache) in self.caches.iter_mut().enumerate() {
+            let new = cache.dequantize_into(&mut self.stage_k[li], &mut self.stage_v[li]);
+            let base = li * s * d;
+            for r in new {
+                let dst = base + r * d;
+                k_lane[dst..dst + d].copy_from_slice(self.stage_k[li].row(r));
+                v_lane[dst..dst + d].copy_from_slice(self.stage_v[li].row(r));
+            }
+        }
+    }
+
+    /// Re-sync the **entire** decoded prefix (rows `0..fill`) into a lane
+    /// from the staging mirror, without touching the packed streams — the
+    /// continuous-batching entry point for moving a slot to a different
+    /// batch lane. Rows past the watermark must be pulled separately with
+    /// [`SlotKv::sync_into`].
+    pub fn resync_full_into(&self, k_lane: &mut [f32], v_lane: &mut [f32]) {
+        let (s, d) = (self.stage_k[0].rows, self.stage_k[0].cols);
+        debug_assert_eq!(k_lane.len(), self.caches.len() * s * d);
+        for (li, cache) in self.caches.iter().enumerate() {
+            let base = li * s * d;
+            for r in 0..cache.watermark() {
+                let dst = base + r * d;
+                k_lane[dst..dst + d].copy_from_slice(self.stage_k[li].row(r));
+                v_lane[dst..dst + d].copy_from_slice(self.stage_v[li].row(r));
+            }
+        }
+    }
+
+    /// Bit-true packed footprint across layers (K and V).
+    pub fn footprint_bits(&self) -> u64 {
+        self.caches.iter().map(|c| c.footprint_bits()).sum()
+    }
+
+    /// FP16 footprint of the same caches.
+    pub fn fp16_footprint_bits(&self) -> u64 {
+        self.caches.iter().map(|c| c.fp16_footprint_bits()).sum()
     }
 }
 
@@ -66,8 +172,12 @@ struct Slot {
     /// next prompt token to feed (while < prompt.len() we are prefilling)
     cursor: usize,
     output: Vec<i32>,
-    /// per-layer quantized KV (None = slot holds FP32 cache for baselines)
-    caches: Vec<KvCache>,
+    /// quantized KV state; `None` = baseline mode (FP32 rows written
+    /// straight into the slab, no quantizer setup at all)
+    kv: Option<SlotKv>,
+    /// cache fill (rows appended); tracked directly so baselines don't
+    /// need a `KvCache` just for its length counter
+    fill: usize,
     done: bool,
 }
 
@@ -102,7 +212,12 @@ impl DecodeEngine {
         })
     }
 
-    /// Serve a wave of up to `max_batch` requests to completion.
+    /// Serve a wave of up to `max_batch` requests to completion. A prompt
+    /// must be non-empty and shorter than the artifact's context length
+    /// `S` (prefill appends one KV row per prompt token before the first
+    /// sample, so a longer prompt would overrun the cache); invalid
+    /// requests are rejected individually — they complete immediately with
+    /// `generated == 0` and do not abort the rest of the wave.
     pub fn serve_wave(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         assert!(reqs.len() <= self.max_batch);
         let (bsz, l, s, d, v) = (
@@ -113,8 +228,30 @@ impl DecodeEngine {
             self.spec.vocab,
         );
         let wave_start = Instant::now();
-        let kv_cfg = self.kv_cfg.clone().unwrap_or_else(|| NxConfig::mxfp(8));
-        let quantize_kv = self.kv_cfg.is_some();
+        let mut responses = Vec::new();
+        let reqs: Vec<GenRequest> = reqs
+            .into_iter()
+            .filter(|req| {
+                let ok = !req.prompt.is_empty() && req.prompt.len() < s;
+                if !ok {
+                    eprintln!(
+                        "[serve] rejecting request {}: prompt length {} \
+                         (must be 1..{s})",
+                        req.id,
+                        req.prompt.len()
+                    );
+                    responses.push(GenResponse {
+                        id: req.id,
+                        tokens: req.prompt.clone(),
+                        generated: 0,
+                        latency: Duration::ZERO,
+                    });
+                }
+                ok
+            })
+            .collect();
+        let kv_cfg = self.kv_cfg.clone();
+        let lane = l * s * d;
         let mut slots: Vec<Option<Slot>> = reqs
             .into_iter()
             .map(|req| {
@@ -122,45 +259,42 @@ impl DecodeEngine {
                     started: Instant::now(),
                     cursor: 0,
                     output: req.prompt.clone(),
-                    caches: (0..l).map(|_| KvCache::new(d, kv_cfg.clone())).collect(),
+                    kv: kv_cfg.as_ref().map(|cfg| SlotKv::new(l, d, s, cfg)),
+                    fill: 0,
                     req,
                     done: false,
                 })
             })
             .collect();
         slots.resize_with(bsz, || None);
-        // FP32 fallback caches (baseline mode, no quantization)
-        let mut k_f32 = vec![0.0f32; bsz * l * s * d];
-        let mut v_f32 = vec![0.0f32; bsz * l * s * d];
-        let mut responses = Vec::new();
+        // Batched step tensors; persist across the wave's steps so active
+        // slots only ever write new rows into them.
+        let mut k_f32 = vec![0.0f32; bsz * lane];
+        let mut v_f32 = vec![0.0f32; bsz * lane];
 
         while slots.iter().flatten().any(|sl| !sl.done) {
-            // assemble step inputs
+            // assemble step inputs: finished slots are skipped entirely
+            // (their lanes were zeroed once at completion)
             let mut tokens = vec![0i32; bsz];
             let mut pos = vec![0i32; bsz];
-            for (b, sl) in slots.iter().enumerate() {
-                if let Some(sl) = sl {
-                    if sl.done {
-                        continue;
-                    }
-                    tokens[b] = if sl.cursor < sl.req.prompt.len() {
-                        sl.req.prompt[sl.cursor]
-                    } else {
-                        *sl.output.last().unwrap()
-                    };
-                    pos[b] = sl.caches[0].len as i32;
+            for (b, sl) in slots.iter_mut().enumerate() {
+                let Some(sl) = sl else { continue };
+                if sl.done {
+                    continue;
                 }
-            }
-            if quantize_kv {
-                // on-the-fly dequantize packed caches into the step tensors
-                for (b, sl) in slots.iter().enumerate() {
-                    let Some(sl) = sl else { continue };
-                    for (li, cache) in sl.caches.iter().enumerate() {
-                        let (kd, vd) = cache.dequantize(s);
-                        let base = (b * l + li) * s * d;
-                        k_f32[base..base + s * d].copy_from_slice(&kd.data);
-                        v_f32[base..base + s * d].copy_from_slice(&vd.data);
-                    }
+                tokens[b] = if sl.cursor < sl.req.prompt.len() {
+                    sl.req.prompt[sl.cursor]
+                } else {
+                    *sl.output.last().unwrap()
+                };
+                pos[b] = sl.fill as i32;
+                if let Some(kv) = &mut sl.kv {
+                    // incremental on-the-fly dequantize: only rows appended
+                    // since the previous step decode here
+                    kv.sync_into(
+                        &mut k_f32[b * lane..(b + 1) * lane],
+                        &mut v_f32[b * lane..(b + 1) * lane],
+                    );
                 }
             }
             let tok_lit = lit::from_i32(&tokens, &[bsz as i64])?;
@@ -185,16 +319,15 @@ impl DecodeEngine {
                 for li in 0..l {
                     let row = &k_new[(b * l + li) * d..(b * l + li + 1) * d];
                     let vow = &v_new[(b * l + li) * d..(b * l + li + 1) * d];
-                    if quantize_kv {
-                        sl.caches[li].append(row, vow);
+                    if let Some(kv) = &mut sl.kv {
+                        kv.append(li, row, vow);
                     } else {
-                        let p = pos[b] as usize;
-                        let base = ((b * l + li) * s + p) * d;
+                        let base = ((b * l + li) * s + sl.fill) * d;
                         k_f32[base..base + d].copy_from_slice(row);
                         v_f32[base..base + d].copy_from_slice(vow);
-                        sl.caches[li].len += 1; // track fill without storing
                     }
                 }
+                sl.fill += 1;
                 if sl.cursor < sl.req.prompt.len() {
                     sl.cursor += 1; // still consuming the prompt
                     if sl.cursor < sl.req.prompt.len() {
@@ -212,16 +345,17 @@ impl DecodeEngine {
                 sl.output.push(next);
                 self.metrics.tokens_generated += 1;
                 let generated = sl.output.len() - sl.req.prompt.len();
-                let ctx_full = sl.caches[0].len + 1 >= s;
+                let ctx_full = sl.fill + 1 >= s;
                 if generated >= sl.req.max_new || ctx_full {
                     sl.done = true;
-                    if quantize_kv {
-                        let bits: u64 = sl.caches.iter().map(|c| c.footprint_bits()).sum();
-                        let fp16: u64 =
-                            sl.caches.iter().map(|c| c.fp16_footprint_bits()).sum();
-                        self.metrics.kv_bits_peak += bits;
-                        self.metrics.kv_bits_fp16 += fp16;
+                    // slot lifecycle: account the final footprint, release
+                    // packed + staging buffers, zero the lanes exactly once
+                    if let Some(kv) = sl.kv.take() {
+                        self.metrics.kv_bits_packed += kv.footprint_bits();
+                        self.metrics.kv_bits_fp16 += kv.fp16_footprint_bits();
                     }
+                    k_f32[b * lane..(b + 1) * lane].fill(0.0);
+                    v_f32[b * lane..(b + 1) * lane].fill(0.0);
                     responses.push(GenResponse {
                         id: sl.req.id,
                         tokens: sl.output.clone(),
@@ -234,5 +368,83 @@ impl DecodeEngine {
         }
         self.metrics.wall += wave_start.elapsed();
         Ok(responses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The incremental sync must leave the lane bit-identical to a full
+    /// re-decode of every layer at every step — the exact invariant the
+    /// old `serve_wave` paid O(fill) per step to maintain.
+    #[test]
+    fn slot_kv_sync_matches_full_redecode() {
+        let (l, s, d) = (3usize, 16usize, 40usize);
+        let mut rng = Rng::seeded(81);
+        let cfg = NxConfig::nxfp(4);
+        let mut kv = SlotKv::new(l, d, s, &cfg);
+        let mut k_lane = vec![0.0f32; l * s * d];
+        let mut v_lane = vec![0.0f32; l * s * d];
+        for step in 0..10 {
+            for li in 0..l {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                kv.append(li, &k, &v);
+            }
+            kv.sync_into(&mut k_lane, &mut v_lane);
+            assert_eq!(kv.fill(), step + 1);
+            for (li, cache) in kv.caches.iter().enumerate() {
+                let (k_full, v_full) = cache.dequantize(s);
+                assert_eq!(&k_lane[li * s * d..(li + 1) * s * d], &k_full.data[..]);
+                assert_eq!(&v_lane[li * s * d..(li + 1) * s * d], &v_full.data[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn resync_full_reproduces_lane_after_move() {
+        // simulate a continuous-batching lane move: decoded prefix must
+        // land in the new lane without touching the packed streams
+        let (l, s, d) = (2usize, 8usize, 32usize);
+        let mut rng = Rng::seeded(82);
+        let mut kv = SlotKv::new(l, d, s, &NxConfig::nxfp(5));
+        let mut lane_k = vec![0.0f32; l * s * d];
+        let mut lane_v = vec![0.0f32; l * s * d];
+        for _ in 0..5 {
+            for li in 0..l {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                kv.append(li, &k, &k);
+            }
+            kv.sync_into(&mut lane_k, &mut lane_v);
+        }
+        let mut moved_k = vec![0.0f32; l * s * d];
+        let mut moved_v = vec![0.0f32; l * s * d];
+        kv.resync_full_into(&mut moved_k, &mut moved_v);
+        assert_eq!(moved_k, lane_k);
+        assert_eq!(moved_v, lane_v);
+    }
+
+    #[test]
+    fn slot_kv_footprints_sum_layers() {
+        let (l, s, d) = (2usize, 8usize, 64usize);
+        let mut kv = SlotKv::new(l, d, s, &NxConfig::nxfp(4));
+        let row = vec![0.25f32; d];
+        for li in 0..l {
+            kv.append(li, &row, &row);
+        }
+        assert_eq!(kv.fill(), 1);
+        let one_layer = kv.caches[0].footprint_bits();
+        assert_eq!(kv.footprint_bits(), l as u64 * one_layer);
+        assert!(kv.fp16_footprint_bits() > kv.footprint_bits());
+    }
+
+    #[test]
+    fn metrics_savings_uses_completion_totals() {
+        let m = Metrics { kv_bits_packed: 25, kv_bits_fp16: 100, ..Metrics::default() };
+        assert!((m.kv_savings() - 0.75).abs() < 1e-12);
+        // empty metrics: no division by zero
+        assert!(Metrics::default().kv_savings() <= 1.0);
     }
 }

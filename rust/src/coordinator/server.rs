@@ -2,7 +2,10 @@
 //! engine on a dedicated worker thread (std::thread + mpsc; tokio is
 //! unavailable offline). Requests accumulate into waves of up to
 //! `max_batch`; the worker drains the queue between waves so bursty clients
-//! batch naturally.
+//! batch naturally. Within a wave the engine keeps per-slot staging
+//! buffers and dequantizes the packed KV caches incrementally (see
+//! [`super::SlotKv`]), so per-step decode work does not grow with cache
+//! fill. Set `NXFP_SERVE_LOG=1` to log per-wave throughput.
 
 use anyhow::Result;
 use std::path::PathBuf;
@@ -45,6 +48,7 @@ impl ServerHandle {
             let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, max_batch)?;
             let mut pending: Vec<GenRequest> = Vec::new();
             let mut shutting_down = false;
+            let log_waves = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
             loop {
                 // block for the first request, then drain within the window
                 if pending.is_empty() && !shutting_down {
@@ -79,8 +83,26 @@ impl ServerHandle {
                 if wave.is_empty() {
                     continue;
                 }
+                let wave_size = wave.len();
+                let before = engine.metrics;
                 for resp in engine.serve_wave(wave)? {
                     let _ = resp_tx.send(resp);
+                }
+                if log_waves {
+                    let m = engine.metrics;
+                    let tokens = m.tokens_generated - before.tokens_generated;
+                    let wall = m.wall.saturating_sub(before.wall);
+                    let savings = if m.kv_bits_fp16 > 0 {
+                        format!(", kv savings {:.1}% (cumulative)", m.kv_savings() * 100.0)
+                    } else {
+                        String::new()
+                    };
+                    eprintln!(
+                        "[serve] wave of {wave_size}: {} steps, {tokens} tokens, \
+                         {:.1} tok/s{savings}",
+                        m.decode_steps - before.decode_steps,
+                        tokens as f64 / wall.as_secs_f64().max(1e-9)
+                    );
                 }
             }
         });

@@ -7,7 +7,10 @@
 //! step ⑤ padding is free in f32) multiplies the looked-up value (step ⑥
 //! feeds the MAC). `gemv_packed` fuses the decode into a dot product so
 //! weights stream from packed DRAM form straight into FLOPs, which is how
-//! the paper deploys on off-the-shelf hardware.
+//! the paper deploys on off-the-shelf hardware. `gemm_packed` is the
+//! batched multi-RHS sibling (gemv is its 1-column case): it unpacks each
+//! block's codes once for all RHS columns and parallelizes over row
+//! stripes, so batched decode amortizes the bit-stream work.
 
 use crate::formats::packed::{BitReader, PackedMatrix, E8M0_BIAS};
 use crate::formats::{FormatTables, NxConfig};
@@ -124,9 +127,13 @@ pub fn dequantize_packed(p: &PackedMatrix, lut: &DequantLut, base_fmt_mx: bool) 
 }
 
 /// Fused dequantize + GEMV: `y = W x` with `W` in packed quantized form.
-/// The inner dot runs in the scaled element domain; each block contributes
-/// `scale * Σ lut[code]·x[c]`, so the per-element work is one LUT load and
-/// one FMA — the weights never materialize in f32.
+/// The single-threaded 1-column case of [`gemm_packed`]: each block
+/// contributes `scale * Σ lut[code]·x[c]`, so the per-element work is one
+/// LUT load and one FMA — the weights never materialize in f32. Kept
+/// single-threaded deliberately: this is the latency proxy for per-token
+/// decode cost (and what the hotpath bench compares against a
+/// single-threaded f32 GEMV); use [`gemm_packed`] when there are multiple
+/// RHS columns to amortize threading over.
 pub fn gemv_packed(
     p: &PackedMatrix,
     lut: &DequantLut,
@@ -136,12 +143,79 @@ pub fn gemv_packed(
 ) {
     assert_eq!(x.len(), p.cols);
     assert_eq!(y.len(), p.rows);
+    gemm_rows(p, lut, base_fmt_mx, x, 1, 0, p.rows, y);
+}
+
+/// Fused dequantize + multi-RHS GEMM: `Y = W X` with `W` packed
+/// `[rows, cols]`, `X` row-major `[cols, n_rhs]`, `Y` row-major
+/// `[rows, n_rhs]`. Each block's codes are unpacked once and reused across
+/// all RHS columns, so batched decode amortizes the bit-stream work that a
+/// per-column [`gemv_packed`] loop would repeat.
+///
+/// Large problems are parallelized over row stripes with
+/// `std::thread::scope`; each thread reuses one code-unpack scratch buffer
+/// and seeks its own meta/payload cursors, which is possible because every
+/// row occupies exactly `cols·bits` payload bits and `blocks_per_row·3`
+/// meta bits. Per-row results are independent, so the threaded and the
+/// single-threaded path are bit-identical.
+pub fn gemm_packed(
+    p: &PackedMatrix,
+    lut: &DequantLut,
+    base_fmt_mx: bool,
+    x: &[f32],
+    n_rhs: usize,
+    y: &mut [f32],
+) {
+    assert!(n_rhs > 0);
+    assert_eq!(x.len(), p.cols * n_rhs);
+    assert_eq!(y.len(), p.rows * n_rhs);
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(p.rows.max(1));
+    // Stay single-threaded unless each spawned thread gets enough
+    // element-ops to amortize its ~10-20us spawn/join cost (scoped threads
+    // are created per call; there is no pool).
+    const OPS_PER_THREAD: usize = 1 << 18;
+    let n_threads = n_threads.min((p.rows * p.cols * n_rhs) / OPS_PER_THREAD);
+    if n_threads <= 1 {
+        gemm_rows(p, lut, base_fmt_mx, x, n_rhs, 0, p.rows, y);
+        return;
+    }
+    let chunk_rows = p.rows.div_ceil(n_threads);
+    std::thread::scope(|s| {
+        for (ti, y_chunk) in y.chunks_mut(chunk_rows * n_rhs).enumerate() {
+            let lo = ti * chunk_rows;
+            let hi = (lo + chunk_rows).min(p.rows);
+            s.spawn(move || gemm_rows(p, lut, base_fmt_mx, x, n_rhs, lo, hi, y_chunk));
+        }
+    });
+}
+
+/// Row-stripe worker for [`gemm_packed`]: rows `lo..hi` into `y_chunk`
+/// (the `[hi-lo, n_rhs]` slice of the output).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    p: &PackedMatrix,
+    lut: &DequantLut,
+    base_fmt_mx: bool,
+    x: &[f32],
+    n_rhs: usize,
+    lo: usize,
+    hi: usize,
+    y_chunk: &mut [f32],
+) {
     let bits = p.bits as u32;
     let mut meta = BitReader::new(&p.meta);
+    if p.has_meta {
+        meta.seek(lo * p.blocks_per_row * 3);
+    }
+    let mut bitpos = lo * p.cols * bits as usize;
     let mut codes = vec![0u8; p.block_size];
-    let mut bitpos = 0usize;
-    for (r, yr) in y.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
+    let mut acc = vec![0.0f64; n_rhs];
+    let mut dot = vec![0.0f32; n_rhs];
+    for r in lo..hi {
+        acc.fill(0.0);
         for bi in 0..p.blocks_per_row {
             let flat = r * p.blocks_per_row + bi;
             let (nano, fmt_mx) = if p.has_meta {
@@ -157,13 +231,32 @@ pub fn gemv_packed(
             let c = &mut codes[..len];
             unpack_codes(&p.payload, bitpos, bits, c);
             bitpos += bits as usize * len;
-            let mut dot = 0.0f32;
-            for (&xc, &ci) in x[start..start + len].iter().zip(c.iter()) {
-                dot += table[ci as usize] * xc;
+            if n_rhs == 1 {
+                // scalar fast path: keeps the 1-column (gemv) decode at
+                // one LUT load + one FMA per element, no slicing
+                let mut d1 = 0.0f32;
+                for (&xc, &code) in x[start..start + len].iter().zip(c.iter()) {
+                    d1 += table[code as usize] * xc;
+                }
+                acc[0] += (scale * d1) as f64;
+                continue;
             }
-            acc += (scale * dot) as f64;
+            dot.fill(0.0);
+            for (ci, &code) in c.iter().enumerate() {
+                let w = table[code as usize];
+                let xr = &x[(start + ci) * n_rhs..(start + ci + 1) * n_rhs];
+                for (d, &xj) in dot.iter_mut().zip(xr) {
+                    *d += w * xj;
+                }
+            }
+            for (a, &d) in acc.iter_mut().zip(dot.iter()) {
+                *a += (scale * d) as f64;
+            }
         }
-        *yr = acc as f32;
+        let out = &mut y_chunk[(r - lo) * n_rhs..(r - lo + 1) * n_rhs];
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = a as f32;
+        }
     }
 }
 
@@ -227,6 +320,112 @@ mod tests {
         let mut got = vec![0.0f32; 24];
         gemv_packed(&packed, &lut, true, &x, &mut got);
         assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn unpack_codes_unaligned_start_bits() {
+        // bits=5/6 blocks rarely start on byte boundaries; sweep start_bit
+        // offsets 0..8 and odd lengths (incl. 1-element tails) against a
+        // BitWriter-built stream.
+        let mut rng = Rng::seeded(60);
+        for bits in [3u32, 4, 5, 6] {
+            for lead in 0..8usize {
+                for len in [1usize, 2, 3, 7, 13, 31] {
+                    let want: Vec<u8> =
+                        (0..len).map(|_| (rng.u32() & ((1u32 << bits) - 1)) as u8).collect();
+                    let mut w = crate::formats::packed::BitWriter::new();
+                    w.push(0, lead as u32); // misalign the stream start
+                    for &c in &want {
+                        w.push(c as u32, bits);
+                    }
+                    w.push(0b101, 3); // trailing bits must not leak in
+                    let payload = w.into_bytes();
+                    let mut got = vec![0u8; len];
+                    unpack_codes(&payload, lead, bits, &mut got);
+                    assert_eq!(got, want, "bits={bits} lead={lead} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_codes_bits4_odd_tail_avoids_fast_path() {
+        // byte-aligned 4-bit stream with an odd element count must fall
+        // back to the windowed path and still decode the tail element
+        let mut w = crate::formats::packed::BitWriter::new();
+        let want = [0xFu8, 0x1, 0x7, 0x9, 0x3];
+        for &c in &want {
+            w.push(c as u32, 4);
+        }
+        let payload = w.into_bytes();
+        let mut got = vec![0u8; 5];
+        unpack_codes(&payload, 0, 4, &mut got);
+        assert_eq!(got, want);
+    }
+
+    fn gemm_reference(w: &Tensor2, x: &[f32], n_rhs: usize) -> Vec<f32> {
+        let mut want = vec![0.0f32; w.rows * n_rhs];
+        for r in 0..w.rows {
+            for (c, &wv) in w.row(r).iter().enumerate() {
+                for j in 0..n_rhs {
+                    want[r * n_rhs + j] += wv * x[c * n_rhs + j];
+                }
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn gemm_matches_dequant_then_matmul_all_formats() {
+        // partial tail blocks (cols % 32 != 0) across every config family
+        let mut rng = Rng::seeded(61);
+        let (rows, cols, n_rhs) = (9, 77, 3);
+        for bits in 4u8..=6 {
+            for cfg in [NxConfig::bfp(bits), NxConfig::mxfp(bits), NxConfig::nxfp(bits)] {
+                let t = Tensor2::random_normal(rows, cols, 0.8, &mut rng);
+                let x: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let q = quantize_matrix(&t, &cfg);
+                let want = gemm_reference(&q.dequantize(&cfg), &x, n_rhs);
+                let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+                let lut = DequantLut::new(&cfg);
+                let base_mx = cfg.base == BaseFormat::Mx;
+                let mut got = vec![0.0f32; rows * n_rhs];
+                gemm_packed(&packed, &lut, base_mx, &x, n_rhs, &mut got);
+                assert_allclose(&got, &want, 1e-4, 1e-4)
+                    .unwrap_or_else(|e| panic!("{}: {e}", cfg.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_threaded_stripes_match_single_thread() {
+        // large enough to cross the threading threshold (>= 2 threads'
+        // worth of element-ops); per-row work is independent so results
+        // must be bit-identical to the single-threaded path
+        let mut rng = Rng::seeded(62);
+        let (rows, cols, n_rhs) = (96, 384, 16);
+        let cfg = NxConfig::nxfp(4);
+        let t = Tensor2::random_normal(rows, cols, 0.5, &mut rng);
+        let x: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q = quantize_matrix(&t, &cfg);
+        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let lut = DequantLut::new(&cfg);
+        let mut got = vec![0.0f32; rows * n_rhs];
+        gemm_packed(&packed, &lut, true, &x, n_rhs, &mut got);
+        let mut single = vec![0.0f32; rows * n_rhs];
+        gemm_rows(&packed, &lut, true, &x, n_rhs, 0, rows, &mut single);
+        assert_eq!(got, single);
+        let want = gemm_reference(&q.dequantize(&cfg), &x, n_rhs);
+        assert_allclose(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn lut_path_unaligned_bits5_and_6_tails() {
+        // bits=5/6 with cols not a multiple of the block size: blocks and
+        // rows start at non-byte-aligned payload offsets
+        round_trip(&NxConfig::nxfp(5), 7, 45, 51);
+        round_trip(&NxConfig::nxfp(6), 5, 37, 52);
+        round_trip(&NxConfig::mxfp(5), 3, 33, 53);
     }
 
     #[test]

@@ -17,7 +17,11 @@ pub use reasoning::reasoning_accuracy;
 /// Direct-cast a checkpoint: quantize-dequantize every quantizable weight
 /// under `cfg`, leaving embeddings/norm gains in full precision (the paper's
 /// weight-only setting). Returns the degraded checkpoint the eval graph sees.
-pub fn quantize_checkpoint(ck: &Checkpoint, spec_quantizable: &[String], cfg: &NxConfig) -> Checkpoint {
+pub fn quantize_checkpoint(
+    ck: &Checkpoint,
+    spec_quantizable: &[String],
+    cfg: &NxConfig,
+) -> Checkpoint {
     let mut out = ck.clone();
     for name in spec_quantizable {
         if let Some(t) = out.get_mut(name) {

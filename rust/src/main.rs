@@ -200,12 +200,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
         println!("req {:>3}  {} tokens in {:?}", resp.id, resp.generated, resp.latency);
     }
     let m = server.shutdown()?;
+    let savings = if m.kv_bits_fp16 > 0 {
+        format!(", kv savings {:.1}%", m.kv_savings() * 100.0)
+    } else {
+        String::new()
+    };
     println!(
-        "served {} reqs, {} tokens, {:.1} tok/s, kv savings {:.1}%",
+        "served {} reqs, {} tokens, {:.1} tok/s{savings}",
         m.requests,
         m.tokens_generated,
-        m.tokens_per_sec(),
-        m.kv_savings() * 100.0
+        m.tokens_per_sec()
     );
     Ok(())
 }

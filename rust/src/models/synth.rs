@@ -29,6 +29,7 @@ impl ModelProfile {
     /// The five models profiled in the paper's Fig. 3 / Fig. 8, with
     /// distribution parameters chosen so each reproduces the paper's scaled
     /// histogram shape (slightly different tail mass per model family).
+    #[rustfmt::skip]
     pub fn all() -> Vec<ModelProfile> {
         vec![
             ModelProfile { name: "Llama3-8B",   sigma: 0.016, row_spread: 0.35, outlier_frac: 0.0020, outlier_scale: 4.5, seed: 1003 },

@@ -90,6 +90,7 @@ pub struct NamedModel {
 }
 
 impl NamedModel {
+    #[rustfmt::skip]
     pub fn all() -> Vec<NamedModel> {
         vec![
             NamedModel { name: "Llama3-8B",   vocab: 128_256, d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 8,  d_ff: 14336 },
@@ -138,7 +139,12 @@ impl NamedModel {
 
     /// Total footprint in GB with weights (and optionally KV) quantized
     /// under `cfg`; embeddings stay FP16. `None` cfg means FP16 everywhere.
-    pub fn footprint_gb(&self, cfg: Option<&NxConfig>, kv_cfg: Option<&NxConfig>, seq_len: usize) -> f64 {
+    pub fn footprint_gb(
+        &self,
+        cfg: Option<&NxConfig>,
+        kv_cfg: Option<&NxConfig>,
+        seq_len: usize,
+    ) -> f64 {
         let w_bits = match cfg {
             Some(c) => c.footprint_bits(self.weight_elements() as usize) as f64,
             None => self.weight_elements() as f64 * 16.0,

@@ -2,6 +2,22 @@
 //! cache", §6 deployment). Keys/values are stored in packed NxFP/MxFP/BFP
 //! form — the DRAM-resident footprint — and dequantized on the fly when a
 //! decode step needs the attention context.
+//!
+//! # Incremental dequantization contract
+//!
+//! Serving appends one row per decode step, so re-decoding the whole cache
+//! every step makes per-request decode work O(S²). [`KvCache`] therefore
+//! keeps a **dirty-row watermark**: [`KvCache::dequantize_into`] decodes
+//! only the rows appended since the previous call into caller-owned
+//! staging tensors and advances the watermark. The contract is:
+//!
+//! * the caller passes the *same* staging tensors (or bit-identical
+//!   copies) across calls and does not overwrite previously decoded rows;
+//! * rows `0..watermark()` in the staging tensors are then always
+//!   bit-identical to what a fresh [`KvCache::dequantize`] would produce
+//!   (both paths share one decode routine), and padding rows stay zero;
+//! * [`KvCache::clear`] resets both the cache and the watermark (the
+//!   caller must also zero or discard its staging tensors).
 
 use crate::dequant::DequantLut;
 use crate::formats::{quantize_block, BaseFormat, BlockCode, FormatTables, NxConfig};
@@ -18,6 +34,8 @@ pub struct KvCache {
     k_blocks: Vec<BlockCode>,
     v_blocks: Vec<BlockCode>,
     pub len: usize,
+    /// Rows already materialized by the last [`KvCache::dequantize_into`].
+    clean: usize,
     blocks_per_row: usize,
 }
 
@@ -26,7 +44,17 @@ impl KvCache {
         let tabs = cfg.tables();
         let lut = DequantLut::from_tables(cfg.bits, &tabs);
         let blocks_per_row = dim.div_ceil(cfg.block_size);
-        KvCache { cfg, tabs, lut, dim, k_blocks: Vec::new(), v_blocks: Vec::new(), len: 0, blocks_per_row }
+        KvCache {
+            cfg,
+            tabs,
+            lut,
+            dim,
+            k_blocks: Vec::new(),
+            v_blocks: Vec::new(),
+            len: 0,
+            clean: 0,
+            blocks_per_row,
+        }
     }
 
     /// Quantize and append one (k, v) row pair.
@@ -42,9 +70,18 @@ impl KvCache {
         self.len += 1;
     }
 
-    fn dequant_stream(&self, blocks: &[BlockCode], out: &mut Tensor2) {
+    /// Rows already decoded into the caller's staging tensors (the
+    /// dirty-row watermark). Rows `watermark()..len` are pending.
+    pub fn watermark(&self) -> usize {
+        self.clean
+    }
+
+    /// Shared decode routine: rows `from..to` of one stream into `out`.
+    /// Both the full and the incremental path go through here, which is
+    /// what makes them bit-identical by construction.
+    fn dequant_rows(&self, blocks: &[BlockCode], out: &mut Tensor2, from: usize, to: usize) {
         let base_mx = self.cfg.base == BaseFormat::Mx;
-        for r in 0..self.len {
+        for r in from..to {
             let row = out.row_mut(r);
             for (bi, chunk) in row.chunks_mut(self.cfg.block_size).enumerate() {
                 let b = &blocks[r * self.blocks_per_row + bi];
@@ -65,9 +102,24 @@ impl KvCache {
         assert!(pad_len >= self.len);
         let mut k = Tensor2::zeros(pad_len, self.dim);
         let mut v = Tensor2::zeros(pad_len, self.dim);
-        self.dequant_stream(&self.k_blocks, &mut k);
-        self.dequant_stream(&self.v_blocks, &mut v);
+        self.dequant_rows(&self.k_blocks, &mut k, 0, self.len);
+        self.dequant_rows(&self.v_blocks, &mut v, 0, self.len);
         (k, v)
+    }
+
+    /// Incrementally decode rows appended since the previous call into the
+    /// caller's staging tensors (`rows >= len`, `cols == dim`, padding
+    /// pre-zeroed), advance the watermark, and return the decoded row
+    /// range. See the module docs for the full contract.
+    pub fn dequantize_into(&mut self, k: &mut Tensor2, v: &mut Tensor2) -> std::ops::Range<usize> {
+        assert!(k.rows >= self.len && v.rows >= self.len, "staging too short");
+        assert_eq!(k.cols, self.dim);
+        assert_eq!(v.cols, self.dim);
+        let (from, to) = (self.clean, self.len);
+        self.dequant_rows(&self.k_blocks, k, from, to);
+        self.dequant_rows(&self.v_blocks, v, from, to);
+        self.clean = to;
+        from..to
     }
 
     /// Bit-true stored footprint of the cache (both K and V).
@@ -84,6 +136,7 @@ impl KvCache {
         self.k_blocks.clear();
         self.v_blocks.clear();
         self.len = 0;
+        self.clean = 0;
     }
 }
 
@@ -113,6 +166,38 @@ mod tests {
         // padding rows are zero
         for r in 10..16 {
             assert!(kd.row(r).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn incremental_matches_full_dequantize() {
+        let mut rng = Rng::seeded(73);
+        let (dim, pad) = (48, 12);
+        // odd dim -> partial tail block; cover all three format families
+        for cfg in [NxConfig::bfp(4), NxConfig::mxfp(5), NxConfig::nxfp(4)] {
+            let mut cache = KvCache::new(dim, cfg);
+            let mut k_stage = Tensor2::zeros(pad, dim);
+            let mut v_stage = Tensor2::zeros(pad, dim);
+            let mut decoded = 0usize;
+            for chunk in [3usize, 1, 4, 2] {
+                for _ in 0..chunk {
+                    let k: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+                    let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+                    cache.append(&k, &v);
+                }
+                let range = cache.dequantize_into(&mut k_stage, &mut v_stage);
+                assert_eq!(range, decoded..decoded + chunk);
+                decoded += chunk;
+                assert_eq!(cache.watermark(), decoded);
+                // staging must be bit-identical to a fresh full decode
+                let (k_full, v_full) = cache.dequantize(pad);
+                assert_eq!(k_stage.data, k_full.data);
+                assert_eq!(v_stage.data, v_full.data);
+            }
+            // no new rows -> empty range, buffers untouched
+            let before = k_stage.data.clone();
+            assert!(cache.dequantize_into(&mut k_stage, &mut v_stage).is_empty());
+            assert_eq!(k_stage.data, before);
         }
     }
 
@@ -147,8 +232,13 @@ mod tests {
     fn clear_resets() {
         let mut cache = KvCache::new(32, NxConfig::mxfp(4));
         cache.append(&vec![1.0; 32], &vec![1.0; 32]);
+        let mut k = Tensor2::zeros(4, 32);
+        let mut v = Tensor2::zeros(4, 32);
+        cache.dequantize_into(&mut k, &mut v);
+        assert_eq!(cache.watermark(), 1);
         cache.clear();
         assert_eq!(cache.len, 0);
+        assert_eq!(cache.watermark(), 0);
         assert_eq!(cache.footprint_bits(), 0);
     }
 }

@@ -64,7 +64,12 @@ pub struct Trainer {
 
 impl Trainer {
     /// Initialize from a fresh (or resumed) checkpoint.
-    pub fn new(rt: &mut Runtime, spec: LmSpec, init: &Checkpoint, cfg: &TrainConfig) -> Result<Self> {
+    pub fn new(
+        rt: &mut Runtime,
+        spec: LmSpec,
+        init: &Checkpoint,
+        cfg: &TrainConfig,
+    ) -> Result<Self> {
         init.check_spec(&spec)?;
         let step_fn = rt.load("train_step")?;
         let params = params_to_literals(init)?;

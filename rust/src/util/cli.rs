@@ -1,4 +1,5 @@
-//! Minimal declarative CLI argument parser (clap is unavailable offline).
+//! Minimal declarative CLI argument parser (clap and thiserror are
+//! unavailable offline, so errors are hand-implemented).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
 //! subcommands, with typed getters and auto-generated `--help`.
@@ -25,17 +26,26 @@ pub struct Args {
     about: &'static str,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}\n{1}")]
     Unknown(String, String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
-    #[error("{0}")]
     Help(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name, usage) => write!(f, "unknown option --{name}\n{usage}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} expects a value"),
+            CliError::BadValue(name, val) => write!(f, "invalid value for --{name}: {val}"),
+            CliError::Help(usage) => f.write_str(usage),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn new(prog: &str, about: &'static str) -> Self {

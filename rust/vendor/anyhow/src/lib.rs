@@ -1,0 +1,182 @@
+//! Minimal offline stand-in for the `anyhow` crate (vendored: the build
+//! image has no network, so the real crate cannot be fetched). Implements
+//! exactly the subset this workspace uses: [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` / `ensure!` macros, with
+//! anyhow-compatible `{:#}` context-chain display and `downcast_ref` to
+//! the original typed error.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Boxed error carrying a stack of human-readable context lines
+/// (outermost first) over the original typed error.
+pub struct Error {
+    context: Vec<String>,
+    root: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+#[derive(Debug)]
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Build an error from a display-able message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { context: Vec::new(), root: Box::new(Message(m.to_string())) }
+    }
+
+    /// Prepend a context line (becomes the outermost message).
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.context.insert(0, c.to_string());
+        self
+    }
+
+    /// Borrow the original error if it is of type `T`.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        self.root.downcast_ref::<T>()
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { context: Vec::new(), root: Box::new(e) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain: "outer: inner: root"
+            for c in &self.context {
+                write!(f, "{c}: ")?;
+            }
+            return write!(f, "{}", self.root);
+        }
+        match self.context.first() {
+            Some(c) => f.write_str(c),
+            None => write!(f, "{}", self.root),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("leaf failure")
+        }
+    }
+
+    impl StdError for Leaf {}
+
+    fn fails() -> Result<()> {
+        Err(Leaf).context("opening widget")
+    }
+
+    #[test]
+    fn context_chain_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "opening widget");
+        assert_eq!(format!("{e:#}"), "opening widget: leaf failure");
+    }
+
+    #[test]
+    fn downcast_to_root() {
+        let e = fails().unwrap_err();
+        assert!(e.downcast_ref::<Leaf>().is_some());
+        assert!(e.downcast_ref::<Message>().is_none());
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn inner(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(format!("{}", inner(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", inner(101).unwrap_err()), "x too big: 101");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(format!("{e}"), "plain message");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("empty literal").unwrap_err();
+        assert_eq!(format!("{e}"), "empty literal");
+    }
+}

@@ -1,0 +1,206 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings used by the
+//! runtime layer. The [`Literal`] container is fully functional — typed
+//! host-side buffers with a shape — so checkpoint/trainer plumbing and all
+//! unit tests work without the native library. Compiling or executing an
+//! HLO module requires the real PJRT backend and returns a clear error
+//! here; swap the `xla` path dependency in `rust/Cargo.toml` for the real
+//! bindings to run AOT artifacts (see `rust/src/runtime/mod.rs`).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type; call sites format it with `{:?}`.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("{what}: XLA PJRT backend unavailable in this offline stub build"))
+}
+
+/// Element storage for a [`Literal`].
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn extract(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+
+    fn extract(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+
+    fn extract(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A typed host-side buffer with a shape (row-major).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: T::wrap(vec![x]), dims: Vec::new() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Same data under a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let len = self.element_count() as i64;
+        if n != len {
+            return Err(Error(format!("reshape to {dims:?}: {len} elements present")));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the elements (row-major), checking the element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (they only
+    /// come out of `execute`, which requires the real backend).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("not a tuple literal (offline stub)".into()))
+    }
+}
+
+/// Stub PJRT client: constructible so drivers can start up, but any
+/// compilation reports the backend as unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Parsed HLO module text (held verbatim; the real parser lives in the
+/// native bindings).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { _text: text })
+            .map_err(|e| Error(format!("read {path}: {e}")))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(l.dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[7, 1]).is_err());
+    }
+
+    #[test]
+    fn literal_scalar_i32() {
+        let l = Literal::scalar(42i32);
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn compile_reports_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let err = c.compile(&XlaComputation).unwrap_err();
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+}
