@@ -7,7 +7,6 @@
 //! Run: `cargo run --release --example quickstart`
 
 use nxfp::dequant::{dequantize_packed, gemv_packed, DequantLut};
-use nxfp::formats::packed::PackedMatrix;
 use nxfp::formats::{BaseFormat, NxConfig};
 use nxfp::models::{synth_weights, ModelProfile};
 use nxfp::quant::{fake_quant, quantize_matrix};
@@ -43,10 +42,11 @@ fn main() {
         );
     }
 
-    // 3. Quantize the whole matrix and pack it for deployment.
+    // 3. Quantize the whole matrix (allocation-free engine, flat
+    //    BlockStore) and pack it for deployment.
     let cfg = NxConfig::nxfp(4);
     let q = quantize_matrix(&w, &cfg);
-    let packed = PackedMatrix::pack(w.rows, w.cols, &cfg, &q.blocks);
+    let packed = q.pack(&cfg);
     let fp16_bytes = w.len() * 2;
     println!(
         "\npacked {} : {} B (FP16 would be {} B -> {:.1}% footprint)",

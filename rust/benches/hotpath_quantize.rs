@@ -1,0 +1,131 @@
+//! Quantize-side hot path: reference `quantize_block` (per-element level
+//! search + per-candidate `Vec` allocations + per-block `BlockCode` heap
+//! objects) vs the table-driven allocation-free engine
+//! (`EncodePlan` + flat `BlockStore`) — paper §5 Algorithm 1 at direct-cast
+//! checkpoint scale, plus a prefill-shaped KV-append scenario driving the
+//! exact `KvCache::append` path `serve_wave` uses.
+//!
+//! Both matrix paths run single-threaded so the table isolates the
+//! per-block engine win (the threaded `quantize_matrix` stripes scale both
+//! the same way). The KV scenario uses `bench_series` (the
+//! `hotpath_serving` idiom) so per-step drift would be visible: append cost
+//! must stay flat as the cache fills.
+//!
+//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run (tiny sizes,
+//! short budgets) that still exercises every path.
+
+use nxfp::bench_util::{
+    banner, bench, bench_series, mean_duration, quartile_growth, smoke_env, Table,
+};
+use nxfp::formats::{quantize_block, BlockCode, BlockStore, EncodePlan, EncodeScratch, NxConfig};
+use nxfp::quant::kv_cache::KvCache;
+use nxfp::tensor::Tensor2;
+use nxfp::util::rng::Rng;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn budgets() -> (Duration, Duration) {
+    if smoke_env() {
+        (Duration::from_millis(5), Duration::from_millis(30))
+    } else {
+        (Duration::from_millis(200), Duration::from_millis(800))
+    }
+}
+
+fn main() {
+    banner("HotpathQuantize", "reference vs engine encode throughput");
+    let (rows, cols) = if smoke_env() { (16, 128) } else { (256, 2048) };
+    let (warm, meas) = budgets();
+    let mut rng = Rng::seeded(23);
+    let w = Tensor2::random_normal(rows, cols, 0.02, &mut rng);
+    println!("matrix: {rows}x{cols} f32, single-threaded encode\n");
+
+    let mut t = Table::new(&["format", "ref Mblk/s", "engine Mblk/s", "speedup"]);
+    for bits in 4u8..=6 {
+        for cfg in [NxConfig::bfp(bits), NxConfig::mxfp(bits), NxConfig::nxfp(bits)] {
+            let k = cfg.block_size;
+            let n_blocks = rows * cols.div_ceil(k);
+            // reference: the pre-engine path — one BlockCode (owned Vec)
+            // per block, binary-search encode, decode-per-element SSE
+            let tabs = cfg.tables();
+            let mut blocks: Vec<BlockCode> = Vec::with_capacity(n_blocks);
+            let tr = bench(warm, meas, || {
+                blocks.clear();
+                for r in 0..rows {
+                    for chunk in w.row_blocks(r, k) {
+                        blocks.push(quantize_block(chunk, &cfg, &tabs));
+                    }
+                }
+                black_box(&blocks);
+            });
+            // engine: reusable plan/scratch writing into a flat BlockStore
+            let plan = EncodePlan::new(&cfg);
+            let mut scratch = EncodeScratch::new();
+            let mut store = BlockStore::with_rows(rows, cols, k);
+            let te = bench(warm, meas, || {
+                for r in 0..rows {
+                    let (codes, e, nano, fmt) = store.row_slices_mut(r);
+                    plan.quantize_row_into(w.row(r), &mut scratch, codes, e, nano, fmt);
+                }
+                black_box(&store);
+            });
+            let ref_bps = n_blocks as f64 * tr.per_sec() / 1e6;
+            let eng_bps = n_blocks as f64 * te.per_sec() / 1e6;
+            t.row(&[
+                cfg.name(),
+                format!("{ref_bps:.2}"),
+                format!("{eng_bps:.2}"),
+                format!("{:.2}x", eng_bps / ref_bps),
+            ]);
+        }
+    }
+    t.print();
+
+    // Prefill-shaped KV append: one row per step through the real
+    // KvCache::append (engine) vs the legacy per-block Vec emulation.
+    let (dim, steps) = if smoke_env() { (64, 32) } else { (1024, 512) };
+    let cfg = NxConfig::nxfp(4);
+    let tabs = cfg.tables();
+    let row: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    println!("\nKV prefill: dim={dim}, {steps} appended rows, {}", cfg.name());
+
+    let mut k_blocks: Vec<BlockCode> = Vec::new();
+    let mut v_blocks: Vec<BlockCode> = Vec::new();
+    let ref_series = bench_series(steps, |_| {
+        for chunk in row.chunks(cfg.block_size) {
+            k_blocks.push(quantize_block(chunk, &cfg, &tabs));
+        }
+        for chunk in row.chunks(cfg.block_size) {
+            v_blocks.push(quantize_block(chunk, &cfg, &tabs));
+        }
+        black_box((&k_blocks, &v_blocks));
+    });
+    let mut cache = KvCache::with_capacity(dim, cfg.clone(), steps);
+    let eng_series = bench_series(steps, |_| {
+        cache.append(&row, &row);
+        black_box(&cache);
+    });
+
+    let mut kt = Table::new(&["kv append path", "rows/s", "step mean us", "growth"]);
+    let paths = [
+        ("reference (Vec<BlockCode>)", &ref_series),
+        ("engine (BlockStore)", &eng_series),
+    ];
+    for (label, series) in paths {
+        let (_, _, growth) = quartile_growth(series);
+        let total: Duration = series.iter().sum();
+        kt.row(&[
+            label.to_string(),
+            format!("{:.0}", series.len() as f64 / total.as_secs_f64()),
+            format!("{:.2}", mean_duration(series).as_secs_f64() * 1e6),
+            format!("{growth:.2}x"),
+        ]);
+    }
+    kt.print();
+    let rt: Duration = ref_series.iter().sum();
+    let et: Duration = eng_series.iter().sum();
+    println!(
+        "\nengine append is {:.2}x the reference path (flat growth expected on both)",
+        rt.as_secs_f64() / et.as_secs_f64().max(1e-12)
+    );
+}

@@ -14,8 +14,10 @@
 //! Flatness is reported as last-quarter / first-quarter mean per-step time:
 //! ≈1 means decode work no longer grows with total cache fill; the old
 //! full-redecode path grows without bound.
+//!
+//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
 
-use nxfp::bench_util::{banner, bench_series, mean_duration, Table};
+use nxfp::bench_util::{banner, bench_series, quartile_growth, smoke_env, Table};
 use nxfp::coordinator::SlotKv;
 use nxfp::formats::NxConfig;
 use nxfp::quant::kv_cache::KvCache;
@@ -25,7 +27,6 @@ use std::time::Duration;
 
 const BSZ: usize = 4;
 const LAYERS: usize = 4;
-const SEQ: usize = 512;
 const DIM: usize = 64;
 
 struct Slab {
@@ -35,8 +36,8 @@ struct Slab {
 }
 
 impl Slab {
-    fn new() -> Self {
-        let n = BSZ * LAYERS * SEQ * DIM;
+    fn new(seq: usize) -> Self {
+        let n = BSZ * LAYERS * seq * DIM;
         Slab { k: vec![0.0; n], v: vec![0.0; n], scratch: vec![0.0; 2 * n] }
     }
 
@@ -51,12 +52,9 @@ impl Slab {
 }
 
 fn report(label: &str, t: &mut Table, series: &[Duration]) -> f64 {
-    let q = series.len() / 4;
-    let first = mean_duration(&series[..q]);
-    let last = mean_duration(&series[series.len() - q..]);
+    let (first, last, growth) = quartile_growth(series);
     let total: Duration = series.iter().sum();
     let toks = (BSZ * series.len()) as f64 / total.as_secs_f64();
-    let growth = last.as_secs_f64() / first.as_secs_f64().max(1e-12);
     t.row(&[
         label.to_string(),
         format!("{:.1}", toks),
@@ -69,24 +67,25 @@ fn report(label: &str, t: &mut Table, series: &[Duration]) -> f64 {
 
 fn main() {
     banner("HotpathServing", "per-step KV decode work vs cache fill");
-    let steps = SEQ - 1;
+    let seq: usize = if smoke_env() { 32 } else { 512 };
+    let steps = seq - 1;
     let cfg = NxConfig::nxfp(4);
     println!(
-        "wave: B={BSZ} L={LAYERS} S={SEQ} D={DIM}, {steps} decode steps, KV {}\n",
+        "wave: B={BSZ} L={LAYERS} S={seq} D={DIM}, {steps} decode steps, KV {}\n",
         cfg.name()
     );
     let mut rng = Rng::seeded(17);
     let row: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let lane = LAYERS * SEQ * DIM;
+    let lane = LAYERS * seq * DIM;
 
     let mut t = Table::new(&["kv path", "tok/s", "step[0..25%] us", "step[75%..] us", "growth"]);
 
     // FP32 baseline: write the new row straight into the slab.
-    let mut slab = Slab::new();
+    let mut slab = Slab::new(seq);
     let fp32 = bench_series(steps, |step| {
         for b in 0..BSZ {
             for li in 0..LAYERS {
-                let base = b * lane + (li * SEQ + step) * DIM;
+                let base = b * lane + (li * seq + step) * DIM;
                 slab.k[base..base + DIM].copy_from_slice(&row);
                 slab.v[base..base + DIM].copy_from_slice(&row);
             }
@@ -97,8 +96,8 @@ fn main() {
 
     // Quantized, incremental (the new serve_wave path): append + watermark
     // sync decodes only this step's rows.
-    let mut slab = Slab::new();
-    let mut slots: Vec<SlotKv> = (0..BSZ).map(|_| SlotKv::new(LAYERS, DIM, SEQ, &cfg)).collect();
+    let mut slab = Slab::new(seq);
+    let mut slots: Vec<SlotKv> = (0..BSZ).map(|_| SlotKv::new(LAYERS, DIM, seq, &cfg)).collect();
     let inc = bench_series(steps, |_| {
         for (b, kv) in slots.iter_mut().enumerate() {
             for li in 0..LAYERS {
@@ -114,7 +113,7 @@ fn main() {
     let inc_toks = report("quantized incr", &mut t, &inc);
 
     // Quantized, full re-decode every step (the old behavior).
-    let mut slab = Slab::new();
+    let mut slab = Slab::new(seq);
     let mut caches: Vec<Vec<KvCache>> = (0..BSZ)
         .map(|_| (0..LAYERS).map(|_| KvCache::new(DIM, cfg.clone())).collect())
         .collect();
@@ -122,10 +121,10 @@ fn main() {
         for (b, layer_caches) in caches.iter_mut().enumerate() {
             for (li, cache) in layer_caches.iter_mut().enumerate() {
                 cache.append(&row, &row);
-                let (kd, vd) = cache.dequantize(SEQ);
-                let base = b * lane + li * SEQ * DIM;
-                slab.k[base..base + SEQ * DIM].copy_from_slice(&kd.data);
-                slab.v[base..base + SEQ * DIM].copy_from_slice(&vd.data);
+                let (kd, vd) = cache.dequantize(seq);
+                let base = b * lane + li * seq * DIM;
+                slab.k[base..base + seq * DIM].copy_from_slice(&kd.data);
+                slab.v[base..base + seq * DIM].copy_from_slice(&vd.data);
             }
         }
         slab.materialize();

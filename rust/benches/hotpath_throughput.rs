@@ -69,7 +69,7 @@ fn main() {
             black_box(quantize_matrix(&w, &cfg));
         });
         let q = quantize_matrix(&w, &cfg);
-        let packed = PackedMatrix::pack(rows, cols, &cfg, &q.blocks);
+        let packed = PackedMatrix::from_store(rows, cols, &cfg, &q.store);
         let lut = DequantLut::new(&cfg);
         let base_mx = cfg.base == BaseFormat::Mx;
         let td = bench_quick(|| {

@@ -98,6 +98,26 @@ pub fn mean_duration(samples: &[Duration]) -> Duration {
     samples.iter().sum::<Duration>() / samples.len() as u32
 }
 
+/// True when `NXFP_BENCH_SMOKE` requests a seconds-scale smoke run (the
+/// CI hot-path steps set this; any non-empty value other than "0" counts).
+pub fn smoke_env() -> bool {
+    std::env::var("NXFP_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// First-quarter mean, last-quarter mean, and their ratio ("growth") of a
+/// per-step duration series — the flatness metric the hot-path benches
+/// report: ≈1 means per-step cost does not grow with accumulated state.
+pub fn quartile_growth(series: &[Duration]) -> (Duration, Duration, f64) {
+    if series.is_empty() {
+        return (Duration::ZERO, Duration::ZERO, 1.0);
+    }
+    let q = (series.len() / 4).max(1);
+    let first = mean_duration(&series[..q]);
+    let last = mean_duration(&series[series.len() - q..]);
+    let growth = last.as_secs_f64() / first.as_secs_f64().max(1e-12);
+    (first, last, growth)
+}
+
 /// Fixed-width table printer for paper-style result grids.
 pub struct Table {
     headers: Vec<String>,
@@ -177,6 +197,20 @@ mod tests {
         assert_eq!(seen, vec![0, 1, 2, 3]);
         assert!(mean_duration(&s) <= s.iter().sum());
         assert_eq!(mean_duration(&[]), Duration::ZERO);
+    }
+
+    #[test]
+    fn quartile_growth_flat_and_growing() {
+        let flat = vec![Duration::from_micros(10); 8];
+        let (f, l, g) = quartile_growth(&flat);
+        assert_eq!(f, l);
+        assert!((g - 1.0).abs() < 1e-9);
+        let growing: Vec<Duration> = (1..=8).map(Duration::from_micros).collect();
+        let (f, l, g) = quartile_growth(&growing);
+        assert!(l > f && g > 1.0);
+        // tiny series degrade gracefully
+        let (_, _, g) = quartile_growth(&[Duration::from_micros(5)]);
+        assert!((g - 1.0).abs() < 1e-9);
     }
 
     #[test]

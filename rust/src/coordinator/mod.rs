@@ -99,10 +99,13 @@ pub struct SlotKv {
 
 impl SlotKv {
     /// `n_layers` caches of feature dim `dim`, staged to `pad_len` rows
-    /// (the artifact's fixed context length `S`).
+    /// (the artifact's fixed context length `S`). Each cache pre-reserves
+    /// the full window so decode-step appends never reallocate.
     pub fn new(n_layers: usize, dim: usize, pad_len: usize, cfg: &NxConfig) -> Self {
         SlotKv {
-            caches: (0..n_layers).map(|_| KvCache::new(dim, cfg.clone())).collect(),
+            caches: (0..n_layers)
+                .map(|_| KvCache::with_capacity(dim, cfg.clone(), pad_len))
+                .collect(),
             stage_k: (0..n_layers).map(|_| Tensor2::zeros(pad_len, dim)).collect(),
             stage_v: (0..n_layers).map(|_| Tensor2::zeros(pad_len, dim)).collect(),
         }

@@ -9,8 +9,16 @@
 //! weights stream from packed DRAM form straight into FLOPs, which is how
 //! the paper deploys on off-the-shelf hardware. `gemm_packed` is the
 //! batched multi-RHS sibling (gemv is its 1-column case): it unpacks each
-//! block's codes once for all RHS columns and parallelizes over row
-//! stripes, so batched decode amortizes the bit-stream work.
+//! row's codes once for all RHS columns, tiles the RHS columns for cache
+//! locality, and parallelizes over row stripes — or over column tiles when
+//! the row count can't feed every core (large-batch decode of a short
+//! weight matrix).
+//!
+//! Code unpacking is branchless: one unaligned 8-byte little-endian load
+//! yields a whole run of codes by shift+mask regardless of the bit phase,
+//! so the 5/6-bit payloads (which almost never sit on byte boundaries) cost
+//! the same per code as the 4-bit path instead of a bit-by-bit
+//! `BitReader`-style loop.
 
 use crate::formats::packed::{BitReader, PackedMatrix, E8M0_BIAS};
 use crate::formats::{FormatTables, NxConfig};
@@ -67,14 +75,21 @@ fn block_scale(lut: &DequantLut, e_biased: u8, nano: u8, fmt_mx: bool) -> f32 {
 }
 
 /// Unpack `out.len()` consecutive `bits`-wide codes starting at `start_bit`
-/// (LSB-first bit stream, bits ≤ 8). A two-byte window always covers one
-/// code since `off ≤ 7` and `bits ≤ 8` → `off + bits ≤ 15`. This is the
-/// perf-critical inner decode: branch-free, no per-element function calls.
+/// (LSB-first bit stream, bits ≤ 8). Three paths, fastest first:
+///
+/// * bits=4, byte-aligned, even count — two codes per byte, no shifts;
+/// * **u64 window** — one unaligned 8-byte load yields
+///   `per = (64-7)/bits` codes by shift+mask for *any* bit phase
+///   (`off ≤ 7` so `off + per·bits ≤ 64` always holds). This is what makes
+///   the 5/6-bit payloads branch-free even though their blocks almost never
+///   start on byte boundaries;
+/// * scalar two-byte-window tail for the last few codes (or when the
+///   payload has fewer than 8 bytes left to load).
 #[inline]
 fn unpack_codes(payload: &[u8], start_bit: usize, bits: u32, out: &mut [u8]) {
+    debug_assert!((1..=8).contains(&bits));
     // 4-bit byte-aligned fast path (the common case: k even, bits=4 —
-    // every block starts on a byte boundary): two codes per byte, no
-    // window shifts.
+    // every block starts on a byte boundary): two codes per byte.
     if bits == 4 && start_bit & 7 == 0 && out.len() & 1 == 0 {
         let base = start_bit >> 3;
         for (i, pair) in out.chunks_exact_mut(2).enumerate() {
@@ -84,9 +99,21 @@ fn unpack_codes(payload: &[u8], start_bit: usize, bits: u32, out: &mut [u8]) {
         }
         return;
     }
-    let mask = ((1u16 << bits) - 1) as u16;
+    let mask64 = (1u64 << bits) - 1;
+    let per = ((64 - 7) / bits) as usize;
     let mut bitpos = start_bit;
-    for o in out.iter_mut() {
+    let mut i = 0usize;
+    while i + per <= out.len() && (bitpos >> 3) + 8 <= payload.len() {
+        let byte = bitpos >> 3;
+        let w = u64::from_le_bytes(payload[byte..byte + 8].try_into().unwrap()) >> (bitpos & 7);
+        for (j, o) in out[i..i + per].iter_mut().enumerate() {
+            *o = ((w >> (j as u32 * bits)) & mask64) as u8;
+        }
+        i += per;
+        bitpos += per * bits as usize;
+    }
+    let mask = ((1u16 << bits) - 1) as u16;
+    for o in out[i..].iter_mut() {
         let byte = bitpos >> 3;
         let off = (bitpos & 7) as u16;
         let lo = payload[byte] as u16;
@@ -143,21 +170,29 @@ pub fn gemv_packed(
 ) {
     assert_eq!(x.len(), p.cols);
     assert_eq!(y.len(), p.rows);
-    gemm_rows(p, lut, base_fmt_mx, x, 1, 0, p.rows, y);
+    gemm_tile(p, lut, base_fmt_mx, x, 1, 0, p.rows, 0, 1, y);
 }
+
+/// RHS column tile width: bounds the per-tile accumulator footprint
+/// (`32·(8+4)` bytes) so the inner FMA loops stay register/L1-friendly for
+/// arbitrarily large batches.
+const COL_TILE: usize = 32;
 
 /// Fused dequantize + multi-RHS GEMM: `Y = W X` with `W` packed
 /// `[rows, cols]`, `X` row-major `[cols, n_rhs]`, `Y` row-major
-/// `[rows, n_rhs]`. Each block's codes are unpacked once and reused across
-/// all RHS columns, so batched decode amortizes the bit-stream work that a
-/// per-column [`gemv_packed`] loop would repeat.
+/// `[rows, n_rhs]`. Each row's codes are unpacked **once** and reused by
+/// every RHS column tile, so batched decode amortizes the bit-stream work
+/// that a per-column [`gemv_packed`] loop would repeat.
 ///
-/// Large problems are parallelized over row stripes with
-/// `std::thread::scope`; each thread reuses one code-unpack scratch buffer
-/// and seeks its own meta/payload cursors, which is possible because every
-/// row occupies exactly `cols·bits` payload bits and `blocks_per_row·3`
-/// meta bits. Per-row results are independent, so the threaded and the
-/// single-threaded path are bit-identical.
+/// Parallelization picks the dimension that can actually feed the cores:
+/// row stripes by default (each thread seeks its own meta/payload cursors —
+/// every row occupies exactly `cols·bits` payload bits and
+/// `blocks_per_row·3` meta bits); when the RHS batch is wider than the
+/// matrix is tall *and* there are more worthwhile threads than rows
+/// (large-batch decode of a short matrix), RHS **column tiles** instead,
+/// each thread producing a compact `[rows, tile]` buffer that is scattered
+/// into `Y` after the join. Per-output work is identical in every split,
+/// so all paths are bit-identical to the single-threaded one.
 pub fn gemm_packed(
     p: &PackedMatrix,
     lut: &DequantLut,
@@ -169,93 +204,163 @@ pub fn gemm_packed(
     assert!(n_rhs > 0);
     assert_eq!(x.len(), p.cols * n_rhs);
     assert_eq!(y.len(), p.rows * n_rhs);
-    let n_threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(p.rows.max(1));
+    let n_avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     // Stay single-threaded unless each spawned thread gets enough
     // element-ops to amortize its ~10-20us spawn/join cost (scoped threads
     // are created per call; there is no pool).
     const OPS_PER_THREAD: usize = 1 << 18;
-    let n_threads = n_threads.min((p.rows * p.cols * n_rhs) / OPS_PER_THREAD);
+    let mut n_threads = n_avail.min((p.rows * p.cols * n_rhs) / OPS_PER_THREAD);
+    if n_threads > p.rows {
+        // The column split makes every tile thread re-unpack the whole
+        // bit-stream, so it only wins when it both offers more parallelism
+        // than row stripes AND keeps each tile at least COL_TILE wide;
+        // otherwise cap at one row stripe per row.
+        let max_col_threads = n_rhs / COL_TILE;
+        if max_col_threads > p.rows {
+            n_threads = n_threads.min(max_col_threads);
+        } else {
+            n_threads = p.rows;
+        }
+    }
     if n_threads <= 1 {
-        gemm_rows(p, lut, base_fmt_mx, x, n_rhs, 0, p.rows, y);
+        gemm_tile(p, lut, base_fmt_mx, x, n_rhs, 0, p.rows, 0, n_rhs, y);
         return;
     }
-    let chunk_rows = p.rows.div_ceil(n_threads);
-    std::thread::scope(|s| {
-        for (ti, y_chunk) in y.chunks_mut(chunk_rows * n_rhs).enumerate() {
-            let lo = ti * chunk_rows;
-            let hi = (lo + chunk_rows).min(p.rows);
-            s.spawn(move || gemm_rows(p, lut, base_fmt_mx, x, n_rhs, lo, hi, y_chunk));
-        }
+    if p.rows >= n_threads {
+        let chunk_rows = p.rows.div_ceil(n_threads);
+        std::thread::scope(|s| {
+            for (ti, y_chunk) in y.chunks_mut(chunk_rows * n_rhs).enumerate() {
+                let lo = ti * chunk_rows;
+                let hi = (lo + chunk_rows).min(p.rows);
+                s.spawn(move || {
+                    gemm_tile(p, lut, base_fmt_mx, x, n_rhs, lo, hi, 0, n_rhs, y_chunk)
+                });
+            }
+        });
+        return;
+    }
+    // Fewer rows than worthwhile threads: split the RHS columns instead.
+    let n_tiles = n_threads.min(n_rhs);
+    let tile = n_rhs.div_ceil(n_tiles);
+    let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_tiles)
+            .map(|ti| {
+                s.spawn(move || {
+                    // ceil-division tiling can leave trailing empty tiles
+                    let lo = (ti * tile).min(n_rhs);
+                    let hi = ((ti + 1) * tile).min(n_rhs);
+                    let mut buf = vec![0.0f32; p.rows * (hi - lo)];
+                    gemm_tile(p, lut, base_fmt_mx, x, n_rhs, 0, p.rows, lo, hi, &mut buf);
+                    (lo, buf)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
+    for (lo, buf) in results {
+        let w = buf.len() / p.rows.max(1);
+        for r in 0..p.rows {
+            y[r * n_rhs + lo..r * n_rhs + lo + w].copy_from_slice(&buf[r * w..(r + 1) * w]);
+        }
+    }
 }
 
-/// Row-stripe worker for [`gemm_packed`]: rows `lo..hi` into `y_chunk`
-/// (the `[hi-lo, n_rhs]` slice of the output).
+/// One GEMM tile: rows `row_lo..row_hi` × RHS columns `col_lo..col_hi`
+/// into the compact row-major `y_out` (`[row_hi-row_lo, col_hi-col_lo]`).
+/// Unpacks each row's codes and block scales once, then sweeps the column
+/// range in [`COL_TILE`] chunks reusing them; per-output accumulation
+/// order (blocks ascending, elements ascending within a block) is fixed,
+/// so every tiling/threading split produces bit-identical results.
 #[allow(clippy::too_many_arguments)]
-fn gemm_rows(
+fn gemm_tile(
     p: &PackedMatrix,
     lut: &DequantLut,
     base_fmt_mx: bool,
     x: &[f32],
     n_rhs: usize,
-    lo: usize,
-    hi: usize,
-    y_chunk: &mut [f32],
+    row_lo: usize,
+    row_hi: usize,
+    col_lo: usize,
+    col_hi: usize,
+    y_out: &mut [f32],
 ) {
     let bits = p.bits as u32;
+    let width = col_hi - col_lo;
+    let bpr = p.blocks_per_row;
+    debug_assert_eq!(y_out.len(), (row_hi - row_lo) * width);
+    if width == 0 || row_lo == row_hi {
+        return; // degenerate tile (uneven thread split)
+    }
     let mut meta = BitReader::new(&p.meta);
     if p.has_meta {
-        meta.seek(lo * p.blocks_per_row * 3);
+        meta.seek(row_lo * bpr * 3);
     }
-    let mut bitpos = lo * p.cols * bits as usize;
-    let mut codes = vec![0u8; p.block_size];
-    let mut acc = vec![0.0f64; n_rhs];
-    let mut dot = vec![0.0f32; n_rhs];
-    for r in lo..hi {
-        acc.fill(0.0);
-        for bi in 0..p.blocks_per_row {
-            let flat = r * p.blocks_per_row + bi;
+    let mut bitpos = row_lo * p.cols * bits as usize;
+    let mut codes = vec![0u8; p.cols];
+    let mut scales = vec![0.0f32; bpr];
+    let mut fmts = vec![false; bpr];
+    let mut acc = vec![0.0f64; width.min(COL_TILE)];
+    let mut dot = vec![0.0f32; width.min(COL_TILE)];
+    for r in row_lo..row_hi {
+        // decode this row's metadata and unpack its codes once; every
+        // column tile below reuses them
+        unpack_codes(&p.payload, bitpos, bits, &mut codes);
+        bitpos += bits as usize * p.cols;
+        for (bi, (sc, fm)) in scales.iter_mut().zip(fmts.iter_mut()).enumerate() {
             let (nano, fmt_mx) = if p.has_meta {
                 let m = meta.read(3);
                 ((m & 3) as u8, m & 4 != 0)
             } else {
                 (0u8, base_fmt_mx)
             };
-            let scale = block_scale(lut, p.scales[flat], nano, fmt_mx);
-            let (table, _) = lut.table(fmt_mx);
-            let start = bi * p.block_size;
-            let len = p.block_size.min(p.cols - start);
-            let c = &mut codes[..len];
-            unpack_codes(&p.payload, bitpos, bits, c);
-            bitpos += bits as usize * len;
-            if n_rhs == 1 {
-                // scalar fast path: keeps the 1-column (gemv) decode at
-                // one LUT load + one FMA per element, no slicing
-                let mut d1 = 0.0f32;
-                for (&xc, &code) in x[start..start + len].iter().zip(c.iter()) {
-                    d1 += table[code as usize] * xc;
-                }
-                acc[0] += (scale * d1) as f64;
-                continue;
-            }
-            dot.fill(0.0);
-            for (ci, &code) in c.iter().enumerate() {
-                let w = table[code as usize];
-                let xr = &x[(start + ci) * n_rhs..(start + ci + 1) * n_rhs];
-                for (d, &xj) in dot.iter_mut().zip(xr) {
-                    *d += w * xj;
-                }
-            }
-            for (a, &d) in acc.iter_mut().zip(dot.iter()) {
-                *a += (scale * d) as f64;
-            }
+            *sc = block_scale(lut, p.scales[r * bpr + bi], nano, fmt_mx);
+            *fm = fmt_mx;
         }
-        let out = &mut y_chunk[(r - lo) * n_rhs..(r - lo + 1) * n_rhs];
-        for (o, &a) in out.iter_mut().zip(acc.iter()) {
-            *o = a as f32;
+        let y_row = &mut y_out[(r - row_lo) * width..(r - row_lo + 1) * width];
+        if width == 1 {
+            // scalar fast path: keeps the 1-column (gemv) decode at one
+            // LUT load + one FMA per element, no per-element slicing
+            let mut a = 0.0f64;
+            for bi in 0..bpr {
+                let (table, _) = lut.table(fmts[bi]);
+                let start = bi * p.block_size;
+                let len = p.block_size.min(p.cols - start);
+                let mut d1 = 0.0f32;
+                for (ci, &code) in codes[start..start + len].iter().enumerate() {
+                    d1 += table[code as usize] * x[(start + ci) * n_rhs + col_lo];
+                }
+                a += (scales[bi] * d1) as f64;
+            }
+            y_row[0] = a as f32;
+            continue;
+        }
+        let mut c0 = 0usize;
+        while c0 < width {
+            let cw = COL_TILE.min(width - c0);
+            let acc = &mut acc[..cw];
+            let dot = &mut dot[..cw];
+            acc.fill(0.0);
+            for bi in 0..bpr {
+                let (table, _) = lut.table(fmts[bi]);
+                let start = bi * p.block_size;
+                let len = p.block_size.min(p.cols - start);
+                dot.fill(0.0);
+                for (ci, &code) in codes[start..start + len].iter().enumerate() {
+                    let wv = table[code as usize];
+                    let xb = (start + ci) * n_rhs + col_lo + c0;
+                    for (d, &xj) in dot.iter_mut().zip(&x[xb..xb + cw]) {
+                        *d += wv * xj;
+                    }
+                }
+                let scale = scales[bi];
+                for (a, &d) in acc.iter_mut().zip(dot.iter()) {
+                    *a += (scale * d) as f64;
+                }
+            }
+            for (o, &a) in y_row[c0..c0 + cw].iter_mut().zip(acc.iter()) {
+                *o = a as f32;
+            }
+            c0 += cw;
         }
     }
 }
@@ -274,7 +379,7 @@ mod tests {
         let t = Tensor2::random_normal(rows, cols, 1.0, &mut rng);
         let q = quantize_matrix(&t, cfg);
         let reference = q.dequantize(cfg);
-        let packed = PackedMatrix::pack(t.rows, t.cols, cfg, &q.blocks);
+        let packed = q.pack(cfg);
         let lut = DequantLut::new(cfg);
         let fast = dequantize_packed(&packed, &lut, cfg.base == BaseFormat::Mx);
         assert_eq!(reference.data, fast.data, "{} LUT path diverged", cfg.name());
@@ -315,7 +420,7 @@ mod tests {
         for r in 0..24 {
             want[r] = w.row(r).iter().zip(&x).map(|(&a, &b)| a * b).sum();
         }
-        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let packed = q.pack(&cfg);
         let lut = DequantLut::new(&cfg);
         let mut got = vec![0.0f32; 24];
         gemv_packed(&packed, &lut, true, &x, &mut got);
@@ -326,11 +431,12 @@ mod tests {
     fn unpack_codes_unaligned_start_bits() {
         // bits=5/6 blocks rarely start on byte boundaries; sweep start_bit
         // offsets 0..8 and odd lengths (incl. 1-element tails) against a
-        // BitWriter-built stream.
+        // BitWriter-built stream. Lengths ≥ 13 exercise the u64-window
+        // path plus its scalar tail.
         let mut rng = Rng::seeded(60);
         for bits in [3u32, 4, 5, 6] {
             for lead in 0..8usize {
-                for len in [1usize, 2, 3, 7, 13, 31] {
+                for len in [1usize, 2, 3, 7, 13, 31, 64] {
                     let want: Vec<u8> =
                         (0..len).map(|_| (rng.u32() & ((1u32 << bits) - 1)) as u8).collect();
                     let mut w = crate::formats::packed::BitWriter::new();
@@ -345,6 +451,26 @@ mod tests {
                     assert_eq!(got, want, "bits={bits} lead={lead} len={len}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn unpack_codes_tight_payload_tail() {
+        // the u64 window must never read past the payload: decode a long
+        // stream whose final bytes can only be reached by the scalar tail
+        let mut rng = Rng::seeded(63);
+        for bits in [5u32, 6] {
+            let len = 100usize;
+            let want: Vec<u8> =
+                (0..len).map(|_| (rng.u32() & ((1u32 << bits) - 1)) as u8).collect();
+            let mut w = crate::formats::packed::BitWriter::new();
+            for &c in &want {
+                w.push(c as u32, bits);
+            }
+            let payload = w.into_bytes(); // exact-size buffer, no slack
+            let mut got = vec![0u8; len];
+            unpack_codes(&payload, 0, bits, &mut got);
+            assert_eq!(got, want, "bits={bits}");
         }
     }
 
@@ -386,7 +512,7 @@ mod tests {
                 let x: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
                 let q = quantize_matrix(&t, &cfg);
                 let want = gemm_reference(&q.dequantize(&cfg), &x, n_rhs);
-                let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+                let packed = q.pack(&cfg);
                 let lut = DequantLut::new(&cfg);
                 let base_mx = cfg.base == BaseFormat::Mx;
                 let mut got = vec![0.0f32; rows * n_rhs];
@@ -408,12 +534,36 @@ mod tests {
         let t = Tensor2::random_normal(rows, cols, 0.5, &mut rng);
         let x: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let q = quantize_matrix(&t, &cfg);
-        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let packed = q.pack(&cfg);
         let lut = DequantLut::new(&cfg);
         let mut got = vec![0.0f32; rows * n_rhs];
         gemm_packed(&packed, &lut, true, &x, n_rhs, &mut got);
         let mut single = vec![0.0f32; rows * n_rhs];
-        gemm_rows(&packed, &lut, true, &x, n_rhs, 0, rows, &mut single);
+        gemm_tile(&packed, &lut, true, &x, n_rhs, 0, rows, 0, n_rhs, &mut single);
+        assert_eq!(got, single);
+        let want = gemm_reference(&q.dequantize(&cfg), &x, n_rhs);
+        assert_allclose(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn gemm_column_parallel_matches_single_thread() {
+        // rows too few to feed every core but a large RHS batch: the
+        // column-tile split must kick in (needs n_threads > rows, i.e.
+        // >= 4 worthwhile cores here) and stay bit-identical to the
+        // single-threaded tile; on smaller machines it degrades to row
+        // stripes / single-thread, which the assert also covers
+        let mut rng = Rng::seeded(64);
+        let (rows, cols, n_rhs) = (3, 2048, 256);
+        let cfg = NxConfig::nxfp(5);
+        let t = Tensor2::random_normal(rows, cols, 0.5, &mut rng);
+        let x: Vec<f32> = (0..cols * n_rhs).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let q = quantize_matrix(&t, &cfg);
+        let packed = q.pack(&cfg);
+        let lut = DequantLut::new(&cfg);
+        let mut got = vec![0.0f32; rows * n_rhs];
+        gemm_packed(&packed, &lut, true, &x, n_rhs, &mut got);
+        let mut single = vec![0.0f32; rows * n_rhs];
+        gemm_tile(&packed, &lut, true, &x, n_rhs, 0, rows, 0, n_rhs, &mut single);
         assert_eq!(got, single);
         let want = gemm_reference(&q.dequantize(&cfg), &x, n_rhs);
         assert_allclose(&got, &want, 1e-3, 1e-3).unwrap();

@@ -1,0 +1,441 @@
+//! Table-driven, allocation-free quantizer engine (the encode-side sibling
+//! of [`crate::dequant`]'s LUT decode path).
+//!
+//! The reference path ([`super::quantize_block`]) is normative but slow: per
+//! element it runs a nearest-level search with two subtractions and a tie
+//! branch, then calls `decode` again just to accumulate the SSE, and every
+//! candidate of the NanoMantissa/Adaptive-Microexponent search allocates a
+//! fresh `Vec<u8>`. [`EncodePlan`] precomputes, once per `NxConfig`:
+//!
+//! * **decision thresholds** per format — the exact f32 values where the
+//!   reference projection switches to the next code, found by bisecting the
+//!   f32 bit space with [`project_magnitude`] as the oracle, so the
+//!   per-element search collapses to a branchless threshold count that is
+//!   bit-identical to the reference **by construction** (nearest, ties to
+//!   even mantissa code, saturation — all baked into the thresholds);
+//! * a **signed decode LUT** per format (`dec[code]`, recycled code
+//!   included), so SSE accumulation is a table lookup instead of a `decode`
+//!   call — the same `fl(dec * scale)` product the reference computes;
+//! * the per-format level tables and recycle values the candidate loop
+//!   needs.
+//!
+//! All candidate scratch lives in a caller-owned reusable
+//! [`EncodeScratch`]; codes are written straight into caller slices
+//! (normally a [`super::BlockStore`]), so the steady state performs **zero
+//! heap allocations per block**. The contract, enforced by
+//! `tests/engine_equivalence.rs`, is bit-identity with the reference path
+//! for every config/toggle/special-value combination.
+
+use super::element::project_magnitude;
+use super::{
+    finite_max_abs, nano_candidate, shared_exponent, BaseFormat, BlockFormat, FormatTables,
+    NanoMode, NxConfig, E_SHARED_MIN,
+};
+use crate::util::exp2i;
+
+/// Per-format precomputed tables (scale-free; the block scale is applied
+/// per candidate at block time, exactly like the reference).
+#[derive(Clone, Debug)]
+struct FormatPlan {
+    /// Sorted code-decision thresholds: the projected index of magnitude
+    /// `m` is `#{t in thresholds : t <= m}` (see [`build_thresholds`]).
+    thresholds: Vec<f32>,
+    /// Signed decode LUT over all `2^bits` codes (recycle remap included):
+    /// `dec[code] == BlockFormat::decode(code)`.
+    dec: Vec<f32>,
+    /// Sorted positive magnitudes (the reference level table).
+    levels: Vec<f32>,
+    /// Scaled-domain recycled value for code `10…0`, when CR is on.
+    recycle: Option<f32>,
+    /// Block-scale exponent offset of this format.
+    offset: i32,
+    /// `1 << (bits - 1)`.
+    sign_bit: u8,
+    /// `levels.len() - 1` (the NaN/saturation index).
+    top_idx: usize,
+}
+
+/// For each adjacent level pair, bisect the positive-f32 bit space for the
+/// smallest magnitude the reference projection sends to the upper index.
+/// `project_magnitude` is monotone in the magnitude (nearest with ties to
+/// even over a sorted table), so these thresholds reproduce it exactly:
+/// `project_magnitude(levels, m) == #{t : t <= m}` for every finite `m`.
+fn build_thresholds(levels: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(levels.len() - 1);
+    for i in 0..levels.len() - 1 {
+        // invariant: project(lo) <= i < project(hi); positive f32 bit
+        // patterns are order-isomorphic to their values
+        let mut lo = levels[i].to_bits();
+        let mut hi = levels[i + 1].to_bits();
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if project_magnitude(levels, f32::from_bits(mid)) > i {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        out.push(f32::from_bits(hi));
+    }
+    out
+}
+
+impl FormatPlan {
+    fn build(bf: &BlockFormat) -> Self {
+        let n = 1usize << bf.bits();
+        FormatPlan {
+            thresholds: build_thresholds(&bf.levels),
+            dec: (0..n).map(|c| bf.decode(c as u8)).collect(),
+            levels: bf.levels.clone(),
+            recycle: bf.recycle,
+            offset: bf.offset,
+            sign_bit: 1u8 << (bf.bits() - 1),
+            top_idx: bf.levels.len() - 1,
+        }
+    }
+
+    /// Bit-identical replacement for `project_magnitude(levels, m)`.
+    #[inline]
+    fn project(&self, m: f32) -> usize {
+        if m.is_nan() {
+            return self.top_idx; // direct-cast NaN saturates (reference rule)
+        }
+        let th = &self.thresholds;
+        if th.len() <= 32 {
+            // branchless count — autovectorizes for the 4/5/6-bit tables
+            let mut n = 0usize;
+            for &t in th {
+                n += (t <= m) as usize;
+            }
+            n
+        } else {
+            th.partition_point(|&t| t <= m)
+        }
+    }
+}
+
+/// Reusable candidate scratch: holds the codes of the candidate being
+/// evaluated so the search never allocates in steady state.
+#[derive(Clone, Debug, Default)]
+pub struct EncodeScratch {
+    cand: Vec<u8>,
+}
+
+impl EncodeScratch {
+    pub fn new() -> Self {
+        EncodeScratch { cand: Vec::new() }
+    }
+}
+
+/// Precomputed quantizer engine for one `NxConfig`. Build once per tensor
+/// (or hold alongside a KV cache) and reuse across every block.
+#[derive(Clone, Debug)]
+pub struct EncodePlan {
+    pub cfg: NxConfig,
+    /// The reference-format tables (kept for `nano_candidate` and interop).
+    pub tabs: FormatTables,
+    mx: FormatPlan,
+    bfp: FormatPlan,
+    /// Candidate format order (Mx first under AM, else the base format).
+    formats: [bool; 2],
+    n_formats: usize,
+    /// Format recorded for all-zero blocks (reference rule).
+    zero_fmt_mx: bool,
+    /// True when exactly one (format, nano) candidate exists — the SSE
+    /// search (and its scratch pass) can be skipped entirely.
+    single_candidate: bool,
+}
+
+impl EncodePlan {
+    pub fn new(cfg: &NxConfig) -> Self {
+        let tabs = cfg.tables();
+        let (formats, n_formats) = if cfg.enable_am {
+            ([true, false], 2)
+        } else {
+            ([cfg.base == BaseFormat::Mx, false], 1)
+        };
+        EncodePlan {
+            mx: FormatPlan::build(&tabs.mx),
+            bfp: FormatPlan::build(&tabs.bfp),
+            formats,
+            n_formats,
+            zero_fmt_mx: cfg.base == BaseFormat::Mx || cfg.enable_am,
+            single_candidate: n_formats == 1 && !cfg.enable_nm,
+            tabs,
+            cfg: cfg.clone(),
+        }
+    }
+
+    #[inline]
+    fn format(&self, fmt_mx: bool) -> &FormatPlan {
+        if fmt_mx {
+            &self.mx
+        } else {
+            &self.bfp
+        }
+    }
+
+    /// Quantize one block, writing the element codes into `out`
+    /// (`out.len() == v.len()`), and return `(e_shared, nano, fmt_mx)`.
+    /// Bit-identical to [`super::quantize_block`] on the same input.
+    pub fn quantize_block_into(
+        &self,
+        v: &[f32],
+        scratch: &mut EncodeScratch,
+        out: &mut [u8],
+    ) -> (i16, u8, bool) {
+        debug_assert_eq!(v.len(), out.len());
+        let Some(e_shared) = shared_exponent(v) else {
+            out.fill(0);
+            return (E_SHARED_MIN as i16, 0, self.zero_fmt_mx);
+        };
+        if self.single_candidate {
+            // one candidate: no SSE needed, encode straight into `out`
+            let fmt_mx = self.formats[0];
+            encode_candidate::<false>(self.format(fmt_mx), e_shared, 0, v, out);
+            return (e_shared as i16, 0, fmt_mx);
+        }
+        let vmax = finite_max_abs(v);
+        if scratch.cand.len() < v.len() {
+            scratch.cand.resize(v.len(), 0);
+        }
+        let mut first = true;
+        let mut best_sse = 0.0f64;
+        let (mut best_nano, mut best_fmt) = (0u8, false);
+        for &fmt_mx in &self.formats[..self.n_formats] {
+            let fp = self.format(fmt_mx);
+            let mut nanos = [0u8; 4];
+            let n_nanos = if self.cfg.enable_nm {
+                match self.cfg.nano_mode {
+                    NanoMode::TwoCandidate => {
+                        let m = nano_candidate(vmax, self.tabs.get(fmt_mx), e_shared);
+                        if m == 0 {
+                            1
+                        } else {
+                            nanos[0] = m;
+                            2
+                        }
+                    }
+                    NanoMode::Exhaustive => {
+                        nanos = [0, 1, 2, 3];
+                        4
+                    }
+                }
+            } else {
+                1
+            };
+            for &nano in &nanos[..n_nanos] {
+                let cand = &mut scratch.cand[..v.len()];
+                let sse = encode_candidate::<true>(fp, e_shared, nano, v, cand);
+                // strictly-smaller-SSE wins in candidate order; the first
+                // candidate always lands (even when SSE is NaN — blocks
+                // with non-finite elements), exactly like the reference
+                if first || sse < best_sse {
+                    out.copy_from_slice(cand);
+                    best_sse = sse;
+                    best_nano = nano;
+                    best_fmt = fmt_mx;
+                    first = false;
+                }
+            }
+        }
+        (e_shared as i16, best_nano, best_fmt)
+    }
+
+    /// Quantize one logical row (blocked in `cfg.block_size` chunks) into
+    /// flat destination slices — the [`super::BlockStore`] row layout.
+    /// `codes.len() == v.len()`; the metadata slices hold one entry per
+    /// block of the row.
+    pub fn quantize_row_into(
+        &self,
+        v: &[f32],
+        scratch: &mut EncodeScratch,
+        codes: &mut [u8],
+        e_shared: &mut [i16],
+        nano: &mut [u8],
+        fmt_mx: &mut [u8],
+    ) {
+        debug_assert_eq!(v.len(), codes.len());
+        let k = self.cfg.block_size;
+        for (bi, chunk) in v.chunks(k).enumerate() {
+            let dst = &mut codes[bi * k..bi * k + chunk.len()];
+            let (e, n, f) = self.quantize_block_into(chunk, scratch, dst);
+            e_shared[bi] = e;
+            nano[bi] = n;
+            fmt_mx[bi] = f as u8;
+        }
+    }
+}
+
+/// One branchless encode pass for a fixed `(format, nano)` candidate:
+/// threshold-count projection, LUT reconstruction, and (when `SSE`)
+/// sequential f64 SSE accumulation — operation-for-operation the same f32
+/// arithmetic as the reference `quantize_block_fixed`.
+#[inline]
+fn encode_candidate<const SSE: bool>(
+    fp: &FormatPlan,
+    e_shared: i32,
+    nano: u8,
+    v: &[f32],
+    out: &mut [u8],
+) -> f64 {
+    let scale = (1.0 + nano as f32 / 4.0) * exp2i(e_shared + fp.offset);
+    let inv = 1.0 / scale;
+    let sign_bit = fp.sign_bit;
+    let mut sse = 0.0f64;
+    match fp.recycle {
+        Some(r) => {
+            for (o, &x) in out.iter_mut().zip(v) {
+                let a = x * inv;
+                let idx = fp.project(a.abs());
+                let sign = a < 0.0;
+                let grid = if sign { -fp.levels[idx] } else { fp.levels[idx] };
+                let mut code = if idx == 0 {
+                    0
+                } else {
+                    (sign as u8) * sign_bit | idx as u8
+                };
+                // recycled level competes in the nearest search; grid wins
+                // exact ties (strict `<`), mirroring `BlockFormat::encode`
+                if (a - r).abs() < (a - grid).abs() {
+                    code = sign_bit;
+                }
+                *o = code;
+                if SSE {
+                    let back = fp.dec[code as usize] * scale;
+                    let d = (x - back) as f64;
+                    sse += d * d;
+                }
+            }
+        }
+        None => {
+            for (o, &x) in out.iter_mut().zip(v) {
+                let a = x * inv;
+                let idx = fp.project(a.abs());
+                let sign = a < 0.0;
+                let code = if idx == 0 {
+                    0
+                } else {
+                    (sign as u8) * sign_bit | idx as u8
+                };
+                *o = code;
+                if SSE {
+                    let back = fp.dec[code as usize] * scale;
+                    let d = (x - back) as f64;
+                    sse += d * d;
+                }
+            }
+        }
+    }
+    sse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::quantize_block;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_engine_matches_reference(v: &[f32], cfg: &NxConfig) {
+        let tabs = cfg.tables();
+        let want = quantize_block(v, cfg, &tabs);
+        let plan = EncodePlan::new(cfg);
+        let mut scratch = EncodeScratch::new();
+        let mut codes = vec![0u8; v.len()];
+        let (e, nano, fmt) = plan.quantize_block_into(v, &mut scratch, &mut codes);
+        assert_eq!(
+            (e, nano, fmt, &codes),
+            (want.e_shared, want.nano, want.fmt_mx, &want.codes),
+            "{} diverged on {v:?}",
+            cfg.name()
+        );
+    }
+
+    #[test]
+    fn thresholds_reproduce_projection_exactly() {
+        // sweep magnitudes incl. exact levels, exact ties, and the bit
+        // neighbours of every threshold
+        for bf in [
+            BlockFormat::new(crate::formats::ElementFormat::mx_default(4), None),
+            BlockFormat::new(crate::formats::ElementFormat::mx_default(5), None),
+            BlockFormat::new(crate::formats::ElementFormat::mx_default(6), None),
+            BlockFormat::new(crate::formats::ElementFormat::bfp(6), None),
+            BlockFormat::new(crate::formats::ElementFormat::mx_default(8), None),
+        ] {
+            let fp = FormatPlan::build(&bf);
+            let mut probes: Vec<f32> = bf.levels.clone();
+            for &t in &fp.thresholds {
+                probes.push(t);
+                probes.push(f32::from_bits(t.to_bits() - 1));
+                probes.push(f32::from_bits(t.to_bits() + 1));
+            }
+            for w in bf.levels.windows(2) {
+                probes.push((w[0] + w[1]) / 2.0); // exact midpoints (ties)
+            }
+            probes.push(0.0);
+            probes.push(f32::INFINITY);
+            probes.push(bf.top() * 4.0);
+            for m in probes {
+                assert_eq!(
+                    fp.project(m),
+                    project_magnitude(&bf.levels, m),
+                    "m={m} ({:?})",
+                    bf.elem
+                );
+            }
+            assert_eq!(fp.project(f32::NAN), bf.levels.len() - 1);
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_randomized() {
+        let mut rng = Rng::seeded(91);
+        let cfgs = [
+            NxConfig::bfp(4),
+            NxConfig::mxfp(5),
+            NxConfig::nxfp(4),
+            NxConfig::nxfp(6),
+            NxConfig::nxfp(5).with_nano_mode(NanoMode::Exhaustive),
+        ];
+        for cfg in &cfgs {
+            for _ in 0..200 {
+                let len = 1 + rng.below(33);
+                let v: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                assert_engine_matches_reference(&v, cfg);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_specials() {
+        for cfg in [NxConfig::nxfp(4), NxConfig::mxfp(5), NxConfig::bfp(6)] {
+            assert_engine_matches_reference(&[0.0; 8], &cfg);
+            assert_engine_matches_reference(&[-0.0, 0.0, 1.0, -1.0], &cfg);
+            assert_engine_matches_reference(&[f32::NAN, 1.5, -0.25, 0.0], &cfg);
+            assert_engine_matches_reference(&[f32::INFINITY, 1.0, -0.5], &cfg);
+            assert_engine_matches_reference(&[f32::NEG_INFINITY, 0.125], &cfg);
+            assert_engine_matches_reference(&[f32::INFINITY; 4], &cfg);
+            assert_engine_matches_reference(&[3.0e38, 1.0e-44, -1.0], &cfg);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // the same scratch across different blocks/configs must not leak
+        let mut rng = Rng::seeded(92);
+        let mut scratch = EncodeScratch::new();
+        for cfg in [NxConfig::nxfp(6), NxConfig::nxfp(4)] {
+            let plan = EncodePlan::new(&cfg);
+            let tabs = cfg.tables();
+            for _ in 0..50 {
+                let len = 1 + rng.below(40);
+                let v: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let want = quantize_block(&v, &cfg, &tabs);
+                let mut codes = vec![0u8; v.len()];
+                let got = plan.quantize_block_into(&v, &mut scratch, &mut codes);
+                assert_eq!((got.0, got.1, got.2), (want.e_shared, want.nano, want.fmt_mx));
+                assert_eq!(codes, want.codes);
+            }
+        }
+    }
+}

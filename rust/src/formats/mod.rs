@@ -8,11 +8,15 @@
 //! (`rust/tests/golden_cross_check.rs`).
 
 pub mod element;
+pub mod encode;
 pub mod packed;
 pub mod recycle;
+pub mod store;
 
 pub use element::{project_magnitude, ElementFormat};
+pub use encode::{EncodePlan, EncodeScratch};
 pub use recycle::RecycleTarget;
+pub use store::BlockStore;
 
 use crate::util::{exp2i, floor_log2};
 
@@ -298,6 +302,19 @@ pub fn shared_exponent(v: &[f32]) -> Option<i32> {
     floor_log2(maxabs).map(|e| e.clamp(E_SHARED_MIN, E_SHARED_MAX))
 }
 
+/// Largest **finite** `|v|` in a block (0 when there is none) — the block
+/// max fed to [`nano_candidate`]. Filters non-finite values exactly like
+/// [`shared_exponent`] (and the Python oracle's
+/// `np.abs(v[np.isfinite(v)])`): a stray Inf must not saturate the
+/// NanoMantissa candidate. Shared by the reference path and the engine so
+/// the rule cannot drift between them.
+pub fn finite_max_abs(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| {
+        let a = x.abs();
+        if a.is_finite() && a > m { a } else { m }
+    })
+}
+
 /// NanoMantissa candidate: round the block max against the top level of the
 /// target format (the paper's Fig. 4 rule; see DESIGN.md §4 for why the
 /// worked example, not Algorithm 1's pseudocode formula, is normative).
@@ -339,6 +356,10 @@ pub fn quantize_block_fixed(
 /// the ablation toggles). Deterministic candidate order: for each format
 /// (Mx first), the rounded NanoMantissa candidate then 0; strictly smaller
 /// SSE wins.
+///
+/// This is the **reference path** (also mirrored by the Python oracle); the
+/// production encode path is the table-driven engine in [`encode`], which
+/// must stay bit-identical to this function (`tests/engine_equivalence.rs`).
 pub fn quantize_block(v: &[f32], cfg: &NxConfig, tabs: &FormatTables) -> BlockCode {
     let Some(e_shared) = shared_exponent(v) else {
         // all-zero block: canonical zero encoding
@@ -349,7 +370,7 @@ pub fn quantize_block(v: &[f32], cfg: &NxConfig, tabs: &FormatTables) -> BlockCo
             codes: vec![0; v.len()],
         };
     };
-    let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let vmax = finite_max_abs(v);
 
     let formats: &[bool] = if cfg.enable_am {
         &[true, false]
@@ -625,6 +646,38 @@ mod tests {
         assert_eq!(nano_candidate(7.9, &bf, e), 1);
         // ratio can't reach 1.33+ for E2M1 (maxabs < 2^(E+1) = 8/6 = 1.33)
         assert!(nano_candidate(100.0, &bf, e) == 3); // clamped anyway
+    }
+
+    #[test]
+    fn finite_max_abs_filters_nonfinite() {
+        assert_eq!(finite_max_abs(&[1.0, -3.0, f32::INFINITY, f32::NAN]), 3.0);
+        assert_eq!(finite_max_abs(&[f32::INFINITY, f32::NAN]), 0.0);
+        assert_eq!(finite_max_abs(&[]), 0.0);
+        assert_eq!(finite_max_abs(&[-0.0, 0.5]), 0.5);
+    }
+
+    #[test]
+    fn nonfinite_elements_do_not_hijack_nano_candidate() {
+        // Regression: the vmax fold used to include Inf, so one Inf element
+        // saturated `nano_candidate` at 3 — and because the block SSE is
+        // NaN-poisoned (first candidate always wins), nano=3 shipped. The
+        // oracle filters non-finite from vmax; so must we.
+        let cfg = NxConfig::nxfp(4);
+        let tabs = cfg.tables();
+        let v = [f32::INFINITY, 1.0, -0.5, 0.25];
+        let b = quantize_block(&v, &cfg, &tabs);
+        // finite max 1.0 at e=0 sits below the Mx cap -> nano must be 0
+        assert_eq!(b.nano, 0, "Inf hijacked the NanoMantissa candidate");
+        // the Inf element itself still saturates to the top magnitude code
+        let top = (tabs.get(b.fmt_mx).levels.len() - 1) as u8;
+        assert_eq!(b.codes[0], top);
+        // finite elements must match a block without the Inf
+        let fin = quantize_block(&[0.0, 1.0, -0.5, 0.25], &cfg, &tabs);
+        assert_eq!(&b.codes[1..], &fin.codes[1..]);
+        // NaN variant: candidate order likewise driven by finite values only
+        let n = quantize_block(&[f32::NAN, 1.0, -0.5, 0.25], &cfg, &tabs);
+        assert_eq!(n.nano, 0);
+        assert_eq!(n.codes[0], top);
     }
 
     #[test]

@@ -42,6 +42,33 @@ impl BitWriter {
         }
     }
 
+    /// Append a run of equal-width codes. Semantically identical to
+    /// pushing each code with [`BitWriter::push`], but byte-aligned 8-bit
+    /// runs become a memcpy and byte-aligned 4-bit runs a nibble-pack walk
+    /// — the [`super::BlockStore`] payload path.
+    pub fn push_codes(&mut self, codes: &[u8], nbits: u32) {
+        debug_assert!((1..=8).contains(&nbits));
+        if nbits == 8 && self.bitpos & 7 == 0 {
+            self.buf.extend_from_slice(codes);
+            self.bitpos += codes.len() * 8;
+            return;
+        }
+        if nbits == 4 && self.bitpos & 7 == 0 {
+            for pair in codes.chunks(2) {
+                debug_assert!(pair.iter().all(|&c| c < 16));
+                // LSB-first: first code of the pair is the low nibble; an
+                // odd tail leaves the high nibble zero with bitpos mid-byte,
+                // exactly like push()
+                self.buf.push(pair[0] | (pair.get(1).copied().unwrap_or(0) << 4));
+            }
+            self.bitpos += codes.len() * 4;
+            return;
+        }
+        for &c in codes {
+            self.push(c as u32, nbits);
+        }
+    }
+
     pub fn bits(&self) -> usize {
         self.bitpos
     }
@@ -141,6 +168,47 @@ impl PackedMatrix {
             meta: metaw.into_bytes(),
             payload: payload.into_bytes(),
             blocks_per_row: bpr,
+        }
+    }
+
+    /// Pack a flat [`super::BlockStore`] (the storage-native path): the
+    /// payload is one straight walk of the store's contiguous codes buffer
+    /// and the metadata streams are linear scans of the SoA arrays — no
+    /// per-block `Vec` chasing. Produces byte-identical streams to
+    /// [`PackedMatrix::pack`] on the equivalent legacy blocks.
+    pub fn from_store(
+        rows: usize,
+        cols: usize,
+        cfg: &NxConfig,
+        store: &super::BlockStore,
+    ) -> Self {
+        assert_eq!(store.rows, rows, "store geometry mismatch");
+        assert_eq!(store.row_len, cols, "store geometry mismatch");
+        assert_eq!(store.block_size, cfg.block_size, "store geometry mismatch");
+        let n_blocks = store.n_blocks();
+        let has_meta = cfg.enable_nm || cfg.enable_am;
+        let mut scales = Vec::with_capacity(n_blocks);
+        let mut metaw = BitWriter::new();
+        for flat in 0..n_blocks {
+            scales.push((store.e_shared[flat] as i32 + E8M0_BIAS) as u8);
+            if has_meta {
+                metaw.push(store.nano[flat] as u32 | ((store.fmt_mx[flat] as u32) << 2), 3);
+            }
+        }
+        // flat codes are already in payload element order (row-major,
+        // blocks never straddle rows)
+        let mut payload = BitWriter::new();
+        payload.push_codes(&store.codes, cfg.bits as u32);
+        PackedMatrix {
+            rows,
+            cols,
+            block_size: cfg.block_size,
+            bits: cfg.bits,
+            has_meta,
+            scales,
+            meta: metaw.into_bytes(),
+            payload: payload.into_bytes(),
+            blocks_per_row: store.blocks_per_row(),
         }
     }
 
@@ -244,16 +312,63 @@ mod tests {
             NxConfig::nxfp(5),
         ] {
             let q = quantize_matrix(&t, &cfg);
-            let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+            let blocks = q.store.to_block_codes();
+            let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &blocks);
             let blocks2 = packed.unpack();
             if cfg.enable_nm || cfg.enable_am {
-                assert_eq!(q.blocks, blocks2, "{}", cfg.name());
+                assert_eq!(blocks, blocks2, "{}", cfg.name());
             } else {
                 // base formats don't store meta; compare codes + exponents
-                for (a, b) in q.blocks.iter().zip(&blocks2) {
+                for (a, b) in blocks.iter().zip(&blocks2) {
                     assert_eq!(a.e_shared, b.e_shared);
                     assert_eq!(a.codes, b.codes);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn from_store_streams_identical_to_legacy_pack() {
+        // the SoA fast path must emit byte-identical scales/meta/payload
+        // to the legacy per-block pack, incl. partial tails and 5/6-bit
+        // payloads that end mid-byte
+        let mut rng = Rng::seeded(25);
+        for (rows, cols) in [(8usize, 70usize), (3, 33), (1, 5)] {
+            let t = Tensor2::random_normal(rows, cols, 1.0, &mut rng);
+            for cfg in [
+                NxConfig::bfp(4),
+                NxConfig::mxfp(5),
+                NxConfig::mxfp(8),
+                NxConfig::nxfp(4),
+                NxConfig::nxfp(5),
+                NxConfig::nxfp(6),
+            ] {
+                let q = quantize_matrix(&t, &cfg);
+                let legacy = PackedMatrix::pack(rows, cols, &cfg, &q.store.to_block_codes());
+                let fast = PackedMatrix::from_store(rows, cols, &cfg, &q.store);
+                assert_eq!(legacy.scales, fast.scales, "{}", cfg.name());
+                assert_eq!(legacy.meta, fast.meta, "{}", cfg.name());
+                assert_eq!(legacy.payload, fast.payload, "{}", cfg.name());
+                assert_eq!(legacy.blocks_per_row, fast.blocks_per_row);
+            }
+        }
+    }
+
+    #[test]
+    fn push_codes_matches_per_code_push() {
+        let mut rng = Rng::seeded(26);
+        for bits in [3u32, 4, 5, 6, 8] {
+            for len in [1usize, 2, 5, 31, 64] {
+                let codes: Vec<u8> =
+                    (0..len).map(|_| (rng.u32() & ((1u32 << bits) - 1)) as u8).collect();
+                let mut a = BitWriter::new();
+                for &c in &codes {
+                    a.push(c as u32, bits);
+                }
+                let mut b = BitWriter::new();
+                b.push_codes(&codes, bits);
+                assert_eq!(a.bits(), b.bits(), "bits={bits} len={len}");
+                assert_eq!(a.into_bytes(), b.into_bytes(), "bits={bits} len={len}");
             }
         }
     }
@@ -264,7 +379,7 @@ mod tests {
         let t = Tensor2::random_normal(4, 64, 1.0, &mut rng);
         for cfg in [NxConfig::mxfp(4), NxConfig::nxfp(5)] {
             let q = quantize_matrix(&t, &cfg);
-            let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+            let packed = q.pack(&cfg);
             // per-row accounting: each row quantizes independently
             let per_row = cfg.footprint_bits(t.cols);
             assert_eq!(packed.footprint_bits(), per_row * t.rows as u64);
@@ -277,7 +392,7 @@ mod tests {
         let t = Tensor2::random_normal(16, 256, 1.0, &mut rng);
         let cfg = NxConfig::nxfp(4);
         let q = quantize_matrix(&t, &cfg);
-        let packed = PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
+        let packed = q.pack(&cfg);
         let bytes = packed.footprint_bytes() as u64;
         let bits = packed.footprint_bits();
         assert!(bytes * 8 >= bits);

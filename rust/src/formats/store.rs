@@ -1,0 +1,258 @@
+//! Flat structure-of-arrays storage for quantized blocks — the crate's
+//! storage-native layout.
+//!
+//! The legacy `Vec<BlockCode>` layout paid one heap allocation per 16–32
+//! element block (every `BlockCode` owns a `Vec<u8>`), which dominated
+//! `quantize_matrix` / `KvCache::append` at checkpoint and prefill scale.
+//! [`BlockStore`] keeps **one contiguous codes buffer** (one byte per
+//! element, row-major) plus flat per-block metadata arrays (`e_shared`,
+//! `nano`, `fmt_mx`), so:
+//!
+//! * quantizing appends/writes into plain slices — zero per-block allocs,
+//! * `PackedMatrix::from_store` walks the codes buffer linearly,
+//! * thread stripes of `quantize_matrix` write disjoint sub-slices with no
+//!   post-hoc collection.
+//!
+//! Geometry: `rows` logical rows of `row_len` values each, blocked
+//! independently per row in `block_size` chunks (blocks never straddle
+//! rows — a vector is simply `rows == 1`). Block `(r, bi)` covers codes
+//! `[r*row_len + bi*k, ..)` and has flat metadata index
+//! `r * blocks_per_row() + bi`.
+
+use super::{BlockCode, FormatTables};
+use crate::util::exp2i;
+
+/// Flat SoA storage for the quantized blocks of one tensor (or one growing
+/// KV stream). See the module docs for the layout contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockStore {
+    /// Block size `k` (elements per full block).
+    pub block_size: usize,
+    /// Values per logical row (a vector is one row of `len` values).
+    pub row_len: usize,
+    /// Logical rows stored.
+    pub rows: usize,
+    /// Element codes, one byte each, row-major: `rows * row_len` entries.
+    pub codes: Vec<u8>,
+    /// Per-block shared exponents, flat-indexed: `rows * blocks_per_row()`.
+    pub e_shared: Vec<i16>,
+    /// Per-block 2-bit NanoMantissa fields.
+    pub nano: Vec<u8>,
+    /// Per-block format index (0 = BFP, 1 = Mx), stored as a byte.
+    pub fmt_mx: Vec<u8>,
+}
+
+impl BlockStore {
+    /// Empty store (no rows yet) — the KV-cache starting state.
+    pub fn new(row_len: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        BlockStore {
+            block_size,
+            row_len,
+            rows: 0,
+            codes: Vec::new(),
+            e_shared: Vec::new(),
+            nano: Vec::new(),
+            fmt_mx: Vec::new(),
+        }
+    }
+
+    /// Pre-sized zeroed store for `rows` rows — the `quantize_matrix`
+    /// destination (thread stripes fill disjoint ranges in place).
+    pub fn with_rows(rows: usize, row_len: usize, block_size: usize) -> Self {
+        let mut s = BlockStore::new(row_len, block_size);
+        s.rows = rows;
+        s.codes = vec![0; rows * row_len];
+        let nb = rows * s.blocks_per_row();
+        s.e_shared = vec![0; nb];
+        s.nano = vec![0; nb];
+        s.fmt_mx = vec![0; nb];
+        s
+    }
+
+    #[inline]
+    pub fn blocks_per_row(&self) -> usize {
+        self.row_len.div_ceil(self.block_size)
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.rows * self.blocks_per_row()
+    }
+
+    /// Reserve space for `additional` more rows (amortization control for
+    /// append-heavy users like the KV cache).
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.codes.reserve(additional * self.row_len);
+        let nb = additional * self.blocks_per_row();
+        self.e_shared.reserve(nb);
+        self.nano.reserve(nb);
+        self.fmt_mx.reserve(nb);
+    }
+
+    /// Append one zeroed row and return its index; fill it in place via
+    /// [`BlockStore::row_slices_mut`].
+    pub fn push_row(&mut self) -> usize {
+        let r = self.rows;
+        self.rows += 1;
+        self.codes.resize(self.rows * self.row_len, 0);
+        let nb = self.rows * self.blocks_per_row();
+        self.e_shared.resize(nb, 0);
+        self.nano.resize(nb, 0);
+        self.fmt_mx.resize(nb, 0);
+        r
+    }
+
+    /// Mutable views of row `r`: `(codes, e_shared, nano, fmt_mx)` — the
+    /// destination slices a quantizer engine writes into.
+    pub fn row_slices_mut(&mut self, r: usize) -> (&mut [u8], &mut [i16], &mut [u8], &mut [u8]) {
+        let bpr = self.blocks_per_row();
+        let codes = &mut self.codes[r * self.row_len..(r + 1) * self.row_len];
+        let e = &mut self.e_shared[r * bpr..(r + 1) * bpr];
+        let nano = &mut self.nano[r * bpr..(r + 1) * bpr];
+        let fmt = &mut self.fmt_mx[r * bpr..(r + 1) * bpr];
+        (codes, e, nano, fmt)
+    }
+
+    /// Codes-buffer range of flat block `flat`: `(start, len)`.
+    #[inline]
+    pub fn block_range(&self, flat: usize) -> (usize, usize) {
+        let bpr = self.blocks_per_row();
+        let (r, bi) = (flat / bpr, flat % bpr);
+        let off = bi * self.block_size;
+        (r * self.row_len + off, self.block_size.min(self.row_len - off))
+    }
+
+    /// Codes of flat block `flat` (tail blocks are short).
+    #[inline]
+    pub fn block_codes(&self, flat: usize) -> &[u8] {
+        let (start, len) = self.block_range(flat);
+        &self.codes[start..start + len]
+    }
+
+    /// Full dequantization scale of flat block `flat` under `tabs`
+    /// (mirror of [`BlockCode::scale`]).
+    #[inline]
+    pub fn scale(&self, flat: usize, tabs: &FormatTables) -> f32 {
+        let offset = tabs.get(self.fmt_mx[flat] != 0).offset;
+        (1.0 + self.nano[flat] as f32 / 4.0) * exp2i(self.e_shared[flat] as i32 + offset)
+    }
+
+    /// Materialize one block in the legacy owned form (test/interop path —
+    /// allocates; the hot paths read the flat buffers directly).
+    pub fn block(&self, flat: usize) -> BlockCode {
+        BlockCode {
+            e_shared: self.e_shared[flat],
+            nano: self.nano[flat],
+            fmt_mx: self.fmt_mx[flat] != 0,
+            codes: self.block_codes(flat).to_vec(),
+        }
+    }
+
+    /// Materialize every block in the legacy layout (test/interop path).
+    pub fn to_block_codes(&self) -> Vec<BlockCode> {
+        (0..self.n_blocks()).map(|f| self.block(f)).collect()
+    }
+
+    /// Build a store from legacy per-block codes (inverse of
+    /// [`BlockStore::to_block_codes`]).
+    pub fn from_block_codes(
+        rows: usize,
+        row_len: usize,
+        block_size: usize,
+        blocks: &[BlockCode],
+    ) -> Self {
+        let mut s = BlockStore::with_rows(rows, row_len, block_size);
+        assert_eq!(blocks.len(), s.n_blocks(), "block count mismatch");
+        for (flat, b) in blocks.iter().enumerate() {
+            let (start, len) = s.block_range(flat);
+            assert_eq!(b.codes.len(), len, "block {flat} length mismatch");
+            s.codes[start..start + len].copy_from_slice(&b.codes);
+            s.e_shared[flat] = b.e_shared;
+            s.nano[flat] = b.nano;
+            s.fmt_mx[flat] = b.fmt_mx as u8;
+        }
+        s
+    }
+
+    /// Dequantize flat block `flat` into `out` (reference semantics, same
+    /// as [`super::dequantize_block`] on the materialized block).
+    pub fn dequantize_block_into(&self, flat: usize, tabs: &FormatTables, out: &mut [f32]) {
+        let bf = tabs.get(self.fmt_mx[flat] != 0);
+        let scale = self.scale(flat, tabs);
+        for (o, &c) in out.iter_mut().zip(self.block_codes(flat)) {
+            *o = bf.decode(c) * scale;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.rows = 0;
+        self.codes.clear();
+        self.e_shared.clear();
+        self.nano.clear();
+        self.fmt_mx.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::NxConfig;
+
+    #[test]
+    fn geometry_partial_tail() {
+        // 2 rows of 5 values, k=2 -> 3 blocks/row, tail block of 1
+        let s = BlockStore::with_rows(2, 5, 2);
+        assert_eq!(s.blocks_per_row(), 3);
+        assert_eq!(s.n_blocks(), 6);
+        assert_eq!(s.block_range(0), (0, 2));
+        assert_eq!(s.block_range(2), (4, 1));
+        assert_eq!(s.block_range(3), (5, 2)); // row 1 starts at codes[5]
+        assert_eq!(s.block_range(5), (9, 1));
+    }
+
+    #[test]
+    fn push_row_grows_all_streams() {
+        let mut s = BlockStore::new(6, 4);
+        assert_eq!(s.n_blocks(), 0);
+        let r = s.push_row();
+        assert_eq!(r, 0);
+        assert_eq!(s.codes.len(), 6);
+        assert_eq!(s.e_shared.len(), 2);
+        let (codes, e, nano, fmt) = s.row_slices_mut(0);
+        assert_eq!(codes.len(), 6);
+        assert_eq!((e.len(), nano.len(), fmt.len()), (2, 2, 2));
+        s.clear();
+        assert_eq!(s.rows, 0);
+        assert_eq!(s.n_blocks(), 0);
+    }
+
+    #[test]
+    fn legacy_round_trip() {
+        let mut s = BlockStore::with_rows(2, 5, 4);
+        for (i, c) in s.codes.iter_mut().enumerate() {
+            *c = i as u8;
+        }
+        for flat in 0..s.n_blocks() {
+            s.e_shared[flat] = flat as i16 - 2;
+            s.nano[flat] = (flat % 4) as u8;
+            s.fmt_mx[flat] = (flat % 2) as u8;
+        }
+        let legacy = s.to_block_codes();
+        assert_eq!(legacy.len(), 4);
+        assert_eq!(legacy[1].codes, vec![4]); // row-0 tail block
+        let back = BlockStore::from_block_codes(2, 5, 4, &legacy);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn scale_matches_legacy_block_scale() {
+        let cfg = NxConfig::nxfp(4);
+        let tabs = cfg.tables();
+        let mut s = BlockStore::with_rows(1, 8, 8);
+        s.e_shared[0] = 3;
+        s.nano[0] = 2;
+        s.fmt_mx[0] = 1;
+        assert_eq!(s.scale(0, &tabs), s.block(0).scale(&tabs));
+    }
+}

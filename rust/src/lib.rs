@@ -32,6 +32,6 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
-pub use formats::{BlockFormat, ElementFormat, NxConfig};
+pub use formats::{BlockFormat, BlockStore, ElementFormat, EncodePlan, EncodeScratch, NxConfig};
 pub use quant::{quantize_matrix, quantize_vector, QuantizedMatrix};
 pub use tensor::Tensor2;

@@ -21,7 +21,6 @@ use nxfp::formats::NxConfig;
 use nxfp::models::corpus::Probe;
 use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec, ModelProfile};
 use nxfp::profile::profile_scaled;
-use nxfp::quant::quantize_matrix;
 use nxfp::runtime::Runtime;
 use nxfp::train::{TrainConfig, Trainer};
 use nxfp::util::cli::Args;
@@ -156,14 +155,13 @@ fn cmd_quantize(a: &Args) -> Result<()> {
     let cfg = parse_format(&a.get_str("format"))?
         .ok_or_else(|| anyhow!("--format must be a quantized format"))?;
     let spec = LmSpec::small();
+    // fail loudly on a spec/checkpoint mismatch (direct_cast_packed
+    // itself skips names it can't find)
+    ck.check_spec(&spec)?;
     let mut total_fp16 = 0u64;
     let mut total_q = 0u64;
-    for name in spec.quantizable() {
-        let t = ck.get(&name).unwrap();
-        let q = quantize_matrix(t, &cfg);
-        let packed =
-            nxfp::formats::packed::PackedMatrix::pack(t.rows, t.cols, &cfg, &q.blocks);
-        total_fp16 += t.len() as u64 * 2;
+    for (name, packed) in ck.direct_cast_packed(&spec.quantizable(), &cfg) {
+        total_fp16 += ck.get(&name).unwrap().len() as u64 * 2;
         total_q += packed.footprint_bytes() as u64;
     }
     println!(

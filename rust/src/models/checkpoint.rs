@@ -2,6 +2,8 @@
 //! serializer. Used to persist the trained LM between the training example
 //! and the evaluation benches.
 
+use crate::formats::packed::PackedMatrix;
+use crate::formats::NxConfig;
 use crate::models::transformer::LmSpec;
 use crate::tensor::Tensor2;
 use crate::util::ser::{Reader, Writer};
@@ -65,6 +67,23 @@ impl Checkpoint {
             }
         }
         Ok(())
+    }
+
+    /// Direct-cast the named tensors straight into deployable packed form
+    /// (paper §5 Algorithm 1 → §6 storage layout): each weight is
+    /// quantized through the allocation-free engine into a flat
+    /// `BlockStore` and bit-packed without ever materializing per-block
+    /// heap objects. Names missing from the checkpoint are skipped.
+    pub fn direct_cast_packed(
+        &self,
+        names: &[String],
+        cfg: &NxConfig,
+    ) -> Vec<(String, PackedMatrix)> {
+        self.params
+            .iter()
+            .filter(|(n, _)| names.contains(n))
+            .map(|(n, t)| (n.clone(), crate::quant::quantize_matrix(t, cfg).pack(cfg)))
+            .collect()
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -141,6 +160,28 @@ mod tests {
     fn check_spec_catches_mismatch() {
         let ck = Checkpoint::init(&LmSpec::tiny(), 1);
         assert!(ck.check_spec(&LmSpec::small()).is_err());
+    }
+
+    #[test]
+    fn direct_cast_packed_round_trips_and_shrinks() {
+        use crate::formats::NxConfig;
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 5);
+        let names = spec.quantizable();
+        let cfg = NxConfig::nxfp(4);
+        let packed = ck.direct_cast_packed(&names, &cfg);
+        assert_eq!(packed.len(), names.len());
+        let lut = crate::dequant::DequantLut::new(&cfg);
+        for (name, p) in &packed {
+            let t = ck.get(name).unwrap();
+            assert_eq!((p.rows, p.cols), (t.rows, t.cols));
+            // packed form is the same number system as the fake-quant path
+            let back = crate::dequant::dequantize_packed(p, &lut, true);
+            let want = crate::quant::quantize_matrix(t, &cfg).dequantize(&cfg);
+            assert_eq!(back.data, want.data, "{name}");
+            // and much smaller than fp16
+            assert!(p.footprint_bytes() < t.len() * 2);
+        }
     }
 
     #[test]

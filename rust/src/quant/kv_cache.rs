@@ -3,6 +3,13 @@
 //! form — the DRAM-resident footprint — and dequantized on the fly when a
 //! decode step needs the attention context.
 //!
+//! Storage + encode hot path: both streams live in flat [`BlockStore`]s
+//! (one contiguous codes buffer each, SoA metadata), and
+//! [`KvCache::append`] quantizes through the cache's resident
+//! [`EncodePlan`] + [`EncodeScratch`] — zero heap allocations per appended
+//! row in steady state (the stores grow amortized; use
+//! [`KvCache::with_capacity`] to pre-reserve a whole context window).
+//!
 //! # Incremental dequantization contract
 //!
 //! Serving appends one row per decode step, so re-decoding the whole cache
@@ -20,7 +27,7 @@
 //!   caller must also zero or discard its staging tensors).
 
 use crate::dequant::DequantLut;
-use crate::formats::{quantize_block, BaseFormat, BlockCode, FormatTables, NxConfig};
+use crate::formats::{BaseFormat, BlockStore, EncodePlan, EncodeScratch, NxConfig};
 use crate::tensor::Tensor2;
 
 /// One layer's quantized K and V streams. Rows are appended per generated
@@ -28,11 +35,12 @@ use crate::tensor::Tensor2;
 /// along the feature dimension (matching how the paper blocks the cache).
 pub struct KvCache {
     pub cfg: NxConfig,
-    tabs: FormatTables,
+    plan: EncodePlan,
+    scratch: EncodeScratch,
     lut: DequantLut,
     pub dim: usize,
-    k_blocks: Vec<BlockCode>,
-    v_blocks: Vec<BlockCode>,
+    k_store: BlockStore,
+    v_store: BlockStore,
     pub len: usize,
     /// Rows already materialized by the last [`KvCache::dequantize_into`].
     clean: usize,
@@ -41,16 +49,27 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(dim: usize, cfg: NxConfig) -> Self {
-        let tabs = cfg.tables();
-        let lut = DequantLut::from_tables(cfg.bits, &tabs);
+        Self::with_capacity(dim, cfg, 0)
+    }
+
+    /// Like [`KvCache::new`], but pre-reserves storage for `rows` appended
+    /// rows so a full context window appends without reallocation.
+    pub fn with_capacity(dim: usize, cfg: NxConfig, rows: usize) -> Self {
+        let plan = EncodePlan::new(&cfg);
+        let lut = DequantLut::from_tables(cfg.bits, &plan.tabs);
         let blocks_per_row = dim.div_ceil(cfg.block_size);
+        let mut k_store = BlockStore::new(dim, cfg.block_size);
+        let mut v_store = BlockStore::new(dim, cfg.block_size);
+        k_store.reserve_rows(rows);
+        v_store.reserve_rows(rows);
         KvCache {
             cfg,
-            tabs,
+            plan,
+            scratch: EncodeScratch::new(),
             lut,
             dim,
-            k_blocks: Vec::new(),
-            v_blocks: Vec::new(),
+            k_store,
+            v_store,
             len: 0,
             clean: 0,
             blocks_per_row,
@@ -61,12 +80,12 @@ impl KvCache {
     pub fn append(&mut self, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), self.dim);
         assert_eq!(v.len(), self.dim);
-        for chunk in k.chunks(self.cfg.block_size) {
-            self.k_blocks.push(quantize_block(chunk, &self.cfg, &self.tabs));
-        }
-        for chunk in v.chunks(self.cfg.block_size) {
-            self.v_blocks.push(quantize_block(chunk, &self.cfg, &self.tabs));
-        }
+        let r = self.k_store.push_row();
+        let (codes, e, nano, fmt) = self.k_store.row_slices_mut(r);
+        self.plan.quantize_row_into(k, &mut self.scratch, codes, e, nano, fmt);
+        let r = self.v_store.push_row();
+        let (codes, e, nano, fmt) = self.v_store.row_slices_mut(r);
+        self.plan.quantize_row_into(v, &mut self.scratch, codes, e, nano, fmt);
         self.len += 1;
     }
 
@@ -79,17 +98,21 @@ impl KvCache {
     /// Shared decode routine: rows `from..to` of one stream into `out`.
     /// Both the full and the incremental path go through here, which is
     /// what makes them bit-identical by construction.
-    fn dequant_rows(&self, blocks: &[BlockCode], out: &mut Tensor2, from: usize, to: usize) {
+    fn dequant_rows(&self, store: &BlockStore, out: &mut Tensor2, from: usize, to: usize) {
         let base_mx = self.cfg.base == BaseFormat::Mx;
         for r in from..to {
             let row = out.row_mut(r);
             for (bi, chunk) in row.chunks_mut(self.cfg.block_size).enumerate() {
-                let b = &blocks[r * self.blocks_per_row + bi];
-                let fmt_mx = if self.cfg.enable_am { b.fmt_mx } else { base_mx };
+                let flat = r * self.blocks_per_row + bi;
+                let fmt_mx = if self.cfg.enable_am {
+                    store.fmt_mx[flat] != 0
+                } else {
+                    base_mx
+                };
                 let (table, offset) = self.lut.table(fmt_mx);
-                let scale = (1.0 + b.nano as f32 / 4.0)
-                    * crate::util::exp2i(b.e_shared as i32 + offset);
-                for (o, &c) in chunk.iter_mut().zip(&b.codes) {
+                let scale = (1.0 + store.nano[flat] as f32 / 4.0)
+                    * crate::util::exp2i(store.e_shared[flat] as i32 + offset);
+                for (o, &c) in chunk.iter_mut().zip(store.block_codes(flat)) {
                     *o = table[c as usize] * scale;
                 }
             }
@@ -102,8 +125,8 @@ impl KvCache {
         assert!(pad_len >= self.len);
         let mut k = Tensor2::zeros(pad_len, self.dim);
         let mut v = Tensor2::zeros(pad_len, self.dim);
-        self.dequant_rows(&self.k_blocks, &mut k, 0, self.len);
-        self.dequant_rows(&self.v_blocks, &mut v, 0, self.len);
+        self.dequant_rows(&self.k_store, &mut k, 0, self.len);
+        self.dequant_rows(&self.v_store, &mut v, 0, self.len);
         (k, v)
     }
 
@@ -116,8 +139,8 @@ impl KvCache {
         assert_eq!(k.cols, self.dim);
         assert_eq!(v.cols, self.dim);
         let (from, to) = (self.clean, self.len);
-        self.dequant_rows(&self.k_blocks, k, from, to);
-        self.dequant_rows(&self.v_blocks, v, from, to);
+        self.dequant_rows(&self.k_store, k, from, to);
+        self.dequant_rows(&self.v_store, v, from, to);
         self.clean = to;
         from..to
     }
@@ -133,8 +156,8 @@ impl KvCache {
     }
 
     pub fn clear(&mut self) {
-        self.k_blocks.clear();
-        self.v_blocks.clear();
+        self.k_store.clear();
+        self.v_store.clear();
         self.len = 0;
         self.clean = 0;
     }
@@ -170,6 +193,32 @@ mod tests {
     }
 
     #[test]
+    fn append_matches_reference_quantizer() {
+        // the cache's engine path must store the exact blocks the
+        // reference `formats::quantize_block` produces
+        let mut rng = Rng::seeded(74);
+        let dim = 45; // partial tail block
+        for cfg in [NxConfig::bfp(4), NxConfig::mxfp(6), NxConfig::nxfp(5)] {
+            let tabs = cfg.tables();
+            let mut cache = KvCache::new(dim, cfg.clone());
+            let mut appended = Vec::new();
+            for _ in 0..4 {
+                let k: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                cache.append(&k, &k);
+                appended.push(k);
+            }
+            for (r, k) in appended.iter().enumerate() {
+                for (bi, chunk) in k.chunks(cfg.block_size).enumerate() {
+                    let want = crate::formats::quantize_block(chunk, &cfg, &tabs);
+                    let flat = r * cache.blocks_per_row + bi;
+                    assert_eq!(cache.k_store.block(flat), want, "{}", cfg.name());
+                    assert_eq!(cache.v_store.block(flat), want, "{}", cfg.name());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn incremental_matches_full_dequantize() {
         let mut rng = Rng::seeded(73);
         let (dim, pad) = (48, 12);
@@ -199,6 +248,24 @@ mod tests {
             assert!(cache.dequantize_into(&mut k_stage, &mut v_stage).is_empty());
             assert_eq!(k_stage.data, before);
         }
+    }
+
+    #[test]
+    fn with_capacity_appends_without_reallocating() {
+        let dim = 64;
+        let rows = 16;
+        let mut cache = KvCache::with_capacity(dim, NxConfig::nxfp(4), rows);
+        let cap_codes = cache.k_store.codes.capacity();
+        let cap_meta = cache.k_store.e_shared.capacity();
+        assert!(cap_codes >= rows * dim);
+        let row: Vec<f32> = (0..dim).map(|i| i as f32 * 0.1).collect();
+        for _ in 0..rows {
+            cache.append(&row, &row);
+        }
+        // steady state: the pre-reserved buffers never grew
+        assert_eq!(cache.k_store.codes.capacity(), cap_codes);
+        assert_eq!(cache.k_store.e_shared.capacity(), cap_meta);
+        assert_eq!(cache.len, rows);
     }
 
     #[test]

@@ -1,20 +1,28 @@
 //! Direct-cast quantization pipeline (paper §5, Algorithm 1) over vectors
 //! and matrices, with a multithreaded matrix path for checkpoint-sized
 //! tensors, plus the quantized KV-cache used by the serving coordinator.
+//!
+//! Storage layout: all quantized codes live in a flat
+//! [`BlockStore`] (one contiguous codes buffer + SoA per-block metadata —
+//! see `formats/store.rs`), and encoding runs through the allocation-free
+//! [`EncodePlan`] engine (`formats/encode.rs`), which is bit-identical to
+//! the reference `formats::quantize_block` by contract
+//! (`tests/engine_equivalence.rs`). The threaded matrix path hands each
+//! thread stripe disjoint sub-slices of the store, so there is no
+//! per-block allocation and no post-hoc collection.
 
 pub mod kv_cache;
 
-use crate::formats::{
-    dequantize_block, quantize_block, BlockCode, FormatTables, NxConfig,
-};
+use crate::formats::{BlockStore, EncodePlan, EncodeScratch, FormatTables, NxConfig};
 use crate::tensor::Tensor2;
 
-/// A quantized 1-D vector: consecutive blocks of `cfg.block_size`.
+/// A quantized 1-D vector: consecutive blocks of `cfg.block_size`, stored
+/// as a single-row [`BlockStore`].
 #[derive(Clone, Debug)]
 pub struct QuantizedVector {
     pub len: usize,
     pub block_size: usize,
-    pub blocks: Vec<BlockCode>,
+    pub store: BlockStore,
 }
 
 impl QuantizedVector {
@@ -25,21 +33,21 @@ impl QuantizedVector {
 
     pub fn dequantize_with(&self, tabs: &FormatTables) -> Vec<f32> {
         let mut out = vec![0.0; self.len];
-        for (b, chunk) in self.blocks.iter().zip(out.chunks_mut(self.block_size)) {
-            dequantize_block(b, tabs, chunk);
+        for (flat, chunk) in out.chunks_mut(self.block_size).enumerate() {
+            self.store.dequantize_block_into(flat, tabs, chunk);
         }
         out
     }
 }
 
-/// A quantized 2-D tensor: `blocks` holds `rows * ceil(cols/k)` block codes,
-/// row-major.
+/// A quantized 2-D tensor: `rows * ceil(cols/k)` blocks in a row-major
+/// [`BlockStore`] (blocks never straddle rows).
 #[derive(Clone, Debug)]
 pub struct QuantizedMatrix {
     pub rows: usize,
     pub cols: usize,
     pub block_size: usize,
-    pub blocks: Vec<BlockCode>,
+    pub store: BlockStore,
 }
 
 impl QuantizedMatrix {
@@ -54,75 +62,85 @@ impl QuantizedMatrix {
         for r in 0..self.rows {
             let row = out.row_mut(r);
             for (bi, chunk) in row.chunks_mut(self.block_size).enumerate() {
-                dequantize_block(&self.blocks[r * bpr + bi], &tabs, chunk);
+                self.store.dequantize_block_into(r * bpr + bi, &tabs, chunk);
             }
         }
         out
+    }
+
+    /// Pack into deployable bit-true form (straight walk of the store).
+    pub fn pack(&self, cfg: &NxConfig) -> crate::formats::packed::PackedMatrix {
+        crate::formats::packed::PackedMatrix::from_store(self.rows, self.cols, cfg, &self.store)
     }
 }
 
 /// Quantize a 1-D slice.
 pub fn quantize_vector(v: &[f32], cfg: &NxConfig) -> QuantizedVector {
-    let tabs = cfg.tables();
-    let blocks = v
-        .chunks(cfg.block_size)
-        .map(|chunk| quantize_block(chunk, cfg, &tabs))
-        .collect();
-    QuantizedVector { len: v.len(), block_size: cfg.block_size, blocks }
+    let plan = EncodePlan::new(cfg);
+    let mut scratch = EncodeScratch::new();
+    let mut store = BlockStore::with_rows(1, v.len(), cfg.block_size);
+    let (codes, e, nano, fmt) = store.row_slices_mut(0);
+    plan.quantize_row_into(v, &mut scratch, codes, e, nano, fmt);
+    QuantizedVector { len: v.len(), block_size: cfg.block_size, store }
 }
 
 /// Quantize a matrix row-wise (blocks never straddle rows, matching how the
 /// paper quantizes weight matrices along the input dimension). Uses all
-/// available cores for large tensors.
+/// available cores for large tensors; thread stripes write disjoint ranges
+/// of the pre-sized [`BlockStore`], so the parallel path allocates nothing
+/// per block and collects nothing afterwards.
 pub fn quantize_matrix(t: &Tensor2, cfg: &NxConfig) -> QuantizedMatrix {
-    let bpr = t.cols.div_ceil(cfg.block_size);
+    let plan = EncodePlan::new(cfg);
+    let mut store = BlockStore::with_rows(t.rows, t.cols, cfg.block_size);
+    let bpr = store.blocks_per_row();
     let n_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
         .min(t.rows.max(1));
     // Small tensors: stay single-threaded to avoid spawn overhead.
     if t.rows * t.cols < 1 << 16 || n_threads == 1 {
-        let tabs = cfg.tables();
-        let mut blocks = Vec::with_capacity(t.rows * bpr);
+        let mut scratch = EncodeScratch::new();
         for r in 0..t.rows {
-            for chunk in t.row_blocks(r, cfg.block_size) {
-                blocks.push(quantize_block(chunk, cfg, &tabs));
-            }
+            let (codes, e, nano, fmt) = store.row_slices_mut(r);
+            plan.quantize_row_into(t.row(r), &mut scratch, codes, e, nano, fmt);
         }
         return QuantizedMatrix {
             rows: t.rows,
             cols: t.cols,
             block_size: cfg.block_size,
-            blocks,
+            store,
         };
     }
-    let mut blocks: Vec<BlockCode> = Vec::new();
     let chunk_rows = t.rows.div_ceil(n_threads);
-    let results: Vec<Vec<BlockCode>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..n_threads)
-            .map(|ti| {
-                let t = &t;
-                let cfg = &cfg;
-                s.spawn(move || {
-                    let tabs = cfg.tables();
-                    let lo = ti * chunk_rows;
-                    let hi = ((ti + 1) * chunk_rows).min(t.rows);
-                    let mut out = Vec::with_capacity((hi.saturating_sub(lo)) * bpr);
-                    for r in lo..hi {
-                        for chunk in t.row_blocks(r, cfg.block_size) {
-                            out.push(quantize_block(chunk, cfg, &tabs));
-                        }
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    std::thread::scope(|s| {
+        let plan = &plan;
+        let code_chunks = store.codes.chunks_mut(chunk_rows * t.cols);
+        let e_chunks = store.e_shared.chunks_mut(chunk_rows * bpr);
+        let nano_chunks = store.nano.chunks_mut(chunk_rows * bpr);
+        let fmt_chunks = store.fmt_mx.chunks_mut(chunk_rows * bpr);
+        for (ti, (((codes, e), nano), fmt)) in
+            code_chunks.zip(e_chunks).zip(nano_chunks).zip(fmt_chunks).enumerate()
+        {
+            let t = &t;
+            s.spawn(move || {
+                let mut scratch = EncodeScratch::new();
+                let lo = ti * chunk_rows;
+                let hi = ((ti + 1) * chunk_rows).min(t.rows);
+                for r in lo..hi {
+                    let i = r - lo;
+                    plan.quantize_row_into(
+                        t.row(r),
+                        &mut scratch,
+                        &mut codes[i * t.cols..(i + 1) * t.cols],
+                        &mut e[i * bpr..(i + 1) * bpr],
+                        &mut nano[i * bpr..(i + 1) * bpr],
+                        &mut fmt[i * bpr..(i + 1) * bpr],
+                    );
+                }
+            });
+        }
     });
-    for mut r in results {
-        blocks.append(&mut r);
-    }
-    QuantizedMatrix { rows: t.rows, cols: t.cols, block_size: cfg.block_size, blocks }
+    QuantizedMatrix { rows: t.rows, cols: t.cols, block_size: cfg.block_size, store }
 }
 
 /// Quantize-then-dequantize (direct-cast "fake quantization"): what the
@@ -161,13 +179,32 @@ mod tests {
         let t = Tensor2::random_normal(512, 512, 1.0, &mut rng);
         let cfg = NxConfig::nxfp(4);
         let q = quantize_matrix(&t, &cfg);
-        // single-threaded reference on a few sampled rows
+        // reference-path check on a few sampled rows
         let tabs = cfg.tables();
         let bpr = q.blocks_per_row();
         for &r in &[0usize, 100, 511] {
             for (bi, chunk) in t.row_blocks(r, cfg.block_size).enumerate() {
                 let b = crate::formats::quantize_block(chunk, &cfg, &tabs);
-                assert_eq!(q.blocks[r * bpr + bi], b);
+                assert_eq!(q.store.block(r * bpr + bi), b);
+            }
+        }
+    }
+
+    #[test]
+    fn store_matches_reference_blocks_exactly() {
+        // the engine-backed store must hold the exact blocks the reference
+        // path produces, per flat index, including partial tails
+        let mut rng = Rng::seeded(36);
+        let t = Tensor2::random_normal(5, 45, 1.5, &mut rng);
+        for cfg in [NxConfig::bfp(5), NxConfig::mxfp(6), NxConfig::nxfp(4)] {
+            let q = quantize_matrix(&t, &cfg);
+            let tabs = cfg.tables();
+            let bpr = q.blocks_per_row();
+            for r in 0..t.rows {
+                for (bi, chunk) in t.row_blocks(r, cfg.block_size).enumerate() {
+                    let want = crate::formats::quantize_block(chunk, &cfg, &tabs);
+                    assert_eq!(q.store.block(r * bpr + bi), want, "{}", cfg.name());
+                }
             }
         }
     }

@@ -1,0 +1,136 @@
+//! Bit-identity contract between the table-driven quantizer engine
+//! (`formats::encode`) / flat `BlockStore` storage and the normative
+//! reference path (`formats::quantize_block` + legacy `Vec<BlockCode>`):
+//! randomized sweeps over bits 4..=6, every NM/AM/CR toggle combination,
+//! both nano modes, partial tail blocks, and blocks containing
+//! ±0/NaN/±Inf. The reference path is itself pinned to the Python oracle by
+//! `golden_cross_check.rs`, so these properties transitively pin the engine
+//! to the oracle.
+
+use nxfp::dequant::{dequantize_packed, DequantLut};
+use nxfp::formats::packed::PackedMatrix;
+use nxfp::formats::{
+    quantize_block, BaseFormat, BlockStore, EncodePlan, EncodeScratch, NanoMode, NxConfig,
+};
+use nxfp::quant::quantize_matrix;
+use nxfp::tensor::Tensor2;
+use nxfp::util::proptest;
+use nxfp::util::rng::Rng;
+
+/// Draw a random config covering the full toggle space.
+fn random_cfg(rng: &mut Rng) -> NxConfig {
+    let bits = 4 + rng.below(3) as u8;
+    let base = if rng.below(2) == 0 {
+        NxConfig::bfp(bits)
+    } else {
+        NxConfig::mxfp(bits)
+    };
+    let mut cfg = NxConfig {
+        enable_nm: rng.below(2) == 1,
+        enable_am: rng.below(2) == 1,
+        enable_cr: rng.below(2) == 1,
+        ..base
+    };
+    if rng.below(2) == 1 {
+        cfg = cfg.with_nano_mode(NanoMode::Exhaustive);
+    }
+    let ks = [4usize, 8, 16, 32];
+    cfg.with_block_size(ks[rng.below(4)])
+}
+
+/// Random values at a random magnitude, with occasional specials injected.
+fn random_values(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let scale = nxfp::util::exp2i(rng.range(-24, 24) as i32);
+    (0..len)
+        .map(|_| {
+            if rng.below(16) == 0 {
+                match rng.below(6) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f32::NAN,
+                    3 => f32::INFINITY,
+                    4 => f32::NEG_INFINITY,
+                    _ => 1.0e-44, // subnormal
+                }
+            } else {
+                rng.normal_f32(0.0, 1.0) * scale
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_engine_bit_identical_to_reference() {
+    proptest::check_default("engine-vs-reference", |rng| {
+        let cfg = random_cfg(rng);
+        let k = cfg.block_size;
+        // 1..=3 full blocks plus a possibly-partial tail
+        let len = 1 + rng.below(3 * k + 3);
+        let v = random_values(rng, len);
+        let tabs = cfg.tables();
+        let plan = EncodePlan::new(&cfg);
+        let mut scratch = EncodeScratch::new();
+        let mut codes = vec![0u8; k];
+        for (bi, chunk) in v.chunks(k).enumerate() {
+            let want = quantize_block(chunk, &cfg, &tabs);
+            let out = &mut codes[..chunk.len()];
+            let (e, nano, fmt) = plan.quantize_block_into(chunk, &mut scratch, out);
+            if (e, nano, fmt) != (want.e_shared, want.nano, want.fmt_mx) {
+                return Err(format!(
+                    "{} block {bi}: meta ({e},{nano},{fmt}) != ({},{},{}) on {chunk:?}",
+                    cfg.name(),
+                    want.e_shared,
+                    want.nano,
+                    want.fmt_mx
+                ));
+            }
+            if out != &want.codes[..] {
+                return Err(format!(
+                    "{} block {bi}: codes {out:?} != {:?} on {chunk:?}",
+                    cfg.name(),
+                    want.codes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_legacy_round_trip_and_pack_equivalence() {
+    proptest::check_default("store-vs-legacy", |rng| {
+        let cfg = random_cfg(rng);
+        let rows = 1 + rng.below(4);
+        let cols = 1 + rng.below(70);
+        let mut t = Tensor2::zeros(rows, cols);
+        let vals = random_values(rng, rows * cols);
+        t.data.copy_from_slice(&vals);
+        let q = quantize_matrix(&t, &cfg);
+        // SoA store <-> legacy Vec<BlockCode> is lossless
+        let legacy = q.store.to_block_codes();
+        let back = BlockStore::from_block_codes(rows, cols, cfg.block_size, &legacy);
+        if back != q.store {
+            return Err(format!("{}: store round-trip diverged", cfg.name()));
+        }
+        // legacy per-block pack and the flat-store pack emit identical
+        // byte streams
+        let p_legacy = PackedMatrix::pack(rows, cols, &cfg, &legacy);
+        let p_store = PackedMatrix::from_store(rows, cols, &cfg, &q.store);
+        if p_legacy.scales != p_store.scales
+            || p_legacy.meta != p_store.meta
+            || p_legacy.payload != p_store.payload
+        {
+            return Err(format!("{}: packed streams diverged", cfg.name()));
+        }
+        // and the LUT decode of the packed form matches the store decode
+        let lut = DequantLut::new(&cfg);
+        let fast = dequantize_packed(&p_store, &lut, cfg.base == BaseFormat::Mx);
+        let reference = q.dequantize(&cfg);
+        for (i, (a, b)) in reference.data.iter().zip(&fast.data).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{}: dequant elem {i}: {a} vs {b}", cfg.name()));
+            }
+        }
+        Ok(())
+    });
+}
