@@ -10,6 +10,7 @@ use anyhow::Result;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::ServerHandle;
 use nxfp::coordinator::GenRequest;
 use nxfp::formats::NxConfig;
@@ -40,6 +41,7 @@ fn main() -> Result<()> {
             kv_cfg,
             4,
             Duration::from_millis(5),
+            SchedMode::Continuous,
         );
         let t0 = std::time::Instant::now();
         for (i, p) in probes.iter().enumerate() {
@@ -51,7 +53,8 @@ fn main() -> Result<()> {
             latencies.push(resp.latency);
         }
         let wall = t0.elapsed();
-        let m = server.shutdown()?;
+        let report = server.shutdown()?;
+        let m = report.metrics;
         latencies.sort();
         println!(
             "  {} requests, {} tokens in {:.2?}  ({:.1} tok/s, {} decode steps)",
@@ -74,6 +77,7 @@ fn main() -> Result<()> {
                 m.kv_savings() * 100.0
             );
         }
+        println!("  {}", report.serving.summary());
     }
     Ok(())
 }

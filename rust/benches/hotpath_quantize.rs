@@ -12,10 +12,12 @@
 //! must stay flat as the cache fills.
 //!
 //! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run (tiny sizes,
-//! short budgets) that still exercises every path.
+//! short budgets) that still exercises every path; set
+//! `NXFP_BENCH_JSON=<dir>` to append records to `BENCH_quantize.json`.
 
 use nxfp::bench_util::{
-    banner, bench, bench_series, mean_duration, quartile_growth, smoke_env, Table,
+    banner, bench, bench_series, emit_bench_json, mean_duration, quartile_growth, smoke_env,
+    Table,
 };
 use nxfp::formats::{quantize_block, BlockCode, BlockStore, EncodePlan, EncodeScratch, NxConfig};
 use nxfp::quant::kv_cache::KvCache;
@@ -77,6 +79,16 @@ fn main() {
                 format!("{eng_bps:.2}"),
                 format!("{:.2}x", eng_bps / ref_bps),
             ]);
+            emit_bench_json(
+                "quantize",
+                "matrix_encode",
+                &cfg.name(),
+                &[
+                    ("ref_mblk_s", ref_bps),
+                    ("engine_mblk_s", eng_bps),
+                    ("speedup", eng_bps / ref_bps),
+                ],
+            );
         }
     }
     t.print();
@@ -114,12 +126,19 @@ fn main() {
     for (label, series) in paths {
         let (_, _, growth) = quartile_growth(series);
         let total: Duration = series.iter().sum();
+        let rows_s = series.len() as f64 / total.as_secs_f64();
         kt.row(&[
             label.to_string(),
-            format!("{:.0}", series.len() as f64 / total.as_secs_f64()),
+            format!("{:.0}", rows_s),
             format!("{:.2}", mean_duration(series).as_secs_f64() * 1e6),
             format!("{growth:.2}x"),
         ]);
+        emit_bench_json(
+            "quantize",
+            label,
+            &cfg.name(),
+            &[("kv_rows_s", rows_s), ("growth", growth)],
+        );
     }
     kt.print();
     let rt: Duration = ref_series.iter().sum();

@@ -1,0 +1,151 @@
+//! Wave vs continuous scheduling under bursty, mixed-length traffic
+//! (paper §6 deployment at serving scale; ROADMAP "continuous batching").
+//!
+//! Runs without the PJRT runtime or artifacts: both schedulers drive the
+//! real `DecodeEngine` — persistent step slabs, per-slot `SlotKv` packed
+//! caches with incremental lane sync, greedy sampling — over the
+//! deterministic `SynthBackend`, whose per-step cost is fixed-shape
+//! `[B, L, S, D]` like the artifact. That makes the comparison purely
+//! about *scheduling*: a wave holds every lane until its longest request
+//! drains, while the continuous scheduler admits the next queued request
+//! into a lane the step it frees, so mixed-length bursts keep all lanes
+//! generating.
+//!
+//! Reports tok/s and per-request p50/p95 completion latency (arrival →
+//! response, queue wait included for both modes). With
+//! `NXFP_BENCH_JSON=<dir>`, appends records to `BENCH_scheduler.json`.
+//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
+
+use nxfp::bench_util::{banner, emit_bench_json, quantile_duration, smoke_env, Table};
+use nxfp::coordinator::scheduler::Scheduler;
+use nxfp::coordinator::{DecodeEngine, GenRequest, GenResponse, SynthBackend};
+use nxfp::formats::NxConfig;
+use nxfp::models::LmSpec;
+use nxfp::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+const MAX_BATCH: usize = 4;
+
+fn spec(seq_len: usize) -> LmSpec {
+    LmSpec { vocab: 64, d_model: 64, n_layers: 4, n_heads: 4, d_ff: 256, seq_len }
+}
+
+/// Bursty, mixed-length traffic: `bursts` batches of requests, each burst
+/// mixing short chats (short prompt, few tokens) with long generations.
+/// The mix is the adversarial case for wave scheduling: every wave that
+/// pairs a short and a long request idles lanes.
+fn traffic(bursts: usize, per_burst: usize, s: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    let mut reqs = Vec::new();
+    for b in 0..bursts {
+        for i in 0..per_burst {
+            let id = (b * per_burst + i) as u64;
+            let long = rng.below(2) == 1;
+            let (plen, max_new) = if long {
+                (s / 3, (s / 2).min(s - s / 3 - 2))
+            } else {
+                (2 + rng.below(3), 3 + rng.below(4))
+            };
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(60) as i32 + 1).collect();
+            reqs.push(GenRequest { id, prompt, max_new });
+        }
+    }
+    reqs
+}
+
+fn engine(seq_len: usize, kv: &NxConfig) -> DecodeEngine {
+    let sp = spec(seq_len);
+    DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), Some(kv.clone()), MAX_BATCH)
+}
+
+/// Wave mode: requests form FIFO waves of `MAX_BATCH`; each wave runs to
+/// completion. Per-request latency counts from the burst start (`t0`),
+/// like the continuous path, so queue wait is included for both.
+fn run_wave(engine: &mut DecodeEngine, reqs: &[GenRequest]) -> Vec<Duration> {
+    let t0 = Instant::now();
+    let mut lats = Vec::new();
+    for wave in reqs.chunks(MAX_BATCH) {
+        let waited = t0.elapsed();
+        for resp in engine.serve_wave(wave.to_vec()).expect("wave failed") {
+            lats.push(waited + resp.latency);
+        }
+    }
+    lats
+}
+
+/// Continuous mode: everything enqueued at burst start; the scheduler
+/// backfills lanes as slots finish. `GenResponse::latency` already counts
+/// from enqueue.
+fn run_continuous(engine: &mut DecodeEngine, reqs: &[GenRequest]) -> Vec<Duration> {
+    let mut sched = Scheduler::new(MAX_BATCH, Scheduler::DEFAULT_PROMOTE_AFTER);
+    for r in reqs {
+        sched.enqueue(r.clone());
+    }
+    engine
+        .serve_continuous(&mut sched)
+        .expect("continuous failed")
+        .iter()
+        .map(|r: &GenResponse| r.latency)
+        .collect()
+}
+
+fn main() {
+    banner("HotpathScheduler", "wave vs continuous batching under bursty traffic");
+    let (seq, bursts, per_burst) = if smoke_env() { (32, 2, 8) } else { (128, 4, 24) };
+    let kv = NxConfig::nxfp(4);
+    let mut rng = Rng::seeded(41);
+    let reqs = traffic(bursts, per_burst, seq, &mut rng);
+    println!(
+        "traffic: {} requests in {bursts} bursts, B={MAX_BATCH} L=4 S={seq} D=64, KV {}\n",
+        reqs.len(),
+        kv.name()
+    );
+
+    let mut t = Table::new(&[
+        "scheduler", "tok/s", "steps", "tokens", "p50 lat ms", "p95 lat ms", "kv savings",
+    ]);
+    let mut results = Vec::new();
+    for (label, continuous) in [("wave", false), ("continuous", true)] {
+        let mut eng = engine(seq, &kv);
+        let lats = if continuous {
+            run_continuous(&mut eng, &reqs)
+        } else {
+            run_wave(&mut eng, &reqs)
+        };
+        assert_eq!(lats.len(), reqs.len(), "{label}: lost responses");
+        let m = eng.metrics;
+        let (p50, p95) = (quantile_duration(&lats, 0.5), quantile_duration(&lats, 0.95));
+        t.row(&[
+            label.to_string(),
+            format!("{:.0}", m.tokens_per_sec()),
+            format!("{}", m.decode_steps),
+            format!("{}", m.tokens_generated),
+            format!("{:.2}", p50.as_secs_f64() * 1e3),
+            format!("{:.2}", p95.as_secs_f64() * 1e3),
+            format!("{:.1}%", m.kv_savings() * 100.0),
+        ]);
+        emit_bench_json(
+            "scheduler",
+            label,
+            &kv.name(),
+            &[
+                ("tok_s", m.tokens_per_sec()),
+                ("p50_ms", p50.as_secs_f64() * 1e3),
+                ("p95_ms", p95.as_secs_f64() * 1e3),
+                ("decode_steps", m.decode_steps as f64),
+                ("tokens", m.tokens_generated as f64),
+            ],
+        );
+        results.push((label, m.tokens_per_sec(), m.decode_steps));
+    }
+    t.print();
+
+    let (wave_tps, cont_tps) = (results[0].1, results[1].1);
+    println!(
+        "\ncontinuous serves the same {} requests in {} steps vs {} (wave), \
+         {:.2}x tok/s (acceptance: >= 1x on mixed-length bursty traffic)",
+        reqs.len(),
+        results[1].2,
+        results[0].2,
+        cont_tps / wave_tps
+    );
+}

@@ -15,9 +15,12 @@
 //! ≈1 means decode work no longer grows with total cache fill; the old
 //! full-redecode path grows without bound.
 //!
-//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
+//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run; set
+//! `NXFP_BENCH_JSON=<dir>` to append records to `BENCH_serving.json`.
 
-use nxfp::bench_util::{banner, bench_series, quartile_growth, smoke_env, Table};
+use nxfp::bench_util::{
+    banner, bench_series, emit_bench_json, quantile_duration, quartile_growth, smoke_env, Table,
+};
 use nxfp::coordinator::SlotKv;
 use nxfp::formats::NxConfig;
 use nxfp::quant::kv_cache::KvCache;
@@ -51,7 +54,7 @@ impl Slab {
     }
 }
 
-fn report(label: &str, t: &mut Table, series: &[Duration]) -> f64 {
+fn report(label: &str, cfg_name: &str, t: &mut Table, series: &[Duration]) -> f64 {
     let (first, last, growth) = quartile_growth(series);
     let total: Duration = series.iter().sum();
     let toks = (BSZ * series.len()) as f64 / total.as_secs_f64();
@@ -62,6 +65,16 @@ fn report(label: &str, t: &mut Table, series: &[Duration]) -> f64 {
         format!("{:.1}", last.as_secs_f64() * 1e6),
         format!("{:.2}x", growth),
     ]);
+    emit_bench_json(
+        "serving",
+        label,
+        cfg_name,
+        &[
+            ("tok_s", toks),
+            ("p95_step_ms", quantile_duration(series, 0.95).as_secs_f64() * 1e3),
+            ("growth", growth),
+        ],
+    );
     toks
 }
 
@@ -92,7 +105,7 @@ fn main() {
         }
         slab.materialize();
     });
-    let fp32_toks = report("fp32 baseline", &mut t, &fp32);
+    let fp32_toks = report("fp32 baseline", "fp32", &mut t, &fp32);
 
     // Quantized, incremental (the new serve_wave path): append + watermark
     // sync decodes only this step's rows.
@@ -110,7 +123,7 @@ fn main() {
         }
         slab.materialize();
     });
-    let inc_toks = report("quantized incr", &mut t, &inc);
+    let inc_toks = report("quantized incr", &cfg.name(), &mut t, &inc);
 
     // Quantized, full re-decode every step (the old behavior).
     let mut slab = Slab::new(seq);
@@ -129,7 +142,7 @@ fn main() {
         }
         slab.materialize();
     });
-    report("quantized full (old)", &mut t, &full);
+    report("quantized full (old)", &cfg.name(), &mut t, &full);
 
     t.print();
     println!(

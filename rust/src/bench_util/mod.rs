@@ -104,6 +104,72 @@ pub fn smoke_env() -> bool {
     std::env::var("NXFP_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
 }
 
+/// Append one machine-readable result record so the perf trajectory is
+/// tracked across PRs. When `NXFP_BENCH_JSON=<dir>` is set, the record is
+/// appended as one JSON line to `<dir>/BENCH_<bench>.json` (the directory
+/// is created if needed); without the env var this is a no-op. `fields`
+/// are numeric measurements (tok/s, p95 ms, speedups); non-finite values
+/// serialize as `null`.
+///
+/// ```json
+/// {"bench":"scheduler","name":"continuous","config":"NxFP4 (NM+AM+CR)",
+///  "smoke":false,"tok_s":1234.5,"p95_ms":8.1}
+/// ```
+pub fn emit_bench_json(bench: &str, name: &str, config: &str, fields: &[(&str, f64)]) {
+    let Ok(dir) = std::env::var("NXFP_BENCH_JSON") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let esc = |s: &str| -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    };
+    let mut line = format!(
+        "{{\"bench\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"smoke\":{}",
+        esc(bench),
+        esc(name),
+        esc(config),
+        smoke_env()
+    );
+    for (k, v) in fields {
+        if v.is_finite() {
+            line.push_str(&format!(",\"{}\":{v}", esc(k)));
+        } else {
+            line.push_str(&format!(",\"{}\":null", esc(k)));
+        }
+    }
+    line.push_str("}\n");
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"));
+    let write = || -> std::io::Result<()> {
+        std::fs::create_dir_all(&dir)?;
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        f.write_all(line.as_bytes())
+    };
+    if let Err(e) = write() {
+        eprintln!("[bench] could not append {path:?}: {e}");
+    }
+}
+
+/// p-quantile of a duration series (sorted copy; p in 0..=1).
+pub fn quantile_duration(samples: &[Duration], p: f64) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    let mut s = samples.to_vec();
+    s.sort();
+    let idx = ((p.clamp(0.0, 1.0) * s.len() as f64).ceil() as usize).saturating_sub(1);
+    s[idx.min(s.len() - 1)]
+}
+
 /// First-quarter mean, last-quarter mean, and their ratio ("growth") of a
 /// per-step duration series — the flatness metric the hot-path benches
 /// report: ≈1 means per-step cost does not grow with accumulated state.
@@ -211,6 +277,15 @@ mod tests {
         // tiny series degrade gracefully
         let (_, _, g) = quartile_growth(&[Duration::from_micros(5)]);
         assert!((g - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_duration_picks_order_stats() {
+        let s: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        assert_eq!(quantile_duration(&s, 0.5), Duration::from_micros(50));
+        assert_eq!(quantile_duration(&s, 0.95), Duration::from_micros(95));
+        assert_eq!(quantile_duration(&s, 1.0), Duration::from_micros(100));
+        assert_eq!(quantile_duration(&[], 0.5), Duration::ZERO);
     }
 
     #[test]

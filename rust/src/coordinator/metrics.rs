@@ -1,0 +1,238 @@
+//! Serving metrics: log-bucketed histograms for per-request latency, TTFT
+//! (time to first token), admission wait, and queue depth — the numbers
+//! that distinguish a scheduler that keeps lanes busy from one that
+//! merely completes requests.
+//!
+//! Histograms are fixed-size (no per-sample storage) so a server can run
+//! for millions of requests without growing: `record` is O(1), quantiles
+//! are read by walking the bucket counts. Bucket boundaries are
+//! geometric, so relative error is bounded by the per-decade resolution
+//! (~13% at the default 18 buckets/decade); exact `min`/`max`/`mean` are
+//! tracked alongside and quantile estimates are clamped into `[min, max]`.
+
+/// Fixed-size log-bucketed histogram for non-negative samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Lower bound of bucket 0; samples below it land in bucket 0.
+    lo: f64,
+    /// Geometric growth factor between bucket boundaries.
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Buckets span `[lo, hi]` geometrically; samples outside are clamped
+    /// into the first/last bucket (and still tracked exactly by min/max).
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && buckets >= 2);
+        Histogram {
+            lo,
+            growth: (hi / lo).powf(1.0 / buckets as f64),
+            counts: vec![0; buckets],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Latency-shaped default: 1 µs .. 1000 s in seconds.
+    pub fn for_seconds() -> Self {
+        Histogram::new(1e-6, 1e3, 162)
+    }
+
+    /// Count-shaped default (queue depths, wait steps): 1 .. 1e6.
+    pub fn for_counts() -> Self {
+        Histogram::new(1.0, 1e6, 108)
+    }
+
+    fn bucket(&self, v: f64) -> usize {
+        if v <= self.lo {
+            return 0;
+        }
+        let i = (v / self.lo).ln() / self.growth.ln();
+        (i as usize).min(self.counts.len() - 1)
+    }
+
+    /// Record one sample. Negative/NaN samples are clamped to zero.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let b = self.bucket(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum / self.total as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.max
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.min
+    }
+
+    /// Approximate `q`-quantile (`0.0..=1.0`): geometric midpoint of the
+    /// bucket holding the q-th sample, clamped into `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = self.lo * self.growth.powi(i as i32);
+                let est = lo * self.growth.sqrt();
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+}
+
+/// Per-request serving statistics, recorded by the engine/scheduler as
+/// slots move through their lifecycle. All durations in seconds.
+#[derive(Clone, Debug)]
+pub struct ServingMetrics {
+    /// Arrival (enqueue) → request completion.
+    pub latency: Histogram,
+    /// Arrival (enqueue) → first *generated* token sampled.
+    pub ttft: Histogram,
+    /// Engine steps a request spent queued before lane admission.
+    pub wait_steps: Histogram,
+    /// Queue depth sampled once per scheduler tick.
+    pub queue_depth: Histogram,
+    /// Requests admitted into a lane.
+    pub admitted: u64,
+    /// Admissions that used the anti-starvation promotion rule (an urgent
+    /// request overtook the throughput-greedy pick).
+    pub promoted: u64,
+    /// Requests rejected at validation (empty/over-long prompt).
+    pub rejected: u64,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            latency: Histogram::for_seconds(),
+            ttft: Histogram::for_seconds(),
+            wait_steps: Histogram::for_counts(),
+            queue_depth: Histogram::for_counts(),
+            admitted: 0,
+            promoted: 0,
+            rejected: 0,
+        }
+    }
+}
+
+impl ServingMetrics {
+    /// Human-readable one-block summary for logs and the CLI.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| s * 1e3;
+        format!(
+            "latency p50/p95 {:.1}/{:.1} ms  ttft p50/p95 {:.1}/{:.1} ms  \
+             queue depth mean/max {:.1}/{:.0}  admitted {} (promoted {}, rejected {})",
+            ms(self.latency.p50()),
+            ms(self.latency.p95()),
+            ms(self.ttft.p50()),
+            ms(self.ttft.p95()),
+            self.queue_depth.mean(),
+            self.queue_depth.max(),
+            self.admitted,
+            self.promoted,
+            self.rejected
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = Histogram::for_seconds();
+        for v in [0.001, 0.002, 0.004, 0.008, 0.016] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 0.0062).abs() < 1e-9);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.016);
+        // empty histogram degrades to zeros
+        let e = Histogram::for_counts();
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(0.5), 0.0);
+        assert_eq!(e.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotonic_and_bounded() {
+        let mut h = Histogram::for_seconds();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms uniform
+        }
+        let (p10, p50, p95, p99) = (h.quantile(0.10), h.p50(), h.p95(), h.quantile(0.99));
+        assert!(p10 <= p50 && p50 <= p95 && p95 <= p99);
+        assert!(p50 >= h.min() && p99 <= h.max());
+        // log-bucket resolution: within ~15% of the true quantile
+        assert!((p50 - 0.05).abs() / 0.05 < 0.15, "p50 {p50}");
+        assert!((p95 - 0.095).abs() / 0.095 < 0.15, "p95 {p95}");
+    }
+
+    #[test]
+    fn record_clamps_junk() {
+        let mut h = Histogram::for_counts();
+        h.record(-4.0);
+        h.record(f64::NAN);
+        h.record(1e12); // above hi -> last bucket, max tracked exactly
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e12);
+        assert!(h.quantile(1.0) <= 1e12);
+    }
+
+    #[test]
+    fn serving_metrics_summary_renders() {
+        let mut m = ServingMetrics::default();
+        m.latency.record(0.010);
+        m.ttft.record(0.004);
+        m.queue_depth.record(3.0);
+        m.admitted = 1;
+        let s = m.summary();
+        assert!(s.contains("latency"));
+        assert!(s.contains("admitted 1"));
+    }
+}

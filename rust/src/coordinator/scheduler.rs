@@ -1,0 +1,267 @@
+//! Continuous-batching scheduler: slot-level admission over a fixed pool
+//! of batch lanes.
+//!
+//! The decode artifact has a fixed batch shape `[B, L, S, D]`, so serving
+//! owns exactly `B` **lanes**. Wave scheduling (`DecodeEngine::serve_wave`)
+//! fills all lanes at once and holds every lane until the whole wave
+//! drains: a short request parks an idle lane for as long as the longest
+//! request in its wave keeps decoding. This module replaces the wave
+//! barrier with per-slot lifecycle:
+//!
+//! ```text
+//! Queued ── admit (free lane) ──► Prefilling ──► Decoding ──► Finished
+//!    ▲                                                           │
+//!    └────────────── lane freed, next request admitted ◄─────────┘
+//! ```
+//!
+//! The moment a slot finishes mid-step, its lane is zeroed and the next
+//! queued request is admitted into it on the following step — prefill of
+//! the newcomer proceeds *in the same batched steps* that keep decoding
+//! the other lanes, so no lane ever waits for a wave boundary.
+//!
+//! # Admission policy
+//!
+//! `pop_next` is throughput-greedy: it picks the **shortest-prompt**
+//! queued request (cheapest prefill, frees the lane for decode soonest;
+//! FIFO among equals). Greedy ordering alone starves long prompts under a
+//! stream of short ones, so every request carries its enqueue step and any
+//! request that has waited more than `promote_after` engine steps becomes
+//! **urgent**: urgent requests are admitted in strict FIFO order before
+//! any non-urgent one. The wait of a request enqueued behind `n` earlier
+//! arrivals is therefore bounded by `promote_after` plus the time for `n`
+//! earlier urgents and one lane to drain — no unbounded starvation.
+//!
+//! The scheduler owns queue and lanes but never touches tensors; the
+//! engine (`DecodeEngine::step_continuous`) drives admission, stepping,
+//! and metrics. Lane *contents* live in the engine's step slabs; moving a
+//! slot between lanes is `DecodeEngine::move_lane` (slab copy) with
+//! `SlotKv::resync_full_into` (packed re-decode) as the fallback.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::{GenRequest, Slot};
+
+/// Which serving loop the front-end drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Legacy wave-at-a-time: batch up to `B` requests, run to completion.
+    Wave,
+    /// Slot-level continuous batching through [`Scheduler`].
+    Continuous,
+}
+
+impl std::str::FromStr for SchedMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_lowercase().as_str() {
+            "wave" => Ok(SchedMode::Wave),
+            "continuous" | "cont" => Ok(SchedMode::Continuous),
+            other => Err(format!("unknown scheduler mode {other} (wave|continuous)")),
+        }
+    }
+}
+
+/// A request waiting for a lane.
+struct Queued {
+    req: GenRequest,
+    arrival: Instant,
+    enq_step: u64,
+}
+
+/// What `pop_next` decided, so the engine can account promotions.
+pub struct Admission {
+    pub req: GenRequest,
+    pub arrival: Instant,
+    /// Engine steps spent in the queue.
+    pub waited_steps: u64,
+    /// True when the anti-starvation rule overrode the greedy pick.
+    pub promoted: bool,
+}
+
+/// Admission queue + fixed lane pool. See the module docs for the policy.
+pub struct Scheduler {
+    queue: VecDeque<Queued>,
+    slots: Vec<Option<Slot>>,
+    promote_after: u64,
+    /// Engine steps ticked so far (the clock the promotion rule runs on).
+    step: u64,
+    /// Requests enqueued over the scheduler's lifetime.
+    pub enqueued: u64,
+}
+
+impl Scheduler {
+    /// Default anti-starvation bound: a queued request overtakes shorter
+    /// newcomers after this many engine steps.
+    pub const DEFAULT_PROMOTE_AFTER: u64 = 64;
+
+    pub fn new(max_batch: usize, promote_after: u64) -> Self {
+        assert!(max_batch > 0);
+        Scheduler {
+            queue: VecDeque::new(),
+            slots: (0..max_batch).map(|_| None).collect(),
+            promote_after: promote_after.max(1),
+            step: 0,
+            enqueued: 0,
+        }
+    }
+
+    /// Add a request to the admission queue (stamps arrival time and the
+    /// current engine step for the promotion clock).
+    pub fn enqueue(&mut self, req: GenRequest) {
+        self.enqueued += 1;
+        self.queue.push_back(Queued { req, arrival: Instant::now(), enq_step: self.step });
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Lanes currently running a slot.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Anything left to do (queued or in-flight)?
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(Option::is_some)
+    }
+
+    /// Index of a free lane, if any.
+    pub fn free_lane(&self) -> Option<usize> {
+        self.slots.iter().position(Option::is_none)
+    }
+
+    /// Place an admitted slot into lane `b` (must be free).
+    pub fn place(&mut self, b: usize, slot: Slot) {
+        debug_assert!(self.slots[b].is_none(), "lane {b} already occupied");
+        self.slots[b] = Some(slot);
+    }
+
+    /// The lane pool, for the engine's batched step.
+    pub fn slots_mut(&mut self) -> &mut [Option<Slot>] {
+        &mut self.slots
+    }
+
+    pub fn slots(&self) -> &[Option<Slot>] {
+        &self.slots
+    }
+
+    /// Pick the next request to admit: oldest urgent request if any has
+    /// waited past `promote_after`, else the shortest prompt (FIFO among
+    /// equals — stable because the scan keeps strictly-earlier entries on
+    /// ties).
+    pub fn pop_next(&mut self) -> Option<Admission> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let urgent = self
+            .queue
+            .iter()
+            .position(|q| self.step.saturating_sub(q.enq_step) >= self.promote_after);
+        let greedy = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, q)| (q.req.prompt.len(), *i))
+            .map(|(i, _)| i)
+            .unwrap();
+        let (idx, promoted) = match urgent {
+            Some(u) => (u, u != greedy),
+            None => (greedy, false),
+        };
+        let q = self.queue.remove(idx).unwrap();
+        Some(Admission {
+            waited_steps: self.step.saturating_sub(q.enq_step),
+            req: q.req,
+            arrival: q.arrival,
+            promoted,
+        })
+    }
+
+    /// Advance the promotion clock one engine step and report the sampled
+    /// queue depth (the engine records it).
+    pub fn tick(&mut self) -> usize {
+        self.step += 1;
+        self.queue.len()
+    }
+
+    /// Current engine-step clock.
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize) -> GenRequest {
+        GenRequest { id, prompt: vec![1; prompt_len], max_new: 4 }
+    }
+
+    #[test]
+    fn shortest_prompt_first_fifo_on_ties() {
+        let mut s = Scheduler::new(2, 100);
+        s.enqueue(req(0, 8));
+        s.enqueue(req(1, 3));
+        s.enqueue(req(2, 3));
+        s.enqueue(req(3, 1));
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop_next().map(|a| a.req.id)).collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn promotion_overrides_greedy_after_bound() {
+        let mut s = Scheduler::new(1, 5);
+        s.enqueue(req(0, 50)); // long prompt: greedy would never pick it
+        for t in 0..6 {
+            s.enqueue(req(10 + t, 1));
+            s.tick();
+        }
+        // 6 steps elapsed >= promote_after 5: the long request is urgent
+        let a = s.pop_next().unwrap();
+        assert_eq!(a.req.id, 0);
+        assert!(a.promoted);
+        assert!(a.waited_steps >= 5);
+        // remaining shorts drain greedily (FIFO among equals), unpromoted
+        // until they cross the bound themselves
+        let b = s.pop_next().unwrap();
+        assert_eq!(b.req.id, 10);
+    }
+
+    #[test]
+    fn urgent_requests_drain_fifo() {
+        let mut s = Scheduler::new(1, 2);
+        s.enqueue(req(0, 9));
+        s.enqueue(req(1, 5));
+        for _ in 0..3 {
+            s.tick();
+        }
+        // both urgent: strict FIFO, not shortest-first
+        assert_eq!(s.pop_next().unwrap().req.id, 0);
+        assert_eq!(s.pop_next().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn lane_pool_accounting() {
+        let mut s = Scheduler::new(3, 10);
+        assert_eq!(s.free_lane(), Some(0));
+        assert_eq!(s.active(), 0);
+        assert!(!s.has_work());
+        s.enqueue(req(0, 1));
+        assert!(s.has_work());
+        assert_eq!(s.queue_depth(), 1);
+        assert_eq!(s.tick(), 1);
+        assert_eq!(s.step_count(), 1);
+    }
+
+    #[test]
+    fn mode_parses() {
+        assert_eq!("wave".parse::<SchedMode>().unwrap(), SchedMode::Wave);
+        assert_eq!("Continuous".parse::<SchedMode>().unwrap(), SchedMode::Continuous);
+        assert!("waves".parse::<SchedMode>().is_err());
+    }
+}

@@ -1,11 +1,22 @@
 //! Threaded serving front-end: a request queue feeding the batched decode
 //! engine on a dedicated worker thread (std::thread + mpsc; tokio is
-//! unavailable offline). Requests accumulate into waves of up to
-//! `max_batch`; the worker drains the queue between waves so bursty clients
-//! batch naturally. Within a wave the engine keeps per-slot staging
-//! buffers and dequantizes the packed KV caches incrementally (see
-//! [`super::SlotKv`]), so per-step decode work does not grow with cache
-//! fill. Set `NXFP_SERVE_LOG=1` to log per-wave throughput.
+//! unavailable offline).
+//!
+//! Two scheduling modes (see [`SchedMode`] and `ARCHITECTURE.md`):
+//!
+//! * **Continuous** (default): requests stream into a
+//!   [`Scheduler`] admission queue; the worker drains arrivals between
+//!   engine steps and the scheduler admits into any lane the moment it
+//!   frees — no wave barrier, so a short request never parks a lane while
+//!   a long neighbour keeps decoding.
+//! * **Wave** (legacy): requests accumulate into waves of up to
+//!   `max_batch` within `batch_window`, and each wave runs to completion
+//!   before the next starts.
+//!
+//! Within a step the engine dequantizes the packed KV caches incrementally
+//! straight into each slot's lane (see [`super::SlotKv`]), so per-step
+//! decode work does not grow with cache fill. Set `NXFP_SERVE_LOG=1` to
+//! log per-wave (wave mode) or periodic (continuous mode) throughput.
 
 use anyhow::Result;
 use std::path::PathBuf;
@@ -13,6 +24,8 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::metrics::ServingMetrics;
+use super::scheduler::{SchedMode, Scheduler};
 use super::{DecodeEngine, GenRequest, GenResponse, Metrics};
 use crate::formats::NxConfig;
 use crate::models::{Checkpoint, LmSpec};
@@ -23,16 +36,23 @@ enum Msg {
     Shutdown,
 }
 
+/// Final accounting a worker returns at shutdown.
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub serving: ServingMetrics,
+}
+
 /// Handle to a running server worker.
 pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
     rx: mpsc::Receiver<GenResponse>,
-    join: Option<JoinHandle<Result<Metrics>>>,
+    join: Option<JoinHandle<Result<ServeReport>>>,
 }
 
 impl ServerHandle {
     /// Spawn the worker (builds the PJRT runtime on its own thread: the
-    /// client is not Send).
+    /// client is not Send). `batch_window` only applies to wave mode;
+    /// continuous admission happens between engine steps.
     pub fn spawn(
         artifacts_dir: PathBuf,
         spec: LmSpec,
@@ -40,69 +60,20 @@ impl ServerHandle {
         kv_cfg: Option<NxConfig>,
         max_batch: usize,
         batch_window: Duration,
+        mode: SchedMode,
     ) -> ServerHandle {
         let (tx, worker_rx) = mpsc::channel::<Msg>();
         let (resp_tx, rx) = mpsc::channel::<GenResponse>();
-        let join = std::thread::spawn(move || -> Result<Metrics> {
+        let join = std::thread::spawn(move || -> Result<ServeReport> {
             let mut rt = Runtime::cpu(artifacts_dir)?;
             let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, max_batch)?;
-            let mut pending: Vec<GenRequest> = Vec::new();
-            let mut shutting_down = false;
-            let log_waves = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
-            loop {
-                // block for the first request, then drain within the window
-                if pending.is_empty() && !shutting_down {
-                    match worker_rx.recv() {
-                        Ok(Msg::Req(r)) => pending.push(r),
-                        Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
-                    }
+            let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
+            match mode {
+                SchedMode::Continuous => {
+                    run_continuous(&mut engine, &worker_rx, &resp_tx, log)
                 }
-                if !shutting_down {
-                    let deadline = std::time::Instant::now() + batch_window;
-                    while pending.len() < max_batch {
-                        let left = deadline.saturating_duration_since(std::time::Instant::now());
-                        match worker_rx.recv_timeout(left) {
-                            Ok(Msg::Req(r)) => pending.push(r),
-                            Ok(Msg::Shutdown) => {
-                                shutting_down = true;
-                                break;
-                            }
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                shutting_down = true;
-                                break;
-                            }
-                        }
-                    }
-                }
-                if pending.is_empty() && shutting_down {
-                    return Ok(engine.metrics);
-                }
-                let wave: Vec<GenRequest> =
-                    pending.drain(..pending.len().min(max_batch)).collect();
-                if wave.is_empty() {
-                    continue;
-                }
-                let wave_size = wave.len();
-                let before = engine.metrics;
-                for resp in engine.serve_wave(wave)? {
-                    let _ = resp_tx.send(resp);
-                }
-                if log_waves {
-                    let m = engine.metrics;
-                    let tokens = m.tokens_generated - before.tokens_generated;
-                    let wall = m.wall.saturating_sub(before.wall);
-                    let savings = if m.kv_bits_fp16 > 0 {
-                        format!(", kv savings {:.1}% (cumulative)", m.kv_savings() * 100.0)
-                    } else {
-                        String::new()
-                    };
-                    eprintln!(
-                        "[serve] wave of {wave_size}: {} steps, {tokens} tokens, \
-                         {:.1} tok/s{savings}",
-                        m.decode_steps - before.decode_steps,
-                        tokens as f64 / wall.as_secs_f64().max(1e-9)
-                    );
+                SchedMode::Wave => {
+                    run_waves(&mut engine, &worker_rx, &resp_tx, max_batch, batch_window, log)
                 }
             }
         });
@@ -122,13 +93,152 @@ impl ServerHandle {
         self.rx.recv_timeout(d).ok()
     }
 
-    /// Finish outstanding work and return aggregate metrics.
-    pub fn shutdown(mut self) -> Result<Metrics> {
+    /// Finish outstanding work and return the final accounting.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
         let _ = self.tx.send(Msg::Shutdown);
         self.join
             .take()
             .expect("already joined")
             .join()
             .map_err(|_| anyhow::anyhow!("server worker panicked"))?
+    }
+}
+
+/// Continuous worker loop: drain arrivals into the scheduler between
+/// engine steps; block only when fully idle.
+fn run_continuous(
+    engine: &mut DecodeEngine,
+    worker_rx: &mpsc::Receiver<Msg>,
+    resp_tx: &mpsc::Sender<GenResponse>,
+    log: bool,
+) -> Result<ServeReport> {
+    let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
+    let mut shutting_down = false;
+    // deterministic rejections answer at enqueue time instead of queuing
+    // behind real work (admit() re-validates for direct Scheduler users)
+    let accept = |engine: &mut DecodeEngine, r: GenRequest, sched: &mut Scheduler| {
+        match engine.validate(&r) {
+            Some(resp) => {
+                let _ = resp_tx.send(resp);
+            }
+            None => sched.enqueue(r),
+        }
+    };
+    loop {
+        // fully idle and not shutting down: block for the next message
+        if !sched.has_work() {
+            if shutting_down {
+                if log {
+                    eprintln!("[serve] continuous summary: {}", engine.serving.summary());
+                }
+                let report =
+                    ServeReport { metrics: engine.metrics, serving: engine.serving.clone() };
+                return Ok(report);
+            }
+            match worker_rx.recv() {
+                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched),
+                Ok(Msg::Shutdown) | Err(_) => {
+                    shutting_down = true;
+                    continue;
+                }
+            }
+        }
+        // non-blocking drain: arrivals join the queue between steps
+        loop {
+            match worker_rx.try_recv() {
+                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched),
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+        for resp in engine.step_continuous(&mut sched)? {
+            if log {
+                eprintln!(
+                    "[serve] req {} done: {} tokens in {:?} (queue {}, active {})",
+                    resp.id,
+                    resp.generated,
+                    resp.latency,
+                    sched.queue_depth(),
+                    sched.active()
+                );
+            }
+            let _ = resp_tx.send(resp);
+        }
+    }
+}
+
+/// Legacy wave worker loop: accumulate up to `max_batch` requests within
+/// `batch_window`, then run the wave to completion.
+fn run_waves(
+    engine: &mut DecodeEngine,
+    worker_rx: &mpsc::Receiver<Msg>,
+    resp_tx: &mpsc::Sender<GenResponse>,
+    max_batch: usize,
+    batch_window: Duration,
+    log: bool,
+) -> Result<ServeReport> {
+    let mut pending: Vec<GenRequest> = Vec::new();
+    let mut shutting_down = false;
+    loop {
+        // block for the first request, then drain within the window
+        if pending.is_empty() && !shutting_down {
+            match worker_rx.recv() {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+            }
+        }
+        if !shutting_down {
+            let deadline = std::time::Instant::now() + batch_window;
+            while pending.len() < max_batch {
+                let left = deadline.saturating_duration_since(std::time::Instant::now());
+                match worker_rx.recv_timeout(left) {
+                    Ok(Msg::Req(r)) => pending.push(r),
+                    Ok(Msg::Shutdown) => {
+                        shutting_down = true;
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.is_empty() && shutting_down {
+            return Ok(ServeReport { metrics: engine.metrics, serving: engine.serving.clone() });
+        }
+        let wave: Vec<GenRequest> = pending.drain(..pending.len().min(max_batch)).collect();
+        if wave.is_empty() {
+            continue;
+        }
+        let wave_size = wave.len();
+        let before = engine.metrics;
+        for resp in engine.serve_wave(wave)? {
+            let _ = resp_tx.send(resp);
+        }
+        if log {
+            let m = engine.metrics;
+            let tokens = m.tokens_generated - before.tokens_generated;
+            let wall = m.wall.saturating_sub(before.wall);
+            let savings = if m.kv_bits_fp16 > 0 {
+                format!(", kv savings {:.1}% (cumulative)", m.kv_savings() * 100.0)
+            } else {
+                String::new()
+            };
+            eprintln!(
+                "[serve] wave of {wave_size}: {} steps, {tokens} tokens, \
+                 {:.1} tok/s{savings}",
+                m.decode_steps - before.decode_steps,
+                tokens as f64 / wall.as_secs_f64().max(1e-9)
+            );
+        }
     }
 }

@@ -7,9 +7,9 @@
 pub mod perplexity;
 pub mod reasoning;
 
-use crate::formats::NxConfig;
+use crate::formats::{EncodePlan, NxConfig};
 use crate::models::Checkpoint;
-use crate::quant::quantize_matrix;
+use crate::quant::quantize_matrix_with;
 
 pub use perplexity::{perplexity, Perplexity};
 pub use reasoning::reasoning_accuracy;
@@ -17,15 +17,21 @@ pub use reasoning::reasoning_accuracy;
 /// Direct-cast a checkpoint: quantize-dequantize every quantizable weight
 /// under `cfg`, leaving embeddings/norm gains in full precision (the paper's
 /// weight-only setting). Returns the degraded checkpoint the eval graph sees.
+///
+/// One [`EncodePlan`] is built for the whole checkpoint and threaded
+/// through every per-tensor `quantize_matrix` call — plan construction
+/// (threshold bisection over the f32 bit space) is per-config work, not
+/// per-tensor work.
 pub fn quantize_checkpoint(
     ck: &Checkpoint,
     spec_quantizable: &[String],
     cfg: &NxConfig,
 ) -> Checkpoint {
+    let plan = EncodePlan::new(cfg);
     let mut out = ck.clone();
     for name in spec_quantizable {
         if let Some(t) = out.get_mut(name) {
-            *t = quantize_matrix(t, cfg).dequantize(cfg);
+            *t = quantize_matrix_with(t, cfg, &plan).dequantize(cfg);
         }
     }
     out

@@ -33,5 +33,5 @@ pub mod train;
 pub mod util;
 
 pub use formats::{BlockFormat, BlockStore, ElementFormat, EncodePlan, EncodeScratch, NxConfig};
-pub use quant::{quantize_matrix, quantize_vector, QuantizedMatrix};
+pub use quant::{quantize_matrix, quantize_matrix_with, quantize_vector, QuantizedMatrix};
 pub use tensor::Tensor2;

@@ -14,6 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::ServerHandle;
 use nxfp::coordinator::GenRequest;
 use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
@@ -178,6 +179,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let spec = LmSpec::small();
     let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
     let kv = parse_format(&a.get_str("kv-format"))?;
+    let mode: SchedMode = a.get_parsed("sched")?;
     let n_req = a.get_usize("requests")?;
     let max_new = a.get_usize("max-new")?;
     let corpus = default_corpus();
@@ -189,6 +191,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         kv.clone(),
         a.get_usize("max-batch")?,
         Duration::from_millis(5),
+        mode,
     );
     for (i, p) in probes.iter().enumerate() {
         server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new });
@@ -197,18 +200,20 @@ fn cmd_serve(a: &Args) -> Result<()> {
         let resp = server.recv().ok_or_else(|| anyhow!("server dropped"))?;
         println!("req {:>3}  {} tokens in {:?}", resp.id, resp.generated, resp.latency);
     }
-    let m = server.shutdown()?;
+    let report = server.shutdown()?;
+    let m = report.metrics;
     let savings = if m.kv_bits_fp16 > 0 {
         format!(", kv savings {:.1}%", m.kv_savings() * 100.0)
     } else {
         String::new()
     };
     println!(
-        "served {} reqs, {} tokens, {:.1} tok/s{savings}",
+        "served {} reqs ({mode:?}), {} tokens, {:.1} tok/s{savings}",
         m.requests,
         m.tokens_generated,
         m.tokens_per_sec()
     );
+    println!("{}", report.serving.summary());
     Ok(())
 }
 
@@ -311,9 +316,10 @@ fn main() {
         "serve" => common(Args::new("nxfp serve", "batched decoding with quantized KV"))
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("kv-format", Some("nxfp4"), "KV-cache storage format")
+            .opt("sched", Some("continuous"), "scheduler: continuous|wave")
             .opt("requests", Some("16"), "number of requests")
             .opt("max-new", Some("32"), "tokens to generate per request")
-            .opt("max-batch", Some("4"), "wave batch size (must match artifact)")
+            .opt("max-batch", Some("4"), "batch lanes (must match artifact)")
             .parse(rest)
             .map_err(anyhow::Error::from)
             .and_then(|a| cmd_serve(&a)),

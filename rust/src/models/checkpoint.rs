@@ -73,16 +73,19 @@ impl Checkpoint {
     /// (paper §5 Algorithm 1 → §6 storage layout): each weight is
     /// quantized through the allocation-free engine into a flat
     /// `BlockStore` and bit-packed without ever materializing per-block
-    /// heap objects. Names missing from the checkpoint are skipped.
+    /// heap objects. One `EncodePlan` is shared across all tensors (plan
+    /// construction is per-config work). Names missing from the
+    /// checkpoint are skipped.
     pub fn direct_cast_packed(
         &self,
         names: &[String],
         cfg: &NxConfig,
     ) -> Vec<(String, PackedMatrix)> {
+        let plan = crate::formats::EncodePlan::new(cfg);
         self.params
             .iter()
             .filter(|(n, _)| names.contains(n))
-            .map(|(n, t)| (n.clone(), crate::quant::quantize_matrix(t, cfg).pack(cfg)))
+            .map(|(n, t)| (n.clone(), crate::quant::quantize_matrix_with(t, cfg, &plan).pack(cfg)))
             .collect()
     }
 

@@ -18,13 +18,23 @@
 //! only the rows appended since the previous call into caller-owned
 //! staging tensors and advances the watermark. The contract is:
 //!
-//! * the caller passes the *same* staging tensors (or bit-identical
-//!   copies) across calls and does not overwrite previously decoded rows;
-//! * rows `0..watermark()` in the staging tensors are then always
+//! * the caller passes the *same* destination buffer (or a bit-identical
+//!   copy, e.g. after a lane-to-lane slab move) across calls and does not
+//!   overwrite previously decoded rows;
+//! * rows `0..watermark()` in the destination are then always
 //!   bit-identical to what a fresh [`KvCache::dequantize`] would produce
 //!   (both paths share one decode routine), and padding rows stay zero;
+//! * if the destination's contents are lost — the slot was reassigned to a
+//!   lane whose previous contents are unknown — call
+//!   [`KvCache::reset_watermark`] first and the next
+//!   [`KvCache::dequantize_into_slab`] re-decodes every row;
 //! * [`KvCache::clear`] resets both the cache and the watermark (the
-//!   caller must also zero or discard its staging tensors).
+//!   caller must also zero or discard its staging buffers).
+//!
+//! Since PR 3 the decode destination is a raw `&mut [f32]` slab — the
+//! serving coordinator points it directly at the slot's lane of the batched
+//! step tensors, so there is no intermediate staging mirror (see
+//! `coordinator::SlotKv`).
 
 use crate::dequant::DequantLut;
 use crate::formats::{BaseFormat, BlockStore, EncodePlan, EncodeScratch, NxConfig};
@@ -95,13 +105,14 @@ impl KvCache {
         self.clean
     }
 
-    /// Shared decode routine: rows `from..to` of one stream into `out`.
-    /// Both the full and the incremental path go through here, which is
-    /// what makes them bit-identical by construction.
-    fn dequant_rows(&self, store: &BlockStore, out: &mut Tensor2, from: usize, to: usize) {
+    /// Shared decode routine: rows `from..to` of one stream into the
+    /// row-major `out` slab (`dim` floats per row). Both the full and the
+    /// incremental path go through here, which is what makes them
+    /// bit-identical by construction.
+    fn dequant_rows(&self, store: &BlockStore, out: &mut [f32], from: usize, to: usize) {
         let base_mx = self.cfg.base == BaseFormat::Mx;
         for r in from..to {
-            let row = out.row_mut(r);
+            let row = &mut out[r * self.dim..(r + 1) * self.dim];
             for (bi, chunk) in row.chunks_mut(self.cfg.block_size).enumerate() {
                 let flat = r * self.blocks_per_row + bi;
                 let fmt_mx = if self.cfg.enable_am {
@@ -125,24 +136,41 @@ impl KvCache {
         assert!(pad_len >= self.len);
         let mut k = Tensor2::zeros(pad_len, self.dim);
         let mut v = Tensor2::zeros(pad_len, self.dim);
-        self.dequant_rows(&self.k_store, &mut k, 0, self.len);
-        self.dequant_rows(&self.v_store, &mut v, 0, self.len);
+        self.dequant_rows(&self.k_store, &mut k.data, 0, self.len);
+        self.dequant_rows(&self.v_store, &mut v.data, 0, self.len);
         (k, v)
     }
 
-    /// Incrementally decode rows appended since the previous call into the
-    /// caller's staging tensors (`rows >= len`, `cols == dim`, padding
-    /// pre-zeroed), advance the watermark, and return the decoded row
-    /// range. See the module docs for the full contract.
-    pub fn dequantize_into(&mut self, k: &mut Tensor2, v: &mut Tensor2) -> std::ops::Range<usize> {
-        assert!(k.rows >= self.len && v.rows >= self.len, "staging too short");
-        assert_eq!(k.cols, self.dim);
-        assert_eq!(v.cols, self.dim);
+    /// Incrementally decode rows appended since the previous call straight
+    /// into the caller's row-major `[rows >= len, dim]` slabs (a batch-lane
+    /// layer region, padding pre-zeroed), advance the watermark, and return
+    /// the decoded row range. See the module docs for the full contract.
+    pub fn dequantize_into_slab(&mut self, k: &mut [f32], v: &mut [f32]) -> std::ops::Range<usize> {
+        let need = self.len * self.dim;
+        assert!(k.len() >= need && v.len() >= need, "slab too short");
         let (from, to) = (self.clean, self.len);
         self.dequant_rows(&self.k_store, k, from, to);
         self.dequant_rows(&self.v_store, v, from, to);
         self.clean = to;
         from..to
+    }
+
+    /// Tensor-shaped convenience wrapper over
+    /// [`KvCache::dequantize_into_slab`] (tests and non-lane callers).
+    pub fn dequantize_into(&mut self, k: &mut Tensor2, v: &mut Tensor2) -> std::ops::Range<usize> {
+        assert!(k.rows >= self.len && v.rows >= self.len, "staging too short");
+        assert_eq!(k.cols, self.dim);
+        assert_eq!(v.cols, self.dim);
+        self.dequantize_into_slab(&mut k.data, &mut v.data)
+    }
+
+    /// Forget decode progress: the next [`KvCache::dequantize_into_slab`]
+    /// re-decodes every stored row. The lane-reassignment fallback — when a
+    /// slot moves to a lane whose previous contents are unknown and a
+    /// lane-to-lane slab copy was not possible, the packed streams are the
+    /// only source of truth left.
+    pub fn reset_watermark(&mut self) {
+        self.clean = 0;
     }
 
     /// Bit-true stored footprint of the cache (both K and V).
@@ -248,6 +276,33 @@ mod tests {
             assert!(cache.dequantize_into(&mut k_stage, &mut v_stage).is_empty());
             assert_eq!(k_stage.data, before);
         }
+    }
+
+    #[test]
+    fn reset_watermark_redecodes_everything() {
+        // lane-reassignment fallback: after a reset, the next incremental
+        // decode must rebuild the full prefix bit-identically from packed
+        let mut rng = Rng::seeded(75);
+        let (dim, pad) = (40, 8);
+        let mut cache = KvCache::new(dim, NxConfig::nxfp(4));
+        let mut k_lane = vec![0.0f32; pad * dim];
+        let mut v_lane = vec![0.0f32; pad * dim];
+        for _ in 0..6 {
+            let k: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            cache.append(&k, &v);
+        }
+        cache.dequantize_into_slab(&mut k_lane, &mut v_lane);
+        assert_eq!(cache.watermark(), 6);
+        // slot moved to a lane with unknown contents: reset + re-decode
+        let mut new_k = vec![0.0f32; pad * dim];
+        let mut new_v = vec![0.0f32; pad * dim];
+        cache.reset_watermark();
+        assert_eq!(cache.watermark(), 0);
+        let range = cache.dequantize_into_slab(&mut new_k, &mut new_v);
+        assert_eq!(range, 0..6);
+        assert_eq!(new_k, k_lane);
+        assert_eq!(new_v, v_lane);
     }
 
     #[test]

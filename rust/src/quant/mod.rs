@@ -89,8 +89,19 @@ pub fn quantize_vector(v: &[f32], cfg: &NxConfig) -> QuantizedVector {
 /// available cores for large tensors; thread stripes write disjoint ranges
 /// of the pre-sized [`BlockStore`], so the parallel path allocates nothing
 /// per block and collects nothing afterwards.
+///
+/// Builds a fresh [`EncodePlan`] — checkpoint-scale callers quantizing many
+/// tensors under one config should build the plan once and use
+/// [`quantize_matrix_with`] instead.
 pub fn quantize_matrix(t: &Tensor2, cfg: &NxConfig) -> QuantizedMatrix {
-    let plan = EncodePlan::new(cfg);
+    quantize_matrix_with(t, cfg, &EncodePlan::new(cfg))
+}
+
+/// [`quantize_matrix`] with a caller-owned [`EncodePlan`] (one plan per
+/// config instead of one per tensor; the plan is read-only and shared by
+/// every thread stripe). `plan` must have been built for `cfg`.
+pub fn quantize_matrix_with(t: &Tensor2, cfg: &NxConfig, plan: &EncodePlan) -> QuantizedMatrix {
+    debug_assert_eq!(plan.cfg.name(), cfg.name(), "plan built for a different config");
     let mut store = BlockStore::with_rows(t.rows, t.cols, cfg.block_size);
     let bpr = store.blocks_per_row();
     let n_threads = std::thread::available_parallelism()
@@ -113,7 +124,6 @@ pub fn quantize_matrix(t: &Tensor2, cfg: &NxConfig) -> QuantizedMatrix {
     }
     let chunk_rows = t.rows.div_ceil(n_threads);
     std::thread::scope(|s| {
-        let plan = &plan;
         let code_chunks = store.codes.chunks_mut(chunk_rows * t.cols);
         let e_chunks = store.e_shared.chunks_mut(chunk_rows * bpr);
         let nano_chunks = store.nano.chunks_mut(chunk_rows * bpr);
@@ -187,6 +197,21 @@ mod tests {
                 let b = crate::formats::quantize_block(chunk, &cfg, &tabs);
                 assert_eq!(q.store.block(r * bpr + bi), b);
             }
+        }
+    }
+
+    #[test]
+    fn shared_plan_matches_per_tensor_plan() {
+        // one EncodePlan threaded across many tensors must produce the
+        // exact stores a fresh per-tensor plan would
+        let mut rng = Rng::seeded(37);
+        let cfg = NxConfig::nxfp(5);
+        let plan = crate::formats::EncodePlan::new(&cfg);
+        for rows in [1usize, 7, 33] {
+            let t = Tensor2::random_normal(rows, 50, 0.8, &mut rng);
+            let a = quantize_matrix(&t, &cfg);
+            let b = quantize_matrix_with(&t, &cfg, &plan);
+            assert_eq!(a.store, b.store, "rows={rows}");
         }
     }
 

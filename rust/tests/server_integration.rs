@@ -5,6 +5,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
+use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::ServerHandle;
 use nxfp::coordinator::GenRequest;
 use nxfp::formats::NxConfig;
@@ -30,8 +31,9 @@ fn server_completes_all_requests_and_batches() {
         Some(NxConfig::nxfp(4)),
         4,
         Duration::from_millis(20),
+        SchedMode::Continuous,
     );
-    let n_req = 10usize; // forces at least 3 waves at max_batch 4
+    let n_req = 10usize; // more requests than lanes: admission must churn
     for i in 0..n_req {
         server.submit(GenRequest {
             id: i as u64,
@@ -47,7 +49,8 @@ fn server_completes_all_requests_and_batches() {
         assert!(seen.insert(resp.id), "duplicate response {}", resp.id);
     }
     assert_eq!(seen.len(), n_req);
-    let m = server.shutdown().unwrap();
+    let report = server.shutdown().unwrap();
+    let m = report.metrics;
     assert_eq!(m.requests as usize, n_req);
     assert!(m.tokens_generated >= (3 * n_req) as u64);
     // batching actually happened: fewer decode steps than tokens+prompts
@@ -55,6 +58,10 @@ fn server_completes_all_requests_and_batches() {
     assert!(m.decode_steps < (m.tokens_generated + 3 * n_req as u64));
     assert!(m.kv_savings() > 0.5, "kv savings {}", m.kv_savings());
     assert!(m.tokens_per_sec() > 0.0);
+    // serving histograms saw every admitted request
+    assert_eq!(report.serving.admitted as usize, n_req);
+    assert_eq!(report.serving.latency.count() as usize, n_req);
+    assert_eq!(report.serving.rejected, 0);
 }
 
 #[test]
@@ -75,7 +82,8 @@ fn server_shutdown_without_requests_is_clean() {
         None,
         2,
         Duration::from_millis(1),
+        SchedMode::Wave,
     );
-    let m = server.shutdown().unwrap();
-    assert_eq!(m.requests, 0);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.metrics.requests, 0);
 }
