@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Non-failing bench-trajectory report: compare this run's BENCH_*.json
+records against the previous CI run's uploaded artifact.
+
+Usage: bench_compare.py <prev_dir> <curr_dir>
+
+Each BENCH_<bench>.json is a file of JSON lines emitted by
+`nxfp::bench_util::emit_bench_json` (one record per bench configuration:
+{"bench","name","config","smoke",<numeric fields...>}). Records are keyed
+by (bench, name, config, smoke); when a file contains several records for
+one key (re-runs appended to the same artifact dir) the *last* one wins.
+Compared fields: every numeric field present in both records, with tok/s
+treated as higher-is-better and latency/step fields as lower-is-better.
+
+This script never fails the build: perf on shared CI runners is noisy, so
+the report is informational — the trajectory accumulates in the uploaded
+artifacts and regressions show up as a trend, not a single red build.
+"""
+
+import json
+import os
+import sys
+
+# substrings that mark a lower-is-better metric; anything else (tok_s,
+# blocks_s, speedup...) is reported as higher-is-better. "growth" is
+# hotpath_serving's per-step-cost flatness ratio (~1.0 flat, >1 means
+# decode work grows with cache fill) — lower is better there too.
+LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth")
+
+
+def load(d):
+    recs = {}
+    if not os.path.isdir(d):
+        return recs
+    for fn in sorted(os.listdir(d)):
+        if not (fn.startswith("BENCH_") and fn.endswith(".json")):
+            continue
+        with open(os.path.join(d, fn)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = (r.get("bench"), r.get("name"), r.get("config"), r.get("smoke"))
+                recs[key] = r  # last record wins
+    return recs
+
+
+def fmt_delta(field, old, new):
+    if old in (None, 0) or new is None:
+        return "n/a"
+    pct = 100.0 * (new - old) / abs(old)
+    lower_better = any(t in field for t in LOWER_IS_BETTER)
+    improved = pct < 0 if lower_better else pct > 0
+    arrow = "+" if pct >= 0 else ""
+    mark = "(better)" if improved else ("(worse)" if abs(pct) > 1e-9 else "")
+    return f"{arrow}{pct:.1f}% {mark}".strip()
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 0
+    prev, curr = load(sys.argv[1]), load(sys.argv[2])
+    if not curr:
+        print(f"[bench-compare] no records in {sys.argv[2]}; nothing to report")
+        return 0
+    if not prev:
+        print(
+            f"[bench-compare] no previous artifact in {sys.argv[1]} — first "
+            f"trajectory point ({len(curr)} records recorded, nothing to compare)"
+        )
+        return 0
+    print(f"[bench-compare] {len(curr)} current records vs {len(prev)} previous\n")
+    width = 52
+    for key in sorted(curr, key=str):
+        bench, name, config, smoke = key
+        label = f"{bench}/{name} [{config}]" + (" (smoke)" if smoke else "")
+        old = prev.get(key)
+        if old is None:
+            print(f"{label:<{width}} new scenario (no previous record)")
+            continue
+        fields = [
+            k
+            for k, v in curr[key].items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and isinstance(old.get(k), (int, float)) and not isinstance(old.get(k), bool)
+        ]
+        parts = []
+        for f in sorted(fields):
+            parts.append(f"{f} {old[f]:.4g}->{curr[key][f]:.4g} ({fmt_delta(f, old[f], curr[key][f])})")
+        print(f"{label:<{width}} " + "; ".join(parts))
+    gone = sorted(set(prev) - set(curr), key=str)
+    for key in gone:
+        print(f"{key}: present in previous run only")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,10 +8,8 @@
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
-use std::time::Duration;
 
-use nxfp::coordinator::scheduler::SchedMode;
-use nxfp::coordinator::server::ServerHandle;
+use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
 use nxfp::formats::NxConfig;
 use nxfp::models::corpus::Probe;
@@ -34,14 +32,15 @@ fn main() -> Result<()> {
         ("KV NxFP4", Some(NxConfig::nxfp(4))),
     ] {
         println!("\n== {label} ==");
+        // defaults: continuous scheduling with chunked prefill (budget 64
+        // tokens/step) — set prefill_budget: 1 to see the legacy
+        // token-at-a-time prefill schedule
         let server = ServerHandle::spawn(
             PathBuf::from("artifacts"),
             spec,
             ck.clone(),
             kv_cfg,
-            4,
-            Duration::from_millis(5),
-            SchedMode::Continuous,
+            ServeOpts::default(),
         );
         let t0 = std::time::Instant::now();
         for (i, p) in probes.iter().enumerate() {

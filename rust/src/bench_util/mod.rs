@@ -159,6 +159,77 @@ pub fn emit_bench_json(bench: &str, name: &str, config: &str, fields: &[(&str, f
     }
 }
 
+/// Deterministic TTFT-in-**steps** tracker for scheduler benches and
+/// tests: after every engine step, call [`StepTtft::observe`] with the
+/// live slots and [`StepTtft::observe_done`] with the step's completed
+/// responses (a request can produce its first token on the very step it
+/// finishes, when its slot is already retired). The first engine step at
+/// which each request had generated a token is recorded. Wall-clock TTFT
+/// lives in `ServingMetrics::ttft`; this counter is the
+/// machine-independent version the chunked-prefill assertions compare.
+#[derive(Default)]
+pub struct StepTtft {
+    first: std::collections::BTreeMap<u64, u64>,
+}
+
+impl StepTtft {
+    pub fn new() -> Self {
+        StepTtft::default()
+    }
+
+    /// Record any live slot that has produced its first token by `step`.
+    pub fn observe(&mut self, step: u64, slots: &[Option<crate::coordinator::Slot>]) {
+        for sl in slots.iter().flatten() {
+            if sl.generated() > 0 {
+                self.first.entry(sl.request_id()).or_insert(step);
+            }
+        }
+    }
+
+    /// Record requests that completed at `step` (covers first tokens
+    /// produced on a slot's final step).
+    pub fn observe_done(&mut self, step: u64, done: &[crate::coordinator::GenResponse]) {
+        for r in done {
+            if r.generated > 0 {
+                self.first.entry(r.id).or_insert(step);
+            }
+        }
+    }
+
+    /// First-token step for one request, if it has produced a token.
+    pub fn get(&self, id: u64) -> Option<u64> {
+        self.first.get(&id).copied()
+    }
+
+    pub fn count(&self) -> usize {
+        self.first.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.first.is_empty() {
+            return 0.0;
+        }
+        self.first.values().sum::<u64>() as f64 / self.first.len() as f64
+    }
+
+    /// p-quantile over the recorded first-token steps (p in 0..=1).
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.first.is_empty() {
+            return 0;
+        }
+        let mut s: Vec<u64> = self.first.values().copied().collect();
+        s.sort_unstable();
+        s[nearest_rank(s.len(), p)]
+    }
+}
+
+/// Nearest-rank index of the p-quantile in a sorted series of `n > 0`
+/// elements (`ceil(p·n)` as a 0-based index, clamped into range) — the
+/// one order-statistic rule every quantile helper here shares.
+fn nearest_rank(n: usize, p: f64) -> usize {
+    ((p.clamp(0.0, 1.0) * n as f64).ceil() as usize).saturating_sub(1).min(n - 1)
+}
+
 /// p-quantile of a duration series (sorted copy; p in 0..=1).
 pub fn quantile_duration(samples: &[Duration], p: f64) -> Duration {
     if samples.is_empty() {
@@ -166,8 +237,7 @@ pub fn quantile_duration(samples: &[Duration], p: f64) -> Duration {
     }
     let mut s = samples.to_vec();
     s.sort();
-    let idx = ((p.clamp(0.0, 1.0) * s.len() as f64).ceil() as usize).saturating_sub(1);
-    s[idx.min(s.len() - 1)]
+    s[nearest_rank(s.len(), p)]
 }
 
 /// First-quarter mean, last-quarter mean, and their ratio ("growth") of a
@@ -277,6 +347,29 @@ mod tests {
         // tiny series degrade gracefully
         let (_, _, g) = quartile_growth(&[Duration::from_micros(5)]);
         assert!((g - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_ttft_records_first_token_step_once() {
+        use crate::coordinator::GenResponse;
+        let mut t = StepTtft::new();
+        assert_eq!(t.mean(), 0.0);
+        assert_eq!(t.quantile(0.5), 0);
+        let resp = |id: u64, generated: usize| GenResponse {
+            id,
+            tokens: vec![0; generated],
+            generated,
+            latency: Duration::ZERO,
+        };
+        t.observe_done(3, &[resp(0, 2)]);
+        t.observe_done(5, &[resp(0, 4), resp(1, 1), resp(2, 0)]);
+        assert_eq!(t.get(0), Some(3)); // first sighting wins
+        assert_eq!(t.get(1), Some(5));
+        assert_eq!(t.get(2), None); // zero generated: no first token
+        assert_eq!(t.count(), 2);
+        assert_eq!(t.mean(), 4.0);
+        assert_eq!(t.quantile(0.5), 3);
+        assert_eq!(t.quantile(1.0), 5);
     }
 
     #[test]

@@ -101,6 +101,13 @@ impl Histogram {
             return 0.0;
         }
         let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        // the top rank is the maximum by definition — return it exactly
+        // rather than a bucket-midpoint estimate (matters when samples
+        // saturate past `hi` into the last bucket, where the midpoint
+        // would clamp all the way down to `min`)
+        if rank >= self.total {
+            return self.max;
+        }
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -134,6 +141,19 @@ pub struct ServingMetrics {
     pub wait_steps: Histogram,
     /// Queue depth sampled once per scheduler tick.
     pub queue_depth: Histogram,
+    /// Prompt tokens a prefilling slot consumed in one engine step (its
+    /// phase-A chunk plus the batched-step token) — one sample per
+    /// prefilling slot per step, so every prompt token is counted exactly
+    /// once and the histogram sum telescopes to total prompt tokens. All
+    /// samples are 1 when the prefill budget is 1 (unchunked).
+    pub prefill_chunk: Histogram,
+    /// Prompt tokens fed across all slots in one engine step (sampled
+    /// once per step with at least one occupied lane).
+    pub step_prefill_tokens: Histogram,
+    /// Decode (generation) tokens sampled across all slots in one engine
+    /// step — together with `step_prefill_tokens` this is the
+    /// prefill-vs-decode token split of every step.
+    pub step_decode_tokens: Histogram,
     /// Requests admitted into a lane.
     pub admitted: u64,
     /// Admissions that used the anti-starvation promotion rule (an urgent
@@ -150,6 +170,9 @@ impl Default for ServingMetrics {
             ttft: Histogram::for_seconds(),
             wait_steps: Histogram::for_counts(),
             queue_depth: Histogram::for_counts(),
+            prefill_chunk: Histogram::for_counts(),
+            step_prefill_tokens: Histogram::for_counts(),
+            step_decode_tokens: Histogram::for_counts(),
             admitted: 0,
             promoted: 0,
             rejected: 0,
@@ -161,7 +184,7 @@ impl ServingMetrics {
     /// Human-readable one-block summary for logs and the CLI.
     pub fn summary(&self) -> String {
         let ms = |s: f64| s * 1e3;
-        format!(
+        let mut out = format!(
             "latency p50/p95 {:.1}/{:.1} ms  ttft p50/p95 {:.1}/{:.1} ms  \
              queue depth mean/max {:.1}/{:.0}  admitted {} (promoted {}, rejected {})",
             ms(self.latency.p50()),
@@ -173,7 +196,18 @@ impl ServingMetrics {
             self.admitted,
             self.promoted,
             self.rejected
-        )
+        );
+        if self.prefill_chunk.count() > 0 {
+            out.push_str(&format!(
+                "\nprefill chunk mean/max {:.1}/{:.0} tok  \
+                 per-step prefill/decode tokens mean {:.1}/{:.1}",
+                self.prefill_chunk.mean(),
+                self.prefill_chunk.max(),
+                self.step_prefill_tokens.mean(),
+                self.step_decode_tokens.mean()
+            ));
+        }
+        out
     }
 }
 
@@ -222,6 +256,74 @@ mod tests {
         assert_eq!(h.min(), 0.0);
         assert_eq!(h.max(), 1e12);
         assert!(h.quantile(1.0) <= 1e12);
+    }
+
+    #[test]
+    fn quantile_bounds_at_bucket_edges() {
+        // zero sample: clamps into bucket 0, min pins every quantile to 0
+        let mut h = Histogram::for_counts();
+        h.record(0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        // one sample: min == max == v, so every quantile is exactly v
+        // (the geometric-midpoint estimate is clamped to the exact value)
+        let mut h = Histogram::for_seconds();
+        h.record(0.0137);
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), 0.0137, "q={q}");
+        }
+        // saturating max: above-range samples land in the last bucket but
+        // quantiles stay exact through the max clamp
+        let mut h = Histogram::for_counts();
+        h.record(3e7); // hi is 1e6
+        h.record(4e7);
+        assert_eq!(h.quantile(1.0), 4e7);
+        assert!(h.quantile(0.25) >= 3e7);
+        // exactly at the lower bound lo: bucket 0, exact via min clamp
+        let mut h = Histogram::new(1.0, 100.0, 4);
+        h.record(1.0);
+        assert_eq!(h.quantile(0.5), 1.0);
+    }
+
+    #[test]
+    fn prefill_chunk_histogram_records_fed_chunk_sizes() {
+        use crate::coordinator::{DecodeEngine, GenRequest, SynthBackend};
+        use crate::formats::NxConfig;
+        use crate::models::LmSpec;
+        let spec = LmSpec::tiny();
+        let run = |budget: usize| {
+            let mut eng = DecodeEngine::with_backend(
+                spec.clone(),
+                Box::new(SynthBackend::new(&spec)),
+                Some(NxConfig::nxfp(4)),
+                1,
+            );
+            eng.set_prefill_budget(budget);
+            let req = GenRequest { id: 0, prompt: vec![3; 10], max_new: 1 };
+            eng.serve_wave(vec![req]).unwrap();
+            eng.serving
+        };
+        // budget 4, one lane: 3 extra tokens per step -> the 10-token
+        // prompt is fed as per-step totals [4, 4, 2], exactly
+        let m = run(4);
+        assert_eq!(m.prefill_chunk.count(), 3);
+        assert_eq!(m.prefill_chunk.max(), 4.0);
+        assert_eq!(m.prefill_chunk.min(), 2.0);
+        assert!((m.prefill_chunk.mean() - 10.0 / 3.0).abs() < 1e-9);
+        // the per-step split histograms saw the same prefill totals
+        assert_eq!(m.step_prefill_tokens.count(), 3);
+        assert_eq!(m.step_prefill_tokens.max(), 4.0);
+        // unbounded budget: the whole prompt is one fed chunk of 10
+        let m = run(usize::MAX);
+        assert_eq!(m.prefill_chunk.count(), 1);
+        assert_eq!(m.prefill_chunk.min(), 10.0);
+        assert_eq!(m.prefill_chunk.max(), 10.0);
+        // unchunked: ten feeds of exactly one token
+        let m = run(1);
+        assert_eq!(m.prefill_chunk.count(), 10);
+        assert_eq!(m.prefill_chunk.max(), 1.0);
+        assert_eq!(m.prefill_chunk.mean(), 1.0);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!
 //! * [`StepBackend`] — the batched step kernel behind the engine: the PJRT
 //!   artifact in production, the deterministic [`SynthBackend`] in tests
-//!   and benches (no artifacts needed).
+//!   and benches (no artifacts needed). Backends may provide a native
+//!   multi-token [`StepBackend::prefill_chunk`] path; the engine loops
+//!   the single-token step for those that don't.
 //! * [`DecodeEngine`] — owns the persistent `[B, L, S, D]` step slabs and
 //!   the step primitives: admit-one-slot, one batched decode step,
 //!   lane-to-lane slot moves.
@@ -35,6 +37,17 @@
 //! resident f32 KV per slot by deleting it). Finished slots release their
 //! packed buffers immediately, free their lane for the next queued
 //! request, and have their slab lanes zeroed exactly once.
+//!
+//! # Chunked prefill
+//!
+//! A budgeted step runs in two phases: phase A
+//! (`DecodeEngine::chunk_prefill`) distributes the per-step prefill token
+//! budget across prefilling slots as multi-token chunks (bulk quantized
+//! appends, no sampling); phase B is the ordinary batched step, which
+//! always feeds a slot's *final* prompt token so the sampled logits see
+//! exactly the lane state the unchunked schedule builds. Budget 1 makes
+//! phase A a no-op — bit-for-bit the legacy schedule. See
+//! `ARCHITECTURE.md` for the policy and the invariance contract.
 
 pub mod metrics;
 pub mod scheduler;
@@ -98,6 +111,12 @@ impl Metrics {
     }
 }
 
+/// Default per-step prefill token budget for the serving front-end and
+/// CLI (`--prefill-budget`). 1 reproduces the unchunked per-token
+/// schedule; engines constructed directly default to 1 so chunking is
+/// always an explicit opt-in ([`DecodeEngine::set_prefill_budget`]).
+pub const DEFAULT_PREFILL_BUDGET: usize = 64;
+
 /// Output of one batched decode step.
 pub struct StepOut {
     /// `[B, V]` next-token logits.
@@ -106,6 +125,20 @@ pub struct StepOut {
     pub k_new: Vec<f32>,
     /// `[B, L, D]` freshly produced V rows.
     pub v_new: Vec<f32>,
+}
+
+/// KV rows produced by a multi-token prefill chunk for **one** slot.
+/// Layer-major `[L, n, D]` (each layer's rows contiguous), so the rows
+/// feed `KvCache::append_rows` per layer without a gather. Chunks carry
+/// no logits: chunked tokens are never sampled — the final prompt token
+/// always goes through the batched [`StepBackend::step`], which is what
+/// makes chunking bit-invariant (the sampling step sees exactly the lane
+/// state the unchunked schedule would have built).
+pub struct ChunkKv {
+    /// `[L, n, D]` K rows.
+    pub k_rows: Vec<f32>,
+    /// `[L, n, D]` V rows.
+    pub v_rows: Vec<f32>,
 }
 
 /// The batched decode-step kernel the engine drives. `tokens`/`pos` are
@@ -117,6 +150,28 @@ pub struct StepOut {
 /// lanes).
 pub trait StepBackend {
     fn step(&mut self, tokens: &[i32], pos: &[i32], k: &[f32], v: &[f32]) -> Result<StepOut>;
+
+    /// Multi-token prefill fast path: produce the KV rows for `tokens`
+    /// fed at positions `pos0..pos0 + tokens.len()` of one slot, given
+    /// that slot's current `[L, S, D]` lane (rows `0..pos0` already
+    /// decoded). Backends whose KV projections need the cache updated
+    /// *between* chunk tokens — the single-token PJRT artifact — return
+    /// `Ok(None)` (the default) and the engine falls back to a batched
+    /// artifact loop: every chunking lane advances one token per inner
+    /// `step` invocation (decode lanes masked), interleaving quantized
+    /// appends exactly like the per-token schedule — same bits, fewer
+    /// scheduler steps, though on a single-token artifact the loop
+    /// redistributes invocations toward prefill rather than saving them.
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<ChunkKv>> {
+        let _ = (tokens, pos0, k_lane, v_lane);
+        Ok(None)
+    }
 }
 
 /// Production backend: the AOT `decode_step` artifact through PJRT.
@@ -221,6 +276,37 @@ impl StepBackend for SynthBackend {
         }
         Ok(StepOut { logits, k_new, v_new })
     }
+
+    /// Native multi-token prefill: the synth's KV rows are pure functions
+    /// of `(token, pos, layer, dim)` — the exact expressions `step` uses —
+    /// so a whole chunk is produced in one call with no attention pass
+    /// (rows carry no logits) and no intermediate cache round-trips. This
+    /// is the cost model of a real prefill kernel: chunk work scales with
+    /// the token count, not with `chunk × full-step` invocations.
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        _k_lane: &[f32],
+        _v_lane: &[f32],
+    ) -> Result<Option<ChunkKv>> {
+        let (l, d, n) = (self.l, self.d, tokens.len());
+        let mut k_rows = vec![0.0f32; l * n * d];
+        let mut v_rows = vec![0.0f32; l * n * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as u32;
+            let p = (pos0 + t) as u32;
+            for li in 0..l {
+                let key = tok.wrapping_mul(31) ^ p.rotate_left(9) ^ ((li as u32) << 20);
+                let base = (li * n + t) * d;
+                for j in 0..d {
+                    k_rows[base + j] = hash01(key ^ j as u32);
+                    v_rows[base + j] = hash01(key ^ j as u32 ^ 0xA5A5_5A5A);
+                }
+            }
+        }
+        Ok(Some(ChunkKv { k_rows, v_rows }))
+    }
 }
 
 /// Per-slot quantized KV state: one packed [`KvCache`] per layer that
@@ -266,6 +352,26 @@ impl SlotKv {
     /// Quantize and append one generated (k, v) row for `layer`.
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         self.caches[layer].append(k_row, v_row);
+    }
+
+    /// Bulk-append `n` rows per layer from layer-major `[L, n, D]` chunk
+    /// tensors (the [`StepBackend::prefill_chunk`] output layout — each
+    /// layer's rows are contiguous, so they feed
+    /// [`KvCache::append_rows`]'s one-grow-per-chunk path directly).
+    pub fn append_chunk(&mut self, n: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let d = self.dim;
+        debug_assert_eq!(k_rows.len(), self.caches.len() * n * d);
+        debug_assert_eq!(v_rows.len(), k_rows.len());
+        for (li, cache) in self.caches.iter_mut().enumerate() {
+            let at = li * n * d;
+            cache.append_rows(&k_rows[at..at + n * d], &v_rows[at..at + n * d], n);
+        }
+    }
+
+    /// Per-layer packed caches (chunk-invariance tests compare the stored
+    /// bits across prefill budgets; hot paths never need this).
+    pub fn caches(&self) -> &[KvCache] {
+        &self.caches
     }
 
     /// Incrementally decode rows appended since the previous call straight
@@ -316,7 +422,9 @@ impl SlotKv {
 /// is dropped from its lane the step it completes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SlotState {
-    /// Consuming prompt tokens (one per step) into the lane's KV.
+    /// Consuming prompt tokens into the lane's KV — one per step through
+    /// the batched step, plus any multi-token chunk the per-step prefill
+    /// budget grants (see [`DecodeEngine::set_prefill_budget`]).
     Prefilling,
     /// Prompt consumed; sampling one new token per step.
     Decoding,
@@ -338,6 +446,10 @@ pub struct Slot {
     /// cache fill (rows appended); tracked directly so baselines don't
     /// need a `KvCache` just for its length counter
     fill: usize,
+    /// Prompt tokens fed by `chunk_prefill` in the current step (phase A);
+    /// consumed into the prefill-chunk histogram when the slot feeds its
+    /// batched-step token (phase B).
+    chunk_fed: usize,
 }
 
 impl Slot {
@@ -347,6 +459,23 @@ impl Slot {
 
     pub fn request_id(&self) -> u64 {
         self.req.id
+    }
+
+    /// Tokens generated so far (0 while still prefilling). Deterministic
+    /// TTFT-in-steps trackers poll this between engine steps.
+    pub fn generated(&self) -> usize {
+        self.output.len() - self.req.prompt.len()
+    }
+
+    /// Prompt tokens not yet fed.
+    pub fn remaining_prompt(&self) -> usize {
+        self.req.prompt.len() - self.cursor
+    }
+
+    /// The slot's packed KV state (`None` in baseline mode). Exposed for
+    /// the chunk-invariance tests.
+    pub fn kv(&self) -> Option<&SlotKv> {
+        self.kv.as_ref()
     }
 }
 
@@ -361,6 +490,9 @@ pub struct DecodeEngine {
     pub metrics: Metrics,
     /// Per-request latency/TTFT/queue-depth histograms.
     pub serving: ServingMetrics,
+    /// Per-step token budget for chunked prefill (see
+    /// [`DecodeEngine::set_prefill_budget`]); 1 = unchunked.
+    prefill_budget: usize,
     k_f32: Vec<f32>,
     v_f32: Vec<f32>,
 }
@@ -398,9 +530,26 @@ impl DecodeEngine {
             max_batch,
             metrics: Metrics::default(),
             serving: ServingMetrics::default(),
+            prefill_budget: 1,
             k_f32: vec![0.0; n],
             v_f32: vec![0.0; n],
         }
+    }
+
+    /// Set the per-step token budget for chunked prefill (both scheduling
+    /// modes). Every occupied lane feeds one token through the batched
+    /// step each engine step (decode lanes are reserved first and a
+    /// prefilling slot never stalls); any budget beyond that is handed to
+    /// prefilling slots as extra multi-token chunks, so a budget of 1 —
+    /// the constructor default — reproduces the unchunked per-token
+    /// schedule bit for bit, and `usize::MAX` prefills a whole prompt in
+    /// one step. Values are clamped to at least 1.
+    pub fn set_prefill_budget(&mut self, budget: usize) {
+        self.prefill_budget = budget.max(1);
+    }
+
+    pub fn prefill_budget(&self) -> usize {
+        self.prefill_budget
     }
 
     /// Elements in one `[L, S, D]` lane.
@@ -443,8 +592,174 @@ impl DecodeEngine {
             output: req.prompt.clone(),
             kv: self.kv_cfg.as_ref().map(|cfg| SlotKv::new(l, d, s, cfg)),
             fill: 0,
+            chunk_fed: 0,
             req,
         }
+    }
+
+    /// Phase A of a budgeted step: distribute the per-step prefill token
+    /// budget across prefilling slots as multi-token chunks.
+    ///
+    /// Every occupied lane — decoding *or* prefilling — feeds one token
+    /// through the batched step in phase B, so decode lanes are reserved
+    /// first by construction and only `budget - occupied` tokens remain
+    /// for chunk work; with budget 1 this is a no-op and the schedule is
+    /// exactly the legacy per-token one. The remainder goes
+    /// **shortest-remaining-prefill-first** (ties broken by lane index):
+    /// finishing one prefill outright starts that request decoding — and
+    /// counting toward TTFT — a whole step sooner than spreading the same
+    /// tokens evenly. A chunk never includes a slot's *final* prompt
+    /// token: that one is fed by phase B, whose logits are sampled, so
+    /// the sampling step sees the identical lane state the unchunked
+    /// schedule builds (the chunk-invariance contract).
+    fn chunk_prefill(&mut self, slots: &mut [Option<Slot>]) -> Result<()> {
+        let occupied = slots.iter().filter(|s| s.is_some()).count();
+        let mut extra = self.prefill_budget.saturating_sub(occupied);
+        if extra == 0 {
+            return Ok(());
+        }
+        let mut order: Vec<(usize, usize)> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(b, s)| {
+                let rem = s.as_ref()?.remaining_prompt();
+                (rem > 1).then_some((rem, b))
+            })
+            .collect();
+        order.sort_unstable();
+        // lanes whose backend had no native multi-token path take the
+        // batched artifact loop together
+        let mut looped: Vec<(usize, usize)> = Vec::new();
+        for (rem, b) in order {
+            if extra == 0 {
+                break;
+            }
+            let n = extra.min(rem - 1);
+            if !self.feed_chunk_native(slots, b, n)? {
+                looped.push((b, n));
+            }
+            extra -= n;
+        }
+        if !looped.is_empty() {
+            self.feed_chunk_looped(slots, &looped)?;
+        }
+        Ok(())
+    }
+
+    /// Feed `n` prompt tokens of the slot in lane `b` through the
+    /// backend's native multi-token path: one `prefill_chunk` call → bulk
+    /// quantized append (or raw lane write in baseline mode); quantized
+    /// rows reach the lane through the regular watermark sync at the top
+    /// of the next batched step. Returns `false` — with the slot
+    /// untouched — when the backend has no native path (the caller then
+    /// folds the lane into the batched artifact loop).
+    fn feed_chunk_native(
+        &mut self,
+        slots: &mut [Option<Slot>],
+        b: usize,
+        n: usize,
+    ) -> Result<bool> {
+        let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
+        let lane = self.lane_len();
+        let sl = slots[b].as_mut().expect("feed_chunk: empty lane");
+        debug_assert!(n >= 1 && n < sl.remaining_prompt());
+        if let Some(kv) = &mut sl.kv {
+            // honor the prefill_chunk precondition (rows 0..pos0 decoded
+            // in-lane): the row appended by the previous batched step is
+            // still pending its watermark sync at this point
+            kv.sync_into(
+                &mut self.k_f32[b * lane..(b + 1) * lane],
+                &mut self.v_f32[b * lane..(b + 1) * lane],
+            );
+        }
+        let toks = &sl.req.prompt[sl.cursor..sl.cursor + n];
+        let pos0 = sl.fill;
+        let chunk = self.backend.prefill_chunk(
+            toks,
+            pos0,
+            &self.k_f32[b * lane..(b + 1) * lane],
+            &self.v_f32[b * lane..(b + 1) * lane],
+        )?;
+        let Some(ck) = chunk else {
+            return Ok(false);
+        };
+        debug_assert_eq!(ck.k_rows.len(), l * n * d);
+        debug_assert_eq!(ck.v_rows.len(), l * n * d);
+        if let Some(kv) = &mut sl.kv {
+            kv.append_chunk(n, &ck.k_rows, &ck.v_rows);
+        } else {
+            for li in 0..l {
+                let src = li * n * d;
+                let dst = b * lane + (li * s + pos0) * d;
+                self.k_f32[dst..dst + n * d].copy_from_slice(&ck.k_rows[src..src + n * d]);
+                self.v_f32[dst..dst + n * d].copy_from_slice(&ck.v_rows[src..src + n * d]);
+            }
+        }
+        sl.cursor += n;
+        sl.fill += n;
+        sl.chunk_fed += n;
+        Ok(true)
+    }
+
+    /// Batched artifact-loop fallback for backends with no native
+    /// multi-token path (the single-token PJRT artifact): **all** the
+    /// assigned lanes advance one prompt token per inner batched step
+    /// (decode lanes masked, outputs of unassigned lanes ignored), so
+    /// concurrent prefills cost `max(chunk)` backend invocations — not
+    /// `sum(chunk)` — and each slot sees exactly the per-token schedule's
+    /// sync→step→append interleave (bit-identity by per-slot purity).
+    /// Inner invocations still count as `decode_steps`: on a single-token
+    /// artifact, chunking redistributes invocations toward prefill (TTFT)
+    /// rather than eliminating them; see ARCHITECTURE.md.
+    fn feed_chunk_looped(
+        &mut self,
+        slots: &mut [Option<Slot>],
+        chunks: &[(usize, usize)],
+    ) -> Result<()> {
+        let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
+        let lane = self.lane_len();
+        let rounds = chunks.iter().map(|&(_, n)| n).max().unwrap_or(0);
+        let mut tokens = vec![0i32; self.max_batch];
+        let mut pos = vec![0i32; self.max_batch];
+        for i in 0..rounds {
+            for &(b, n) in chunks {
+                if i >= n {
+                    continue;
+                }
+                let sl = slots[b].as_mut().expect("feed_chunk: empty lane");
+                tokens[b] = sl.req.prompt[sl.cursor];
+                pos[b] = sl.fill as i32;
+                if let Some(kv) = &mut sl.kv {
+                    kv.sync_into(
+                        &mut self.k_f32[b * lane..(b + 1) * lane],
+                        &mut self.v_f32[b * lane..(b + 1) * lane],
+                    );
+                }
+            }
+            let out = self.backend.step(&tokens, &pos, &self.k_f32, &self.v_f32)?;
+            self.metrics.decode_steps += 1;
+            for &(b, n) in chunks {
+                if i >= n {
+                    continue;
+                }
+                let sl = slots[b].as_mut().expect("feed_chunk: empty lane");
+                for li in 0..l {
+                    let row = &out.k_new[(b * l + li) * d..(b * l + li + 1) * d];
+                    let vow = &out.v_new[(b * l + li) * d..(b * l + li + 1) * d];
+                    if let Some(kv) = &mut sl.kv {
+                        kv.append(li, row, vow);
+                    } else {
+                        let base = ((b * l + li) * s + sl.fill) * d;
+                        self.k_f32[base..base + d].copy_from_slice(row);
+                        self.v_f32[base..base + d].copy_from_slice(vow);
+                    }
+                }
+                sl.cursor += 1;
+                sl.fill += 1;
+                sl.chunk_fed += 1;
+            }
+        }
+        Ok(())
     }
 
     /// One batched decode step over every occupied lane: sync quantized KV
@@ -484,6 +799,10 @@ impl DecodeEngine {
         let out = self.backend.step(&tokens, &pos, &self.k_f32, &self.v_f32)?;
         self.metrics.decode_steps += 1;
 
+        // per-step prefill-vs-decode token split (phase-A chunks count
+        // toward the step that fed them)
+        let mut prefill_toks = 0u64;
+        let mut decode_toks = 0u64;
         for (b, slot) in slots.iter_mut().enumerate() {
             let Some(sl) = slot.as_mut() else { continue };
             // append the new KV row (quantized or raw)
@@ -500,11 +819,19 @@ impl DecodeEngine {
             }
             sl.fill += 1;
             if sl.cursor < sl.req.prompt.len() {
+                // this step consumed chunk_fed phase-A tokens plus this
+                // batched-step token of the prompt
+                let fed = sl.chunk_fed as u64 + 1;
+                self.serving.prefill_chunk.record(fed as f64);
+                prefill_toks += fed;
+                sl.chunk_fed = 0;
                 sl.cursor += 1; // still consuming the prompt
                 if sl.cursor < sl.req.prompt.len() {
                     continue;
                 }
                 sl.state = SlotState::Decoding; // last prompt token: sample
+            } else {
+                decode_toks += 1;
             }
             // sample greedily from this slot's logits
             let row = &out.logits[b * vb..(b + 1) * vb];
@@ -537,6 +864,10 @@ impl DecodeEngine {
                 self.metrics.requests += 1;
             }
         }
+        if prefill_toks + decode_toks > 0 {
+            self.serving.step_prefill_tokens.record(prefill_toks as f64);
+            self.serving.step_decode_tokens.record(decode_toks as f64);
+        }
         Ok(())
     }
 
@@ -560,6 +891,7 @@ impl DecodeEngine {
         }
         slots.resize_with(self.max_batch, || None);
         while slots.iter().any(Option::is_some) {
+            self.chunk_prefill(&mut slots)?;
             self.step_slots(&mut slots, &mut responses)?;
         }
         self.metrics.wall += wave_start.elapsed();
@@ -595,6 +927,7 @@ impl DecodeEngine {
         let mut done = Vec::new();
         self.admit(sched, &mut done);
         if sched.active() > 0 {
+            self.chunk_prefill(sched.slots_mut())?;
             self.step_slots(sched.slots_mut(), &mut done)?;
         }
         let depth = sched.tick();
@@ -785,6 +1118,152 @@ mod tests {
         let vb = spec.vocab;
         assert_eq!(&c.logits[..vb], &a.logits[vb..]);
         assert_eq!(&c.logits[vb..], &a.logits[..vb]);
+    }
+
+    #[test]
+    fn synth_prefill_chunk_matches_stepped_rows() {
+        // the native chunk path must produce the exact KV rows the
+        // batched step produces token by token (same hash expressions)
+        let spec = LmSpec::tiny();
+        let (l, s, d) = (spec.n_layers, spec.seq_len, spec.d_model);
+        let mut be = SynthBackend::new(&spec);
+        let lane = vec![0.0f32; l * s * d];
+        let toks = [5i32, 9, 2, 41];
+        let pos0 = 3usize;
+        let ck = be.prefill_chunk(&toks, pos0, &lane, &lane).unwrap().unwrap();
+        assert_eq!(ck.k_rows.len(), l * toks.len() * d);
+        for (t, &tok) in toks.iter().enumerate() {
+            let p = (pos0 + t) as i32;
+            let out = be.step(&[tok], &[p], &lane, &lane).unwrap();
+            for li in 0..l {
+                let want_k = &out.k_new[li * d..(li + 1) * d];
+                let want_v = &out.v_new[li * d..(li + 1) * d];
+                let base = (li * toks.len() + t) * d;
+                assert_eq!(&ck.k_rows[base..base + d], want_k, "tok {t} layer {li}");
+                assert_eq!(&ck.v_rows[base..base + d], want_v);
+            }
+        }
+    }
+
+    #[test]
+    fn slot_kv_append_chunk_matches_per_token_appends() {
+        let (l, s, d) = (3usize, 16usize, 40usize);
+        let mut rng = Rng::seeded(85);
+        let cfg = NxConfig::nxfp(4);
+        let mut bulk = SlotKv::new(l, d, s, &cfg);
+        let mut single = SlotKv::new(l, d, s, &cfg);
+        let n = 5;
+        // layer-major [L, n, D] chunk
+        let k_rows: Vec<f32> = (0..l * n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v_rows: Vec<f32> = (0..l * n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        bulk.append_chunk(n, &k_rows, &v_rows);
+        for t in 0..n {
+            for li in 0..l {
+                let at = (li * n + t) * d;
+                single.append(li, &k_rows[at..at + d], &v_rows[at..at + d]);
+            }
+        }
+        assert_eq!(bulk.fill(), n);
+        for (bc, sc) in bulk.caches.iter().zip(&single.caches) {
+            assert_eq!(bc.stores(), sc.stores());
+        }
+        // and the decoded lane is bit-identical too
+        let mut lk = vec![0.0f32; l * s * d];
+        let mut lv = vec![0.0f32; l * s * d];
+        let mut sk = vec![0.0f32; l * s * d];
+        let mut sv = vec![0.0f32; l * s * d];
+        bulk.sync_into(&mut lk, &mut lv);
+        single.sync_into(&mut sk, &mut sv);
+        assert_eq!(lk, sk);
+        assert_eq!(lv, sv);
+    }
+
+    /// Backend with no native multi-token path: the engine must fall back
+    /// to looping the batched step (the PJRT shape) and stay bit-identical
+    /// to the unchunked schedule.
+    struct LoopedSynth(SynthBackend);
+
+    impl StepBackend for LoopedSynth {
+        fn step(&mut self, t: &[i32], p: &[i32], k: &[f32], v: &[f32]) -> Result<StepOut> {
+            self.0.step(t, p, k, v)
+        }
+        // default prefill_chunk -> Ok(None)
+    }
+
+    #[test]
+    fn chunked_prefill_via_artifact_loop_is_bit_identical() {
+        let spec = LmSpec::tiny();
+        let kv = Some(NxConfig::nxfp(4));
+        let req = GenRequest { id: 0, prompt: vec![3, 7, 1, 9, 4, 2, 8], max_new: 5 };
+        let run = |budget: usize, looped: bool| -> Vec<i32> {
+            let backend: Box<dyn StepBackend> = if looped {
+                Box::new(LoopedSynth(SynthBackend::new(&spec)))
+            } else {
+                Box::new(SynthBackend::new(&spec))
+            };
+            let mut eng = DecodeEngine::with_backend(spec.clone(), backend, kv.clone(), 2);
+            eng.set_prefill_budget(budget);
+            let resps = eng.serve_wave(vec![req.clone()]).unwrap();
+            resps.into_iter().next().unwrap().tokens
+        };
+        let want = run(1, false);
+        for budget in [4usize, usize::MAX] {
+            assert_eq!(run(budget, false), want, "native chunk, budget {budget}");
+            assert_eq!(run(budget, true), want, "artifact loop, budget {budget}");
+        }
+        // two slots prefilling concurrently through the *batched* loop:
+        // both lanes advance in the same inner invocations and both must
+        // match their solo runs
+        let req2 = GenRequest { id: 1, prompt: vec![2, 6, 1, 7, 3], max_new: 4 };
+        let solo: Vec<Vec<i32>> = [&req, &req2]
+            .iter()
+            .map(|r| {
+                let mut eng = DecodeEngine::with_backend(
+                    spec.clone(),
+                    Box::new(SynthBackend::new(&spec)),
+                    kv.clone(),
+                    1,
+                );
+                eng.serve_wave(vec![(*r).clone()]).unwrap().remove(0).tokens
+            })
+            .collect();
+        let mut eng = DecodeEngine::with_backend(
+            spec.clone(),
+            Box::new(LoopedSynth(SynthBackend::new(&spec))),
+            kv.clone(),
+            2,
+        );
+        eng.set_prefill_budget(6);
+        let resps = eng.serve_wave(vec![req.clone(), req2.clone()]).unwrap();
+        for (r, want) in [&req, &req2].iter().zip(&solo) {
+            let got = &resps.iter().find(|x| x.id == r.id).unwrap().tokens;
+            assert_eq!(got, want, "batched loop diverged for request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn budgeted_wave_takes_fewer_steps_and_same_tokens() {
+        let spec = LmSpec::tiny();
+        // prompt fills most of the window; decode a few tokens
+        let req = GenRequest { id: 0, prompt: vec![2; 10], max_new: 4 };
+        let run = |budget: usize| {
+            let mut eng = DecodeEngine::with_backend(
+                spec.clone(),
+                Box::new(SynthBackend::new(&spec)),
+                Some(NxConfig::nxfp(4)),
+                1,
+            );
+            eng.set_prefill_budget(budget);
+            let resps = eng.serve_wave(vec![req.clone()]).unwrap();
+            (resps.into_iter().next().unwrap().tokens, eng.metrics.decode_steps)
+        };
+        let (tok1, steps1) = run(1);
+        let (tok_inf, steps_inf) = run(usize::MAX);
+        assert_eq!(tok1, tok_inf);
+        // 10 prompt feeds (the 10th samples the first token) + 3 decode
+        assert_eq!(steps1, 13);
+        // a 9-token chunk folds the prompt into step 1's batched feed
+        assert_eq!(steps_inf, 4);
     }
 
     #[test]

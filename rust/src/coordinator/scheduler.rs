@@ -87,6 +87,11 @@ pub struct Scheduler {
     promote_after: u64,
     /// Engine steps ticked so far (the clock the promotion rule runs on).
     step: u64,
+    /// Per-step prefill token budget the engine runs under (see
+    /// [`Scheduler::set_prefill_budget`]); the greedy admission key ranks
+    /// by estimated prefill *steps* under this budget, not raw prompt
+    /// length.
+    prefill_budget: usize,
     /// Requests enqueued over the scheduler's lifetime.
     pub enqueued: u64,
 }
@@ -103,8 +108,30 @@ impl Scheduler {
             slots: (0..max_batch).map(|_| None).collect(),
             promote_after: promote_after.max(1),
             step: 0,
+            prefill_budget: 1,
             enqueued: 0,
         }
+    }
+
+    /// Make admission budget-aware: with chunked prefill a long prompt no
+    /// longer costs `prompt_len` engine steps, so the greedy pick ranks
+    /// queued requests by **estimated prefill steps under the budget**
+    /// (`ceil(prompt_len / budget)`, the cost when the whole per-step
+    /// budget lands on one slot) instead of raw prompt length. At budget
+    /// 1 this degenerates to shortest-prompt-first (today's order); at a
+    /// large budget most requests tie at one step and admission becomes
+    /// plain FIFO — fairer, with nothing left to gain from reordering.
+    /// Keep this in sync with the engine's budget
+    /// ([`super::DecodeEngine::set_prefill_budget`]); the server
+    /// front-end sets both from one knob.
+    pub fn set_prefill_budget(&mut self, budget: usize) {
+        self.prefill_budget = budget.max(1);
+    }
+
+    /// Estimated engine steps to prefill a prompt under the configured
+    /// budget — the greedy admission key.
+    fn prefill_steps(&self, prompt_len: usize) -> usize {
+        prompt_len.div_ceil(self.prefill_budget)
     }
 
     /// Add a request to the admission queue (stamps arrival time and the
@@ -149,9 +176,10 @@ impl Scheduler {
     }
 
     /// Pick the next request to admit: oldest urgent request if any has
-    /// waited past `promote_after`, else the shortest prompt (FIFO among
-    /// equals — stable because the scan keeps strictly-earlier entries on
-    /// ties).
+    /// waited past `promote_after`, else the cheapest prefill under the
+    /// configured budget — fewest estimated prefill steps, which is
+    /// shortest-prompt-first at budget 1 (FIFO among equals — stable
+    /// because the scan keeps strictly-earlier entries on ties).
     pub fn pop_next(&mut self) -> Option<Admission> {
         if self.queue.is_empty() {
             return None;
@@ -164,7 +192,7 @@ impl Scheduler {
             .queue
             .iter()
             .enumerate()
-            .min_by_key(|(i, q)| (q.req.prompt.len(), *i))
+            .min_by_key(|(i, q)| (self.prefill_steps(q.req.prompt.len()), *i))
             .map(|(i, _)| i)
             .unwrap();
         let (idx, promoted) = match urgent {
@@ -230,6 +258,27 @@ mod tests {
         // until they cross the bound themselves
         let b = s.pop_next().unwrap();
         assert_eq!(b.req.id, 10);
+    }
+
+    #[test]
+    fn budget_aware_greedy_ranks_by_prefill_steps() {
+        // prompts 40 / 9 / 33, budget 16 -> 3 / 1 / 3 estimated steps:
+        // the 9-token prompt still wins, but 40 vs 33 tie at 3 steps and
+        // drain FIFO instead of shortest-first
+        let mut s = Scheduler::new(2, 100);
+        s.set_prefill_budget(16);
+        s.enqueue(req(0, 40));
+        s.enqueue(req(1, 9));
+        s.enqueue(req(2, 33));
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop_next().map(|a| a.req.id)).collect();
+        assert_eq!(order, vec![1, 0, 2]);
+        // unbounded budget: everything ties at one step -> plain FIFO
+        let mut s = Scheduler::new(2, 100);
+        s.set_prefill_budget(usize::MAX);
+        s.enqueue(req(0, 40));
+        s.enqueue(req(1, 9));
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop_next().map(|a| a.req.id)).collect();
+        assert_eq!(order, vec![0, 1]);
     }
 
     #[test]

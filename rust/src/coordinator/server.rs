@@ -15,8 +15,10 @@
 //!
 //! Within a step the engine dequantizes the packed KV caches incrementally
 //! straight into each slot's lane (see [`super::SlotKv`]), so per-step
-//! decode work does not grow with cache fill. Set `NXFP_SERVE_LOG=1` to
-//! log per-wave (wave mode) or periodic (continuous mode) throughput.
+//! decode work does not grow with cache fill. Both modes run chunked
+//! prefill under [`ServeOpts::prefill_budget`] (continuous mode also
+//! feeds the budget into the admission ranking). Set `NXFP_SERVE_LOG=1`
+//! to log per-wave (wave mode) or periodic (continuous mode) throughput.
 
 use anyhow::Result;
 use std::path::PathBuf;
@@ -26,7 +28,7 @@ use std::time::Duration;
 
 use super::metrics::ServingMetrics;
 use super::scheduler::{SchedMode, Scheduler};
-use super::{DecodeEngine, GenRequest, GenResponse, Metrics};
+use super::{DecodeEngine, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET};
 use crate::formats::NxConfig;
 use crate::models::{Checkpoint, LmSpec};
 use crate::runtime::Runtime;
@@ -34,6 +36,33 @@ use crate::runtime::Runtime;
 enum Msg {
     Req(GenRequest),
     Shutdown,
+}
+
+/// Front-end configuration for [`ServerHandle::spawn`] — everything about
+/// *scheduling*, as opposed to the model/format arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Batch lanes (must match the artifact's baked `B`).
+    pub max_batch: usize,
+    /// Wave-mode accumulation window; continuous admission happens
+    /// between engine steps and ignores this.
+    pub batch_window: Duration,
+    pub mode: SchedMode,
+    /// Per-step token budget for chunked prefill, applied in **both**
+    /// modes (engine and admission policy); 1 = unchunked per-token
+    /// prefill, `usize::MAX` = whole prompts in one step.
+    pub prefill_budget: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            max_batch: 4,
+            batch_window: Duration::from_millis(5),
+            mode: SchedMode::Continuous,
+            prefill_budget: DEFAULT_PREFILL_BUDGET,
+        }
+    }
 }
 
 /// Final accounting a worker returns at shutdown.
@@ -51,30 +80,33 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Spawn the worker (builds the PJRT runtime on its own thread: the
-    /// client is not Send). `batch_window` only applies to wave mode;
-    /// continuous admission happens between engine steps.
+    /// client is not Send).
     pub fn spawn(
         artifacts_dir: PathBuf,
         spec: LmSpec,
         ck: Checkpoint,
         kv_cfg: Option<NxConfig>,
-        max_batch: usize,
-        batch_window: Duration,
-        mode: SchedMode,
+        opts: ServeOpts,
     ) -> ServerHandle {
         let (tx, worker_rx) = mpsc::channel::<Msg>();
         let (resp_tx, rx) = mpsc::channel::<GenResponse>();
         let join = std::thread::spawn(move || -> Result<ServeReport> {
             let mut rt = Runtime::cpu(artifacts_dir)?;
-            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, max_batch)?;
+            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, opts.max_batch)?;
+            engine.set_prefill_budget(opts.prefill_budget);
             let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
-            match mode {
+            match opts.mode {
                 SchedMode::Continuous => {
                     run_continuous(&mut engine, &worker_rx, &resp_tx, log)
                 }
-                SchedMode::Wave => {
-                    run_waves(&mut engine, &worker_rx, &resp_tx, max_batch, batch_window, log)
-                }
+                SchedMode::Wave => run_waves(
+                    &mut engine,
+                    &worker_rx,
+                    &resp_tx,
+                    opts.max_batch,
+                    opts.batch_window,
+                    log,
+                ),
             }
         });
         ServerHandle { tx, rx, join: Some(join) }
@@ -113,6 +145,9 @@ fn run_continuous(
     log: bool,
 ) -> Result<ServeReport> {
     let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
+    // admission ranks by prefill steps under the same budget the engine
+    // chunks with (one knob: ServeOpts::prefill_budget)
+    sched.set_prefill_budget(engine.prefill_budget());
     let mut shutting_down = false;
     // deterministic rejections answer at enqueue time instead of queuing
     // behind real work (admit() re-validates for direct Scheduler users)

@@ -93,8 +93,16 @@ impl BlockStore {
     /// Append one zeroed row and return its index; fill it in place via
     /// [`BlockStore::row_slices_mut`].
     pub fn push_row(&mut self) -> usize {
+        self.push_rows(1)
+    }
+
+    /// Append `n` zeroed rows in **one** grow per stream (the bulk variant
+    /// of [`BlockStore::push_row`] behind `KvCache::append_rows` — a
+    /// chunked prefill appends a whole chunk with one resize instead of
+    /// one per token). Returns the index of the first new row.
+    pub fn push_rows(&mut self, n: usize) -> usize {
         let r = self.rows;
-        self.rows += 1;
+        self.rows += n;
         self.codes.resize(self.rows * self.row_len, 0);
         let nb = self.rows * self.blocks_per_row();
         self.e_shared.resize(nb, 0);
@@ -209,6 +217,26 @@ mod tests {
         assert_eq!(s.block_range(2), (4, 1));
         assert_eq!(s.block_range(3), (5, 2)); // row 1 starts at codes[5]
         assert_eq!(s.block_range(5), (9, 1));
+    }
+
+    #[test]
+    fn push_rows_bulk_matches_repeated_push_row() {
+        // 5-value rows, k=2 -> partial tail block per row
+        let mut bulk = BlockStore::new(5, 2);
+        let mut single = BlockStore::new(5, 2);
+        let r0 = bulk.push_rows(3);
+        assert_eq!(r0, 0);
+        for _ in 0..3 {
+            single.push_row();
+        }
+        assert_eq!(bulk, single);
+        assert_eq!(bulk.push_rows(2), 3);
+        assert_eq!(bulk.rows, 5);
+        assert_eq!(bulk.codes.len(), 25);
+        assert_eq!(bulk.e_shared.len(), 5 * 3);
+        // zero-row bulk append is a no-op
+        assert_eq!(bulk.push_rows(0), 5);
+        assert_eq!(bulk.rows, 5);
     }
 
     #[test]

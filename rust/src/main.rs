@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use nxfp::coordinator::scheduler::SchedMode;
-use nxfp::coordinator::server::ServerHandle;
+use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
 use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
 use nxfp::formats::NxConfig;
@@ -55,6 +55,24 @@ pub fn parse_format(s: &str) -> Result<Option<NxConfig>> {
         bail!("unknown format {s}");
     };
     Ok(Some(cfg))
+}
+
+/// `--prefill-budget` default as a CLI string (pinned to
+/// `coordinator::DEFAULT_PREFILL_BUDGET` by a unit test).
+const DEFAULT_BUDGET_STR: &str = "64";
+
+/// Parse a per-step prefill token budget: a positive integer, or
+/// `inf`/`max`/`unbounded` for whole-prompt-per-step chunking. 1 disables
+/// chunking (the legacy per-token schedule, bit-for-bit).
+pub fn parse_budget(s: &str) -> Result<usize> {
+    match s.to_lowercase().as_str() {
+        "inf" | "max" | "unbounded" => Ok(usize::MAX),
+        t => t
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("bad prefill budget {s} (positive integer or 'inf')")),
+    }
 }
 
 /// Name of the KV-fake-quant eval artifact for a config (see aot.py).
@@ -182,6 +200,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let mode: SchedMode = a.get_parsed("sched")?;
     let n_req = a.get_usize("requests")?;
     let max_new = a.get_usize("max-new")?;
+    let prefill_budget = parse_budget(&a.get_str("prefill-budget"))?;
     let corpus = default_corpus();
     let probes = Probe::generate(&corpus.spec, n_req, 99);
     let server = ServerHandle::spawn(
@@ -189,9 +208,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
         spec,
         ck,
         kv.clone(),
-        a.get_usize("max-batch")?,
-        Duration::from_millis(5),
-        mode,
+        ServeOpts {
+            max_batch: a.get_usize("max-batch")?,
+            batch_window: Duration::from_millis(5),
+            mode,
+            prefill_budget,
+        },
     );
     for (i, p) in probes.iter().enumerate() {
         server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new });
@@ -207,8 +229,13 @@ fn cmd_serve(a: &Args) -> Result<()> {
     } else {
         String::new()
     };
+    let budget = if prefill_budget == usize::MAX {
+        "inf".to_string()
+    } else {
+        prefill_budget.to_string()
+    };
     println!(
-        "served {} reqs ({mode:?}), {} tokens, {:.1} tok/s{savings}",
+        "served {} reqs ({mode:?}, prefill budget {budget}), {} tokens, {:.1} tok/s{savings}",
         m.requests,
         m.tokens_generated,
         m.tokens_per_sec()
@@ -268,6 +295,22 @@ mod tests {
         assert!(parse_format("mxfpx").is_err());
     }
 
+    use nxfp::coordinator::DEFAULT_PREFILL_BUDGET;
+
+    #[test]
+    fn parse_budget_values() {
+        assert_eq!(parse_budget("1").unwrap(), 1);
+        assert_eq!(parse_budget("64").unwrap(), 64);
+        assert_eq!(parse_budget("inf").unwrap(), usize::MAX);
+        assert_eq!(parse_budget("MAX").unwrap(), usize::MAX);
+        assert_eq!(parse_budget("unbounded").unwrap(), usize::MAX);
+        assert!(parse_budget("0").is_err());
+        assert!(parse_budget("-3").is_err());
+        assert!(parse_budget("lots").is_err());
+        // the CLI default string tracks the library constant
+        assert_eq!(parse_budget(DEFAULT_BUDGET_STR).unwrap(), DEFAULT_PREFILL_BUDGET);
+    }
+
     #[test]
     fn kvq_artifact_names() {
         assert_eq!(kvq_artifact_name(&NxConfig::nxfp(4)), "eval_step_kvq_nxfp4");
@@ -317,6 +360,11 @@ fn main() {
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("kv-format", Some("nxfp4"), "KV-cache storage format")
             .opt("sched", Some("continuous"), "scheduler: continuous|wave")
+            .opt(
+                "prefill-budget",
+                Some(DEFAULT_BUDGET_STR),
+                "prefill tokens per step (or 'inf'; 1 = unchunked)",
+            )
             .opt("requests", Some("16"), "number of requests")
             .opt("max-new", Some("32"), "tokens to generate per request")
             .opt("max-batch", Some("4"), "batch lanes (must match artifact)")

@@ -99,10 +99,43 @@ impl KvCache {
         self.len += 1;
     }
 
+    /// Quantize and append `n` (k, v) row pairs in one bulk operation
+    /// (the chunked-prefill path). Storage for the whole chunk is grown
+    /// **once** per stream ([`BlockStore::push_rows`]) instead of once per
+    /// token, then every row is encoded through the same
+    /// `quantize_row_into` routine as [`KvCache::append`] — the packed
+    /// bits are identical to `n` single-row appends by construction.
+    /// `k_rows`/`v_rows` are row-major `[n, dim]`.
+    pub fn append_rows(&mut self, k_rows: &[f32], v_rows: &[f32], n: usize) {
+        assert_eq!(k_rows.len(), n * self.dim);
+        assert_eq!(v_rows.len(), n * self.dim);
+        if n == 0 {
+            return;
+        }
+        let r0 = self.k_store.push_rows(n);
+        for (i, row) in k_rows.chunks(self.dim).enumerate() {
+            let (codes, e, nano, fmt) = self.k_store.row_slices_mut(r0 + i);
+            self.plan.quantize_row_into(row, &mut self.scratch, codes, e, nano, fmt);
+        }
+        let r0 = self.v_store.push_rows(n);
+        for (i, row) in v_rows.chunks(self.dim).enumerate() {
+            let (codes, e, nano, fmt) = self.v_store.row_slices_mut(r0 + i);
+            self.plan.quantize_row_into(row, &mut self.scratch, codes, e, nano, fmt);
+        }
+        self.len += n;
+    }
+
     /// Rows already decoded into the caller's staging tensors (the
     /// dirty-row watermark). Rows `watermark()..len` are pending.
     pub fn watermark(&self) -> usize {
         self.clean
+    }
+
+    /// The packed (K, V) [`BlockStore`]s — the stored bits themselves.
+    /// Exposed so the chunk-invariance tests can pin bit-identity of the
+    /// packed streams across prefill budgets; hot paths never need this.
+    pub fn stores(&self) -> (&BlockStore, &BlockStore) {
+        (&self.k_store, &self.v_store)
     }
 
     /// Shared decode routine: rows `from..to` of one stream into the
@@ -321,6 +354,106 @@ mod tests {
         assert_eq!(cache.k_store.codes.capacity(), cap_codes);
         assert_eq!(cache.k_store.e_shared.capacity(), cap_meta);
         assert_eq!(cache.len, rows);
+    }
+
+    #[test]
+    fn append_rows_bit_identical_to_single_appends() {
+        // bulk chunk encoding must store the exact bytes the per-token
+        // path stores, incl. partial tail blocks (dim 45, block 32 ->
+        // 13-element tails) and chunk splits at every offset
+        let mut rng = Rng::seeded(76);
+        let dim = 45;
+        for cfg in [NxConfig::bfp(4), NxConfig::mxfp(5), NxConfig::nxfp(4)] {
+            let n = 7;
+            let k_rows: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+            let v_rows: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+            let mut single = KvCache::new(dim, cfg.clone());
+            for r in 0..n {
+                single.append(&k_rows[r * dim..(r + 1) * dim], &v_rows[r * dim..(r + 1) * dim]);
+            }
+            for split in 0..=n {
+                let mut bulk = KvCache::new(dim, cfg.clone());
+                bulk.append_rows(&k_rows[..split * dim], &v_rows[..split * dim], split);
+                bulk.append_rows(&k_rows[split * dim..], &v_rows[split * dim..], n - split);
+                assert_eq!(bulk.len, n);
+                assert_eq!(bulk.stores(), single.stores(), "{} split {split}", cfg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn watermark_on_empty_cache_is_a_noop() {
+        let dim = 32;
+        let mut cache = KvCache::new(dim, NxConfig::nxfp(4));
+        let mut k = vec![7.0f32; 4 * dim];
+        let mut v = vec![7.0f32; 4 * dim];
+        // empty cache: decode range is empty and the slab is untouched
+        assert_eq!(cache.dequantize_into_slab(&mut k, &mut v), 0..0);
+        assert!(k.iter().all(|&x| x == 7.0));
+        cache.reset_watermark();
+        assert_eq!(cache.watermark(), 0);
+        assert_eq!(cache.dequantize_into_slab(&mut k, &mut v), 0..0);
+        // a zero-length slab is acceptable for a zero-length cache
+        assert_eq!(cache.dequantize_into_slab(&mut [], &mut []), 0..0);
+        assert_eq!(cache.footprint_bits(), 0);
+    }
+
+    #[test]
+    fn watermark_at_exact_capacity_fill() {
+        // fill a cache to exactly its pre-reserved context window through
+        // a mix of bulk and single appends: no reallocation anywhere, and
+        // the watermark decode into an exactly-sized slab stays correct
+        let mut rng = Rng::seeded(77);
+        let (dim, rows) = (40, 12); // partial tail block (block 32)
+        let mut cache = KvCache::with_capacity(dim, NxConfig::nxfp(4), rows);
+        let (cap_k_codes, cap_k_meta) = {
+            let (ks, _) = cache.stores();
+            (ks.codes.capacity(), ks.e_shared.capacity())
+        };
+        let mut k_lane = vec![0.0f32; rows * dim]; // exactly-capacity slab
+        let mut v_lane = vec![0.0f32; rows * dim];
+        let chunk: Vec<f32> = (0..5 * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        cache.append_rows(&chunk, &chunk, 5);
+        cache.dequantize_into_slab(&mut k_lane, &mut v_lane);
+        let row: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for _ in 0..3 {
+            cache.append(&row, &row);
+        }
+        let tail: Vec<f32> = (0..4 * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        cache.append_rows(&tail, &tail, 4);
+        assert_eq!(cache.len, rows);
+        assert_eq!(cache.dequantize_into_slab(&mut k_lane, &mut v_lane), 5..rows);
+        assert_eq!(cache.watermark(), rows);
+        // bit-identical to a from-scratch full decode
+        let (k_full, v_full) = cache.dequantize(rows);
+        assert_eq!(k_lane, k_full.data);
+        assert_eq!(v_lane, v_full.data);
+        // the context-window fill never reallocated the packed streams
+        let (ks, _) = cache.stores();
+        assert_eq!(ks.codes.capacity(), cap_k_codes);
+        assert_eq!(ks.e_shared.capacity(), cap_k_meta);
+    }
+
+    #[test]
+    fn partial_tail_blocks_after_bulk_append() {
+        // dim 19 with block 16: every row ends in a 3-element tail block
+        // split mid-row by the block boundary; bulk appends must decode
+        // bit-identically to the reference per-row dequantize
+        let mut rng = Rng::seeded(78);
+        let dim = 19;
+        let cfg = NxConfig::nxfp(4).with_block_size(16);
+        let mut cache = KvCache::new(dim, cfg);
+        let rows: Vec<f32> = (0..6 * dim).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        cache.append_rows(&rows, &rows, 6);
+        let mut k = vec![0.0f32; 8 * dim];
+        let mut v = vec![0.0f32; 8 * dim];
+        assert_eq!(cache.dequantize_into_slab(&mut k, &mut v), 0..6);
+        let (k_full, _) = cache.dequantize(8);
+        assert_eq!(k, k_full.data);
+        // tail blocks really are short
+        let (ks, _) = cache.stores();
+        assert_eq!(ks.blocks_per_row(), 2);
+        assert_eq!(ks.block_codes(1).len(), 3);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Chunk-invariance property tests: chunked prefill is a **scheduling**
+//! optimization and must be unobservable in outputs. For any per-step
+//! prefill budget, every request's generated tokens and the packed bits
+//! of its quantized KV streams are identical to the unchunked (budget 1)
+//! schedule — including chunk boundaries that land mid-row on a split
+//! 16-element quant block (d_model 24 = one full block + an 8-element
+//! tail per row), and regardless of admission order.
+//!
+//! All tests run on the deterministic `SynthBackend` (native multi-token
+//! chunk path); the artifact-loop fallback is pinned separately in
+//! `coordinator::tests::chunked_prefill_via_artifact_loop_is_bit_identical`.
+
+use nxfp::coordinator::scheduler::Scheduler;
+use nxfp::coordinator::{DecodeEngine, GenRequest, SynthBackend};
+use nxfp::formats::NxConfig;
+use nxfp::models::LmSpec;
+use nxfp::quant::kv_cache::KvCache;
+use nxfp::util::proptest::check;
+use nxfp::util::rng::Rng;
+
+/// Budgets the invariance contract is pinned over (1 = unchunked,
+/// `usize::MAX` = whole prompt in one step).
+const BUDGETS: [usize; 4] = [1, 3, 16, usize::MAX];
+
+fn spec() -> LmSpec {
+    LmSpec { vocab: 48, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 64, seq_len: 24 }
+}
+
+/// KV format whose 16-element blocks split every 24-element row mid-row.
+fn kv_cfg() -> NxConfig {
+    NxConfig::nxfp(4).with_block_size(16)
+}
+
+fn engine(budget: usize, max_batch: usize) -> DecodeEngine {
+    let sp = spec();
+    let mut eng =
+        DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), Some(kv_cfg()), max_batch);
+    eng.set_prefill_budget(budget);
+    eng
+}
+
+/// Tokens a request generates running completely alone, unchunked.
+fn solo_tokens(req: &GenRequest) -> Vec<i32> {
+    let mut eng = engine(1, 1);
+    eng.serve_wave(vec![req.clone()]).unwrap().remove(0).tokens
+}
+
+#[test]
+fn generation_invariant_across_budgets_and_admission_orders() {
+    // prompt lengths straddle every budget: shorter than the chunk, one
+    // token short of it, exactly on it, and far past it
+    let shapes: [(u64, usize, usize); 5] =
+        [(0, 2, 6), (1, 4, 5), (2, 15, 4), (3, 16, 3), (4, 9, 4)];
+    let reqs: Vec<GenRequest> = shapes
+        .iter()
+        .map(|&(id, plen, max_new)| GenRequest {
+            id,
+            prompt: (0..plen).map(|i| ((id as usize * 7 + i * 3) % 47) as i32 + 1).collect(),
+            max_new,
+        })
+        .collect();
+    let want: Vec<Vec<i32>> = reqs.iter().map(solo_tokens).collect();
+    // two admission orders: arrival order and reversed (the scheduler
+    // re-ranks internally; the contract is per-request bit-identity)
+    let orders: [Vec<usize>; 2] = [vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]];
+    for budget in BUDGETS {
+        for order in &orders {
+            let mut eng = engine(budget, 2);
+            let mut sched = Scheduler::new(2, Scheduler::DEFAULT_PROMOTE_AFTER);
+            sched.set_prefill_budget(budget);
+            for &i in order {
+                sched.enqueue(reqs[i].clone());
+            }
+            let resps = eng.serve_continuous(&mut sched).unwrap();
+            assert_eq!(resps.len(), reqs.len());
+            for (req, want) in reqs.iter().zip(&want) {
+                let got = &resps.iter().find(|r| r.id == req.id).unwrap().tokens;
+                assert_eq!(
+                    got, want,
+                    "request {} diverged (budget {budget}, order {order:?})",
+                    req.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_kv_bits_invariant_across_budgets() {
+    // run the same request under every budget and freeze each run at the
+    // same cache fill (prompt fully prefilled + 2 generated rows): the
+    // packed K and V streams of every layer must be byte-identical —
+    // chunked bulk appends may not change a single stored bit
+    let prompt: Vec<i32> = (0..17).map(|i| (i * 5 % 43) as i32 + 1).collect();
+    let fill_at = prompt.len() + 2;
+    let req = GenRequest { id: 7, prompt, max_new: 8 };
+    let snapshot = |budget: usize| {
+        let mut eng = engine(budget, 1);
+        let mut sched = Scheduler::new(1, Scheduler::DEFAULT_PROMOTE_AFTER);
+        sched.set_prefill_budget(budget);
+        sched.enqueue(req.clone());
+        loop {
+            let done = eng.step_continuous(&mut sched).unwrap();
+            assert!(done.is_empty(), "request finished before the snapshot fill");
+            let slot = sched.slots()[0].as_ref().expect("slot admitted");
+            let kv = slot.kv().expect("quantized mode");
+            assert!(kv.fill() <= fill_at, "stepped past the snapshot fill");
+            if kv.fill() == fill_at {
+                // clone the packed streams of every layer (K then V)
+                return kv
+                    .caches()
+                    .iter()
+                    .flat_map(|c| {
+                        let (k, v) = c.stores();
+                        [k.clone(), v.clone()]
+                    })
+                    .collect::<Vec<_>>();
+            }
+        }
+    };
+    let want = snapshot(1);
+    for budget in &BUDGETS[1..] {
+        assert_eq!(snapshot(*budget), want, "packed KV bits diverged at budget {budget}");
+    }
+}
+
+#[test]
+fn bulk_append_rows_property_random_splits() {
+    // KvCache::append_rows over arbitrary chunk partitions must store the
+    // exact bytes of the per-row path, for dims that split blocks mid-row
+    // and across format families
+    check("append_rows random splits", 64, |rng: &mut Rng| {
+        let dim = 1 + rng.below(70); // covers < block, == block, tails
+        let cfg = match rng.below(3) {
+            0 => NxConfig::bfp(4),
+            1 => NxConfig::mxfp(5),
+            _ => NxConfig::nxfp(4),
+        }
+        .with_block_size(16);
+        let n = 1 + rng.below(10);
+        let rows: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        let vows: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        let mut single = KvCache::new(dim, cfg.clone());
+        for r in 0..n {
+            single.append(&rows[r * dim..(r + 1) * dim], &vows[r * dim..(r + 1) * dim]);
+        }
+        let mut bulk = KvCache::new(dim, cfg);
+        let mut at = 0usize;
+        while at < n {
+            let take = 1 + rng.below(n - at);
+            bulk.append_rows(
+                &rows[at * dim..(at + take) * dim],
+                &vows[at * dim..(at + take) * dim],
+                take,
+            );
+            at += take;
+        }
+        if bulk.len != n {
+            return Err(format!("bulk len {} != {n}", bulk.len));
+        }
+        if bulk.stores() != single.stores() {
+            return Err(format!("stores diverged (dim {dim}, {n} rows)"));
+        }
+        // decoded lanes bit-identical too
+        let (kb, vb) = bulk.dequantize(n);
+        let (ks, vs) = single.dequantize(n);
+        if kb.data != ks.data || vb.data != vs.data {
+            return Err("dequantized rows diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wave_mode_honors_the_same_invariance() {
+    // the budget knob exists in both sched modes; wave mode must be just
+    // as unobservable
+    let reqs = vec![
+        GenRequest { id: 0, prompt: vec![9, 3, 17, 5, 21, 2, 8, 11, 4, 6], max_new: 5 },
+        GenRequest { id: 1, prompt: vec![30, 1], max_new: 7 },
+    ];
+    let want: Vec<Vec<i32>> = reqs.iter().map(solo_tokens).collect();
+    for budget in BUDGETS {
+        let mut eng = engine(budget, 2);
+        let resps = eng.serve_wave(reqs.clone()).unwrap();
+        for (req, want) in reqs.iter().zip(&want) {
+            let got = &resps.iter().find(|r| r.id == req.id).unwrap().tokens;
+            assert_eq!(got, want, "wave request {} diverged at budget {budget}", req.id);
+        }
+    }
+}

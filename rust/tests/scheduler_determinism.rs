@@ -11,10 +11,16 @@
 //! 3. **Lane mobility** — moving a live slot to another lane
 //!    (`DecodeEngine::move_lane` slab copy) preserves KV contents: the
 //!    generation continues bit-identically.
+//! 4. **Chunked prefill stays safe** — the anti-starvation bound still
+//!    holds when prefill is chunked under a token budget, and a budget of
+//!    16 strictly beats budget 1 on deterministic TTFT-in-steps for the
+//!    bursty prefill-heavy workload (the reason the knob exists). The
+//!    bit-identity side of chunking is pinned in `prefill_chunking.rs`.
 //!
 //! All tests run on the deterministic `SynthBackend` — no PJRT runtime or
 //! `make artifacts` needed (unlike `server_integration.rs`).
 
+use nxfp::bench_util::StepTtft;
 use nxfp::coordinator::scheduler::Scheduler;
 use nxfp::coordinator::{DecodeEngine, GenRequest, GenResponse, SlotState, SynthBackend};
 use nxfp::formats::NxConfig;
@@ -130,6 +136,96 @@ fn promotion_bounds_queue_wait_for_long_prompts() {
     let pos = order.iter().position(|&x| x == 99).unwrap();
     assert!(promoted >= 1, "promotion rule never fired");
     assert!(pos < 12, "long request finished at position {pos} of 25: {order:?}");
+}
+
+#[test]
+fn promotion_bounds_queue_wait_with_chunked_prefill() {
+    // the anti-starvation bound must survive chunking: at budget 4 the
+    // 12-token prompt still costs 3x the estimated prefill steps of a
+    // 2-token short, so the budget-aware greedy keeps bypassing it until
+    // the promotion rule fires
+    let budget = 4usize;
+    let promote_after = 6u64;
+    let long = GenRequest { id: 99, prompt: vec![3; 12], max_new: 4 };
+    let shorts: Vec<GenRequest> =
+        (0..24).map(|i| GenRequest { id: i, prompt: vec![2, 5], max_new: 3 }).collect();
+    let run = |promote_after: u64| -> (Vec<u64>, u64) {
+        let mut eng = engine(Some(NxConfig::nxfp(4)), 2);
+        eng.set_prefill_budget(budget);
+        let mut sched = Scheduler::new(2, promote_after);
+        sched.set_prefill_budget(budget);
+        sched.enqueue(shorts[0].clone());
+        sched.enqueue(long.clone());
+        for s in &shorts[1..] {
+            sched.enqueue(s.clone());
+        }
+        let resps = eng.serve_continuous(&mut sched).unwrap();
+        assert_eq!(resps.len(), 25);
+        (resps.iter().map(|r| r.id).collect(), eng.serving.promoted)
+    };
+    // greedy-only control: still starved under chunking
+    let (order, promoted) = run(100_000);
+    assert_eq!(*order.last().unwrap(), 99, "control: greedy starves the long request");
+    assert_eq!(promoted, 0);
+    // with the bound the long request overtakes once it becomes urgent
+    let (order, promoted) = run(promote_after);
+    let pos = order.iter().position(|&x| x == 99).unwrap();
+    assert!(promoted >= 1, "promotion rule never fired under chunking");
+    assert!(pos < 12, "long request finished at position {pos} of 25: {order:?}");
+}
+
+/// Drive a continuous run step by step, tracking deterministic
+/// TTFT-in-steps per request; returns the tracker and total engine steps.
+fn run_with_ttft(budget: usize, reqs: &[GenRequest], lanes: usize) -> (StepTtft, u64) {
+    let mut eng = engine(Some(NxConfig::nxfp(4)), lanes);
+    eng.set_prefill_budget(budget);
+    let mut sched = Scheduler::new(lanes, Scheduler::DEFAULT_PROMOTE_AFTER);
+    sched.set_prefill_budget(budget);
+    for r in reqs {
+        sched.enqueue(r.clone());
+    }
+    let mut ttft = StepTtft::new();
+    let mut step = 0u64;
+    let mut done = 0usize;
+    while sched.has_work() {
+        let finished = eng.step_continuous(&mut sched).unwrap();
+        step += 1;
+        ttft.observe(step, sched.slots());
+        ttft.observe_done(step, &finished);
+        done += finished.len();
+    }
+    assert_eq!(done, reqs.len());
+    assert_eq!(ttft.count(), reqs.len());
+    (ttft, step)
+}
+
+#[test]
+fn chunked_prefill_strictly_beats_unchunked_ttft() {
+    // bursty prefill-heavy synth workload: long prompts, short answers —
+    // the regime where feeding one prompt token per step inflates TTFT.
+    // budget 16 must strictly beat budget 1 on first-token steps without
+    // spending more engine steps overall.
+    let reqs: Vec<GenRequest> = (0..8u64)
+        .map(|i| {
+            let plen = 14 + (i as usize % 3);
+            let prompt = (0..plen).map(|t| ((i as usize + t * 5) % 40) as i32 + 1).collect();
+            GenRequest { id: i, prompt, max_new: 3 }
+        })
+        .collect();
+    let (ttft1, steps1) = run_with_ttft(1, &reqs, 2);
+    let (ttft16, steps16) = run_with_ttft(16, &reqs, 2);
+    assert!(
+        ttft16.mean() < ttft1.mean(),
+        "budget 16 mean TTFT {} steps must strictly beat budget 1's {}",
+        ttft16.mean(),
+        ttft1.mean()
+    );
+    assert!(ttft16.quantile(0.5) < ttft1.quantile(0.5), "p50 TTFT did not improve");
+    assert!(steps16 <= steps1, "chunking spent more steps ({steps16} vs {steps1})");
+    // and per-request first tokens never arrive later under chunking
+    for r in &reqs {
+        assert!(ttft16.get(r.id).unwrap() <= ttft1.get(r.id).unwrap(), "req {} regressed", r.id);
+    }
 }
 
 #[test]

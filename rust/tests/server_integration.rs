@@ -6,7 +6,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use nxfp::coordinator::scheduler::SchedMode;
-use nxfp::coordinator::server::ServerHandle;
+use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
 use nxfp::formats::NxConfig;
 use nxfp::models::{Checkpoint, LmSpec};
@@ -29,9 +29,12 @@ fn server_completes_all_requests_and_batches() {
         spec,
         ck,
         Some(NxConfig::nxfp(4)),
-        4,
-        Duration::from_millis(20),
-        SchedMode::Continuous,
+        ServeOpts {
+            max_batch: 4,
+            batch_window: Duration::from_millis(20),
+            mode: SchedMode::Continuous,
+            prefill_budget: 16,
+        },
     );
     let n_req = 10usize; // more requests than lanes: admission must churn
     for i in 0..n_req {
@@ -80,9 +83,12 @@ fn server_shutdown_without_requests_is_clean() {
         spec,
         ck,
         None,
-        2,
-        Duration::from_millis(1),
-        SchedMode::Wave,
+        ServeOpts {
+            max_batch: 2,
+            batch_window: Duration::from_millis(1),
+            mode: SchedMode::Wave,
+            prefill_budget: 1,
+        },
     );
     let report = server.shutdown().unwrap();
     assert_eq!(report.metrics.requests, 0);
