@@ -3,18 +3,26 @@
 records against the previous CI run's uploaded artifact.
 
 Usage: bench_compare.py <prev_dir> <curr_dir>
+       bench_compare.py --selftest
 
 Each BENCH_<bench>.json is a file of JSON lines emitted by
 `nxfp::bench_util::emit_bench_json` (one record per bench configuration:
-{"bench","name","config","smoke",<numeric fields...>}). Records are keyed
-by (bench, name, config, smoke); when a file contains several records for
-one key (re-runs appended to the same artifact dir) the *last* one wins.
-Compared fields: every numeric field present in both records, with tok/s
-treated as higher-is-better and latency/step fields as lower-is-better.
+{"bench","name","config","policy","smoke",<numeric fields...>}). Records
+are keyed by (bench, name, config, policy, smoke) — `policy` is the
+quantization-policy name, so mixed-precision runs never collide with
+uniform ones; older records without the field key on policy=None. When a
+file contains several records for one key (re-runs appended to the same
+artifact dir) the *last* one wins. Compared fields: every numeric field
+present in both records, with tok/s treated as higher-is-better and
+latency/step/bits fields as lower-is-better.
 
 This script never fails the build: perf on shared CI runners is noisy, so
 the report is informational — the trajectory accumulates in the uploaded
 artifacts and regressions show up as a trend, not a single red build.
+The one escalation: a **>2x regression on a non-smoke record** is promoted
+to a GitHub `::warning::` annotation so it surfaces in the PR summary
+instead of scrolling by as prose (smoke records run at toy sizes where a
+2x swing is routine scheduler noise, so they stay prose).
 """
 
 import json
@@ -24,8 +32,21 @@ import sys
 # substrings that mark a lower-is-better metric; anything else (tok_s,
 # blocks_s, speedup...) is reported as higher-is-better. "growth" is
 # hotpath_serving's per-step-cost flatness ratio (~1.0 flat, >1 means
-# decode work grows with cache fill) — lower is better there too.
-LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth")
+# decode work grows with cache fill) — lower is better there too, as is
+# "bits" (effective storage bits per element).
+LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth", "bits")
+
+# Non-smoke regressions worse than this factor become ::warning::
+# annotations in the PR summary.
+WARN_FACTOR = 2.0
+
+
+def record_key(r):
+    # records predating the policy field key as policy == config, which is
+    # exactly what uniform-policy benches emit — the accumulated trajectory
+    # keeps comparing across the transition instead of resetting
+    policy = r.get("policy") or r.get("config")
+    return (r.get("bench"), r.get("name"), r.get("config"), policy, r.get("smoke"))
 
 
 def load(d):
@@ -44,58 +65,169 @@ def load(d):
                     r = json.loads(line)
                 except json.JSONDecodeError:
                     continue
-                key = (r.get("bench"), r.get("name"), r.get("config"), r.get("smoke"))
-                recs[key] = r  # last record wins
+                recs[record_key(r)] = r  # last record wins
     return recs
+
+
+def is_lower_better(field):
+    return any(t in field for t in LOWER_IS_BETTER)
 
 
 def fmt_delta(field, old, new):
     if old in (None, 0) or new is None:
         return "n/a"
     pct = 100.0 * (new - old) / abs(old)
-    lower_better = any(t in field for t in LOWER_IS_BETTER)
-    improved = pct < 0 if lower_better else pct > 0
+    improved = pct < 0 if is_lower_better(field) else pct > 0
     arrow = "+" if pct >= 0 else ""
     mark = "(better)" if improved else ("(worse)" if abs(pct) > 1e-9 else "")
     return f"{arrow}{pct:.1f}% {mark}".strip()
 
 
+def regression_factor(field, old, new):
+    """How many times *worse* the new value is (None when not comparable
+    or not a regression). >1 means regressed; e.g. tok/s 100 -> 40 or
+    p95 10 -> 25 both return 2.5."""
+    if old is None or new is None:
+        return None
+    if not isinstance(old, (int, float)) or isinstance(old, bool):
+        return None
+    if not isinstance(new, (int, float)) or isinstance(new, bool):
+        return None
+    if old <= 0 or new <= 0:
+        return None
+    factor = new / old if is_lower_better(field) else old / new
+    return factor if factor > 1.0 else None
+
+
+def numeric_fields(old, new):
+    def ok(v):
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+    return sorted(k for k, v in new.items() if ok(v) and ok(old.get(k)))
+
+
+def compare(prev, curr):
+    """Pure comparison: returns (report_lines, warning_lines)."""
+    lines, warnings = [], []
+    if not curr:
+        return (["[bench-compare] no current records; nothing to report"], [])
+    if not prev:
+        lines.append(
+            f"[bench-compare] no previous records — first trajectory point "
+            f"({len(curr)} records recorded, nothing to compare)"
+        )
+        return (lines, [])
+    lines.append(f"[bench-compare] {len(curr)} current records vs {len(prev)} previous\n")
+    width = 52
+    for key in sorted(curr, key=str):
+        bench, name, config, policy, smoke = key
+        label = f"{bench}/{name} [{config}]"
+        if policy and policy != config:
+            label += f" policy={policy}"
+        if smoke:
+            label += " (smoke)"
+        old = prev.get(key)
+        if old is None:
+            lines.append(f"{label:<{width}} new scenario (no previous record)")
+            continue
+        new = curr[key]
+        parts = []
+        for f in numeric_fields(old, new):
+            parts.append(f"{f} {old[f]:.4g}->{new[f]:.4g} ({fmt_delta(f, old[f], new[f])})")
+            factor = regression_factor(f, old[f], new[f])
+            if factor is not None and factor > WARN_FACTOR and not smoke:
+                warnings.append(
+                    f"::warning title=bench regression::{label}: {f} regressed "
+                    f"{factor:.1f}x ({old[f]:.4g} -> {new[f]:.4g})"
+                )
+        lines.append(f"{label:<{width}} " + "; ".join(parts))
+    for key in sorted(set(prev) - set(curr), key=str):
+        lines.append(f"{key}: present in previous run only")
+    return (lines, warnings)
+
+
+def selftest():
+    """Unit-test the threshold/warning logic with synthetic records."""
+    rec = lambda name, smoke=False, **fields: dict(
+        bench="b", name=name, config="c", policy="p", smoke=smoke, **fields
+    )
+    key = lambda r: record_key(r)
+
+    # direction handling
+    assert regression_factor("tok_s", 100.0, 40.0) == 100.0 / 40.0  # higher-better drop
+    assert regression_factor("tok_s", 100.0, 120.0) is None  # improvement
+    assert regression_factor("p95_ms", 10.0, 25.0) == 2.5  # lower-better rise
+    assert regression_factor("p95_ms", 10.0, 9.0) is None
+    assert regression_factor("effective_bits", 4.0, 9.0) == 2.25  # "bits" is lower-better
+    # non-comparable inputs
+    assert regression_factor("tok_s", None, 5.0) is None
+    assert regression_factor("tok_s", 0, 5.0) is None
+    assert regression_factor("tok_s", True, 5.0) is None
+
+    # a 2.5x non-smoke regression becomes exactly one ::warning::
+    prev = {key(r): r for r in [rec("slow", tok_s=100.0)]}
+    curr = {key(r): r for r in [rec("slow", tok_s=40.0)]}
+    _, warns = compare(prev, curr)
+    assert len(warns) == 1 and "::warning" in warns[0] and "2.5x" in warns[0], warns
+
+    # exactly-2x is NOT promoted (threshold is strict)
+    curr2 = {key(r): r for r in [rec("slow", tok_s=50.0)]}
+    _, warns = compare(prev, curr2)
+    assert warns == [], warns
+
+    # the same regression on a smoke record stays prose
+    prev_s = {key(r): r for r in [rec("slow", smoke=True, tok_s=100.0)]}
+    curr_s = {key(r): r for r in [rec("slow", smoke=True, tok_s=10.0)]}
+    lines, warns = compare(prev_s, curr_s)
+    assert warns == [] and any("worse" in l for l in lines), (lines, warns)
+
+    # improvements and sub-threshold noise never warn
+    prev3 = {key(r): r for r in [rec("ok", tok_s=100.0, p95_ms=10.0)]}
+    curr3 = {key(r): r for r in [rec("ok", tok_s=130.0, p95_ms=14.0)]}
+    _, warns = compare(prev3, curr3)
+    assert warns == [], warns
+
+    # policy participates in the key: same (bench,name,config) under a
+    # different policy is a new scenario, not a comparison
+    prev4 = {key(r): r for r in [rec("mixed", tok_s=100.0)]}
+    moved = rec("mixed", tok_s=10.0)
+    moved["policy"] = "kv.k=nxfp5,kv.v=mxfp4"
+    curr4 = {record_key(moved): moved}
+    lines, warns = compare(prev4, curr4)
+    assert warns == [] and any("new scenario" in l for l in lines), (lines, warns)
+
+    # legacy records (no policy field) keep comparing against new uniform
+    # records whose policy == config — the trajectory must not reset (and
+    # a >2x regression across the transition still warns)
+    legacy = {"bench": "b", "name": "slow", "config": "c", "smoke": False, "tok_s": 100.0}
+    prev6 = {record_key(legacy): legacy}
+    uniform = rec("slow", tok_s=40.0)
+    uniform["policy"] = "c"  # uniform benches emit policy == config
+    curr6 = {record_key(uniform): uniform}
+    _, warns = compare(prev6, curr6)
+    assert len(warns) == 1 and "2.5x" in warns[0], warns
+
+    # multiple fields regressing on one record produce one warning each
+    prev5 = {key(r): r for r in [rec("multi", tok_s=100.0, p95_ms=10.0)]}
+    curr5 = {key(r): r for r in [rec("multi", tok_s=30.0, p95_ms=50.0)]}
+    _, warns = compare(prev5, curr5)
+    assert len(warns) == 2, warns
+
+    print("[bench-compare] selftest OK")
+    return 0
+
+
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        return selftest()
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
-    prev, curr = load(sys.argv[1]), load(sys.argv[2])
-    if not curr:
-        print(f"[bench-compare] no records in {sys.argv[2]}; nothing to report")
-        return 0
-    if not prev:
-        print(
-            f"[bench-compare] no previous artifact in {sys.argv[1]} — first "
-            f"trajectory point ({len(curr)} records recorded, nothing to compare)"
-        )
-        return 0
-    print(f"[bench-compare] {len(curr)} current records vs {len(prev)} previous\n")
-    width = 52
-    for key in sorted(curr, key=str):
-        bench, name, config, smoke = key
-        label = f"{bench}/{name} [{config}]" + (" (smoke)" if smoke else "")
-        old = prev.get(key)
-        if old is None:
-            print(f"{label:<{width}} new scenario (no previous record)")
-            continue
-        fields = [
-            k
-            for k, v in curr[key].items()
-            if isinstance(v, (int, float)) and not isinstance(v, bool)
-            and isinstance(old.get(k), (int, float)) and not isinstance(old.get(k), bool)
-        ]
-        parts = []
-        for f in sorted(fields):
-            parts.append(f"{f} {old[f]:.4g}->{curr[key][f]:.4g} ({fmt_delta(f, old[f], curr[key][f])})")
-        print(f"{label:<{width}} " + "; ".join(parts))
-    gone = sorted(set(prev) - set(curr), key=str)
-    for key in gone:
-        print(f"{key}: present in previous run only")
+    lines, warnings = compare(load(sys.argv[1]), load(sys.argv[2]))
+    for line in lines:
+        print(line)
+    for w in warnings:
+        print(w)
     return 0
 
 

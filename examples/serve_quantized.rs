@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
 use nxfp::models::{Checkpoint, GrammarSpec, LmSpec};
 
@@ -26,10 +26,12 @@ fn main() -> Result<()> {
     let gspec = GrammarSpec::default_for_vocab(spec.vocab);
     let probes = Probe::generate(&gspec, 12, 2024);
 
-    for (label, kv_cfg) in [
-        ("KV FP32 (baseline)", None),
-        ("KV NxFP5", Some(NxConfig::nxfp(5))),
-        ("KV NxFP4", Some(NxConfig::nxfp(4))),
+    for (label, kv) in [
+        ("KV FP32 (baseline)", QuantPolicy::fp16()),
+        ("KV NxFP5", QuantPolicy::uniform(NxConfig::nxfp(5))),
+        ("KV NxFP4", QuantPolicy::uniform(NxConfig::nxfp(4))),
+        // mixed precision: keys keep a NanoMantissa bit, values go 4-bit
+        ("KV K=NxFP5 / V=MxFP4", QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4")?),
     ] {
         println!("\n== {label} ==");
         // defaults: continuous scheduling with chunked prefill (budget 64
@@ -39,7 +41,7 @@ fn main() -> Result<()> {
             PathBuf::from("artifacts"),
             spec,
             ck.clone(),
-            kv_cfg,
+            kv,
             ServeOpts::default(),
         );
         let t0 = std::time::Instant::now();
@@ -75,6 +77,13 @@ fn main() -> Result<()> {
                 m.kv_bits_fp16 / 8 / 1024,
                 m.kv_savings() * 100.0
             );
+            if m.kv_bits_packed_k != m.kv_bits_packed_v {
+                println!(
+                    "  per-class split: K {} KiB, V {} KiB",
+                    m.kv_bits_packed_k / 8 / 1024,
+                    m.kv_bits_packed_v / 8 / 1024
+                );
+            }
         }
         println!("  {}", report.serving.summary());
     }

@@ -20,7 +20,7 @@ use std::path::Path;
 
 use nxfp::bench_util::Table;
 use nxfp::eval::{perplexity, quantize_checkpoint};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec};
 use nxfp::runtime::Runtime;
 use nxfp::train::{TrainConfig, Trainer};
@@ -92,7 +92,7 @@ fn main() -> Result<()> {
             NxConfig::nxfp_nm_am(bits),
             NxConfig::nxfp(bits),
         ] {
-            let qck = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let qck = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
             let p = perplexity(&eval_step, &qck, &corpus, spec.seq_len, 8)?;
             table.row(&[
                 bits.to_string(),
@@ -115,7 +115,7 @@ fn main() -> Result<()> {
             ("NxFP", format!("eval_step_kvq_nxfp{bits}"), NxConfig::nxfp(bits)),
         ] {
             let step = rt.load(&artifact)?;
-            let qck = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let qck = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
             let p = perplexity(&step, &qck, &corpus, spec.seq_len, 8)?;
             kv_table.row(&[
                 bits.to_string(),

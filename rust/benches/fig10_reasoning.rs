@@ -8,7 +8,7 @@
 use nxfp::bench_util::scenario::{default_corpus, load_or_train};
 use nxfp::bench_util::{banner, Table};
 use nxfp::eval::{quantize_checkpoint, reasoning_accuracy};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
 use nxfp::models::LmSpec;
 use nxfp::runtime::Runtime;
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         let mut row = vec![bits.to_string()];
         let mut accs = Vec::new();
         for cfg in [NxConfig::bfp(bits), NxConfig::mxfp(bits), NxConfig::nxfp(bits)] {
-            let q = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let q = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
             let a = acc_of(&q)?;
             accs.push(a);
             row.push(format!("{:.1}%", a * 100.0));

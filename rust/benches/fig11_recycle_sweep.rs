@@ -9,7 +9,7 @@
 use nxfp::bench_util::scenario::{default_corpus, load_or_train};
 use nxfp::bench_util::{banner, Table};
 use nxfp::eval::{perplexity, quantize_checkpoint};
-use nxfp::formats::{ElementFormat, NxConfig, RecycleTarget};
+use nxfp::formats::{ElementFormat, NxConfig, QuantPolicy, RecycleTarget};
 use nxfp::models::LmSpec;
 use nxfp::runtime::Runtime;
 
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let quantizable = spec.quantizable();
 
     let ppl_of = |cfg: &NxConfig| -> anyhow::Result<f64> {
-        let q = quantize_checkpoint(&ck, &quantizable, cfg);
+        let q = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
         Ok(perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl())
     };
 

@@ -8,7 +8,7 @@
 use nxfp::bench_util::scenario::{default_corpus, load_or_train};
 use nxfp::bench_util::{banner, Table};
 use nxfp::eval::{perplexity, quantize_checkpoint};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::{LmSpec, NamedModel};
 use nxfp::runtime::Runtime;
 
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             NxConfig::mxfp(4).with_block_size(k),
             NxConfig::nxfp(4).with_block_size(k),
         ] {
-            let q = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let q = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
             let p = perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl();
             let gb = cfg.footprint_bits(llama3.weight_elements() as usize) as f64 / 8e9;
             t.row(&[

@@ -13,7 +13,7 @@
 use nxfp::bench_util::scenario::{default_corpus, load_or_train};
 use nxfp::bench_util::{banner, Table};
 use nxfp::eval::{perplexity, quantize_checkpoint};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::{LmSpec, NamedModel};
 use nxfp::runtime::Runtime;
 
@@ -43,12 +43,18 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", named[1].footprint_gb(None, None, 2048)),
     ]);
     let formats: Vec<NxConfig> = vec![
-        NxConfig::bfp(4), NxConfig::bfp(5), NxConfig::bfp(6),
-        NxConfig::mxfp(4), NxConfig::mxfp(5), NxConfig::mxfp(6),
-        NxConfig::nxfp(4), NxConfig::nxfp(5), NxConfig::nxfp(6),
+        NxConfig::bfp(4),
+        NxConfig::bfp(5),
+        NxConfig::bfp(6),
+        NxConfig::mxfp(4),
+        NxConfig::mxfp(5),
+        NxConfig::mxfp(6),
+        NxConfig::nxfp(4),
+        NxConfig::nxfp(5),
+        NxConfig::nxfp(6),
     ];
     for cfg in &formats {
-        let q = quantize_checkpoint(&ck, &quantizable, cfg);
+        let q = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
         let p = perplexity(&eval_step, &q, &corpus, spec.seq_len, 8)?.ppl();
         t.row(&[
             cfg.name(),
@@ -77,7 +83,7 @@ fn main() -> anyhow::Result<()> {
             ("nxfp", NxConfig::nxfp(bits)),
         ] {
             let step = rt.load(&format!("eval_step_kvq_{fam}{bits}"))?;
-            let q = quantize_checkpoint(&ck, &quantizable, &cfg);
+            let q = quantize_checkpoint(&ck, &quantizable, &QuantPolicy::uniform(cfg.clone()));
             let p = perplexity(&step, &q, &corpus, spec.seq_len, 8)?.ppl();
             t2.row(&[
                 cfg.name(),

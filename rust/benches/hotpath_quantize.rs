@@ -83,10 +83,12 @@ fn main() {
                 "quantize",
                 "matrix_encode",
                 &cfg.name(),
+                &cfg.name(),
                 &[
                     ("ref_mblk_s", ref_bps),
                     ("engine_mblk_s", eng_bps),
                     ("speedup", eng_bps / ref_bps),
+                    ("effective_bits", cfg.effective_bits()),
                 ],
             );
         }
@@ -137,7 +139,12 @@ fn main() {
             "quantize",
             label,
             &cfg.name(),
-            &[("kv_rows_s", rows_s), ("growth", growth)],
+            &cfg.name(),
+            &[
+                ("kv_rows_s", rows_s),
+                ("growth", growth),
+                ("effective_bits", cfg.effective_bits()),
+            ],
         );
     }
     kt.print();

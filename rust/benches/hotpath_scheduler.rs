@@ -23,7 +23,7 @@
 use nxfp::bench_util::{banner, emit_bench_json, quantile_duration, smoke_env, StepTtft, Table};
 use nxfp::coordinator::scheduler::Scheduler;
 use nxfp::coordinator::{DecodeEngine, GenRequest, GenResponse, SynthBackend};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
 use nxfp::util::rng::Rng;
 use std::time::{Duration, Instant};
@@ -56,9 +56,9 @@ fn traffic(bursts: usize, per_burst: usize, s: usize, rng: &mut Rng) -> Vec<GenR
     reqs
 }
 
-fn engine(seq_len: usize, kv: &NxConfig) -> DecodeEngine {
+fn engine(seq_len: usize, kv: &QuantPolicy) -> DecodeEngine {
     let sp = spec(seq_len);
-    DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), Some(kv.clone()), MAX_BATCH)
+    DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), kv, MAX_BATCH)
 }
 
 /// Wave mode: requests form FIFO waves of `MAX_BATCH`; each wave runs to
@@ -146,7 +146,8 @@ fn run_budgeted(
 fn main() {
     banner("HotpathScheduler", "wave vs continuous batching under bursty traffic");
     let (seq, bursts, per_burst) = if smoke_env() { (32, 2, 8) } else { (128, 4, 24) };
-    let kv = NxConfig::nxfp(4);
+    let kv = QuantPolicy::uniform(NxConfig::nxfp(4));
+    let kv_bits = NxConfig::nxfp(4).effective_bits();
     let mut rng = Rng::seeded(41);
     let reqs = traffic(bursts, per_burst, seq, &mut rng);
     println!(
@@ -182,12 +183,14 @@ fn main() {
             "scheduler",
             label,
             &kv.name(),
+            &kv.name(),
             &[
                 ("tok_s", m.tokens_per_sec()),
                 ("p50_ms", p50.as_secs_f64() * 1e3),
                 ("p95_ms", p95.as_secs_f64() * 1e3),
                 ("decode_steps", m.decode_steps as f64),
                 ("tokens", m.tokens_generated as f64),
+                ("effective_bits", kv_bits),
             ],
         );
         results.push((label, m.tokens_per_sec(), m.decode_steps));
@@ -237,6 +240,7 @@ fn main() {
             "scheduler",
             &format!("prefill-heavy-b{budget}"),
             &kv.name(),
+            &kv.name(),
             &[
                 ("tok_s", m.tokens_per_sec()),
                 ("p50_ms", p50.as_secs_f64() * 1e3),
@@ -244,6 +248,7 @@ fn main() {
                 ("ttft_p50_steps", ttft.quantile(0.5) as f64),
                 ("ttft_mean_steps", ttft.mean()),
                 ("engine_steps", steps as f64),
+                ("effective_bits", kv_bits),
             ],
         );
         sweep.push((budget, m.tokens_per_sec(), ttft.quantile(0.5), ttft.mean(), steps));
@@ -273,5 +278,49 @@ fn main() {
         b1.3,
         b16.4,
         b1.4
+    );
+
+    // ---- mixed-precision KV policy on the same bursty traffic ----------
+    banner("HotpathScheduler", "mixed-precision KV policy (kv.k=nxfp5, kv.v=mxfp4)");
+    let mixed = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").expect("mixed policy spec");
+    let (cfg_k, cfg_v) = (NxConfig::nxfp(5), NxConfig::mxfp(4));
+    let mut rng = Rng::seeded(43);
+    let reqs = traffic(bursts, per_burst, seq, &mut rng);
+    let mut eng = engine(seq, &mixed);
+    let lats = run_continuous(&mut eng, &reqs);
+    assert_eq!(lats.len(), reqs.len(), "mixed policy: lost responses");
+    let m = eng.metrics;
+    // both streams store the same row count, so the per-class split must
+    // follow the two configs' per-row footprints exactly
+    let d = spec(seq).d_model;
+    assert_eq!(
+        m.kv_bits_packed_k * cfg_v.footprint_bits(d),
+        m.kv_bits_packed_v * cfg_k.footprint_bits(d),
+        "per-stream footprint split off the configs' accounting"
+    );
+    let (p50, p95) = (quantile_duration(&lats, 0.5), quantile_duration(&lats, 0.95));
+    println!(
+        "mixed KV: {:.0} tok/s, kv savings {:.1}% (K {} KiB / V {} KiB packed)",
+        m.tokens_per_sec(),
+        m.kv_savings() * 100.0,
+        m.kv_bits_packed_k / 8 / 1024,
+        m.kv_bits_packed_v / 8 / 1024
+    );
+    emit_bench_json(
+        "scheduler",
+        "mixed-kv",
+        // config = the resolved formats, policy = the spec that chose them
+        &format!("K={} V={}", cfg_k.name(), cfg_v.name()),
+        &mixed.name(),
+        &[
+            ("tok_s", m.tokens_per_sec()),
+            ("p50_ms", p50.as_secs_f64() * 1e3),
+            ("p95_ms", p95.as_secs_f64() * 1e3),
+            ("decode_steps", m.decode_steps as f64),
+            (
+                "effective_bits",
+                (cfg_k.effective_bits() + cfg_v.effective_bits()) / 2.0,
+            ),
+        ],
     );
 }

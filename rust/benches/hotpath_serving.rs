@@ -54,7 +54,7 @@ impl Slab {
     }
 }
 
-fn report(label: &str, cfg_name: &str, t: &mut Table, series: &[Duration]) -> f64 {
+fn report(label: &str, cfg_name: &str, eff_bits: f64, t: &mut Table, series: &[Duration]) -> f64 {
     let (first, last, growth) = quartile_growth(series);
     let total: Duration = series.iter().sum();
     let toks = (BSZ * series.len()) as f64 / total.as_secs_f64();
@@ -69,10 +69,12 @@ fn report(label: &str, cfg_name: &str, t: &mut Table, series: &[Duration]) -> f6
         "serving",
         label,
         cfg_name,
+        cfg_name,
         &[
             ("tok_s", toks),
             ("p95_step_ms", quantile_duration(series, 0.95).as_secs_f64() * 1e3),
             ("growth", growth),
+            ("effective_bits", eff_bits),
         ],
     );
     toks
@@ -105,7 +107,7 @@ fn main() {
         }
         slab.materialize();
     });
-    let fp32_toks = report("fp32 baseline", "fp32", &mut t, &fp32);
+    let fp32_toks = report("fp32 baseline", "fp32", 32.0, &mut t, &fp32);
 
     // Quantized, incremental (the new serve_wave path): append + watermark
     // sync decodes only this step's rows.
@@ -123,7 +125,7 @@ fn main() {
         }
         slab.materialize();
     });
-    let inc_toks = report("quantized incr", &cfg.name(), &mut t, &inc);
+    let inc_toks = report("quantized incr", &cfg.name(), cfg.effective_bits(), &mut t, &inc);
 
     // Quantized, full re-decode every step (the old behavior).
     let mut slab = Slab::new(seq);
@@ -142,7 +144,7 @@ fn main() {
         }
         slab.materialize();
     });
-    report("quantized full (old)", &cfg.name(), &mut t, &full);
+    report("quantized full (old)", &cfg.name(), cfg.effective_bits(), &mut t, &full);
 
     t.print();
     println!(

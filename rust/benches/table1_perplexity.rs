@@ -9,7 +9,7 @@
 use nxfp::bench_util::scenario::{default_corpus, load_or_train};
 use nxfp::bench_util::{banner, Table};
 use nxfp::eval::{perplexity, quantize_checkpoint};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
 use nxfp::runtime::Runtime;
 
@@ -58,8 +58,9 @@ fn main() -> anyhow::Result<()> {
             NxConfig::nxfp(bits),
         ] {
             let mut cells = vec![format!("{bits}"), cfg.name()];
+            let policy = QuantPolicy::uniform(cfg.clone());
             for (_, ck) in &cols {
-                let q = quantize_checkpoint(ck, &quantizable, &cfg);
+                let q = quantize_checkpoint(ck, &quantizable, &policy);
                 cells.push(format!("{:.4}", ppl(&q)?));
             }
             t.row(&cells);

@@ -107,15 +107,25 @@ pub fn smoke_env() -> bool {
 /// Append one machine-readable result record so the perf trajectory is
 /// tracked across PRs. When `NXFP_BENCH_JSON=<dir>` is set, the record is
 /// appended as one JSON line to `<dir>/BENCH_<bench>.json` (the directory
-/// is created if needed); without the env var this is a no-op. `fields`
-/// are numeric measurements (tok/s, p95 ms, speedups); non-finite values
-/// serialize as `null`.
+/// is created if needed); without the env var this is a no-op. `policy`
+/// is the quantization-policy name of the run (`QuantPolicy::name()`, or
+/// `"fp16"`/`"fp32"` for unquantized baselines) so the trajectory can
+/// distinguish mixed-precision runs that share a `config` label.
+/// `fields` are numeric measurements (tok/s, p95 ms, speedups,
+/// effective_bits); non-finite values serialize as `null`.
 ///
 /// ```json
 /// {"bench":"scheduler","name":"continuous","config":"NxFP4 (NM+AM+CR)",
-///  "smoke":false,"tok_s":1234.5,"p95_ms":8.1}
+///  "policy":"NxFP4 (NM+AM+CR)","smoke":false,"tok_s":1234.5,"p95_ms":8.1,
+///  "effective_bits":4.34}
 /// ```
-pub fn emit_bench_json(bench: &str, name: &str, config: &str, fields: &[(&str, f64)]) {
+pub fn emit_bench_json(
+    bench: &str,
+    name: &str,
+    config: &str,
+    policy: &str,
+    fields: &[(&str, f64)],
+) {
     let Ok(dir) = std::env::var("NXFP_BENCH_JSON") else { return };
     if dir.is_empty() {
         return;
@@ -133,10 +143,11 @@ pub fn emit_bench_json(bench: &str, name: &str, config: &str, fields: &[(&str, f
         out
     };
     let mut line = format!(
-        "{{\"bench\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"smoke\":{}",
+        "{{\"bench\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"policy\":\"{}\",\"smoke\":{}",
         esc(bench),
         esc(name),
         esc(config),
+        esc(policy),
         smoke_env()
     );
     for (k, v) in fields {

@@ -289,14 +289,14 @@ mod tests {
     #[test]
     fn prefill_chunk_histogram_records_fed_chunk_sizes() {
         use crate::coordinator::{DecodeEngine, GenRequest, SynthBackend};
-        use crate::formats::NxConfig;
+        use crate::formats::{NxConfig, QuantPolicy};
         use crate::models::LmSpec;
         let spec = LmSpec::tiny();
         let run = |budget: usize| {
             let mut eng = DecodeEngine::with_backend(
                 spec.clone(),
                 Box::new(SynthBackend::new(&spec)),
-                Some(NxConfig::nxfp(4)),
+                &QuantPolicy::uniform(NxConfig::nxfp(4)),
                 1,
             );
             eng.set_prefill_budget(budget);

@@ -57,9 +57,9 @@ use anyhow::Result;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use crate::formats::NxConfig;
+use crate::formats::{NxConfig, QuantPolicy};
 use crate::models::{Checkpoint, LmSpec};
-use crate::quant::kv_cache::KvCache;
+use crate::quant::kv_cache::{KvCache, KvPlans};
 use crate::runtime::{lit, Runtime, Step};
 use crate::train::params_to_literals;
 
@@ -97,6 +97,12 @@ pub struct Metrics {
     /// request contributes its final cache footprint once. A completion-
     /// time total, not a live peak (formerly misnamed `kv_bits_peak`).
     pub kv_bits_packed: u64,
+    /// Key-stream share of `kv_bits_packed` — with a mixed policy
+    /// (`kv.k=nxfp5,kv.v=mxfp4`) the per-class split is the footprint
+    /// story, so it is accounted per stream.
+    pub kv_bits_packed_k: u64,
+    /// Value-stream share of `kv_bits_packed`.
+    pub kv_bits_packed_v: u64,
     /// FP16 bits the same completed caches would have occupied.
     pub kv_bits_fp16: u64,
 }
@@ -331,13 +337,24 @@ pub struct SlotKv {
 }
 
 impl SlotKv {
-    /// `n_layers` caches of feature dim `dim` for a lane padded to
-    /// `pad_len` rows. Each cache pre-reserves the full window so
+    /// Uniform convenience: `n_layers` caches of feature dim `dim` under
+    /// one config (equivalent to [`SlotKv::from_plans`] over
+    /// [`KvPlans::uniform`]). Each cache pre-reserves the full window so
     /// decode-step appends never reallocate.
     pub fn new(n_layers: usize, dim: usize, pad_len: usize, cfg: &NxConfig) -> Self {
+        Self::from_plans(&KvPlans::uniform(cfg, n_layers), dim, pad_len)
+    }
+
+    /// One cache per layer from a policy-resolved [`KvPlans`] table:
+    /// per-layer, per-stream configs, with encode plans and decode LUTs
+    /// shared by `Arc` — admitting a slot builds no plans at all (the
+    /// engine interned them once).
+    pub fn from_plans(plans: &KvPlans, dim: usize, pad_len: usize) -> Self {
         SlotKv {
-            caches: (0..n_layers)
-                .map(|_| KvCache::with_capacity(dim, cfg.clone(), pad_len))
+            caches: plans
+                .layers
+                .iter()
+                .map(|(k, v)| KvCache::with_plans(dim, k.clone(), v.clone(), pad_len))
                 .collect(),
             pad_len,
             dim,
@@ -409,6 +426,14 @@ impl SlotKv {
     /// Bit-true packed footprint across layers (K and V).
     pub fn footprint_bits(&self) -> u64 {
         self.caches.iter().map(|c| c.footprint_bits()).sum()
+    }
+
+    /// Per-stream packed footprint `(K bits, V bits)` across layers — the
+    /// per-class breakdown a mixed policy reports.
+    pub fn footprint_bits_split(&self) -> (u64, u64) {
+        self.caches.iter().map(|c| c.footprint_bits_split()).fold((0, 0), |(ak, av), (k, v)| {
+            (ak + k, av + v)
+        })
     }
 
     /// FP16 footprint of the same caches.
@@ -485,7 +510,9 @@ impl Slot {
 pub struct DecodeEngine {
     pub spec: LmSpec,
     backend: Box<dyn StepBackend>,
-    pub kv_cfg: Option<NxConfig>,
+    /// Policy-resolved per-layer, per-stream KV plans (`None` = FP32
+    /// baseline: raw rows in the slabs, no quantizer at all).
+    kv: Option<KvPlans>,
     pub max_batch: usize,
     pub metrics: Metrics,
     /// Per-request latency/TTFT/queue-depth histograms.
@@ -498,35 +525,55 @@ pub struct DecodeEngine {
 }
 
 impl DecodeEngine {
+    /// Engine over the production PJRT artifact. `kv` is the quantization
+    /// policy's KV side: per-layer, per-stream formats are resolved once
+    /// here ([`KvPlans::from_policy`]) with one `EncodePlan`/`DequantLut`
+    /// per distinct config; slot admission only clones `Arc`s.
     pub fn new(
         rt: &mut Runtime,
         spec: LmSpec,
         ck: &Checkpoint,
-        kv_cfg: Option<NxConfig>,
+        kv: &QuantPolicy,
         max_batch: usize,
     ) -> Result<Self> {
         ck.check_spec(&spec)?;
+        let plans = KvPlans::from_policy(kv, spec.n_layers)?;
         let backend = PjrtBackend {
             step_fn: rt.load("decode_step")?,
             params: params_to_literals(ck)?,
             dims: (max_batch, spec.n_layers, spec.seq_len, spec.d_model),
         };
-        Ok(Self::with_backend(spec, Box::new(backend), kv_cfg, max_batch))
+        Ok(Self::with_plans(spec, Box::new(backend), plans, max_batch))
     }
 
     /// Engine over an arbitrary step kernel (tests and benches use
-    /// [`SynthBackend`]; no PJRT runtime or artifacts needed).
+    /// [`SynthBackend`]; no PJRT runtime or artifacts needed). Panics on a
+    /// policy the engine cannot serve (KV streams mixing FP16 with
+    /// quantized formats) — use [`DecodeEngine::new`] or
+    /// [`KvPlans::from_policy`] + [`DecodeEngine::with_plans`] to handle
+    /// that as an error.
     pub fn with_backend(
         spec: LmSpec,
         backend: Box<dyn StepBackend>,
-        kv_cfg: Option<NxConfig>,
+        kv: &QuantPolicy,
+        max_batch: usize,
+    ) -> Self {
+        let plans = KvPlans::from_policy(kv, spec.n_layers).expect("unsupported KV policy");
+        Self::with_plans(spec, backend, plans, max_batch)
+    }
+
+    /// Engine over pre-resolved KV plans (`None` = FP32 baseline).
+    pub fn with_plans(
+        spec: LmSpec,
+        backend: Box<dyn StepBackend>,
+        kv: Option<KvPlans>,
         max_batch: usize,
     ) -> Self {
         let n = max_batch * spec.n_layers * spec.seq_len * spec.d_model;
         DecodeEngine {
             spec,
             backend,
-            kv_cfg,
+            kv,
             max_batch,
             metrics: Metrics::default(),
             serving: ServingMetrics::default(),
@@ -583,14 +630,19 @@ impl DecodeEngine {
         })
     }
 
+    /// The engine's resolved KV plans (`None` = FP32 baseline).
+    pub fn kv_plans(&self) -> Option<&KvPlans> {
+        self.kv.as_ref()
+    }
+
     fn make_slot(&self, req: GenRequest, arrival: Instant) -> Slot {
-        let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
+        let (s, d) = (self.spec.seq_len, self.spec.d_model);
         Slot {
             arrival,
             state: SlotState::Prefilling,
             cursor: 0,
             output: req.prompt.clone(),
-            kv: self.kv_cfg.as_ref().map(|cfg| SlotKv::new(l, d, s, cfg)),
+            kv: self.kv.as_ref().map(|plans| SlotKv::from_plans(plans, d, s)),
             fill: 0,
             chunk_fed: 0,
             req,
@@ -853,7 +905,10 @@ impl DecodeEngine {
                 // packed buffers, zero the lane exactly once, free the lane
                 let sl = slot.take().unwrap();
                 if let Some(kv) = sl.kv {
-                    self.metrics.kv_bits_packed += kv.footprint_bits();
+                    let (kb, vb) = kv.footprint_bits_split();
+                    self.metrics.kv_bits_packed += kb + vb;
+                    self.metrics.kv_bits_packed_k += kb;
+                    self.metrics.kv_bits_packed_v += vb;
                     self.metrics.kv_bits_fp16 += kv.fp16_footprint_bits();
                 }
                 self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
@@ -1193,7 +1248,7 @@ mod tests {
     #[test]
     fn chunked_prefill_via_artifact_loop_is_bit_identical() {
         let spec = LmSpec::tiny();
-        let kv = Some(NxConfig::nxfp(4));
+        let kv = QuantPolicy::uniform(NxConfig::nxfp(4));
         let req = GenRequest { id: 0, prompt: vec![3, 7, 1, 9, 4, 2, 8], max_new: 5 };
         let run = |budget: usize, looped: bool| -> Vec<i32> {
             let backend: Box<dyn StepBackend> = if looped {
@@ -1201,7 +1256,7 @@ mod tests {
             } else {
                 Box::new(SynthBackend::new(&spec))
             };
-            let mut eng = DecodeEngine::with_backend(spec.clone(), backend, kv.clone(), 2);
+            let mut eng = DecodeEngine::with_backend(spec.clone(), backend, &kv, 2);
             eng.set_prefill_budget(budget);
             let resps = eng.serve_wave(vec![req.clone()]).unwrap();
             resps.into_iter().next().unwrap().tokens
@@ -1221,7 +1276,7 @@ mod tests {
                 let mut eng = DecodeEngine::with_backend(
                     spec.clone(),
                     Box::new(SynthBackend::new(&spec)),
-                    kv.clone(),
+                    &kv,
                     1,
                 );
                 eng.serve_wave(vec![(*r).clone()]).unwrap().remove(0).tokens
@@ -1230,7 +1285,7 @@ mod tests {
         let mut eng = DecodeEngine::with_backend(
             spec.clone(),
             Box::new(LoopedSynth(SynthBackend::new(&spec))),
-            kv.clone(),
+            &kv,
             2,
         );
         eng.set_prefill_budget(6);
@@ -1250,7 +1305,7 @@ mod tests {
             let mut eng = DecodeEngine::with_backend(
                 spec.clone(),
                 Box::new(SynthBackend::new(&spec)),
-                Some(NxConfig::nxfp(4)),
+                &QuantPolicy::uniform(NxConfig::nxfp(4)),
                 1,
             );
             eng.set_prefill_budget(budget);
@@ -1270,8 +1325,8 @@ mod tests {
     fn wave_engine_runs_on_synth_backend() {
         let spec = LmSpec::tiny();
         let backend = Box::new(SynthBackend::new(&spec));
-        let mut engine =
-            DecodeEngine::with_backend(spec.clone(), backend, Some(NxConfig::nxfp(4)), 2);
+        let policy = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let mut engine = DecodeEngine::with_backend(spec.clone(), backend, &policy, 2);
         let reqs = vec![
             GenRequest { id: 0, prompt: vec![1, 2, 3], max_new: 4 },
             GenRequest { id: 1, prompt: vec![5], max_new: 2 },

@@ -29,7 +29,7 @@ use std::time::Duration;
 use super::metrics::ServingMetrics;
 use super::scheduler::{SchedMode, Scheduler};
 use super::{DecodeEngine, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET};
-use crate::formats::NxConfig;
+use crate::formats::QuantPolicy;
 use crate::models::{Checkpoint, LmSpec};
 use crate::runtime::Runtime;
 
@@ -80,19 +80,21 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Spawn the worker (builds the PJRT runtime on its own thread: the
-    /// client is not Send).
+    /// client is not Send). `kv` is the quantization policy's KV side:
+    /// per-layer, per-stream formats (`QuantPolicy::uniform(cfg)` and
+    /// `QuantPolicy::fp16()` reproduce the legacy single-config shapes).
     pub fn spawn(
         artifacts_dir: PathBuf,
         spec: LmSpec,
         ck: Checkpoint,
-        kv_cfg: Option<NxConfig>,
+        kv: QuantPolicy,
         opts: ServeOpts,
     ) -> ServerHandle {
         let (tx, worker_rx) = mpsc::channel::<Msg>();
         let (resp_tx, rx) = mpsc::channel::<GenResponse>();
         let join = std::thread::spawn(move || -> Result<ServeReport> {
             let mut rt = Runtime::cpu(artifacts_dir)?;
-            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, kv_cfg, opts.max_batch)?;
+            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
             engine.set_prefill_budget(opts.prefill_budget);
             let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
             match opts.mode {

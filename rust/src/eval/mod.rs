@@ -7,64 +7,129 @@
 pub mod perplexity;
 pub mod reasoning;
 
-use crate::formats::{EncodePlan, NxConfig};
+use crate::formats::{PlanTable, QuantPolicy, TensorClass};
 use crate::models::Checkpoint;
 use crate::quant::quantize_matrix_with;
 
 pub use perplexity::{perplexity, Perplexity};
 pub use reasoning::reasoning_accuracy;
 
-/// Direct-cast a checkpoint: quantize-dequantize every quantizable weight
-/// under `cfg`, leaving embeddings/norm gains in full precision (the paper's
-/// weight-only setting). Returns the degraded checkpoint the eval graph sees.
+/// Direct-cast a checkpoint under a [`QuantPolicy`]: quantize-dequantize
+/// every quantizable weight through its **resolved** config, leaving
+/// FP16-resolved weights (and embeddings/norm gains, which are not in
+/// `spec_quantizable`) untouched — the paper's weight-only setting,
+/// generalized to mixed precision. Returns the degraded checkpoint the
+/// eval graph sees.
 ///
-/// One [`EncodePlan`] is built for the whole checkpoint and threaded
-/// through every per-tensor `quantize_matrix` call — plan construction
-/// (threshold bisection over the f32 bit space) is per-config work, not
-/// per-tensor work.
+/// One `EncodePlan` is built per **distinct resolved config** (a shared
+/// [`PlanTable`] over the policy's interned configs, so plan construction
+/// — threshold bisection over the f32 bit space — happens once per
+/// config, not once per tensor). `QuantPolicy::uniform(cfg)` reproduces
+/// the legacy single-config path bit for bit
+/// (`tests/policy_equivalence.rs`).
 pub fn quantize_checkpoint(
     ck: &Checkpoint,
     spec_quantizable: &[String],
-    cfg: &NxConfig,
+    policy: &QuantPolicy,
 ) -> Checkpoint {
-    let plan = EncodePlan::new(cfg);
+    let mut plans = PlanTable::new(policy);
     let mut out = ck.clone();
     for name in spec_quantizable {
+        let Some((cfg, plan)) = plans.resolve(TensorClass::weight(name)) else { continue };
         if let Some(t) = out.get_mut(name) {
-            *t = quantize_matrix_with(t, cfg, &plan).dequantize(cfg);
+            *t = quantize_matrix_with(t, cfg, plan).dequantize(cfg);
         }
     }
     out
 }
 
-/// Bit-true footprint of a checkpoint under a quantization config
-/// (quantizable weights at `cfg` bits, everything else FP16), in bytes.
-pub fn checkpoint_footprint_bytes(
+/// One line of a [`FootprintReport`]: every tensor that resolved to the
+/// same class (one quantized config, or FP16).
+#[derive(Clone, Debug)]
+pub struct ClassFootprint {
+    /// Display name of the resolved config (`"FP16"` for unquantized).
+    pub label: String,
+    pub tensors: usize,
+    pub elems: u64,
+    /// Bit-true storage cost of this class (per-block metadata included
+    /// for quantized configs; 16 bits/element for FP16).
+    pub bits: u64,
+}
+
+impl ClassFootprint {
+    /// Realized bits per element including metadata (the per-class
+    /// effective-bits breakdown).
+    pub fn effective_bits(&self) -> f64 {
+        self.bits as f64 / self.elems.max(1) as f64
+    }
+}
+
+/// Policy-driven checkpoint footprint: per-class bit totals plus the
+/// aggregate, replacing the old single-config byte count.
+#[derive(Clone, Debug)]
+pub struct FootprintReport {
+    /// Quantized classes first (policy config order), FP16 last.
+    pub classes: Vec<ClassFootprint>,
+}
+
+impl FootprintReport {
+    pub fn total_bits(&self) -> u64 {
+        self.classes.iter().map(|c| c.bits).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bits() / 8
+    }
+}
+
+/// Bit-true footprint of a checkpoint under a policy: quantizable weights
+/// at their resolved config, everything else (embeddings, norm gains,
+/// FP16-resolved weights) at FP16.
+pub fn checkpoint_footprint(
     ck: &Checkpoint,
     spec_quantizable: &[String],
-    cfg: Option<&NxConfig>,
-) -> u64 {
-    let mut bits = 0u64;
+    policy: &QuantPolicy,
+) -> FootprintReport {
+    let n_cfg = policy.configs().len();
+    // per config id, plus one trailing FP16 bucket
+    let mut classes: Vec<ClassFootprint> = (0..=n_cfg)
+        .map(|i| ClassFootprint {
+            label: if i < n_cfg { policy.config(i).name() } else { "FP16".to_string() },
+            tensors: 0,
+            elems: 0,
+            bits: 0,
+        })
+        .collect();
     for (name, t) in &ck.params {
-        let is_q = spec_quantizable.contains(name);
-        bits += match (is_q, cfg) {
-            (true, Some(c)) => c.footprint_bits(t.cols) * t.rows as u64,
-            _ => (t.len() as u64) * 16,
+        let resolved = if spec_quantizable.contains(name) {
+            policy.resolve_id(TensorClass::weight(name))
+        } else {
+            None
         };
+        let (slot, bits) = match resolved {
+            Some(id) => (id, policy.config(id).footprint_bits(t.cols) * t.rows as u64),
+            None => (n_cfg, t.len() as u64 * 16),
+        };
+        classes[slot].tensors += 1;
+        classes[slot].elems += t.len() as u64;
+        classes[slot].bits += bits;
     }
-    bits / 8
+    classes.retain(|c| c.tensors > 0);
+    FootprintReport { classes }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::NxConfig;
     use crate::models::LmSpec;
 
     #[test]
     fn quantize_checkpoint_touches_only_quantizable() {
         let spec = LmSpec::tiny();
         let ck = Checkpoint::init(&spec, 3);
-        let q = quantize_checkpoint(&ck, &spec.quantizable(), &NxConfig::nxfp(4));
+        let policy = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let q = quantize_checkpoint(&ck, &spec.quantizable(), &policy);
         // embeddings untouched
         assert_eq!(q.get("embed").unwrap(), ck.get("embed").unwrap());
         assert_eq!(q.get("l0.ln1").unwrap(), ck.get("l0.ln1").unwrap());
@@ -73,13 +138,58 @@ mod tests {
     }
 
     #[test]
+    fn mixed_policy_quantizes_per_class() {
+        // layer 0 at 6 bits, the rest at 4: layer-0 weights must match a
+        // uniform mxfp6 cast, everything else a uniform nxfp4 cast
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 4);
+        let qn = spec.quantizable();
+        let mixed = QuantPolicy::parse("layers.0.weights=mxfp6,weights=nxfp4").unwrap();
+        let q = quantize_checkpoint(&ck, &qn, &mixed);
+        let q6 = quantize_checkpoint(&ck, &qn, &QuantPolicy::uniform(NxConfig::mxfp(6)));
+        let q4 = quantize_checkpoint(&ck, &qn, &QuantPolicy::uniform(NxConfig::nxfp(4)));
+        assert_eq!(q.get("l0.wq").unwrap(), q6.get("l0.wq").unwrap());
+        assert_eq!(q.get("l1.wq").unwrap(), q4.get("l1.wq").unwrap());
+        assert_eq!(q.get("unembed").unwrap(), q4.get("unembed").unwrap());
+        // fp16 policy is the identity
+        let id = quantize_checkpoint(&ck, &qn, &QuantPolicy::fp16());
+        assert_eq!(id.get("l0.wq").unwrap(), ck.get("l0.wq").unwrap());
+    }
+
+    #[test]
     fn footprint_shrinks_with_bits() {
         let spec = LmSpec::tiny();
         let ck = Checkpoint::init(&spec, 3);
         let qn = spec.quantizable();
-        let fp16 = checkpoint_footprint_bytes(&ck, &qn, None);
-        let w4 = checkpoint_footprint_bytes(&ck, &qn, Some(&NxConfig::nxfp(4)));
-        let w6 = checkpoint_footprint_bytes(&ck, &qn, Some(&NxConfig::mxfp(6)));
+        let fp16 = checkpoint_footprint(&ck, &qn, &QuantPolicy::fp16()).total_bytes();
+        let w4 = checkpoint_footprint(&ck, &qn, &QuantPolicy::uniform(NxConfig::nxfp(4)))
+            .total_bytes();
+        let w6 = checkpoint_footprint(&ck, &qn, &QuantPolicy::uniform(NxConfig::mxfp(6)))
+            .total_bytes();
         assert!(w4 < w6 && w6 < fp16);
+    }
+
+    #[test]
+    fn footprint_reports_per_class_effective_bits() {
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 3);
+        let qn = spec.quantizable();
+        let policy = QuantPolicy::parse("layers.0.weights=mxfp6,weights=nxfp4").unwrap();
+        let report = checkpoint_footprint(&ck, &qn, &policy);
+        assert_eq!(report.classes.len(), 3); // mxfp6, nxfp4, fp16
+        let by = |label: &str| {
+            report.classes.iter().find(|c| c.label.contains(label)).unwrap()
+        };
+        // per-class effective bits match the configs' own accounting
+        // exactly: every quantizable tensor's cols are a multiple of the
+        // block size here, so no partial-block rounding
+        assert!((by("MxFP6").effective_bits() - NxConfig::mxfp(6).effective_bits()).abs() < 1e-9);
+        assert!((by("NxFP4").effective_bits() - NxConfig::nxfp(4).effective_bits()).abs() < 1e-9);
+        assert_eq!(by("FP16").effective_bits(), 16.0);
+        // layer 0 has 6 quantizable mats at 6 bits
+        assert_eq!(by("MxFP6").tensors, 6);
+        // totals add up
+        let sum: u64 = report.classes.iter().map(|c| c.bits).sum();
+        assert_eq!(sum, report.total_bits());
     }
 }

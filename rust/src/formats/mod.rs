@@ -10,11 +10,13 @@
 pub mod element;
 pub mod encode;
 pub mod packed;
+pub mod policy;
 pub mod recycle;
 pub mod store;
 
 pub use element::{project_magnitude, ElementFormat};
 pub use encode::{EncodePlan, EncodeScratch};
+pub use policy::{parse_format, KvStream, PlanTable, QuantPolicy, TensorClass};
 pub use recycle::RecycleTarget;
 pub use store::BlockStore;
 
@@ -114,8 +116,10 @@ pub enum NanoMode {
     Exhaustive,
 }
 
-/// Complete quantizer configuration for one tensor.
-#[derive(Clone, Debug)]
+/// Complete quantizer configuration for one tensor. Equality compares
+/// every field that changes the emitted bits (the same contract as
+/// [`NxConfig::digest`]) — the policy layer interns configs by it.
+#[derive(Clone, Debug, PartialEq)]
 pub struct NxConfig {
     /// Element bits (4, 5, 6, … incl. sign).
     pub bits: u8,

@@ -120,7 +120,7 @@ impl<'a> BitReader<'a> {
 }
 
 /// A quantized 2-D tensor in packed deployable form.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PackedMatrix {
     pub rows: usize,
     pub cols: usize,

@@ -1,0 +1,840 @@
+//! `QuantPolicy` — first-class per-tensor / per-layer format resolution.
+//!
+//! The paper's Pareto argument (NxFP5 ≈ MxFP6 perplexity at ~16% less
+//! footprint) is a *per-tensor* trade: outlier-heavy projections want
+//! NanoMantissa bits that embeddings don't need, and KV keys tolerate
+//! different precision than KV values. A policy maps a [`TensorClass`]
+//! (weight name/layer, KV key vs value per layer) to an **interned**
+//! [`NxConfig`] through an ordered rule list with **first-match
+//! precedence**; anything no rule matches stays FP16.
+//!
+//! Policies come from three places:
+//!
+//! * [`QuantPolicy::uniform`] / [`QuantPolicy::fp16`] — the two legacy
+//!   single-config shapes (`--format nxfp4` lowers to these);
+//! * [`QuantPolicy::parse`] — the CLI/config spec string, e.g.
+//!   `weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4,layers.0-1.*=mxfp6`
+//!   (a bare format name is shorthand for the uniform policy);
+//! * [`QuantPolicy::builder`] — typed rule construction for library users.
+//!
+//! Distinct resolved configs are interned ([`QuantPolicy::configs`] holds
+//! one entry per distinct config; rules reference indices), so runtime
+//! consumers build exactly one `EncodePlan`/`DequantLut` per distinct
+//! config — see `quant::kv_cache::KvPlans` and `eval::quantize_checkpoint`
+//! — instead of one per tensor or per serving slot.
+
+use super::{BaseFormat, EncodePlan, NxConfig};
+use anyhow::{anyhow, bail, Result};
+
+/// Which KV-cache stream a row belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvStream {
+    Key,
+    Value,
+}
+
+/// The class of one logical tensor, as seen by policy resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass<'a> {
+    /// A named weight tensor; `layer` is parsed from the repo's `l<N>.`
+    /// name prefix when present (`embed`/`unembed`/`lnf` have none).
+    Weight { name: &'a str, layer: Option<usize> },
+    /// One KV-cache stream of one layer.
+    Kv { layer: usize, stream: KvStream },
+}
+
+impl<'a> TensorClass<'a> {
+    /// Classify a weight by checkpoint name (layer index derived from the
+    /// `l<N>.` prefix convention of `LmSpec::param_specs`).
+    pub fn weight(name: &'a str) -> Self {
+        TensorClass::Weight { name, layer: weight_layer(name) }
+    }
+
+    pub fn kv(layer: usize, stream: KvStream) -> Self {
+        TensorClass::Kv { layer, stream }
+    }
+
+    fn layer(&self) -> Option<usize> {
+        match self {
+            TensorClass::Weight { layer, .. } => *layer,
+            TensorClass::Kv { layer, .. } => Some(*layer),
+        }
+    }
+}
+
+/// Layer index from a `l<N>.`-prefixed weight name (`l3.wq` → 3).
+fn weight_layer(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix('l')?;
+    let dot = rest.find('.')?;
+    rest[..dot].parse().ok()
+}
+
+/// Weight-name pattern: exact, or `prefix*` matching any name that starts
+/// with the prefix.
+#[derive(Clone, Debug, PartialEq)]
+enum NamePat {
+    Exact(String),
+    Prefix(String),
+}
+
+impl NamePat {
+    fn parse(s: &str) -> NamePat {
+        match s.strip_suffix('*') {
+            Some(p) => NamePat::Prefix(p.to_string()),
+            None => NamePat::Exact(s.to_string()),
+        }
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        match self {
+            NamePat::Exact(n) => n == name,
+            NamePat::Prefix(p) => name.starts_with(p.as_str()),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            NamePat::Exact(n) => n.clone(),
+            NamePat::Prefix(p) => format!("{p}*"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Scope {
+    /// `*` — every weight and KV stream.
+    Any,
+    /// `weights` / `weights.<name>` / `weights.<prefix>*`.
+    Weights(Option<NamePat>),
+    /// `kv` / `kv.k` / `kv.v`.
+    Kv(Option<KvStream>),
+}
+
+/// One rule's match condition: a scope plus an optional inclusive layer
+/// range (`layers.<a>-<b>.<scope>` in spec syntax). A layer-filtered
+/// selector never matches tensors without a layer index (`embed`,
+/// `unembed`, `lnf`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selector {
+    scope: Scope,
+    layers: Option<(usize, usize)>,
+}
+
+impl Selector {
+    /// `*` — matches everything.
+    pub fn any() -> Self {
+        Selector { scope: Scope::Any, layers: None }
+    }
+
+    /// `weights` — every weight tensor.
+    pub fn weights() -> Self {
+        Selector { scope: Scope::Weights(None), layers: None }
+    }
+
+    /// `weights.<name>` — one weight by exact name, or a `prefix*` glob.
+    pub fn weight_named(pat: &str) -> Self {
+        Selector { scope: Scope::Weights(Some(NamePat::parse(pat))), layers: None }
+    }
+
+    /// `kv` — both KV streams of every layer.
+    pub fn kv() -> Self {
+        Selector { scope: Scope::Kv(None), layers: None }
+    }
+
+    /// `kv.k` / `kv.v` — one KV stream of every layer.
+    pub fn kv_stream(s: KvStream) -> Self {
+        Selector { scope: Scope::Kv(Some(s)), layers: None }
+    }
+
+    /// Restrict to layers `lo..=hi` (`layers.<lo>-<hi>.…`).
+    pub fn in_layers(mut self, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi, "bad layer range {lo}-{hi}");
+        self.layers = Some((lo, hi));
+        self
+    }
+
+    fn matches(&self, class: &TensorClass) -> bool {
+        if let Some((lo, hi)) = self.layers {
+            match class.layer() {
+                Some(l) if lo <= l && l <= hi => {}
+                _ => return false,
+            }
+        }
+        match (&self.scope, class) {
+            (Scope::Any, _) => true,
+            (Scope::Weights(pat), TensorClass::Weight { name, .. }) => {
+                pat.as_ref().map_or(true, |p| p.matches(name))
+            }
+            (Scope::Kv(want), TensorClass::Kv { stream, .. }) => {
+                want.map_or(true, |w| w == *stream)
+            }
+            _ => false,
+        }
+    }
+
+    fn render(&self) -> String {
+        let scope = match &self.scope {
+            Scope::Any => "*".to_string(),
+            Scope::Weights(None) => "weights".to_string(),
+            Scope::Weights(Some(p)) => format!("weights.{}", p.render()),
+            Scope::Kv(None) => "kv".to_string(),
+            Scope::Kv(Some(KvStream::Key)) => "kv.k".to_string(),
+            Scope::Kv(Some(KvStream::Value)) => "kv.v".to_string(),
+        };
+        match self.layers {
+            None => scope,
+            Some((lo, hi)) if lo == hi => format!("layers.{lo}.{scope}"),
+            Some((lo, hi)) => format!("layers.{lo}-{hi}.{scope}"),
+        }
+    }
+}
+
+/// The class vocabulary, quoted verbatim by every parse error so a typo'd
+/// spec string tells the operator what *would* have worked.
+const VALID_CLASSES: &str =
+    "*, weights, weights.<name|prefix*>, kv, kv.k, kv.v, layers.<a>[-<b>].<class>";
+
+#[derive(Clone, Debug, PartialEq)]
+struct Rule {
+    sel: Selector,
+    /// Index into the interned config table; `None` = FP16 (unquantized).
+    cfg: Option<usize>,
+}
+
+/// Ordered format-resolution rules over interned configs. See the module
+/// docs for semantics; construction via [`QuantPolicy::uniform`],
+/// [`QuantPolicy::parse`], or [`QuantPolicy::builder`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPolicy {
+    rules: Vec<Rule>,
+    configs: Vec<NxConfig>,
+}
+
+impl QuantPolicy {
+    /// No quantization anywhere (the legacy `--format fp16` shape).
+    pub fn fp16() -> Self {
+        QuantPolicy { rules: Vec::new(), configs: Vec::new() }
+    }
+
+    /// One config for every class (the legacy single-`NxConfig` shape).
+    pub fn uniform(cfg: NxConfig) -> Self {
+        QuantPolicy {
+            rules: vec![Rule { sel: Selector::any(), cfg: Some(0) }],
+            configs: vec![cfg],
+        }
+    }
+
+    pub fn builder() -> PolicyBuilder {
+        PolicyBuilder { rules: Vec::new() }
+    }
+
+    /// Parse a spec string: comma-separated `selector=format` rules
+    /// (first match wins), or a bare format name as shorthand for the
+    /// uniform policy (`nxfp4` ≡ `*=nxfp4`, `fp16` ≡ no quantization).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(QuantPolicy::fp16());
+        }
+        if !spec.contains('=') {
+            return Ok(match parse_format(spec)? {
+                Some(cfg) => QuantPolicy::uniform(cfg),
+                None => QuantPolicy::fp16(),
+            });
+        }
+        let mut b = QuantPolicy::builder();
+        for rule in spec.split(',') {
+            let rule = rule.trim();
+            if rule.is_empty() {
+                continue;
+            }
+            let (sel, fmt) = rule
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad policy rule `{rule}` (want selector=format)"))?;
+            b = b.rule(parse_selector(sel.trim())?, parse_format(fmt.trim())?);
+        }
+        Ok(b.build())
+    }
+
+    /// First-match resolution to an interned config index (`None` = FP16).
+    pub fn resolve_id(&self, class: TensorClass) -> Option<usize> {
+        self.rules.iter().find(|r| r.sel.matches(&class)).and_then(|r| r.cfg)
+    }
+
+    /// First-match resolution to the config itself (`None` = FP16).
+    pub fn resolve(&self, class: TensorClass) -> Option<&NxConfig> {
+        self.resolve_id(class).map(|i| &self.configs[i])
+    }
+
+    /// The interned config table (one entry per distinct resolved config;
+    /// [`QuantPolicy::resolve_id`] indexes into it). Runtime consumers
+    /// build one `EncodePlan`/`DequantLut` per entry, never per tensor.
+    pub fn configs(&self) -> &[NxConfig] {
+        &self.configs
+    }
+
+    pub fn config(&self, id: usize) -> &NxConfig {
+        &self.configs[id]
+    }
+
+    /// True when no class can resolve to a quantized config.
+    pub fn is_fp16(&self) -> bool {
+        self.rules.iter().all(|r| r.cfg.is_none())
+    }
+
+    /// The single config the KV classes resolve to, if they all agree
+    /// across every layer and both streams (`Ok(None)` = uniformly FP16).
+    /// The per-format eval artifacts (`eval_step_kvq_*`) bake one format
+    /// into the graph, so mixed-KV policies cannot drive them.
+    pub fn kv_uniform(&self, n_layers: usize) -> Result<Option<NxConfig>> {
+        let mut agreed: Option<Option<usize>> = None;
+        for l in 0..n_layers.max(1) {
+            for s in [KvStream::Key, KvStream::Value] {
+                let id = self.resolve_id(TensorClass::kv(l, s));
+                match agreed {
+                    None => agreed = Some(id),
+                    Some(a) if a == id => {}
+                    Some(_) => bail!(
+                        "policy `{}` resolves KV streams to more than one format; \
+                         this consumer needs a uniform KV format",
+                        self.render()
+                    ),
+                }
+            }
+        }
+        Ok(agreed.flatten().map(|id| self.configs[id].clone()))
+    }
+
+    /// Canonical spec-string form. Policies whose configs all have
+    /// parseable spec names round-trip: `parse(p.render()) == p`.
+    /// Non-canonical configs (custom block size, swept recycle targets…)
+    /// render as their display name, which does not re-parse.
+    pub fn render(&self) -> String {
+        if self.rules.is_empty() {
+            return "fp16".to_string();
+        }
+        self.rules
+            .iter()
+            .map(|r| {
+                let fmt = match r.cfg {
+                    None => "fp16".to_string(),
+                    Some(id) => {
+                        let c = &self.configs[id];
+                        c.spec_name().unwrap_or_else(|| c.name())
+                    }
+                };
+                format!("{}={fmt}", r.sel.render())
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Human-facing display name: the config name for uniform policies
+    /// (`NxFP4 (NM+AM+CR)`, `FP16`), the rendered spec otherwise.
+    pub fn name(&self) -> String {
+        if self.is_fp16() {
+            return "FP16".to_string();
+        }
+        if let [rule] = &self.rules[..] {
+            if rule.sel == Selector::any() {
+                if let Some(id) = rule.cfg {
+                    return self.configs[id].name();
+                }
+            }
+        }
+        self.render()
+    }
+}
+
+impl From<NxConfig> for QuantPolicy {
+    fn from(cfg: NxConfig) -> Self {
+        QuantPolicy::uniform(cfg)
+    }
+}
+
+impl From<Option<NxConfig>> for QuantPolicy {
+    fn from(cfg: Option<NxConfig>) -> Self {
+        match cfg {
+            Some(c) => QuantPolicy::uniform(c),
+            None => QuantPolicy::fp16(),
+        }
+    }
+}
+
+/// Lazy one-[`EncodePlan`]-per-distinct-config table over a policy's
+/// interned configs — the checkpoint-side counterpart of the serving
+/// side's `KvPlans` interning. `eval::quantize_checkpoint` and
+/// `Checkpoint::direct_cast_packed` both resolve tensors through one of
+/// these, so the one-plan-per-config invariant lives in a single place.
+/// Plans are built on first use and live as long as the table.
+pub struct PlanTable<'p> {
+    policy: &'p QuantPolicy,
+    plans: Vec<Option<EncodePlan>>,
+}
+
+impl<'p> PlanTable<'p> {
+    pub fn new(policy: &'p QuantPolicy) -> Self {
+        PlanTable { policy, plans: (0..policy.configs().len()).map(|_| None).collect() }
+    }
+
+    /// Resolve a class to its config and (lazily built) encode plan;
+    /// `None` when the class stays FP16.
+    pub fn resolve(&mut self, class: TensorClass) -> Option<(&NxConfig, &EncodePlan)> {
+        let id = self.policy.resolve_id(class)?;
+        let cfg = self.policy.config(id);
+        let plan = self.plans[id].get_or_insert_with(|| EncodePlan::new(cfg));
+        Some((cfg, plan))
+    }
+}
+
+/// Typed rule construction; rules are matched in insertion order (first
+/// match wins) and configs are interned at [`PolicyBuilder::build`].
+pub struct PolicyBuilder {
+    rules: Vec<(Selector, Option<NxConfig>)>,
+}
+
+impl PolicyBuilder {
+    /// Append one rule (`None` config = FP16 for the matched classes).
+    pub fn rule(mut self, sel: Selector, cfg: Option<NxConfig>) -> Self {
+        self.rules.push((sel, cfg));
+        self
+    }
+
+    pub fn build(self) -> QuantPolicy {
+        let mut configs: Vec<NxConfig> = Vec::new();
+        let rules = self
+            .rules
+            .into_iter()
+            .map(|(sel, cfg)| Rule {
+                sel,
+                cfg: cfg.map(|c| match configs.iter().position(|x| *x == c) {
+                    Some(i) => i,
+                    None => {
+                        configs.push(c);
+                        configs.len() - 1
+                    }
+                }),
+            })
+            .collect();
+        QuantPolicy { rules, configs }
+    }
+}
+
+/// Parse one selector. Grammar (see [`VALID_CLASSES`]):
+///
+/// ```text
+/// selector := "*" | class | "layers." range [ "." class ]
+/// class    := "weights" [ "." namepat ] | "kv" [ ".k" | ".v" ]
+/// range    := <a> [ "-" <b> ]            (inclusive)
+/// ```
+fn parse_selector(s: &str) -> Result<Selector> {
+    if let Some(rest) = s.strip_prefix("layers.") {
+        let (range, sub) = match rest.split_once('.') {
+            Some((r, sub)) => (r, sub),
+            None => (rest, "*"),
+        };
+        let (lo, hi) = match range.split_once('-') {
+            Some((a, b)) => (parse_layer(a, s)?, parse_layer(b, s)?),
+            None => {
+                let l = parse_layer(range, s)?;
+                (l, l)
+            }
+        };
+        if lo > hi {
+            bail!("empty layer range `{s}` ({lo} > {hi})");
+        }
+        return Ok(parse_scope(sub, s)?.in_layers(lo, hi));
+    }
+    parse_scope(s, s)
+}
+
+fn parse_layer(s: &str, whole: &str) -> Result<usize> {
+    s.parse().map_err(|_| {
+        anyhow!("bad layer index `{s}` in selector `{whole}` (valid: {VALID_CLASSES})")
+    })
+}
+
+fn parse_scope(s: &str, whole: &str) -> Result<Selector> {
+    match s {
+        "*" => Ok(Selector::any()),
+        "weights" => Ok(Selector::weights()),
+        "kv" => Ok(Selector::kv()),
+        "kv.k" => Ok(Selector::kv_stream(KvStream::Key)),
+        "kv.v" => Ok(Selector::kv_stream(KvStream::Value)),
+        _ => match s.strip_prefix("weights.") {
+            Some(pat) if !pat.is_empty() => Ok(Selector::weight_named(pat)),
+            _ => bail!("unknown class `{whole}` (valid: {VALID_CLASSES})"),
+        },
+    }
+}
+
+/// Parse a format name: `fp16`/`none` (no quantization), `bfp<B>`,
+/// `mxfp<B>`, `nxfp<B>[-nm|-nm+am|-nm+am+cr]`. Moved here from the CLI so
+/// the policy spec parser and the `--format`/`--kv-format` sugar share one
+/// grammar.
+pub fn parse_format(s: &str) -> Result<Option<NxConfig>> {
+    let s = s.to_lowercase();
+    if s == "fp16" || s == "none" || s.is_empty() {
+        return Ok(None);
+    }
+    let (base, suffix) = match s.split_once('-') {
+        Some((b, s)) => (b.to_string(), Some(s.to_string())),
+        None => (s.clone(), None),
+    };
+    let bits: u8 = base
+        .trim_start_matches(|c: char| c.is_alphabetic())
+        .parse()
+        .map_err(|_| anyhow!("bad format {s}"))?;
+    let cfg = if base.starts_with("bfp") {
+        NxConfig::bfp(bits)
+    } else if base.starts_with("mxfp") {
+        NxConfig::mxfp(bits)
+    } else if base.starts_with("nxfp") {
+        match suffix.as_deref() {
+            None | Some("nm+am+cr") => NxConfig::nxfp(bits),
+            Some("nm") => NxConfig::nxfp_nm(bits),
+            Some("nm+am") => NxConfig::nxfp_nm_am(bits),
+            Some(other) => bail!("unknown NxFP variant {other}"),
+        }
+    } else {
+        bail!("unknown format {s}");
+    };
+    if !base.starts_with("nxfp") && suffix.is_some() {
+        bail!("format {s} takes no -suffix");
+    }
+    Ok(Some(cfg))
+}
+
+impl NxConfig {
+    /// The parseable CLI/spec name of this config, when it is exactly one
+    /// of the canonical constructor outputs ([`parse_format`] inverts it);
+    /// `None` for customized configs (block size, recycle target, …).
+    pub fn spec_name(&self) -> Option<String> {
+        let b = self.bits;
+        if !(2..=8).contains(&b) {
+            return None;
+        }
+        // BFP is defined down to 2 bits; the Mx/Nx constructors need a
+        // default minifloat element, which only exists for 3..=8.
+        let mut candidates = vec![(format!("bfp{b}"), NxConfig::bfp(b))];
+        if b >= 3 {
+            candidates.push((format!("mxfp{b}"), NxConfig::mxfp(b)));
+            candidates.push((format!("nxfp{b}"), NxConfig::nxfp(b)));
+            candidates.push((format!("nxfp{b}-nm"), NxConfig::nxfp_nm(b)));
+            candidates.push((format!("nxfp{b}-nm+am"), NxConfig::nxfp_nm_am(b)));
+        }
+        candidates.into_iter().find(|(_, c)| self == c).map(|(n, _)| n)
+    }
+
+    /// Short stable digest over every field that changes the emitted bits
+    /// (element format, base, block size, NM/AM/CR toggles, nano mode,
+    /// recycle target). Two configs that quantize identically share a
+    /// digest; artifact names use it to keep distinct configs from
+    /// colliding on one cache entry.
+    pub fn digest(&self) -> String {
+        // FNV-1a over a canonical field encoding; Debug is stable for
+        // these plain enums/fields within the crate.
+        let enc = format!(
+            "{}|{:?}|{:?}|{}|{}{}{}|{:?}|{:?}",
+            self.bits,
+            self.elem_mx,
+            self.base,
+            self.block_size,
+            self.enable_nm as u8,
+            self.enable_am as u8,
+            self.enable_cr as u8,
+            self.nano_mode,
+            self.recycle,
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in enc.as_bytes() {
+            h ^= *byte as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        format!("{:06x}", h & 0xff_ffff)
+    }
+
+    /// The artifact-name family of this config (`bfp`/`mxfp`/`nxfp`): any
+    /// NxFP technique makes it `nxfp`, else the base format.
+    pub fn family(&self) -> &'static str {
+        if self.enable_nm || self.enable_am || self.enable_cr {
+            "nxfp"
+        } else {
+            match self.base {
+                BaseFormat::Mx => "mxfp",
+                BaseFormat::Bfp => "bfp",
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::RecycleTarget;
+
+    fn w(name: &str) -> TensorClass<'_> {
+        TensorClass::weight(name)
+    }
+
+    #[test]
+    fn weight_layer_parsing() {
+        assert_eq!(weight_layer("l0.wq"), Some(0));
+        assert_eq!(weight_layer("l12.w2"), Some(12));
+        assert_eq!(weight_layer("lnf"), None);
+        assert_eq!(weight_layer("embed"), None);
+        assert_eq!(weight_layer("unembed"), None);
+        assert_eq!(weight_layer("l0.ln1"), Some(0));
+    }
+
+    #[test]
+    fn uniform_policy_resolves_everything() {
+        let p = QuantPolicy::uniform(NxConfig::nxfp(4));
+        assert_eq!(p.configs().len(), 1);
+        for class in [w("l0.wq"), w("embed"), TensorClass::kv(3, KvStream::Value)] {
+            assert_eq!(p.resolve(class).unwrap().name(), "NxFP4 (NM+AM+CR)");
+        }
+        assert!(!p.is_fp16());
+        assert_eq!(p.name(), "NxFP4 (NM+AM+CR)");
+    }
+
+    #[test]
+    fn fp16_policy_resolves_nothing() {
+        let p = QuantPolicy::fp16();
+        assert!(p.is_fp16());
+        assert!(p.resolve(w("l0.wq")).is_none());
+        assert!(p.resolve(TensorClass::kv(0, KvStream::Key)).is_none());
+        assert_eq!(p.name(), "FP16");
+        assert_eq!(p.render(), "fp16");
+    }
+
+    #[test]
+    fn parse_shorthand_is_uniform() {
+        assert_eq!(QuantPolicy::parse("nxfp4").unwrap(), QuantPolicy::uniform(NxConfig::nxfp(4)));
+        assert_eq!(QuantPolicy::parse("fp16").unwrap(), QuantPolicy::fp16());
+        assert_eq!(QuantPolicy::parse("").unwrap(), QuantPolicy::fp16());
+        assert_eq!(QuantPolicy::parse("none").unwrap(), QuantPolicy::fp16());
+    }
+
+    #[test]
+    fn parse_issue_example_resolves_per_class() {
+        let p =
+            QuantPolicy::parse("weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4,layers.0-1.*=mxfp6").unwrap();
+        // first match wins: the layers rule is shadowed for weights/kv by
+        // the earlier class rules
+        assert_eq!(p.resolve(w("l0.wq")).unwrap().name(), "NxFP4 (NM+AM+CR)");
+        let k = p.resolve(TensorClass::kv(0, KvStream::Key)).unwrap();
+        assert_eq!(k.name(), "NxFP5 (NM+AM+CR)");
+        assert_eq!(p.resolve(TensorClass::kv(7, KvStream::Value)).unwrap().name(), "MxFP4-E2M1");
+        // unembed has no layer and is a weight -> weights rule
+        assert_eq!(p.resolve(w("unembed")).unwrap().bits, 4);
+        assert_eq!(p.configs().len(), 4);
+    }
+
+    #[test]
+    fn first_match_precedence_layer_override() {
+        // layer rules listed first override the class-wide fallback
+        let p = QuantPolicy::parse("layers.0-1.weights=mxfp6,weights=nxfp4").unwrap();
+        assert_eq!(p.resolve(w("l0.wq")).unwrap().name(), "MxFP6-E2M3");
+        assert_eq!(p.resolve(w("l1.w2")).unwrap().name(), "MxFP6-E2M3");
+        assert_eq!(p.resolve(w("l2.wq")).unwrap().name(), "NxFP4 (NM+AM+CR)");
+        // no layer index -> the layer rule can't match
+        assert_eq!(p.resolve(w("unembed")).unwrap().name(), "NxFP4 (NM+AM+CR)");
+        // reversed order: the class-wide rule shadows the layer rule
+        let q = QuantPolicy::parse("weights=nxfp4,layers.0-1.weights=mxfp6").unwrap();
+        assert_eq!(q.resolve(w("l0.wq")).unwrap().name(), "NxFP4 (NM+AM+CR)");
+    }
+
+    #[test]
+    fn named_and_prefix_weight_selectors() {
+        let p = QuantPolicy::parse("weights.l0.wq=nxfp6,weights.l1.*=mxfp6,weights=nxfp4")
+            .unwrap();
+        assert_eq!(p.resolve(w("l0.wq")).unwrap().bits, 6);
+        assert_eq!(p.resolve(w("l0.wk")).unwrap().bits, 4);
+        assert_eq!(p.resolve(w("l1.wk")).unwrap().name(), "MxFP6-E2M3");
+        assert_eq!(p.resolve(w("l2.w1")).unwrap().bits, 4);
+        // KV never matches weight selectors: default fp16
+        assert!(p.resolve(TensorClass::kv(0, KvStream::Key)).is_none());
+    }
+
+    #[test]
+    fn single_layer_and_bare_range_selectors() {
+        let p = QuantPolicy::parse("layers.2.kv.v=mxfp4,layers.0-1=nxfp5,kv=nxfp4").unwrap();
+        assert_eq!(p.resolve(TensorClass::kv(2, KvStream::Value)).unwrap().name(), "MxFP4-E2M1");
+        assert_eq!(p.resolve(TensorClass::kv(2, KvStream::Key)).unwrap().bits, 4);
+        // `layers.0-1` with no subclass means `layers.0-1.*`
+        assert_eq!(p.resolve(TensorClass::kv(0, KvStream::Key)).unwrap().bits, 5);
+        assert_eq!(p.resolve(w("l1.wq")).unwrap().bits, 5);
+        assert!(p.resolve(w("l2.wq")).is_none());
+    }
+
+    #[test]
+    fn explicit_fp16_rule_wins_first_match() {
+        let p = QuantPolicy::parse("kv.v=fp16,kv=nxfp4").unwrap();
+        assert!(p.resolve(TensorClass::kv(0, KvStream::Value)).is_none());
+        assert_eq!(p.resolve(TensorClass::kv(0, KvStream::Key)).unwrap().bits, 4);
+        assert!(!p.is_fp16());
+    }
+
+    #[test]
+    fn unknown_class_error_lists_valid_classes() {
+        for bad in ["weightz=nxfp4", "kv.q=nxfp4", "layers.x.kv=nxfp4", "embeddings=nxfp4"] {
+            let err = QuantPolicy::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("kv.k"), "error for `{bad}` should list classes: {err}");
+            assert!(err.contains("weights"), "error for `{bad}` should list classes: {err}");
+        }
+        assert!(QuantPolicy::parse("kv=zfp4").is_err());
+        assert!(QuantPolicy::parse("kv").is_err()); // bare selector is not a format name
+        assert!(QuantPolicy::parse("layers.3-1.kv=nxfp4").is_err()); // empty range
+    }
+
+    #[test]
+    fn interning_dedups_configs() {
+        let p = QuantPolicy::parse("kv.k=nxfp4,kv.v=nxfp4,weights=nxfp4").unwrap();
+        assert_eq!(p.configs().len(), 1);
+        let kid = p.resolve_id(TensorClass::kv(0, KvStream::Key)).unwrap();
+        let vid = p.resolve_id(TensorClass::kv(0, KvStream::Value)).unwrap();
+        assert_eq!(kid, vid);
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for spec in [
+            "nxfp4",
+            "weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4,layers.0-1.*=mxfp6",
+            "layers.2.kv.v=mxfp4,kv=nxfp4",
+            "weights.l0.wq=nxfp6,weights.l1.*=mxfp6,weights=bfp5",
+            "kv.v=fp16,kv=nxfp5-nm+am",
+            "fp16",
+        ] {
+            let p = QuantPolicy::parse(spec).unwrap();
+            let rendered = p.render();
+            let q = QuantPolicy::parse(&rendered).unwrap();
+            assert_eq!(p, q, "spec `{spec}` -> `{rendered}` did not round-trip");
+        }
+    }
+
+    #[test]
+    fn kv_uniform_detection() {
+        let u = QuantPolicy::uniform(NxConfig::nxfp(4));
+        assert_eq!(u.kv_uniform(4).unwrap().unwrap().name(), "NxFP4 (NM+AM+CR)");
+        assert!(QuantPolicy::fp16().kv_uniform(4).unwrap().is_none());
+        // weights-only policy: KV uniformly fp16
+        let wo = QuantPolicy::parse("weights=nxfp4").unwrap();
+        assert!(wo.kv_uniform(4).unwrap().is_none());
+        // mixed streams: not uniform
+        let m = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap();
+        assert!(m.kv_uniform(4).is_err());
+        // per-layer mix: not uniform
+        let l = QuantPolicy::parse("layers.0.kv=mxfp6,kv=nxfp4").unwrap();
+        assert!(l.kv_uniform(2).is_err());
+        assert!(l.kv_uniform(1).unwrap().is_some()); // only layer 0 exists
+    }
+
+    #[test]
+    fn from_conversions_preserve_legacy_shapes() {
+        let some: QuantPolicy = Some(NxConfig::mxfp(5)).into();
+        assert_eq!(some, QuantPolicy::uniform(NxConfig::mxfp(5)));
+        let none: QuantPolicy = None::<NxConfig>.into();
+        assert_eq!(none, QuantPolicy::fp16());
+        let direct: QuantPolicy = NxConfig::bfp(4).into();
+        assert_eq!(direct.name(), "BFP4");
+    }
+
+    #[test]
+    fn builder_matches_parser() {
+        let built = QuantPolicy::builder()
+            .rule(Selector::kv_stream(KvStream::Key), Some(NxConfig::nxfp(5)))
+            .rule(Selector::kv_stream(KvStream::Value), Some(NxConfig::mxfp(4)))
+            .rule(Selector::weights(), Some(NxConfig::nxfp(4)))
+            .build();
+        let parsed = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4,weights=nxfp4").unwrap();
+        assert_eq!(built, parsed);
+        let ranged = QuantPolicy::builder()
+            .rule(Selector::kv().in_layers(0, 1), Some(NxConfig::mxfp(6)))
+            .rule(Selector::any(), Some(NxConfig::nxfp(4)))
+            .build();
+        assert_eq!(ranged, QuantPolicy::parse("layers.0-1.kv=mxfp6,*=nxfp4").unwrap());
+    }
+
+    #[test]
+    fn plan_table_builds_one_plan_per_config() {
+        let p = QuantPolicy::parse("weights.l0.*=mxfp6,weights=nxfp4,kv=nxfp4").unwrap();
+        let mut table = PlanTable::new(&p);
+        // fp16-resolved classes yield no plan
+        assert!(table.resolve(TensorClass::kv(0, KvStream::Key)).is_some());
+        let unmatched = QuantPolicy::parse("weights=nxfp4").unwrap();
+        assert!(PlanTable::new(&unmatched).resolve(TensorClass::kv(0, KvStream::Key)).is_none());
+        // the same interned config returns the same cached plan (pointer
+        // equality across resolves, incl. across distinct classes)
+        let p1 = table.resolve(TensorClass::weight("l1.wq")).unwrap().1 as *const EncodePlan;
+        let p2 = table.resolve(TensorClass::weight("l2.w2")).unwrap().1 as *const EncodePlan;
+        let p3 = table.resolve(TensorClass::kv(1, KvStream::Value)).unwrap().1 as *const _;
+        assert_eq!(p1, p2);
+        assert_eq!(p1, p3); // kv=nxfp4 interns to the same config as weights
+        // a different config gets a different plan, built for it
+        let (cfg6, plan6) = table.resolve(TensorClass::weight("l0.wq")).unwrap();
+        assert_eq!(cfg6.name(), "MxFP6-E2M3");
+        assert_eq!(plan6.cfg.name(), "MxFP6-E2M3");
+    }
+
+    #[test]
+    fn spec_names_cover_canonical_configs() {
+        assert_eq!(NxConfig::nxfp(4).spec_name().as_deref(), Some("nxfp4"));
+        assert_eq!(NxConfig::mxfp(6).spec_name().as_deref(), Some("mxfp6"));
+        assert_eq!(NxConfig::bfp(5).spec_name().as_deref(), Some("bfp5"));
+        assert_eq!(NxConfig::nxfp_nm(5).spec_name().as_deref(), Some("nxfp5-nm"));
+        assert_eq!(NxConfig::nxfp_nm_am(4).spec_name().as_deref(), Some("nxfp4-nm+am"));
+        // customized configs have no parseable name
+        assert!(NxConfig::nxfp(4).with_block_size(16).spec_name().is_none());
+        assert!(NxConfig::mxfp(4).with_recycle(RecycleTarget::MidTopPair).spec_name().is_none());
+        // 2-bit BFP exists (no minifloat counterpart), out-of-range bits don't
+        assert_eq!(NxConfig::bfp(2).spec_name().as_deref(), Some("bfp2"));
+        // and every spec name parses back to the same config
+        for cfg in [NxConfig::nxfp(4), NxConfig::mxfp(6), NxConfig::nxfp_nm(5)] {
+            let name = cfg.spec_name().unwrap();
+            assert_eq!(parse_format(&name).unwrap().unwrap(), cfg);
+        }
+    }
+
+    #[test]
+    fn digests_distinguish_configs() {
+        let a = NxConfig::nxfp(4);
+        assert_eq!(a.digest(), NxConfig::nxfp(4).digest());
+        let distinct = [
+            NxConfig::nxfp(4).digest(),
+            NxConfig::nxfp_nm(4).digest(),
+            NxConfig::nxfp(4).with_block_size(16).digest(),
+            NxConfig::nxfp(4).with_recycle(RecycleTarget::MidTopPair).digest(),
+            NxConfig::mxfp(4).digest(),
+            NxConfig::bfp(4).digest(),
+            NxConfig::nxfp(5).digest(),
+        ];
+        let uniq: std::collections::BTreeSet<&String> = distinct.iter().collect();
+        assert_eq!(uniq.len(), distinct.len(), "digest collision: {distinct:?}");
+        assert_eq!(a.digest().len(), 6);
+    }
+
+    #[test]
+    fn families() {
+        assert_eq!(NxConfig::nxfp(4).family(), "nxfp");
+        assert_eq!(NxConfig::nxfp_nm(5).family(), "nxfp");
+        assert_eq!(NxConfig::mxfp(5).family(), "mxfp");
+        assert_eq!(NxConfig::bfp(6).family(), "bfp");
+    }
+
+    #[test]
+    fn parse_format_families() {
+        assert!(parse_format("fp16").unwrap().is_none());
+        assert!(parse_format("none").unwrap().is_none());
+        assert_eq!(parse_format("bfp4").unwrap().unwrap().name(), "BFP4");
+        assert_eq!(parse_format("mxfp6").unwrap().unwrap().name(), "MxFP6-E2M3");
+        assert_eq!(parse_format("nxfp4").unwrap().unwrap().name(), "NxFP4 (NM+AM+CR)");
+        assert_eq!(parse_format("nxfp5-nm").unwrap().unwrap().name(), "NxFP5 (NM)");
+        assert_eq!(parse_format("NXFP4-NM+AM").unwrap().unwrap().name(), "NxFP4 (NM+AM)");
+        assert!(parse_format("zfp4").is_err());
+        assert!(parse_format("nxfp4-zzz").is_err());
+        assert!(parse_format("mxfpx").is_err());
+        assert!(parse_format("mxfp4-nm").is_err());
+    }
+}

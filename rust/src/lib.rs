@@ -32,6 +32,9 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
-pub use formats::{BlockFormat, BlockStore, ElementFormat, EncodePlan, EncodeScratch, NxConfig};
+pub use formats::{
+    BlockFormat, BlockStore, ElementFormat, EncodePlan, EncodeScratch, KvStream, NxConfig,
+    QuantPolicy, TensorClass,
+};
 pub use quant::{quantize_matrix, quantize_matrix_with, quantize_vector, QuantizedMatrix};
 pub use tensor::Tensor2;

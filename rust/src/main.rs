@@ -4,21 +4,27 @@
 //! nxfp train     --steps 300 --batch 16 --out ckpt.bin
 //! nxfp eval      --ckpt ckpt.bin --format nxfp4 [--kv-format nxfp4]
 //! nxfp reason    --ckpt ckpt.bin --format nxfp4 --probes 200
-//! nxfp quantize  --ckpt ckpt.bin --format nxfp4
-//! nxfp serve     --ckpt ckpt.bin --kv-format nxfp4 --requests 16
+//! nxfp quantize  --ckpt ckpt.bin --quant "weights=nxfp4,layers.0-1.*=mxfp6"
+//! nxfp serve     --ckpt ckpt.bin --quant "kv.k=nxfp5,kv.v=mxfp4" --requests 16
 //! nxfp profile   --model Llama3-8B
 //! nxfp info
 //! ```
+//!
+//! Quantization formats are chosen by a [`QuantPolicy`]: `--quant` takes a
+//! full policy spec (`weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4`, first match
+//! wins, unmatched classes stay FP16), while the legacy `--format` /
+//! `--kv-format` flags remain as sugar that lowers to a `weights=…` /
+//! `kv=…` rule. When `--quant` is given it wins.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
-use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
-use nxfp::formats::NxConfig;
+use nxfp::eval::{checkpoint_footprint, perplexity, quantize_checkpoint, reasoning_accuracy};
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
 use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec, ModelProfile};
 use nxfp::profile::profile_scaled;
@@ -26,35 +32,19 @@ use nxfp::runtime::Runtime;
 use nxfp::train::{TrainConfig, Trainer};
 use nxfp::util::cli::Args;
 
-/// Parse a format name like `fp16`, `bfp4`, `mxfp4`, `nxfp5`, `nxfp4-nm`.
-pub fn parse_format(s: &str) -> Result<Option<NxConfig>> {
-    let s = s.to_lowercase();
-    if s == "fp16" || s == "none" || s.is_empty() {
-        return Ok(None);
+/// The quantization policy a subcommand runs under: `--quant <spec>` when
+/// given, else the legacy flag lowered to a single rule on `legacy_class`
+/// (`weights` for `--format`, `kv` for `--kv-format`), so the old flags
+/// keep their exact old meaning.
+pub fn resolve_policy(a: &Args, legacy: &str, legacy_class: &str) -> Result<QuantPolicy> {
+    let spec = a.get("quant").unwrap_or("");
+    if !spec.trim().is_empty() {
+        return QuantPolicy::parse(spec);
     }
-    let (base, suffix) = match s.split_once('-') {
-        Some((b, s)) => (b.to_string(), Some(s.to_string())),
-        None => (s.clone(), None),
-    };
-    let bits: u8 = base
-        .trim_start_matches(|c: char| c.is_alphabetic())
-        .parse()
-        .map_err(|_| anyhow!("bad format {s}"))?;
-    let cfg = if base.starts_with("bfp") {
-        NxConfig::bfp(bits)
-    } else if base.starts_with("mxfp") {
-        NxConfig::mxfp(bits)
-    } else if base.starts_with("nxfp") {
-        match suffix.as_deref() {
-            None | Some("nm+am+cr") => NxConfig::nxfp(bits),
-            Some("nm") => NxConfig::nxfp_nm(bits),
-            Some("nm+am") => NxConfig::nxfp_nm_am(bits),
-            Some(other) => bail!("unknown NxFP variant {other}"),
-        }
-    } else {
-        bail!("unknown format {s}");
-    };
-    Ok(Some(cfg))
+    match a.get(legacy) {
+        None | Some("") => Ok(QuantPolicy::fp16()),
+        Some(fmt) => QuantPolicy::parse(&format!("{legacy_class}={fmt}")),
+    }
 }
 
 /// `--prefill-budget` default as a CLI string (pinned to
@@ -76,16 +66,24 @@ pub fn parse_budget(s: &str) -> Result<usize> {
 }
 
 /// Name of the KV-fake-quant eval artifact for a config (see aot.py).
+///
+/// Keyed on family + bits **plus a config digest for non-default
+/// configs**: two configs that differ only in NM/AM/CR toggles, element
+/// format, block size, or recycle target used to collide on one artifact
+/// name (e.g. `nxfp4` vs `nxfp4-nm` both mapped to `eval_step_kvq_nxfp4`,
+/// so an `-nm` eval silently reused the full-NxFP artifact). Canonical
+/// full-family configs keep the legacy name so existing artifact
+/// directories still resolve.
 pub fn kvq_artifact_name(cfg: &NxConfig) -> String {
-    let kind = if cfg.enable_nm || cfg.enable_am || cfg.enable_cr {
-        "nxfp"
+    let base = format!("eval_step_kvq_{}{}", cfg.family(), cfg.bits);
+    let canonical = cfg
+        .spec_name()
+        .map_or(false, |n| n == format!("{}{}", cfg.family(), cfg.bits));
+    if canonical {
+        base
     } else {
-        match cfg.base {
-            nxfp::formats::BaseFormat::Mx => "mxfp",
-            nxfp::formats::BaseFormat::Bfp => "bfp",
-        }
-    };
-    format!("eval_step_kvq_{kind}{}", cfg.bits)
+        format!("{base}_{}", cfg.digest())
+    }
 }
 
 fn default_corpus() -> Corpus {
@@ -126,20 +124,20 @@ fn cmd_eval(a: &Args) -> Result<()> {
     ck.check_spec(&spec)?;
     let corpus = default_corpus();
     let mut rt = Runtime::cpu(artifacts_dir(a))?;
-    let wfmt = parse_format(&a.get_str("format"))?;
-    let kv = a.get("kv-format").map(parse_format).transpose()?.flatten();
-    let eval_ck = match &wfmt {
-        Some(cfg) => quantize_checkpoint(&ck, &spec.quantizable(), cfg),
-        None => ck.clone(),
-    };
+    let policy = resolve_policy(a, "format", "weights")?;
+    let kv_policy = resolve_policy(a, "kv-format", "kv")?;
+    let eval_ck = quantize_checkpoint(&ck, &spec.quantizable(), &policy);
+    // the kvq artifacts bake one format into the eval graph, so the KV
+    // side of the policy must be uniform here (serving has no such limit)
+    let kv = kv_policy.kv_uniform(spec.n_layers)?;
     let step = match &kv {
         Some(cfg) => rt.load(&kvq_artifact_name(cfg))?,
         None => rt.load("eval_step")?,
     };
     let p = perplexity(&step, &eval_ck, &corpus, spec.seq_len, 8)?;
     println!(
-        "format {:<18} kv {:<10} ppl {:.4}  ({} tokens)",
-        wfmt.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        "weights {:<18} kv {:<10} ppl {:.4}  ({} tokens)",
+        policy.name(),
         kv.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
         p.ppl(),
         p.tokens
@@ -154,15 +152,12 @@ fn cmd_reason(a: &Args) -> Result<()> {
     let probes = Probe::generate(&corpus.spec, a.get_usize("probes")?, 77);
     let mut rt = Runtime::cpu(artifacts_dir(a))?;
     let step = rt.load("score_step")?;
-    let wfmt = parse_format(&a.get_str("format"))?;
-    let eval_ck = match &wfmt {
-        Some(cfg) => quantize_checkpoint(&ck, &spec.quantizable(), cfg),
-        None => ck.clone(),
-    };
+    let policy = resolve_policy(a, "format", "weights")?;
+    let eval_ck = quantize_checkpoint(&ck, &spec.quantizable(), &policy);
     let acc = reasoning_accuracy(&step, &eval_ck, &probes, spec.seq_len, 8)?;
     println!(
-        "format {:<18} reasoning accuracy {:.1}%  ({} probes)",
-        wfmt.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        "weights {:<18} reasoning accuracy {:.1}%  ({} probes)",
+        policy.name(),
         acc * 100.0,
         probes.len()
     );
@@ -171,32 +166,55 @@ fn cmd_reason(a: &Args) -> Result<()> {
 
 fn cmd_quantize(a: &Args) -> Result<()> {
     let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
-    let cfg = parse_format(&a.get_str("format"))?
-        .ok_or_else(|| anyhow!("--format must be a quantized format"))?;
+    let policy = resolve_policy(a, "format", "weights")?;
     let spec = LmSpec::small();
     // fail loudly on a spec/checkpoint mismatch (direct_cast_packed
     // itself skips names it can't find)
     ck.check_spec(&spec)?;
+    let quantizable = spec.quantizable();
+    let packed_weights = ck.direct_cast_packed(&quantizable, &policy);
+    // a policy can be non-FP16 yet quantize no *weights* (e.g. a KV-only
+    // serve spec pasted here) — that's an error, not a 0/0 report
+    if packed_weights.is_empty() {
+        return Err(anyhow!(
+            "policy `{}` quantizes no weights (every weight class resolves to FP16)",
+            policy.render()
+        ));
+    }
     let mut total_fp16 = 0u64;
     let mut total_q = 0u64;
-    for (name, packed) in ck.direct_cast_packed(&spec.quantizable(), &cfg) {
+    for (name, _, packed) in packed_weights {
         total_fp16 += ck.get(&name).unwrap().len() as u64 * 2;
         total_q += packed.footprint_bytes() as u64;
     }
     println!(
         "{}: quantizable weights {} KiB -> {} KiB ({:.1}% of FP16)",
-        cfg.name(),
+        policy.name(),
         total_fp16 / 1024,
         total_q / 1024,
         100.0 * total_q as f64 / total_fp16 as f64
     );
+    // per-class effective-bits breakdown (one line per resolved config,
+    // FP16 covering embeddings/norms and any fp16-resolved weights)
+    let report = checkpoint_footprint(&ck, &quantizable, &policy);
+    for c in &report.classes {
+        println!(
+            "  {:<20} {:>3} tensors  {:>8} KiB  {:.2} eff. bits/elem",
+            c.label,
+            c.tensors,
+            c.bits / 8 / 1024,
+            c.effective_bits()
+        );
+    }
+    println!("  total checkpoint footprint {} KiB", report.total_bytes() / 1024);
     Ok(())
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
     let spec = LmSpec::small();
     let ck = Checkpoint::load(Path::new(a.get("ckpt").unwrap_or("artifacts/model.ckpt")))?;
-    let kv = parse_format(&a.get_str("kv-format"))?;
+    let kv = resolve_policy(a, "kv-format", "kv")?;
+    let kv_name = kv.name();
     let mode: SchedMode = a.get_parsed("sched")?;
     let n_req = a.get_usize("requests")?;
     let max_new = a.get_usize("max-new")?;
@@ -207,7 +225,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         artifacts_dir(a),
         spec,
         ck,
-        kv.clone(),
+        kv,
         ServeOpts {
             max_batch: a.get_usize("max-batch")?,
             batch_window: Duration::from_millis(5),
@@ -235,11 +253,19 @@ fn cmd_serve(a: &Args) -> Result<()> {
         prefill_budget.to_string()
     };
     println!(
-        "served {} reqs ({mode:?}, prefill budget {budget}), {} tokens, {:.1} tok/s{savings}",
+        "served {} reqs (kv {kv_name}, {mode:?}, prefill budget {budget}), {} tokens, \
+         {:.1} tok/s{savings}",
         m.requests,
         m.tokens_generated,
         m.tokens_per_sec()
     );
+    if m.kv_bits_packed > 0 && m.kv_bits_packed_k != m.kv_bits_packed_v {
+        println!(
+            "kv packed split: K {} KiB, V {} KiB (per-class footprint)",
+            m.kv_bits_packed_k / 8 / 1024,
+            m.kv_bits_packed_v / 8 / 1024
+        );
+    }
     println!("{}", report.serving.summary());
     Ok(())
 }
@@ -268,7 +294,14 @@ fn cmd_info() -> Result<()> {
         println!("  {}", p.name);
     }
     println!("\nformats: fp16 bfp<B> mxfp<B> nxfp<B>[-nm|-nm+am|-nm+am+cr]");
-    println!("example: nxfp eval --ckpt artifacts/model.ckpt --format nxfp4");
+    println!(
+        "policies: --quant takes selector=format rules, first match wins;\n\
+         \x20 classes: *, weights[.<name|prefix*>], kv, kv.k, kv.v, layers.<a>[-<b>].<class>\n\
+         \x20 unmatched classes stay FP16; a bare format is uniform shorthand"
+    );
+    println!("examples: nxfp eval --ckpt artifacts/model.ckpt --format nxfp4");
+    println!("          nxfp serve --quant \"kv.k=nxfp5,kv.v=mxfp4\"");
+    println!("          nxfp quantize --quant \"layers.0-1.weights=mxfp6,weights=nxfp4\"");
     Ok(())
 }
 
@@ -276,23 +309,36 @@ fn cmd_info() -> Result<()> {
 mod tests {
     use super::*;
 
+    fn args(raw: &[&str]) -> Args {
+        Args::new("test", "test")
+            .opt("format", Some("fp16"), "weight format")
+            .opt("kv-format", Some("nxfp4"), "kv format")
+            .opt("quant", None, "policy spec")
+            .parse(&raw.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
     #[test]
-    fn parse_format_families() {
-        assert!(parse_format("fp16").unwrap().is_none());
-        assert!(parse_format("none").unwrap().is_none());
-        let c = parse_format("bfp4").unwrap().unwrap();
-        assert_eq!(c.name(), "BFP4");
-        let c = parse_format("mxfp6").unwrap().unwrap();
-        assert_eq!(c.name(), "MxFP6-E2M3");
-        let c = parse_format("nxfp4").unwrap().unwrap();
-        assert_eq!(c.name(), "NxFP4 (NM+AM+CR)");
-        let c = parse_format("nxfp5-nm").unwrap().unwrap();
-        assert_eq!(c.name(), "NxFP5 (NM)");
-        let c = parse_format("NXFP4-NM+AM").unwrap().unwrap();
-        assert_eq!(c.name(), "NxFP4 (NM+AM)");
-        assert!(parse_format("zfp4").is_err());
-        assert!(parse_format("nxfp4-zzz").is_err());
-        assert!(parse_format("mxfpx").is_err());
+    fn legacy_flags_lower_to_single_rule_policies() {
+        // --format fp16 default: weights stay fp16
+        let a = args(&[]);
+        assert!(resolve_policy(&a, "format", "weights").unwrap().is_fp16());
+        // --kv-format default nxfp4: uniform KV policy, weights untouched
+        let kv = resolve_policy(&a, "kv-format", "kv").unwrap();
+        assert_eq!(kv.kv_uniform(4).unwrap().unwrap().name(), "NxFP4 (NM+AM+CR)");
+        assert!(kv.resolve(nxfp::formats::TensorClass::weight("l0.wq")).is_none());
+        // explicit legacy flag
+        let a = args(&["--format", "mxfp6"]);
+        let w = resolve_policy(&a, "format", "weights").unwrap();
+        assert_eq!(w.resolve(nxfp::formats::TensorClass::weight("l0.wq")).unwrap().bits, 6);
+    }
+
+    #[test]
+    fn quant_spec_overrides_legacy_flags() {
+        let a = args(&["--kv-format", "nxfp4", "--quant", "kv.k=nxfp5,kv.v=mxfp4"]);
+        let kv = resolve_policy(&a, "kv-format", "kv").unwrap();
+        assert!(kv.kv_uniform(2).is_err(), "mixed spec should win over the legacy flag");
+        assert!(resolve_policy(&args(&["--quant", "zfp=4"]), "format", "weights").is_err());
     }
 
     use nxfp::coordinator::DEFAULT_PREFILL_BUDGET;
@@ -313,9 +359,32 @@ mod tests {
 
     #[test]
     fn kvq_artifact_names() {
+        // default configs keep the legacy names (existing artifact
+        // directories must still resolve)
         assert_eq!(kvq_artifact_name(&NxConfig::nxfp(4)), "eval_step_kvq_nxfp4");
         assert_eq!(kvq_artifact_name(&NxConfig::mxfp(5)), "eval_step_kvq_mxfp5");
         assert_eq!(kvq_artifact_name(&NxConfig::bfp(6)), "eval_step_kvq_bfp6");
+    }
+
+    #[test]
+    fn kvq_artifact_names_do_not_collide_on_variants() {
+        // regression: nxfp4 and nxfp4-nm used to share one artifact name
+        let full = kvq_artifact_name(&NxConfig::nxfp(4));
+        let nm = kvq_artifact_name(&NxConfig::nxfp_nm(4));
+        let nm_am = kvq_artifact_name(&NxConfig::nxfp_nm_am(4));
+        let blk16 = kvq_artifact_name(&NxConfig::nxfp(4).with_block_size(16));
+        let names = [&full, &nm, &nm_am, &blk16];
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b, "artifact name collision");
+            }
+        }
+        // variants keep the family prefix so aot.py can route them
+        assert!(nm.starts_with("eval_step_kvq_nxfp4_"), "{nm}");
+        assert!(blk16.starts_with("eval_step_kvq_nxfp4_"), "{blk16}");
+        // custom block size on a plain MxFP keeps its family
+        let mx_blk = kvq_artifact_name(&NxConfig::mxfp(4).with_block_size(16));
+        assert!(mx_blk.starts_with("eval_step_kvq_mxfp4_"), "{mx_blk}");
     }
 }
 
@@ -340,12 +409,14 @@ fn main() {
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("format", Some("fp16"), "weight format (fp16/bfp4/mxfp4/nxfp4…)")
             .opt("kv-format", None, "KV-cache format (uses the kvq artifact)")
+            .opt("quant", None, "policy spec, e.g. weights=nxfp4,kv=nxfp5 (overrides both)")
             .parse(rest)
             .map_err(anyhow::Error::from)
             .and_then(|a| cmd_eval(&a)),
         "reason" => common(Args::new("nxfp reason", "multiple-choice reasoning accuracy"))
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("format", Some("fp16"), "weight format")
+            .opt("quant", None, "policy spec, e.g. layers.0-1.weights=mxfp6,weights=nxfp4")
             .opt("probes", Some("200"), "number of probes")
             .parse(rest)
             .map_err(anyhow::Error::from)
@@ -353,12 +424,14 @@ fn main() {
         "quantize" => common(Args::new("nxfp quantize", "pack a checkpoint, report footprint"))
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("format", Some("nxfp4"), "target format")
+            .opt("quant", None, "policy spec, e.g. weights.l0.*=nxfp6,weights=nxfp4")
             .parse(rest)
             .map_err(anyhow::Error::from)
             .and_then(|a| cmd_quantize(&a)),
         "serve" => common(Args::new("nxfp serve", "batched decoding with quantized KV"))
             .opt("ckpt", Some("artifacts/model.ckpt"), "checkpoint path")
             .opt("kv-format", Some("nxfp4"), "KV-cache storage format")
+            .opt("quant", None, "KV policy spec, e.g. kv.k=nxfp5,kv.v=mxfp4 (overrides)")
             .opt("sched", Some("continuous"), "scheduler: continuous|wave")
             .opt(
                 "prefill-budget",

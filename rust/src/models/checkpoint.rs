@@ -3,7 +3,7 @@
 //! and the evaluation benches.
 
 use crate::formats::packed::PackedMatrix;
-use crate::formats::NxConfig;
+use crate::formats::{NxConfig, PlanTable, QuantPolicy, TensorClass};
 use crate::models::transformer::LmSpec;
 use crate::tensor::Tensor2;
 use crate::util::ser::{Reader, Writer};
@@ -70,22 +70,29 @@ impl Checkpoint {
     }
 
     /// Direct-cast the named tensors straight into deployable packed form
-    /// (paper §5 Algorithm 1 → §6 storage layout): each weight is
-    /// quantized through the allocation-free engine into a flat
-    /// `BlockStore` and bit-packed without ever materializing per-block
-    /// heap objects. One `EncodePlan` is shared across all tensors (plan
-    /// construction is per-config work). Names missing from the
-    /// checkpoint are skipped.
+    /// (paper §5 Algorithm 1 → §6 storage layout) under a [`QuantPolicy`]:
+    /// each weight is quantized through its **resolved** config by the
+    /// allocation-free engine into a flat `BlockStore` and bit-packed
+    /// without ever materializing per-block heap objects. One
+    /// `EncodePlan` is built per distinct resolved config (a shared
+    /// [`PlanTable`]), never per tensor. FP16-resolved names are omitted
+    /// from the result (they stay unquantized); names missing from the
+    /// checkpoint are skipped. Each entry carries the config that packed
+    /// it, which a mixed policy makes tensor-dependent.
     pub fn direct_cast_packed(
         &self,
         names: &[String],
-        cfg: &NxConfig,
-    ) -> Vec<(String, PackedMatrix)> {
-        let plan = crate::formats::EncodePlan::new(cfg);
+        policy: &QuantPolicy,
+    ) -> Vec<(String, NxConfig, PackedMatrix)> {
+        let mut plans = PlanTable::new(policy);
         self.params
             .iter()
             .filter(|(n, _)| names.contains(n))
-            .map(|(n, t)| (n.clone(), crate::quant::quantize_matrix_with(t, cfg, &plan).pack(cfg)))
+            .filter_map(|(n, t)| {
+                let (cfg, plan) = plans.resolve(TensorClass::weight(n))?;
+                let packed = crate::quant::quantize_matrix_with(t, cfg, plan).pack(cfg);
+                Some((n.clone(), cfg.clone(), packed))
+            })
             .collect()
     }
 
@@ -172,10 +179,11 @@ mod tests {
         let ck = Checkpoint::init(&spec, 5);
         let names = spec.quantizable();
         let cfg = NxConfig::nxfp(4);
-        let packed = ck.direct_cast_packed(&names, &cfg);
+        let packed = ck.direct_cast_packed(&names, &QuantPolicy::uniform(cfg.clone()));
         assert_eq!(packed.len(), names.len());
         let lut = crate::dequant::DequantLut::new(&cfg);
-        for (name, p) in &packed {
+        for (name, pcfg, p) in &packed {
+            assert_eq!(pcfg, &cfg);
             let t = ck.get(name).unwrap();
             assert_eq!((p.rows, p.cols), (t.rows, t.cols));
             // packed form is the same number system as the fake-quant path
@@ -184,6 +192,27 @@ mod tests {
             assert_eq!(back.data, want.data, "{name}");
             // and much smaller than fp16
             assert!(p.footprint_bytes() < t.len() * 2);
+        }
+    }
+
+    #[test]
+    fn direct_cast_packed_honors_mixed_policy() {
+        use crate::formats::NxConfig;
+        let spec = LmSpec::tiny();
+        let ck = Checkpoint::init(&spec, 6);
+        let names = spec.quantizable();
+        // layer 0 at 6 bits, layer 1 stays fp16, the rest at 4 bits
+        let policy =
+            QuantPolicy::parse("layers.0.weights=mxfp6,layers.1.weights=fp16,weights=nxfp4")
+                .unwrap();
+        let packed = ck.direct_cast_packed(&names, &policy);
+        // layer-1 weights are fp16-resolved and omitted
+        assert!(packed.iter().all(|(n, ..)| !n.starts_with("l1.")));
+        assert_eq!(packed.len(), names.len() - 6);
+        for (name, cfg, p) in &packed {
+            let want_bits = if name.starts_with("l0.") { 6 } else { 4 };
+            assert_eq!(cfg.bits, want_bits, "{name}");
+            assert_eq!(p.bits, want_bits, "{name}");
         }
     }
 

@@ -3,11 +3,25 @@
 //! form — the DRAM-resident footprint — and dequantized on the fly when a
 //! decode step needs the attention context.
 //!
+//! # Per-stream formats and plan interning
+//!
+//! Since the `QuantPolicy` redesign the K and V streams carry **their own
+//! configs**: a cache is built from two [`KvStreamPlan`]s (config +
+//! `EncodePlan` + `DequantLut` behind `Arc`s), so `kv.k=nxfp5,kv.v=mxfp4`
+//! is just two different plans, and [`KvPlans::from_policy`] resolves a
+//! whole engine's per-layer, per-stream plan table with **one**
+//! plan/LUT pair per distinct config — admission of a serving slot clones
+//! `Arc`s instead of rebuilding `n_layers` encode plans (the pre-policy
+//! behavior). The packed streams already carry per-block metadata, so
+//! mixed formats are purely a plumbing concern; the stored bits per
+//! stream are identical to a uniform cache of that stream's config
+//! (pinned by `tests/policy_equivalence.rs`).
+//!
 //! Storage + encode hot path: both streams live in flat [`BlockStore`]s
 //! (one contiguous codes buffer each, SoA metadata), and
-//! [`KvCache::append`] quantizes through the cache's resident
-//! [`EncodePlan`] + [`EncodeScratch`] — zero heap allocations per appended
-//! row in steady state (the stores grow amortized; use
+//! [`KvCache::append`] quantizes through the stream's resident
+//! [`EncodePlan`] + a shared [`EncodeScratch`] — zero heap allocations per
+//! appended row in steady state (the stores grow amortized; use
 //! [`KvCache::with_capacity`] to pre-reserve a whole context window).
 //!
 //! # Incremental dequantization contract
@@ -36,28 +50,186 @@
 //! step tensors, so there is no intermediate staging mirror (see
 //! `coordinator::SlotKv`).
 
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
 use crate::dequant::DequantLut;
-use crate::formats::{BaseFormat, BlockStore, EncodePlan, EncodeScratch, NxConfig};
+use crate::formats::{
+    BaseFormat, BlockStore, EncodePlan, EncodeScratch, KvStream as StreamKind, NxConfig,
+    QuantPolicy, TensorClass,
+};
 use crate::tensor::Tensor2;
 
-/// One layer's quantized K and V streams. Rows are appended per generated
-/// token; each row is quantized independently in `cfg.block_size` blocks
-/// along the feature dimension (matching how the paper blocks the cache).
-pub struct KvCache {
-    pub cfg: NxConfig,
-    plan: EncodePlan,
-    scratch: EncodeScratch,
-    lut: DequantLut,
-    pub dim: usize,
-    k_store: BlockStore,
-    v_store: BlockStore,
-    pub len: usize,
-    /// Rows already materialized by the last [`KvCache::dequantize_into`].
-    clean: usize,
+/// Interned runtime tables for one stream's config: the config itself,
+/// its encode plan, and its decode LUT, all shareable across layers,
+/// slots, and threads. Build once per **distinct** config (see
+/// [`KvPlans::from_policy`]); cloning is three `Arc` bumps.
+#[derive(Clone)]
+pub struct KvStreamPlan {
+    pub cfg: Arc<NxConfig>,
+    pub plan: Arc<EncodePlan>,
+    pub lut: Arc<DequantLut>,
+}
+
+impl KvStreamPlan {
+    pub fn new(cfg: &NxConfig) -> Self {
+        let plan = EncodePlan::new(cfg);
+        let lut = DequantLut::from_tables(cfg.bits, &plan.tabs);
+        KvStreamPlan {
+            cfg: Arc::new(cfg.clone()),
+            plan: Arc::new(plan),
+            lut: Arc::new(lut),
+        }
+    }
+}
+
+/// A whole engine's resolved KV formats: one `(K, V)` plan pair per layer,
+/// with plans interned per distinct config. This is what a `QuantPolicy`
+/// lowers to on the serving side.
+#[derive(Clone)]
+pub struct KvPlans {
+    /// `layers[l] = (key_plan, value_plan)`.
+    pub layers: Vec<(KvStreamPlan, KvStreamPlan)>,
+}
+
+impl KvPlans {
+    /// Resolve `policy` for every `(layer, stream)` KV class.
+    ///
+    /// * all classes FP16 → `Ok(None)` (baseline serving, no quantizer);
+    /// * all classes quantized → one [`KvStreamPlan`] per **distinct**
+    ///   config, shared across every layer/stream that resolves to it;
+    /// * a mix of FP16 and quantized streams → error: the serving slabs
+    ///   hold either raw rows or packed caches per slot, not both (state
+    ///   the whole cache as quantized, or none of it).
+    pub fn from_policy(policy: &QuantPolicy, n_layers: usize) -> Result<Option<KvPlans>> {
+        let mut interned: Vec<Option<KvStreamPlan>> = vec![None; policy.configs().len()];
+        let intern = |id: usize, interned: &mut Vec<Option<KvStreamPlan>>| {
+            if interned[id].is_none() {
+                interned[id] = Some(KvStreamPlan::new(policy.config(id)));
+            }
+            interned[id].clone().unwrap()
+        };
+        let mut ids = Vec::with_capacity(n_layers);
+        let mut any_q = false;
+        let mut any_fp = false;
+        for l in 0..n_layers {
+            let k = policy.resolve_id(TensorClass::kv(l, StreamKind::Key));
+            let v = policy.resolve_id(TensorClass::kv(l, StreamKind::Value));
+            for id in [k, v] {
+                match id {
+                    Some(_) => any_q = true,
+                    None => any_fp = true,
+                }
+            }
+            ids.push((k, v));
+        }
+        if !any_q {
+            return Ok(None);
+        }
+        if any_fp {
+            bail!(
+                "policy `{}` mixes FP16 and quantized KV streams; per-layer/per-stream \
+                 formats may differ but must all be quantized (or all FP16)",
+                policy.render()
+            );
+        }
+        let layers = ids
+            .into_iter()
+            .map(|(k, v)| {
+                (intern(k.unwrap(), &mut interned), intern(v.unwrap(), &mut interned))
+            })
+            .collect();
+        Ok(Some(KvPlans { layers }))
+    }
+
+    /// One config for every layer and both streams (a single shared plan).
+    pub fn uniform(cfg: &NxConfig, n_layers: usize) -> KvPlans {
+        let p = KvStreamPlan::new(cfg);
+        KvPlans { layers: vec![(p.clone(), p); n_layers] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// One packed stream (K or V): its plan plus the flat storage.
+struct Stream {
+    plan: KvStreamPlan,
+    store: BlockStore,
     blocks_per_row: usize,
 }
 
+impl Stream {
+    fn new(dim: usize, plan: KvStreamPlan, rows: usize) -> Self {
+        let mut store = BlockStore::new(dim, plan.cfg.block_size);
+        store.reserve_rows(rows);
+        let blocks_per_row = dim.div_ceil(plan.cfg.block_size);
+        Stream { plan, store, blocks_per_row }
+    }
+
+    /// Quantize-append one row through this stream's plan.
+    fn append_row(&mut self, row: &[f32], scratch: &mut EncodeScratch) {
+        let r = self.store.push_row();
+        let (codes, e, nano, fmt) = self.store.row_slices_mut(r);
+        self.plan.plan.quantize_row_into(row, scratch, codes, e, nano, fmt);
+    }
+
+    /// Bulk-append `n` rows (one storage grow, per-row encoding unchanged
+    /// → bit-identical to `n` single appends by construction).
+    fn append_rows(&mut self, rows: &[f32], dim: usize, n: usize, scratch: &mut EncodeScratch) {
+        let r0 = self.store.push_rows(n);
+        for (i, row) in rows.chunks(dim).enumerate() {
+            let (codes, e, nano, fmt) = self.store.row_slices_mut(r0 + i);
+            self.plan.plan.quantize_row_into(row, scratch, codes, e, nano, fmt);
+        }
+    }
+
+    /// Shared decode routine: rows `from..to` into the row-major `out`
+    /// slab (`dim` floats per row). Both the full and the incremental
+    /// path go through here, which is what makes them bit-identical by
+    /// construction.
+    fn dequant_rows(&self, dim: usize, out: &mut [f32], from: usize, to: usize) {
+        let cfg = &*self.plan.cfg;
+        let lut = &*self.plan.lut;
+        let base_mx = cfg.base == BaseFormat::Mx;
+        for r in from..to {
+            let row = &mut out[r * dim..(r + 1) * dim];
+            for (bi, chunk) in row.chunks_mut(cfg.block_size).enumerate() {
+                let flat = r * self.blocks_per_row + bi;
+                let fmt_mx = if cfg.enable_am {
+                    self.store.fmt_mx[flat] != 0
+                } else {
+                    base_mx
+                };
+                let (table, offset) = lut.table(fmt_mx);
+                let scale = (1.0 + self.store.nano[flat] as f32 / 4.0)
+                    * crate::util::exp2i(self.store.e_shared[flat] as i32 + offset);
+                for (o, &c) in chunk.iter_mut().zip(self.store.block_codes(flat)) {
+                    *o = table[c as usize] * scale;
+                }
+            }
+        }
+    }
+}
+
+/// One layer's quantized K and V streams. Rows are appended per generated
+/// token; each row is quantized independently in that stream's
+/// `block_size` blocks along the feature dimension (matching how the
+/// paper blocks the cache). The two streams may carry different configs.
+pub struct KvCache {
+    k: Stream,
+    v: Stream,
+    scratch: EncodeScratch,
+    pub dim: usize,
+    pub len: usize,
+    /// Rows already materialized by the last [`KvCache::dequantize_into`].
+    clean: usize,
+}
+
 impl KvCache {
+    /// Uniform convenience: both streams under one config.
     pub fn new(dim: usize, cfg: NxConfig) -> Self {
         Self::with_capacity(dim, cfg, 0)
     }
@@ -65,37 +237,39 @@ impl KvCache {
     /// Like [`KvCache::new`], but pre-reserves storage for `rows` appended
     /// rows so a full context window appends without reallocation.
     pub fn with_capacity(dim: usize, cfg: NxConfig, rows: usize) -> Self {
-        let plan = EncodePlan::new(&cfg);
-        let lut = DequantLut::from_tables(cfg.bits, &plan.tabs);
-        let blocks_per_row = dim.div_ceil(cfg.block_size);
-        let mut k_store = BlockStore::new(dim, cfg.block_size);
-        let mut v_store = BlockStore::new(dim, cfg.block_size);
-        k_store.reserve_rows(rows);
-        v_store.reserve_rows(rows);
+        let plan = KvStreamPlan::new(&cfg);
+        Self::with_plans(dim, plan.clone(), plan, rows)
+    }
+
+    /// Per-stream plans (the policy-resolved path; plans are normally
+    /// interned in a [`KvPlans`] and shared across layers and slots).
+    pub fn with_plans(dim: usize, k: KvStreamPlan, v: KvStreamPlan, rows: usize) -> Self {
         KvCache {
-            cfg,
-            plan,
+            k: Stream::new(dim, k, rows),
+            v: Stream::new(dim, v, rows),
             scratch: EncodeScratch::new(),
-            lut,
             dim,
-            k_store,
-            v_store,
             len: 0,
             clean: 0,
-            blocks_per_row,
         }
+    }
+
+    /// The key stream's config.
+    pub fn cfg_k(&self) -> &NxConfig {
+        &self.k.plan.cfg
+    }
+
+    /// The value stream's config.
+    pub fn cfg_v(&self) -> &NxConfig {
+        &self.v.plan.cfg
     }
 
     /// Quantize and append one (k, v) row pair.
     pub fn append(&mut self, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), self.dim);
         assert_eq!(v.len(), self.dim);
-        let r = self.k_store.push_row();
-        let (codes, e, nano, fmt) = self.k_store.row_slices_mut(r);
-        self.plan.quantize_row_into(k, &mut self.scratch, codes, e, nano, fmt);
-        let r = self.v_store.push_row();
-        let (codes, e, nano, fmt) = self.v_store.row_slices_mut(r);
-        self.plan.quantize_row_into(v, &mut self.scratch, codes, e, nano, fmt);
+        self.k.append_row(k, &mut self.scratch);
+        self.v.append_row(v, &mut self.scratch);
         self.len += 1;
     }
 
@@ -112,16 +286,8 @@ impl KvCache {
         if n == 0 {
             return;
         }
-        let r0 = self.k_store.push_rows(n);
-        for (i, row) in k_rows.chunks(self.dim).enumerate() {
-            let (codes, e, nano, fmt) = self.k_store.row_slices_mut(r0 + i);
-            self.plan.quantize_row_into(row, &mut self.scratch, codes, e, nano, fmt);
-        }
-        let r0 = self.v_store.push_rows(n);
-        for (i, row) in v_rows.chunks(self.dim).enumerate() {
-            let (codes, e, nano, fmt) = self.v_store.row_slices_mut(r0 + i);
-            self.plan.quantize_row_into(row, &mut self.scratch, codes, e, nano, fmt);
-        }
+        self.k.append_rows(k_rows, self.dim, n, &mut self.scratch);
+        self.v.append_rows(v_rows, self.dim, n, &mut self.scratch);
         self.len += n;
     }
 
@@ -132,35 +298,10 @@ impl KvCache {
     }
 
     /// The packed (K, V) [`BlockStore`]s — the stored bits themselves.
-    /// Exposed so the chunk-invariance tests can pin bit-identity of the
-    /// packed streams across prefill budgets; hot paths never need this.
+    /// Exposed so the chunk-invariance and policy-equivalence tests can
+    /// pin bit-identity of the packed streams; hot paths never need this.
     pub fn stores(&self) -> (&BlockStore, &BlockStore) {
-        (&self.k_store, &self.v_store)
-    }
-
-    /// Shared decode routine: rows `from..to` of one stream into the
-    /// row-major `out` slab (`dim` floats per row). Both the full and the
-    /// incremental path go through here, which is what makes them
-    /// bit-identical by construction.
-    fn dequant_rows(&self, store: &BlockStore, out: &mut [f32], from: usize, to: usize) {
-        let base_mx = self.cfg.base == BaseFormat::Mx;
-        for r in from..to {
-            let row = &mut out[r * self.dim..(r + 1) * self.dim];
-            for (bi, chunk) in row.chunks_mut(self.cfg.block_size).enumerate() {
-                let flat = r * self.blocks_per_row + bi;
-                let fmt_mx = if self.cfg.enable_am {
-                    store.fmt_mx[flat] != 0
-                } else {
-                    base_mx
-                };
-                let (table, offset) = self.lut.table(fmt_mx);
-                let scale = (1.0 + store.nano[flat] as f32 / 4.0)
-                    * crate::util::exp2i(store.e_shared[flat] as i32 + offset);
-                for (o, &c) in chunk.iter_mut().zip(store.block_codes(flat)) {
-                    *o = table[c as usize] * scale;
-                }
-            }
-        }
+        (&self.k.store, &self.v.store)
     }
 
     /// Dequantize the whole cache into `(len, dim)` tensors, padded to
@@ -169,8 +310,8 @@ impl KvCache {
         assert!(pad_len >= self.len);
         let mut k = Tensor2::zeros(pad_len, self.dim);
         let mut v = Tensor2::zeros(pad_len, self.dim);
-        self.dequant_rows(&self.k_store, &mut k.data, 0, self.len);
-        self.dequant_rows(&self.v_store, &mut v.data, 0, self.len);
+        self.k.dequant_rows(self.dim, &mut k.data, 0, self.len);
+        self.v.dequant_rows(self.dim, &mut v.data, 0, self.len);
         (k, v)
     }
 
@@ -182,8 +323,8 @@ impl KvCache {
         let need = self.len * self.dim;
         assert!(k.len() >= need && v.len() >= need, "slab too short");
         let (from, to) = (self.clean, self.len);
-        self.dequant_rows(&self.k_store, k, from, to);
-        self.dequant_rows(&self.v_store, v, from, to);
+        self.k.dequant_rows(self.dim, k, from, to);
+        self.v.dequant_rows(self.dim, v, from, to);
         self.clean = to;
         from..to
     }
@@ -208,7 +349,19 @@ impl KvCache {
 
     /// Bit-true stored footprint of the cache (both K and V).
     pub fn footprint_bits(&self) -> u64 {
-        2 * self.len as u64 * self.cfg.footprint_bits(self.dim)
+        let (k, v) = self.footprint_bits_split();
+        k + v
+    }
+
+    /// Per-stream bit-true footprint `(K bits, V bits)` — distinct under a
+    /// mixed policy, and what the serving metrics' per-class breakdown
+    /// aggregates.
+    pub fn footprint_bits_split(&self) -> (u64, u64) {
+        let rows = self.len as u64;
+        (
+            rows * self.k.plan.cfg.footprint_bits(self.dim),
+            rows * self.v.plan.cfg.footprint_bits(self.dim),
+        )
     }
 
     /// FP16 footprint of the same cache, for the savings headline.
@@ -217,8 +370,8 @@ impl KvCache {
     }
 
     pub fn clear(&mut self) {
-        self.k_store.clear();
-        self.v_store.clear();
+        self.k.store.clear();
+        self.v.store.clear();
         self.len = 0;
         self.clean = 0;
     }
@@ -261,6 +414,7 @@ mod tests {
         let dim = 45; // partial tail block
         for cfg in [NxConfig::bfp(4), NxConfig::mxfp(6), NxConfig::nxfp(5)] {
             let tabs = cfg.tables();
+            let bpr = dim.div_ceil(cfg.block_size);
             let mut cache = KvCache::new(dim, cfg.clone());
             let mut appended = Vec::new();
             for _ in 0..4 {
@@ -268,15 +422,85 @@ mod tests {
                 cache.append(&k, &k);
                 appended.push(k);
             }
+            let (ks, vs) = cache.stores();
             for (r, k) in appended.iter().enumerate() {
                 for (bi, chunk) in k.chunks(cfg.block_size).enumerate() {
                     let want = crate::formats::quantize_block(chunk, &cfg, &tabs);
-                    let flat = r * cache.blocks_per_row + bi;
-                    assert_eq!(cache.k_store.block(flat), want, "{}", cfg.name());
-                    assert_eq!(cache.v_store.block(flat), want, "{}", cfg.name());
+                    let flat = r * bpr + bi;
+                    assert_eq!(ks.block(flat), want, "{}", cfg.name());
+                    assert_eq!(vs.block(flat), want, "{}", cfg.name());
                 }
             }
         }
+    }
+
+    #[test]
+    fn mixed_stream_formats_match_uniform_caches() {
+        // a kv.k=nxfp5 / kv.v=mxfp4 cache must store per stream the exact
+        // bits two uniform caches of those configs store (the policy
+        // redesign is plumbing, not a format change)
+        let mut rng = Rng::seeded(79);
+        let dim = 45;
+        let (ck, cv) = (NxConfig::nxfp(5), NxConfig::mxfp(4));
+        let mut mixed = KvCache::with_plans(dim, KvStreamPlan::new(&ck), KvStreamPlan::new(&cv), 8);
+        let mut uk = KvCache::new(dim, ck.clone());
+        let mut uv = KvCache::new(dim, cv.clone());
+        for _ in 0..6 {
+            let k: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            mixed.append(&k, &v);
+            uk.append(&k, &k);
+            uv.append(&v, &v);
+        }
+        assert_eq!(mixed.stores().0, uk.stores().0, "K stream diverged");
+        assert_eq!(mixed.stores().1, uv.stores().1, "V stream diverged");
+        // decoded rows agree with the uniform caches too
+        let (mk, mv) = mixed.dequantize(6);
+        assert_eq!(mk.data, uk.dequantize(6).0.data);
+        assert_eq!(mv.data, uv.dequantize(6).1.data);
+        // per-stream footprints follow their own configs
+        let (kb, vb) = mixed.footprint_bits_split();
+        assert_eq!(kb, 6 * ck.footprint_bits(dim));
+        assert_eq!(vb, 6 * cv.footprint_bits(dim));
+        assert_eq!(mixed.footprint_bits(), kb + vb);
+        assert_eq!(mixed.cfg_k().name(), "NxFP5 (NM+AM+CR)");
+        assert_eq!(mixed.cfg_v().name(), "MxFP4-E2M1");
+    }
+
+    #[test]
+    fn kv_plans_from_policy_interns_and_validates() {
+        // uniform policy: every plan is the same Arc
+        let p = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let plans = KvPlans::from_policy(&p, 3).unwrap().unwrap();
+        assert_eq!(plans.n_layers(), 3);
+        let first = &plans.layers[0].0;
+        for (k, v) in &plans.layers {
+            assert!(Arc::ptr_eq(&first.plan, &k.plan));
+            assert!(Arc::ptr_eq(&first.plan, &v.plan));
+        }
+        // fp16 policy: no plans at all
+        assert!(KvPlans::from_policy(&QuantPolicy::fp16(), 3).unwrap().is_none());
+        // weights-only policy leaves KV fp16
+        let wo = QuantPolicy::parse("weights=nxfp4").unwrap();
+        assert!(KvPlans::from_policy(&wo, 2).unwrap().is_none());
+        // mixed streams intern two configs, shared across layers
+        let m = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap();
+        let plans = KvPlans::from_policy(&m, 4).unwrap().unwrap();
+        assert_eq!(plans.layers[0].0.cfg.name(), "NxFP5 (NM+AM+CR)");
+        assert_eq!(plans.layers[0].1.cfg.name(), "MxFP4-E2M1");
+        for (k, v) in &plans.layers {
+            assert!(Arc::ptr_eq(&plans.layers[0].0.plan, &k.plan));
+            assert!(Arc::ptr_eq(&plans.layers[0].1.plan, &v.plan));
+        }
+        // partial fp16 is rejected with a policy-quoting error
+        let bad = QuantPolicy::parse("kv.k=nxfp4").unwrap();
+        let err = KvPlans::from_policy(&bad, 2).unwrap_err().to_string();
+        assert!(err.contains("FP16"), "{err}");
+        // per-layer resolution honors layer rules
+        let l = QuantPolicy::parse("layers.0.kv=mxfp6,kv=nxfp4").unwrap();
+        let plans = KvPlans::from_policy(&l, 2).unwrap().unwrap();
+        assert_eq!(plans.layers[0].0.cfg.name(), "MxFP6-E2M3");
+        assert_eq!(plans.layers[1].0.cfg.name(), "NxFP4 (NM+AM+CR)");
     }
 
     #[test]
@@ -343,16 +567,16 @@ mod tests {
         let dim = 64;
         let rows = 16;
         let mut cache = KvCache::with_capacity(dim, NxConfig::nxfp(4), rows);
-        let cap_codes = cache.k_store.codes.capacity();
-        let cap_meta = cache.k_store.e_shared.capacity();
+        let cap_codes = cache.stores().0.codes.capacity();
+        let cap_meta = cache.stores().0.e_shared.capacity();
         assert!(cap_codes >= rows * dim);
         let row: Vec<f32> = (0..dim).map(|i| i as f32 * 0.1).collect();
         for _ in 0..rows {
             cache.append(&row, &row);
         }
         // steady state: the pre-reserved buffers never grew
-        assert_eq!(cache.k_store.codes.capacity(), cap_codes);
-        assert_eq!(cache.k_store.e_shared.capacity(), cap_meta);
+        assert_eq!(cache.stores().0.codes.capacity(), cap_codes);
+        assert_eq!(cache.stores().0.e_shared.capacity(), cap_meta);
         assert_eq!(cache.len, rows);
     }
 

@@ -5,7 +5,7 @@
 
 use nxfp::coordinator::{DecodeEngine, GenRequest};
 use nxfp::eval::{perplexity, quantize_checkpoint, reasoning_accuracy};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
 use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec};
 use nxfp::runtime::Runtime;
@@ -55,7 +55,8 @@ fn train_eval_score_decode_compose() {
     let eval_step = rt.load("eval_step").unwrap();
     let p16 = perplexity(&eval_step, &ck, &corpus, spec.seq_len, 8).unwrap();
     assert!(p16.ppl() > 1.0 && p16.ppl() < 600.0, "ppl {}", p16.ppl());
-    let q4 = quantize_checkpoint(&ck, &spec.quantizable(), &NxConfig::nxfp(4));
+    let q4 =
+        quantize_checkpoint(&ck, &spec.quantizable(), &QuantPolicy::uniform(NxConfig::nxfp(4)));
     let p4 = perplexity(&eval_step, &q4, &corpus, spec.seq_len, 8).unwrap();
     assert!(p4.ppl() >= p16.ppl() * 0.99, "W4 ppl {} < FP16 {}", p4.ppl(), p16.ppl());
 
@@ -73,7 +74,8 @@ fn train_eval_score_decode_compose() {
 
     // --- decode engine with quantized KV serves requests
     let mut engine =
-        DecodeEngine::new(&mut rt, spec, &ck, Some(NxConfig::nxfp(4)), 4).unwrap();
+        DecodeEngine::new(&mut rt, spec, &ck, &QuantPolicy::uniform(NxConfig::nxfp(4)), 4)
+            .unwrap();
     let reqs: Vec<GenRequest> = (0..4)
         .map(|i| GenRequest { id: i, prompt: vec![0, 5, 70], max_new: 6 })
         .collect();

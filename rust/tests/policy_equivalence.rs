@@ -1,0 +1,304 @@
+//! QuantPolicy equivalence suite — the contract the API redesign ships
+//! under:
+//!
+//! 1. **Uniform-policy bit-identity** — `QuantPolicy::uniform(cfg)` routed
+//!    through every policy-driven entry point (`quantize_checkpoint`,
+//!    `direct_cast_packed`, `KvPlans`-built caches, the serving engine)
+//!    produces the exact bytes and tokens of the pre-redesign
+//!    single-config path (per-tensor `quantize_matrix` + `pack`,
+//!    `KvCache::new`, uniform `SlotKv::new`), across bfp/mxfp/nxfp at
+//!    4..=6 bits.
+//! 2. **Mixed policies serve end-to-end** — `kv.k=nxfp5,kv.v=mxfp4` (and a
+//!    per-layer mix) runs on `SynthBackend` through the continuous
+//!    scheduler, with the per-class packed footprint reported and each
+//!    stream bit-identical to a uniform cache of its config.
+//!
+//! Parser property tests (precedence, spec-string round-trip, rejection
+//! with the class vocabulary) live in `formats::policy`; this file covers
+//! the cross-layer behavior.
+
+use nxfp::coordinator::scheduler::Scheduler;
+use nxfp::coordinator::{DecodeEngine, GenRequest, SlotKv, SynthBackend};
+use nxfp::eval::quantize_checkpoint;
+use nxfp::formats::{KvStream, NxConfig, QuantPolicy, TensorClass};
+use nxfp::models::{Checkpoint, LmSpec};
+use nxfp::quant::kv_cache::{KvCache, KvPlans};
+use nxfp::quant::quantize_matrix;
+use nxfp::util::rng::Rng;
+
+fn spec() -> LmSpec {
+    LmSpec { vocab: 48, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 64, seq_len: 24 }
+}
+
+fn all_formats() -> Vec<NxConfig> {
+    let mut out = Vec::new();
+    for bits in 4u8..=6 {
+        out.push(NxConfig::bfp(bits));
+        out.push(NxConfig::mxfp(bits));
+        out.push(NxConfig::nxfp(bits));
+    }
+    out
+}
+
+/// Uniform policy through `direct_cast_packed` == the legacy per-tensor
+/// single-config path (`quantize_matrix(t, cfg).pack(cfg)`), byte for
+/// byte, across every format family and bit width.
+#[test]
+fn uniform_packed_checkpoint_bit_identical_to_single_config_path() {
+    let spec = LmSpec::tiny();
+    let ck = Checkpoint::init(&spec, 21);
+    let names = spec.quantizable();
+    for cfg in all_formats() {
+        let policy = QuantPolicy::uniform(cfg.clone());
+        let via_policy = ck.direct_cast_packed(&names, &policy);
+        assert_eq!(via_policy.len(), names.len(), "{}", cfg.name());
+        for (name, pcfg, packed) in &via_policy {
+            assert_eq!(pcfg, &cfg);
+            let t = ck.get(name).unwrap();
+            let legacy = quantize_matrix(t, &cfg).pack(&cfg);
+            assert_eq!(packed, &legacy, "{} {name}: packed bytes diverged", cfg.name());
+        }
+    }
+}
+
+/// Uniform policy through `quantize_checkpoint` == a hand-rolled
+/// per-tensor fake-quant under the same config.
+#[test]
+fn uniform_quantize_checkpoint_matches_single_config_path() {
+    let spec = LmSpec::tiny();
+    let ck = Checkpoint::init(&spec, 22);
+    let names = spec.quantizable();
+    for cfg in [NxConfig::bfp(4), NxConfig::mxfp(5), NxConfig::nxfp(6)] {
+        let via_policy = quantize_checkpoint(&ck, &names, &QuantPolicy::uniform(cfg.clone()));
+        for name in &names {
+            let want = quantize_matrix(ck.get(name).unwrap(), &cfg).dequantize(&cfg);
+            assert_eq!(via_policy.get(name).unwrap(), &want, "{} {name}", cfg.name());
+        }
+        // non-quantizable tensors untouched
+        assert_eq!(via_policy.get("embed").unwrap(), ck.get("embed").unwrap());
+    }
+}
+
+/// `KvPlans`-built caches (the policy path) store and decode the exact
+/// bits of `KvCache::new` (the legacy single-config constructor) for
+/// every format, including the packed streams.
+#[test]
+fn uniform_kv_plans_bit_identical_to_legacy_cache() {
+    let dim = 45; // partial tail block
+    let mut rng = Rng::seeded(31);
+    for cfg in all_formats() {
+        let plans = KvPlans::from_policy(&QuantPolicy::uniform(cfg.clone()), 1).unwrap().unwrap();
+        let (kp, vp) = plans.layers[0].clone();
+        let mut via_policy = KvCache::with_plans(dim, kp, vp, 8);
+        let mut legacy = KvCache::new(dim, cfg.clone());
+        for _ in 0..6 {
+            let k: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.2)).collect();
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.2)).collect();
+            via_policy.append(&k, &v);
+            legacy.append(&k, &v);
+        }
+        assert_eq!(via_policy.stores(), legacy.stores(), "{}", cfg.name());
+        let (pk, pv) = via_policy.dequantize(8);
+        let (lk, lv) = legacy.dequantize(8);
+        assert_eq!(pk.data, lk.data);
+        assert_eq!(pv.data, lv.data);
+        assert_eq!(via_policy.footprint_bits(), legacy.footprint_bits());
+    }
+}
+
+/// Tokens a request generates on an engine with the given KV policy.
+fn generate(policy: &QuantPolicy, reqs: &[GenRequest]) -> Vec<Vec<i32>> {
+    let sp = spec();
+    let mut eng = DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), policy, 2);
+    let mut sched = Scheduler::new(2, Scheduler::DEFAULT_PROMOTE_AFTER);
+    for r in reqs {
+        sched.enqueue(r.clone());
+    }
+    let mut resps = eng.serve_continuous(&mut sched).unwrap();
+    resps.sort_by_key(|r| r.id);
+    resps.into_iter().map(|r| r.tokens).collect()
+}
+
+fn reqs() -> Vec<GenRequest> {
+    vec![
+        GenRequest { id: 0, prompt: vec![7, 3, 11, 2], max_new: 6 },
+        GenRequest { id: 1, prompt: vec![9, 2], max_new: 4 },
+        GenRequest { id: 2, prompt: vec![4, 11, 5, 1, 8], max_new: 5 },
+    ]
+}
+
+/// Serving under `QuantPolicy::uniform(cfg)` generates exactly the tokens
+/// the legacy `Option<NxConfig>` engine shapes generate (the From
+/// conversions are those shapes verbatim), across formats.
+#[test]
+fn uniform_policy_generations_match_legacy_shapes() {
+    let rs = reqs();
+    for cfg in [NxConfig::bfp(4), NxConfig::mxfp(5), NxConfig::nxfp(4), NxConfig::nxfp(6)] {
+        let uniform = generate(&QuantPolicy::uniform(cfg.clone()), &rs);
+        let via_from: QuantPolicy = Some(cfg.clone()).into();
+        assert_eq!(uniform, generate(&via_from, &rs), "{}", cfg.name());
+        // and a policy that spells the same uniform config rule-by-rule
+        let spelled = QuantPolicy::parse(&format!("kv={}", cfg.spec_name().unwrap())).unwrap();
+        assert_eq!(uniform, generate(&spelled, &rs), "{} spelled", cfg.name());
+    }
+    // fp16 policy == legacy None
+    let none: QuantPolicy = None::<NxConfig>.into();
+    assert_eq!(generate(&QuantPolicy::fp16(), &rs), generate(&none, &rs));
+}
+
+/// The acceptance-criteria scenario: a mixed policy
+/// (`weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4`) serves end-to-end on
+/// `SynthBackend` with the per-class footprint reported, and each KV
+/// stream's packed bits follow that stream's config exactly.
+#[test]
+fn mixed_policy_serves_end_to_end_with_per_class_footprint() {
+    let sp = spec();
+    let policy = QuantPolicy::parse("weights=nxfp4,kv.k=nxfp5,kv.v=mxfp4").unwrap();
+    // weight classes resolve independently of the KV side
+    assert_eq!(policy.resolve(TensorClass::weight("l0.wq")).unwrap().bits, 4);
+    let mut eng = DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, 2);
+    let mut sched = Scheduler::new(2, Scheduler::DEFAULT_PROMOTE_AFTER);
+    let rs = reqs();
+    for r in &rs {
+        sched.enqueue(r.clone());
+    }
+    let resps = eng.serve_continuous(&mut sched).unwrap();
+    assert_eq!(resps.len(), rs.len());
+    for (r, resp) in rs.iter().zip({
+        let mut v = resps.clone();
+        v.sort_by_key(|x| x.id);
+        v
+    }) {
+        assert_eq!(resp.generated, r.max_new, "request {} did not complete", r.id);
+    }
+    let m = eng.metrics;
+    // per-class footprint is reported and split by stream config: both
+    // streams hold the same rows, so the split follows the two configs'
+    // per-row footprints exactly
+    assert!(m.kv_bits_packed_k > 0 && m.kv_bits_packed_v > 0);
+    assert_eq!(m.kv_bits_packed, m.kv_bits_packed_k + m.kv_bits_packed_v);
+    let (ck, cv) = (NxConfig::nxfp(5), NxConfig::mxfp(4));
+    let d = spec().d_model;
+    assert_eq!(
+        m.kv_bits_packed_k * cv.footprint_bits(d),
+        m.kv_bits_packed_v * ck.footprint_bits(d),
+        "per-stream split does not follow the configs' accounting"
+    );
+    assert!(m.kv_savings() > 0.5, "kv savings {}", m.kv_savings());
+}
+
+/// Mixed-stream and per-layer KV policies store, per stream and layer,
+/// exactly what a uniform cache of that config stores — and the engine's
+/// generations change when precision changes (the policy is live, not
+/// cosmetic).
+#[test]
+fn mixed_kv_streams_are_bit_identical_per_class() {
+    let (l, s, d) = (2usize, 12usize, 24usize);
+    let policy = QuantPolicy::parse("layers.0.kv=mxfp6,kv.k=nxfp5,kv.v=mxfp4").unwrap();
+    let plans = KvPlans::from_policy(&policy, l).unwrap().unwrap();
+    // layer 0 both streams mxfp6; layer 1 split nxfp5/mxfp4
+    assert_eq!(plans.layers[0].0.cfg.name(), "MxFP6-E2M3");
+    assert_eq!(plans.layers[0].1.cfg.name(), "MxFP6-E2M3");
+    assert_eq!(plans.layers[1].0.cfg.name(), "NxFP5 (NM+AM+CR)");
+    assert_eq!(plans.layers[1].1.cfg.name(), "MxFP4-E2M1");
+    let mut kv = SlotKv::from_plans(&plans, d, s);
+    let mut uni6 = KvCache::new(d, NxConfig::mxfp(6));
+    let mut uni5 = KvCache::new(d, NxConfig::nxfp(5));
+    let mut uni4 = KvCache::new(d, NxConfig::mxfp(4));
+    let mut rng = Rng::seeded(33);
+    for _ in 0..5 {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        kv.append(0, &k, &v);
+        kv.append(1, &k, &v);
+        uni6.append(&k, &v);
+        uni5.append(&k, &k); // K stream comparison uses the K rows
+        uni4.append(&v, &v); // V stream comparison uses the V rows
+    }
+    let caches = kv.caches();
+    assert_eq!(caches[0].stores().0, uni6.stores().0, "layer 0 K");
+    assert_eq!(caches[0].stores().1, uni6.stores().1, "layer 0 V");
+    assert_eq!(caches[1].stores().0, uni5.stores().0, "layer 1 K");
+    assert_eq!(caches[1].stores().1, uni4.stores().1, "layer 1 V");
+
+    // precision changes propagate to generations: a 4-bit-value policy
+    // and a 6-bit-value policy disagree on this workload (long decodes
+    // accumulate enough value-stream error to flip greedy argmaxes;
+    // divergence verified against the Python oracle simulation)
+    let rs = vec![
+        GenRequest { id: 0, prompt: vec![7, 3, 11, 2], max_new: 16 },
+        GenRequest { id: 1, prompt: vec![4, 11, 5, 1, 8], max_new: 14 },
+    ];
+    let coarse = generate(&QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap(), &rs);
+    let fine = generate(&QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp6").unwrap(), &rs);
+    assert_ne!(coarse, fine, "value-stream precision had no observable effect");
+    // determinism: the same mixed policy twice is bit-identical
+    assert_eq!(coarse, generate(&QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap(), &rs));
+}
+
+/// Mixed KV policies survive the full slot lifecycle — chunked prefill
+/// (bulk appends) and continuous admission churn — bit-identically to
+/// solo runs, the same invariant the scheduler pins for uniform configs.
+#[test]
+fn mixed_policy_invariant_under_chunked_prefill() {
+    let policy = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap();
+    let rs = reqs();
+    let sp = spec();
+    let run = |budget: usize| -> Vec<Vec<i32>> {
+        let mut eng = DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, 2);
+        eng.set_prefill_budget(budget);
+        let mut sched = Scheduler::new(2, Scheduler::DEFAULT_PROMOTE_AFTER);
+        sched.set_prefill_budget(budget);
+        for r in &rs {
+            sched.enqueue(r.clone());
+        }
+        let mut resps = eng.serve_continuous(&mut sched).unwrap();
+        resps.sort_by_key(|r| r.id);
+        resps.into_iter().map(|r| r.tokens).collect()
+    };
+    let unchunked = run(1);
+    for budget in [3usize, 16, usize::MAX] {
+        assert_eq!(run(budget), unchunked, "budget {budget} diverged under mixed KV");
+    }
+}
+
+/// Engine construction rejects policies that mix FP16 and quantized KV
+/// streams (the one unsupported corner) with a useful error.
+#[test]
+fn partially_quantized_kv_policy_is_rejected() {
+    let policy = QuantPolicy::parse("kv.k=nxfp4").unwrap(); // kv.v stays fp16
+    let err = KvPlans::from_policy(&policy, 2).unwrap_err().to_string();
+    assert!(err.contains("FP16"), "unhelpful error: {err}");
+    // kv_uniform flags it for the eval-artifact path too
+    assert!(policy.kv_uniform(2).is_err());
+    // and a weights-only policy is fine: engine runs baseline KV
+    let weights_only = QuantPolicy::parse("weights=nxfp4").unwrap();
+    let sp = spec();
+    let eng = DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &weights_only, 1);
+    assert!(eng.kv_plans().is_none());
+}
+
+/// `KvStream`/`TensorClass` resolution drives SlotKv construction: the
+/// interned plans are shared (pointer-equal) across layers and slots.
+#[test]
+fn slot_admission_shares_interned_plans() {
+    use std::sync::Arc;
+    let policy = QuantPolicy::parse("kv=nxfp4").unwrap();
+    let plans = KvPlans::from_policy(&policy, 3).unwrap().unwrap();
+    let a = SlotKv::from_plans(&plans, 24, 8);
+    let b = SlotKv::from_plans(&plans, 24, 8);
+    // both slots' caches point at the one interned plan
+    let plan0 = &plans.layers[0].0;
+    for slot in [&a, &b] {
+        for cache in slot.caches() {
+            assert_eq!(cache.cfg_k().name(), "NxFP4 (NM+AM+CR)");
+        }
+    }
+    assert!(Arc::ptr_eq(&plans.layers[1].0.plan, &plan0.plan));
+    assert!(Arc::ptr_eq(&plans.layers[2].1.lut, &plan0.lut));
+    // resolution vocabulary sanity: kv.k/kv.v are distinct classes
+    assert_eq!(
+        policy.resolve(TensorClass::kv(0, KvStream::Key)).unwrap(),
+        policy.resolve(TensorClass::kv(2, KvStream::Value)).unwrap()
+    );
+}

@@ -12,7 +12,7 @@
 
 use nxfp::coordinator::scheduler::Scheduler;
 use nxfp::coordinator::{DecodeEngine, GenRequest, SynthBackend};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
 use nxfp::quant::kv_cache::KvCache;
 use nxfp::util::proptest::check;
@@ -33,8 +33,9 @@ fn kv_cfg() -> NxConfig {
 
 fn engine(budget: usize, max_batch: usize) -> DecodeEngine {
     let sp = spec();
+    let policy = QuantPolicy::uniform(kv_cfg());
     let mut eng =
-        DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), Some(kv_cfg()), max_batch);
+        DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, max_batch);
     eng.set_prefill_budget(budget);
     eng
 }

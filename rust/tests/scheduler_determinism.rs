@@ -23,7 +23,7 @@
 use nxfp::bench_util::StepTtft;
 use nxfp::coordinator::scheduler::Scheduler;
 use nxfp::coordinator::{DecodeEngine, GenRequest, GenResponse, SlotState, SynthBackend};
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
 
 fn spec() -> LmSpec {
@@ -32,7 +32,10 @@ fn spec() -> LmSpec {
 
 fn engine(kv: Option<NxConfig>, max_batch: usize) -> DecodeEngine {
     let sp = spec();
-    DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), kv, max_batch)
+    // Option<NxConfig> lowers to the legacy-shaped policies
+    // (QuantPolicy::uniform / QuantPolicy::fp16) via From
+    let policy: QuantPolicy = kv.into();
+    DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, max_batch)
 }
 
 /// Tokens a request generates running completely alone (batch of 1).

@@ -8,7 +8,7 @@ use std::time::Duration;
 use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::{ServeOpts, ServerHandle};
 use nxfp::coordinator::GenRequest;
-use nxfp::formats::NxConfig;
+use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::{Checkpoint, LmSpec};
 
 #[test]
@@ -28,7 +28,7 @@ fn server_completes_all_requests_and_batches() {
         PathBuf::from("artifacts"),
         spec,
         ck,
-        Some(NxConfig::nxfp(4)),
+        QuantPolicy::uniform(NxConfig::nxfp(4)),
         ServeOpts {
             max_batch: 4,
             batch_window: Duration::from_millis(20),
@@ -82,7 +82,7 @@ fn server_shutdown_without_requests_is_clean() {
         PathBuf::from("artifacts"),
         spec,
         ck,
-        None,
+        QuantPolicy::fp16(),
         ServeOpts {
             max_batch: 2,
             batch_window: Duration::from_millis(1),
