@@ -30,11 +30,12 @@ import os
 import sys
 
 # substrings that mark a lower-is-better metric; anything else (tok_s,
-# blocks_s, speedup...) is reported as higher-is-better. "growth" is
-# hotpath_serving's per-step-cost flatness ratio (~1.0 flat, >1 means
-# decode work grows with cache fill) — lower is better there too, as is
-# "bits" (effective storage bits per element).
-LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth", "bits")
+# blocks_s, speedup, dedup_factor, prefix_hit_rate...) is reported as
+# higher-is-better. "growth" is hotpath_serving's per-step-cost flatness
+# ratio (~1.0 flat, >1 means decode work grows with cache fill) — lower
+# is better there too, as are "bits" (effective storage bits per element)
+# and "_kib" (absolute footprints, e.g. the dedup-aware packed-KV bytes).
+LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth", "bits", "_kib")
 
 # Non-smoke regressions worse than this factor become ::warning::
 # annotations in the PR summary.
@@ -159,6 +160,14 @@ def selftest():
     assert regression_factor("p95_ms", 10.0, 25.0) == 2.5  # lower-better rise
     assert regression_factor("p95_ms", 10.0, 9.0) is None
     assert regression_factor("effective_bits", 4.0, 9.0) == 2.25  # "bits" is lower-better
+    # prefix-cache metrics: dedup_factor and prefix_hit_rate are
+    # higher-is-better (a collapse to 1x sharing is the regression);
+    # the dedup-aware footprint in KiB and TTFT-in-steps are lower-is-better
+    assert regression_factor("dedup_factor", 2.0, 0.8) == 2.5
+    assert regression_factor("dedup_factor", 1.2, 2.4) is None  # more sharing: improvement
+    assert regression_factor("prefix_hit_rate", 0.9, 0.3) == 3.0
+    assert regression_factor("kv_unique_kib", 100.0, 250.0) == 2.5
+    assert regression_factor("ttft_mean_steps", 4.0, 10.0) == 2.5
     # non-comparable inputs
     assert regression_factor("tok_s", None, 5.0) is None
     assert regression_factor("tok_s", 0, 5.0) is None

@@ -8,6 +8,7 @@ binds) rejects; the text parser reassigns ids and round-trips cleanly.
 See /opt/xla-example/README.md.
 
 Usage: python -m compile.aot --out-dir ../artifacts [--tiny] [--skip-kvq]
+           [--kvq-layers nxfp5,mxfp4,... (2*n_layers tokens, repeatable)]
 """
 
 import argparse
@@ -54,6 +55,37 @@ GOLDEN_CONFIGS = {
     "nxfp4_nm_am": ref.NxConfig.nxfp_nm_am(4),
     "mxfp8": ref.NxConfig(bits=8, elem_mx=(4, 3), base_mx=True),
 }
+
+
+def kvq_layered_artifact_name(tokens) -> str:
+    """Mirror of rust `kvq_layered_artifact_name` (rust/src/main.rs): FNV-1a
+    64-bit over the comma-joined canonical format tokens (layer order, K
+    before V, "fp16" for unquantized streams), truncated to 24 bits. The
+    two sides must agree bit-for-bit or `nxfp eval` loads a missing
+    artifact — the hash is pinned by tests on both sides."""
+    h = 0xCBF29CE484222325
+    for b in ",".join(tokens).encode():
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return f"eval_step_kvq_layers_{h & 0xFFFFFF:06x}"
+
+
+def parse_kvq_layers(arg: str, n_layers: int):
+    """`--kvq-layers` value -> (tokens, [(k_cfg, v_cfg)] per layer).
+    The value is 2*n_layers comma-separated tokens, layer order with K
+    before V; "fp16" leaves a stream unquantized."""
+    tokens = [t.strip() for t in arg.split(",")]
+    if len(tokens) != 2 * n_layers:
+        raise ValueError(
+            f"--kvq-layers wants {2 * n_layers} tokens (K,V per layer), got {len(tokens)}")
+    bad = sorted(set(t for t in tokens if t != "fp16" and t not in KVQ_CONFIGS))
+    if bad:
+        raise ValueError(f"unknown KV format tokens {bad} (known: fp16, {' '.join(KVQ_CONFIGS)})")
+    if all(t == "fp16" for t in tokens):
+        raise ValueError("--kvq-layers is all fp16: that is plain eval_step")
+    cfg = lambda t: None if t == "fp16" else KVQ_CONFIGS[t]
+    layers = [(cfg(tokens[2 * l]), cfg(tokens[2 * l + 1])) for l in range(n_layers)]
+    return tokens, layers
 
 
 def to_hlo_text(lowered) -> str:
@@ -112,6 +144,13 @@ def main():
     ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
     ap.add_argument("--tiny", action="store_true", help="tiny spec (fast tests)")
     ap.add_argument("--skip-kvq", action="store_true")
+    ap.add_argument("--kvq-layers", action="append", default=[],
+                    help="lower one mixed-KV eval step: 2*n_layers comma-"
+                         "separated format tokens (layer order, K before V; "
+                         "'fp16' leaves a stream unquantized), e.g. "
+                         "nxfp5,mxfp4,nxfp5,mxfp4 — repeatable; artifact "
+                         "names come from the same FNV hash `nxfp eval` "
+                         "derives from its --kv policy")
     args = ap.parse_args()
     out_dir = os.path.abspath(args.out_dir)
     os.makedirs(out_dir, exist_ok=True)
@@ -137,6 +176,13 @@ def main():
             lower_and_write(f"eval_step_kvq_{fname}",
                             model.make_eval_step(spec, kv_cfg=cfg),
                             params + [tok_eval], out_dir)
+    kvq_layer_lines = []
+    for arg in args.kvq_layers:
+        tokens, kv_layers = parse_kvq_layers(arg, spec.n_layers)
+        name = kvq_layered_artifact_name(tokens)
+        lower_and_write(name, model.make_eval_step(spec, kv_layers=kv_layers),
+                        params + [tok_eval], out_dir)
+        kvq_layer_lines.append(f"kvq_layers {name} {','.join(tokens)}\n")
     L, S, D = spec.n_layers, spec.seq_len, spec.d_model
     decode_args = params + [
         jax.ShapeDtypeStruct((DECODE_BATCH,), i32),
@@ -156,6 +202,8 @@ def main():
                 f"decode_batch {DECODE_BATCH}\n")
         f.write(f"params {n}\n")
         f.write("kvq " + " ".join(KVQ_CONFIGS) + "\n")
+        for line in kvq_layer_lines:
+            f.write(line)
     print("  manifest.txt written")
 
 

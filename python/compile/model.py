@@ -10,6 +10,10 @@ gains are shaped (1, d). Step signatures:
 * eval_step(params…, tokens[B,S+1])             -> (sum_nll, count)
 * score_step(params…, tokens[B,S+1])            -> (nll[B,S],)
 * eval_step_kvq_<fmt>(params…, tokens[B,S+1])   -> (sum_nll, count)
+* eval_step_kvq_layers_<hash>(params…, tokens[B,S+1]) -> (sum_nll, count)
+  (mixed per-layer K/V formats; <hash> = FNV-1a over the format tokens,
+  computed identically by `aot.kvq_layered_artifact_name` and rust
+  `kvq_layered_artifact_name`)
 * decode_step(params…, tok[B], pos[B], k_cache[B,L,S,D], v_cache[B,L,S,D])
     -> (logits[B,V], k_new[B,L,D], v_new[B,L,D])
 
@@ -88,17 +92,18 @@ def _rmsnorm(x, g):
 
 
 def _attention(spec: LmSpec, p, l, x, kv_quant=None):
-    """Causal self-attention over a full sequence. `kv_quant` optionally
-    fake-quantizes K and V (the paper's KV-cache compression) via the L1
-    Pallas kernel."""
+    """Causal self-attention over a full sequence. `kv_quant(x, l, stream)`
+    optionally fake-quantizes K and V (the paper's KV-cache compression)
+    via the L1 Pallas kernel; the layer index and stream ("k"/"v") let a
+    mixed policy pick a different format per stream."""
     b, s, d = x.shape
     h, hd = spec.n_heads, spec.head_dim
     q = x @ p[f"l{l}.wq"]
     k = x @ p[f"l{l}.wk"]
     v = x @ p[f"l{l}.wv"]
     if kv_quant is not None:
-        k = kv_quant(k)
-        v = kv_quant(v)
+        k = kv_quant(k, l, "k")
+        v = kv_quant(v, l, "v")
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
     k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
@@ -165,16 +170,32 @@ def make_train_step(spec: LmSpec):
     return train_step
 
 
-def make_eval_step(spec: LmSpec, kv_cfg: ref.NxConfig = None, use_pallas=True):
+def make_eval_step(spec: LmSpec, kv_cfg: ref.NxConfig = None, kv_layers=None,
+                   use_pallas=True):
     """(params…, tokens) -> (sum_nll, count). With `kv_cfg`, K/V activations
     are fake-quantized through the Pallas kernel (the paper's weight+KV
-    setting — weights are quantized on the Rust side before being fed)."""
+    setting — weights are quantized on the Rust side before being fed).
+
+    `kv_layers` lowers a *mixed* KV policy instead: a list of `(k_cfg,
+    v_cfg)` pairs, one per layer, where a `None` entry leaves that stream
+    at fp16. Mutually exclusive with `kv_cfg` (which is the uniform
+    special case: `kv_layers=[(cfg, cfg)] * n_layers`)."""
 
     n = len(param_names(spec))
+    if kv_cfg is not None and kv_layers is not None:
+        raise ValueError("pass kv_cfg or kv_layers, not both")
+    fq = fakequant.fakequant_tensor if use_pallas else fakequant.fakequant_ref_jnp
     kv_quant = None
     if kv_cfg is not None:
-        fq = fakequant.fakequant_tensor if use_pallas else fakequant.fakequant_ref_jnp
-        kv_quant = lambda x: fq(x, kv_cfg)
+        kv_quant = lambda x, l, stream: fq(x, kv_cfg)
+    elif kv_layers is not None:
+        if len(kv_layers) != spec.n_layers:
+            raise ValueError(
+                f"kv_layers has {len(kv_layers)} entries for {spec.n_layers} layers")
+
+        def kv_quant(x, l, stream):
+            cfg = kv_layers[l][0 if stream == "k" else 1]
+            return x if cfg is None else fq(x, cfg)
 
     def eval_step(*args):
         params = list(args[:n])

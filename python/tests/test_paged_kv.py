@@ -1,0 +1,395 @@
+"""Executable mirror of the Rust paged-KV machinery (rust/src/quant/page.rs,
+kv_cache.rs Stream paging, coordinator/scheduler.rs PrefixCache).
+
+The container has no cargo toolchain, so the Rust side is desk-checked; this
+file re-implements the page pool, COW append rule, radix prefix cache, and
+dedup accounting in ~100 lines of Python and drives them through the same
+scenarios the Rust unit/integration tests pin (same geometries, same
+expected refcounts, same dedup factor). A divergence between the two
+implementations shows up as a failure here against the numbers documented
+in rust/tests/prefix_sharing.rs.
+
+Also pins the cross-language artifact-name contract: `nxfp eval` (rust
+kvq_layered_artifact_name) and `aot.py --kvq-layers` must derive the same
+FNV-1a hash from the same format tokens, or eval loads a missing artifact.
+"""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+aot = pytest.importorskip("compile.aot")
+
+
+# ---------------------------------------------------------------- mirrors
+
+
+class PagePool:
+    """Mirror of rust `quant::page::PagePool`: refcounted fixed-size pages."""
+
+    def __init__(self, page_rows):
+        self.page_rows = page_rows
+        self.entries = {}  # id -> [rows(list), refs, accounted]
+        self.next_id = 0
+        self.cow_copies = 0
+
+    def alloc(self):
+        pid = self.next_id
+        self.next_id += 1
+        self.entries[pid] = [[], 1, False]
+        return pid
+
+    def retain(self, pid):
+        self.entries[pid][1] += 1
+
+    def release(self, pid):
+        e = self.entries[pid]
+        e[1] -= 1
+        if e[1] == 0:
+            del self.entries[pid]
+
+    def refs(self, pid):
+        return self.entries[pid][1]
+
+    def rows(self, pid):
+        return self.entries[pid][0]
+
+    def cow(self, pid, keep_rows):
+        """Copy the first keep_rows into a fresh exclusive page and drop
+        one reference on the shared original."""
+        new = self.alloc()
+        self.entries[new][0] = list(self.entries[pid][0][:keep_rows])
+        self.release(pid)
+        self.cow_copies += 1
+        return new
+
+    def live_pages(self):
+        return len(self.entries)
+
+    def shared_pages(self):
+        return sum(1 for e in self.entries.values() if e[1] > 1)
+
+
+class Stream:
+    """Mirror of one packed KV stream (rust kv_cache.rs `Stream`): a page
+    table over the pool, COW-on-first-divergent-append."""
+
+    def __init__(self, pool):
+        self.pool = pool
+        self.pages = []
+        self.fill = 0
+
+    def adopt(self, rows, page_ids):
+        assert self.fill == 0 and not self.pages
+        for pid in page_ids:
+            self.pool.retain(pid)
+        self.pages = list(page_ids)
+        self.fill = rows
+
+    def append(self, row):
+        local = self.fill % self.pool.page_rows
+        if local == 0 and self.fill == len(self.pages) * self.pool.page_rows:
+            self.pages.append(self.pool.alloc())
+        tail = self.pages[-1]
+        if self.pool.refs(tail) > 1:
+            tail = self.pool.cow(tail, local)
+            self.pages[-1] = tail
+        rows = self.pool.rows(tail)
+        del rows[local:]  # adopted tail may hold rows past our fill
+        rows.append(row)
+        self.fill += 1
+
+    def logical(self):
+        out = []
+        for i, pid in enumerate(self.pages):
+            take = min(self.fill - i * self.pool.page_rows, self.pool.page_rows)
+            out.extend(self.pool.rows(pid)[:take])
+        return out
+
+    def take_dedup_rows(self):
+        """Mirror of take_dedup_bits in row units: charge each page once
+        across all completed streams."""
+        total = 0
+        for i, pid in enumerate(self.pages):
+            e = self.pool.entries[pid]
+            if not e[2]:
+                e[2] = True
+                total += min(self.fill - i * self.pool.page_rows, self.pool.page_rows)
+        return total
+
+    def drop(self):
+        for pid in self.pages:
+            self.pool.release(pid)
+        self.pages, self.fill = [], 0
+
+
+class PrefixCache:
+    """Mirror of the scheduler's radix tree: nodes = (edge, entry, children)."""
+
+    def __init__(self):
+        self.nodes = [[[], None, []]]
+        self.entries = []  # (rows, page_ids); pool refs elided in the mirror
+
+    def lookup(self, prompt):
+        node, depth, best = 0, 0, None
+        while depth < len(prompt):
+            nxt = next(
+                (c for c in self.nodes[node][2]
+                 if self.nodes[c][0][0] == prompt[depth]),
+                None,
+            )
+            if nxt is None:
+                break
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            depth += m
+            best = (depth, self.nodes[nxt][1])
+            if m < len(edge):
+                break
+            node = nxt
+        return best
+
+    def register(self, prompt, rows, page_ids):
+        if not prompt:
+            return
+        hit = self.lookup(prompt)
+        if hit and hit[0] == len(prompt):
+            return
+        entry = len(self.entries)
+        self.entries.append((rows, page_ids))
+        node, depth = 0, 0
+        while True:
+            nxt = next(
+                (c for c in self.nodes[node][2]
+                 if self.nodes[c][0][0] == prompt[depth]),
+                None,
+            )
+            if nxt is None:
+                self.nodes.append([list(prompt[depth:]), entry, []])
+                self.nodes[node][2].append(len(self.nodes) - 1)
+                return
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            if m == len(edge):
+                depth += m
+                node = nxt
+                if depth == len(prompt):
+                    self.nodes[nxt][1] = entry
+                    return
+                continue
+            # split the edge at m: intermediate node inherits the child
+            head, tail = edge[:m], edge[m:]
+            self.nodes[nxt][0] = tail
+            mid = len(self.nodes)
+            self.nodes.append([head, self.nodes[nxt][1], [nxt]])
+            self.nodes[node][2] = [mid if c == nxt else c for c in self.nodes[node][2]]
+            depth += m
+            if depth == len(prompt):
+                self.nodes[mid][1] = entry
+            else:
+                self.nodes.append([list(prompt[depth:]), entry, []])
+                self.nodes[mid][2].append(len(self.nodes) - 1)
+            return
+
+
+# ------------------------------------------------------- mirror scenarios
+
+
+def test_radix_longest_prefix_matches_rust_unit_test():
+    """Same prompts and expectations as scheduler.rs
+    radix_lookup_finds_longest_registered_prefix."""
+    pc = PrefixCache()
+    pc.register([1, 2, 3, 4], 4, [])
+    pc.register([1, 2, 9], 3, [])
+    assert pc.lookup([1, 2, 3, 4]) == (4, 0)
+    assert pc.lookup([1, 2, 3, 7]) == (3, 0)  # partial edge
+    assert pc.lookup([1, 2, 9, 5]) == (3, 1)
+    assert pc.lookup([1, 2, 5]) == (2, 0)  # stops at the split point
+    assert pc.lookup([7, 1]) is None
+    pc.register([1, 2, 3, 4], 4, [])  # covered: no new entry
+    assert len(pc.entries) == 2
+
+
+def test_cow_preserves_the_donor_and_diverges_the_adopter():
+    pool = PagePool(4)
+    donor = Stream(pool)
+    for r in range(6):
+        donor.append(("d", r))
+    # register rows 0..4 (one full page) the way the scheduler would
+    shared = donor.pages[:1]
+    for pid in shared:
+        pool.retain(pid)
+
+    adopter = Stream(pool)
+    adopter.adopt(4, shared)
+    assert pool.refs(shared[0]) == 3  # donor + cache + adopter
+    adopter.append(("a", 4))
+    # divergence is in a fresh page; the shared page is untouched
+    assert pool.refs(shared[0]) == 3
+    assert adopter.logical() == [("d", 0), ("d", 1), ("d", 2), ("d", 3), ("a", 4)]
+    assert donor.logical() == [("d", r) for r in range(6)]
+    assert pool.cow_copies == 0  # page-aligned adoption never copies
+
+    donor.drop()
+    adopter.drop()
+    assert pool.refs(shared[0]) == 1  # cache ref survives
+    for pid in shared:
+        pool.release(pid)
+    assert pool.live_pages() == 0
+
+
+def test_partial_tail_cow_at_every_split_point():
+    """Mirror of prefix_sharing.rs cow_divergence_is_bit_identical_at_every
+    split point: adopt L rows for every page-local offset, then diverge."""
+    for l in range(5, 13):
+        pool = PagePool(4)
+        donor = Stream(pool)
+        for r in range(13):
+            donor.append(("d", r))
+        n_pages = -(-l // 4)
+        shared = donor.pages[:n_pages]
+        for pid in shared:
+            pool.retain(pid)
+
+        adopter = Stream(pool)
+        adopter.adopt(l, shared)
+        before = donor.logical()
+        for r in range(l, 15):
+            adopter.append(("a", r))
+        assert donor.logical() == before, f"split {l}: donor mutated"
+        assert adopter.logical() == [("d", r) for r in range(l)] + [
+            ("a", r) for r in range(l, 15)
+        ], f"split {l}"
+        # a mid-page split must have COWed the shared tail exactly once
+        assert pool.cow_copies == (1 if l % 4 else 0), f"split {l}"
+        donor.drop()
+        adopter.drop()
+        for pid in shared:
+            pool.release(pid)
+        assert pool.live_pages() == 0, f"split {l}: leak"
+
+
+def test_dedup_factor_closes_to_exactly_two():
+    """The symmetric workload pinned by prefix_sharing.rs
+    dedup_footprint_math_is_pinned_exactly: 4 requests x 18 rows, 12
+    shared -> packed 72 row-units, dedup 18 + 3*6 = 36."""
+    pool = PagePool(4)
+    donor = Stream(pool)
+    for r in range(18):
+        donor.append(("sys", r) if r < 12 else ("d0", r))
+    shared = donor.pages[:3]  # rows 0..12
+    for pid in shared:
+        pool.retain(pid)
+
+    packed = dedup = 0
+    packed += donor.fill
+    dedup += donor.take_dedup_rows()
+    donor.drop()
+    for i in range(1, 4):
+        s = Stream(pool)
+        s.adopt(12, shared)
+        for r in range(12, 18):
+            s.append((f"d{i}", r))
+        packed += s.fill
+        dedup += s.take_dedup_rows()
+        s.drop()
+    assert (packed, dedup) == (72, 36)
+    assert packed / dedup == 2.0
+
+    for pid in shared:
+        pool.release(pid)
+    assert pool.live_pages() == 0
+
+
+# ------------------------------------------- cross-language artifact names
+
+
+def test_layered_artifact_names_pin_the_rust_hashes():
+    """Must match rust/src/main.rs layered_kvq_artifact_names_pin_the_token
+    hash — both sides FNV-1a the same comma-joined tokens."""
+    cases = {
+        "nxfp5,mxfp4,nxfp5,mxfp4": "eval_step_kvq_layers_c83f63",
+        "mxfp6,fp16,nxfp4,fp16": "eval_step_kvq_layers_a4b3ae",
+        "nxfp4,nxfp4": "eval_step_kvq_layers_619c6b",
+    }
+    for joined, want in cases.items():
+        assert aot.kvq_layered_artifact_name(joined.split(",")) == want
+
+
+def test_parse_kvq_layers_validation():
+    tokens, layers = aot.parse_kvq_layers("nxfp5,mxfp4,fp16,fp16", 2)
+    assert tokens == ["nxfp5", "mxfp4", "fp16", "fp16"]
+    assert layers[0][0].bits == 5 and layers[0][1].bits == 4
+    assert layers[1] == (None, None)
+    with pytest.raises(ValueError, match="wants 4 tokens"):
+        aot.parse_kvq_layers("nxfp5,mxfp4", 2)
+    with pytest.raises(ValueError, match="unknown KV format"):
+        aot.parse_kvq_layers("nxfp5,mxfp4,fp16,int8", 2)
+    with pytest.raises(ValueError, match="all fp16"):
+        aot.parse_kvq_layers("fp16,fp16,fp16,fp16", 2)
+
+
+# ----------------------------------------------------- kv_layers lowering
+
+
+SPEC = model.LmSpec.tiny()
+
+
+def _init_params(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    shapes = model.param_shapes(spec)
+    for name in model.param_names(spec):
+        r, c = shapes[name]
+        if r == 1:
+            out.append(np.ones((r, c), np.float32))
+        else:
+            std = min(0.02, (2.0 / (r + c)) ** 0.5)
+            out.append(rng.normal(0, std, size=(r, c)).astype(np.float32))
+    return out
+
+
+def _tokens(spec, batch=2, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, spec.vocab, size=(batch, spec.seq_len + 1), dtype=np.int32)
+
+
+def test_kv_layers_uniform_agrees_with_kv_cfg():
+    params, toks = _init_params(SPEC), _tokens(SPEC)
+    cfg = ref.NxConfig(**{**ref.NxConfig.nxfp(4).__dict__, "block_size": 16})
+    uniform, _ = model.make_eval_step(SPEC, kv_cfg=cfg, use_pallas=False)(*params, toks)
+    layered, _ = model.make_eval_step(
+        SPEC, kv_layers=[(cfg, cfg)] * SPEC.n_layers, use_pallas=False
+    )(*params, toks)
+    assert float(uniform) == float(layered)
+
+
+def test_kv_layers_none_entries_stay_fp16():
+    params, toks = _init_params(SPEC), _tokens(SPEC)
+    base, _ = model.make_eval_step(SPEC)(*params, toks)
+    noop, _ = model.make_eval_step(
+        SPEC, kv_layers=[(None, None)] * SPEC.n_layers, use_pallas=False
+    )(*params, toks)
+    assert float(noop) == float(base)
+    # quantizing only layer 0's K stream perturbs the loss but keeps it sane
+    cfg = ref.NxConfig(**{**ref.NxConfig.nxfp(4).__dict__, "block_size": 16})
+    kv_layers = [(cfg, None)] + [(None, None)] * (SPEC.n_layers - 1)
+    mixed, _ = model.make_eval_step(SPEC, kv_layers=kv_layers, use_pallas=False)(
+        *params, toks
+    )
+    assert float(mixed) != float(base)
+    assert abs(float(mixed) - float(base)) / float(base) < 0.30
+
+
+def test_kv_cfg_and_kv_layers_are_mutually_exclusive():
+    cfg = ref.NxConfig.nxfp(4)
+    with pytest.raises(ValueError, match="not both"):
+        model.make_eval_step(SPEC, kv_cfg=cfg, kv_layers=[(cfg, cfg)] * SPEC.n_layers)
+    with pytest.raises(ValueError, match="entries"):
+        model.make_eval_step(SPEC, kv_layers=[(cfg, cfg)])

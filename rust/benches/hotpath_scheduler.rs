@@ -16,7 +16,10 @@
 //! scenario sweeps the chunked-prefill budget (1 = unchunked vs 16/64):
 //! long prompts with short answers are where per-token prefill inflates
 //! TTFT, and the sweep reports wall-clock latency plus deterministic
-//! TTFT-in-steps. With `NXFP_BENCH_JSON=<dir>`, appends records to
+//! TTFT-in-steps. A third scenario runs shared-system-prompt traffic
+//! through the paged-KV prefix cache (on vs off) and gates on
+//! bit-identical generations, dedup factor > 1, and strictly fewer
+//! steps. With `NXFP_BENCH_JSON=<dir>`, appends records to
 //! `BENCH_scheduler.json`. Set `NXFP_BENCH_SMOKE=1` for a seconds-scale
 //! CI smoke run.
 
@@ -115,6 +118,51 @@ fn prefill_heavy_traffic(
         }
     }
     reqs
+}
+
+/// Shared-system-prompt traffic: every request opens with the same
+/// `sys_len`-token system prompt and differs only in a short user suffix
+/// — the regime the paged-KV prefix cache targets (one packed copy of
+/// the shared prefix, per-request pages only for the suffixes).
+fn shared_prefix_traffic(n: usize, sys_len: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    let sys: Vec<i32> = (0..sys_len).map(|_| rng.below(60) as i32 + 1).collect();
+    (0..n)
+        .map(|i| {
+            let mut prompt = sys.clone();
+            prompt.extend((0..4).map(|_| rng.below(60) as i32 + 1));
+            GenRequest { id: i as u64, prompt, max_new: 4 }
+        })
+        .collect()
+}
+
+/// Continuous run with the prefix cache on or off, tracking the
+/// deterministic TTFT-in-steps alongside the responses.
+fn run_prefix(
+    engine: &mut DecodeEngine,
+    reqs: &[GenRequest],
+    budget: usize,
+    cache: bool,
+) -> (Vec<GenResponse>, StepTtft, u64) {
+    engine.set_prefill_budget(budget);
+    let mut sched = Scheduler::new(MAX_BATCH, Scheduler::DEFAULT_PROMOTE_AFTER);
+    sched.set_prefill_budget(budget);
+    if cache {
+        sched.enable_prefix_cache(engine.page_pool(), Scheduler::DEFAULT_PREFIX_ENTRIES);
+    }
+    for r in reqs {
+        sched.enqueue(r.clone());
+    }
+    let mut out = Vec::new();
+    let mut ttft = StepTtft::new();
+    let mut step = 0u64;
+    while sched.has_work() {
+        let done = engine.step_continuous(&mut sched).expect("prefix step failed");
+        step += 1;
+        ttft.observe(step, sched.slots());
+        ttft.observe_done(step, &done);
+        out.extend(done);
+    }
+    (out, ttft, step)
 }
 
 /// Continuous run at a prefill budget, tracking deterministic
@@ -278,6 +326,81 @@ fn main() {
         b1.3,
         b16.4,
         b1.4
+    );
+
+    // ---- prefix sharing on shared-system-prompt traffic -----------------
+    banner("HotpathScheduler", "paged-KV prefix cache, shared system prompt");
+    let sys_len = seq / 2;
+    let n_reqs = bursts * per_burst;
+    let budget = 16usize;
+    let mut rng = Rng::seeded(44);
+    let shared = shared_prefix_traffic(n_reqs, sys_len, &mut rng);
+    println!(
+        "traffic: {n_reqs} requests sharing a {sys_len}-token system prompt \
+         + 4-token user suffixes, prefill budget {budget}, KV {}\n",
+        kv.name()
+    );
+    let mut t = Table::new(&[
+        "prefix cache", "steps", "ttft mean steps", "hit rate", "dedup", "kv unique KiB",
+    ]);
+    let mut runs = Vec::new();
+    for cache in [false, true] {
+        let label = if cache { "on" } else { "off" };
+        let mut eng = engine(seq, &kv);
+        let (resps, ttft, steps) = run_prefix(&mut eng, &shared, budget, cache);
+        assert_eq!(resps.len(), shared.len(), "prefix cache {label}: lost responses");
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            resps.into_iter().map(|r| (r.id, r.tokens)).collect();
+        toks.sort();
+        let m = eng.metrics;
+        let hit_rate = eng.serving.prefix_hit_rate();
+        t.row(&[
+            label.to_string(),
+            format!("{steps}"),
+            format!("{:.1}", ttft.mean()),
+            format!("{:.0}%", hit_rate * 100.0),
+            format!("{:.2}x", m.dedup_factor()),
+            format!("{}", m.kv_bits_packed_dedup() / 8 / 1024),
+        ]);
+        emit_bench_json(
+            "scheduler",
+            &format!("prefix-cache-{label}"),
+            &kv.name(),
+            &kv.name(),
+            &[
+                ("tok_s", m.tokens_per_sec()),
+                ("engine_steps", steps as f64),
+                ("ttft_mean_steps", ttft.mean()),
+                ("prefix_hit_rate", hit_rate),
+                ("dedup_factor", m.dedup_factor()),
+                ("kv_unique_kib", (m.kv_bits_packed_dedup() / 8 / 1024) as f64),
+            ],
+        );
+        runs.push((toks, ttft.mean(), steps, hit_rate, m.dedup_factor()));
+    }
+    t.print();
+    let (off_run, on_run) = (&runs[0], &runs[1]);
+    assert_eq!(off_run.0, on_run.0, "prefix cache changed a generation");
+    println!(
+        "\nprefix cache on vs off: identical generations, hit rate {:.0}%, \
+         dedup {:.2}x, ttft mean {:.1} -> {:.1} steps, engine steps {} -> {} \
+         (acceptance: dedup > 1x and strictly fewer steps at bit-identical output)",
+        on_run.3 * 100.0,
+        on_run.4,
+        off_run.1,
+        on_run.1,
+        off_run.2,
+        on_run.2
+    );
+    assert!(
+        on_run.4 > 1.0 && on_run.1 < off_run.1 && on_run.2 < off_run.2,
+        "prefix cache must dedup (got {:.2}x) and cut deterministic TTFT \
+         ({:.1} vs {:.1}) and engine steps ({} vs {})",
+        on_run.4,
+        on_run.1,
+        off_run.1,
+        on_run.2,
+        off_run.2
     );
 
     // ---- mixed-precision KV policy on the same bursty traffic ----------

@@ -161,6 +161,17 @@ pub struct ServingMetrics {
     pub promoted: u64,
     /// Requests rejected at validation (empty/over-long prompt).
     pub rejected: u64,
+    /// Admissions that adopted a cached prompt prefix (≥ 1 shared row).
+    pub prefix_hits: u64,
+    /// Admissions that asked the prefix cache and found nothing (only
+    /// counted while the cache is enabled, so hits + misses == lookups).
+    pub prefix_misses: u64,
+    /// Prompt rows adopted per prefix-cache hit — the prefill steps each
+    /// hit skipped are `ceil(rows / budget)` fewer than a cold admission.
+    pub prefix_rows: Histogram,
+    /// Pool pages referenced by ≥ 2 holders, sampled once per engine step
+    /// while the prefix cache is enabled (the dedup gauge over time).
+    pub shared_pages: Histogram,
 }
 
 impl Default for ServingMetrics {
@@ -176,11 +187,25 @@ impl Default for ServingMetrics {
             admitted: 0,
             promoted: 0,
             rejected: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_rows: Histogram::for_counts(),
+            shared_pages: Histogram::for_counts(),
         }
     }
 }
 
 impl ServingMetrics {
+    /// Fraction of prefix-cache lookups that adopted at least one row
+    /// (0.0 when the cache is disabled or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_hits + self.prefix_misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / lookups as f64
+    }
+
     /// Human-readable one-block summary for logs and the CLI.
     pub fn summary(&self) -> String {
         let ms = |s: f64| s * 1e3;
@@ -205,6 +230,19 @@ impl ServingMetrics {
                 self.prefill_chunk.max(),
                 self.step_prefill_tokens.mean(),
                 self.step_decode_tokens.mean()
+            ));
+        }
+        if self.prefix_hits + self.prefix_misses > 0 {
+            out.push_str(&format!(
+                "\nprefix cache hit rate {:.0}% ({} of {} lookups)  \
+                 adopted rows mean/max {:.1}/{:.0}  shared pages mean/max {:.1}/{:.0}",
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_hits,
+                self.prefix_hits + self.prefix_misses,
+                self.prefix_rows.mean(),
+                self.prefix_rows.max(),
+                self.shared_pages.mean(),
+                self.shared_pages.max()
             ));
         }
         out
@@ -336,5 +374,21 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("latency"));
         assert!(s.contains("admitted 1"));
+        // prefix-cache line only renders once a lookup happened
+        assert!(!s.contains("prefix cache"));
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        m.prefix_rows.record(48.0);
+        assert!(m.summary().contains("prefix cache hit rate 75% (3 of 4 lookups)"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_handles_empty_and_mixed() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_misses = 2;
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_hits = 6;
+        assert_eq!(m.prefix_hit_rate(), 0.75);
     }
 }

@@ -48,18 +48,37 @@
 //! exactly the lane state the unchunked schedule builds. Budget 1 makes
 //! phase A a no-op — bit-for-bit the legacy schedule. See
 //! `ARCHITECTURE.md` for the policy and the invariance contract.
+//!
+//! # Paged KV and prefix sharing
+//!
+//! Quantized slots no longer own their packed rows: every [`KvCache`]
+//! borrows fixed-size pages from the engine's shared
+//! [`PagePool`] (see `quant/page.rs`), and the continuous scheduler keeps
+//! a radix-tree **prefix cache** over completed prompt prefills. At
+//! admission the longest shared prompt prefix's pages are mapped into the
+//! new slot read-only (refcount bumps, zero re-quantization); chunked
+//! prefill then only pays for the *suffix*, and the first divergent
+//! append copy-on-writes the partially covered tail page. With the
+//! prefix cache off, every page has exactly one owner and scheduling is
+//! bit-identical to the pre-paging engine; with it on, generations stay
+//! bit-identical (per-slot purity + deterministic quantization: the same
+//! prompt prefix produces the same packed rows) while TTFT-in-steps and
+//! the dedup-aware footprint ([`Metrics::dedup_factor`]) improve on
+//! shared-prefix traffic.
 
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
 use anyhow::Result;
+use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use crate::formats::{NxConfig, QuantPolicy};
 use crate::models::{Checkpoint, LmSpec};
 use crate::quant::kv_cache::{KvCache, KvPlans};
+use crate::quant::page::{PageId, PagePool, DEFAULT_KV_PAGE_ROWS};
 use crate::runtime::{lit, Runtime, Step};
 use crate::train::params_to_literals;
 
@@ -105,6 +124,14 @@ pub struct Metrics {
     pub kv_bits_packed_v: u64,
     /// FP16 bits the same completed caches would have occupied.
     pub kv_bits_fp16: u64,
+    /// Dedup-aware key-stream footprint: like `kv_bits_packed_k`, but
+    /// every **page** is charged the first time a completed request
+    /// references it and never again — pages shared across slots by the
+    /// prefix cache count once pool-wide. With prefix sharing off this
+    /// equals `kv_bits_packed_k` exactly (every page has one owner).
+    pub kv_bits_packed_dedup_k: u64,
+    /// Dedup-aware value-stream footprint (see `kv_bits_packed_dedup_k`).
+    pub kv_bits_packed_dedup_v: u64,
 }
 
 impl Metrics {
@@ -114,6 +141,18 @@ impl Metrics {
 
     pub fn kv_savings(&self) -> f64 {
         1.0 - self.kv_bits_packed as f64 / self.kv_bits_fp16.max(1) as f64
+    }
+
+    /// Dedup-aware packed footprint (both streams, shared pages once).
+    pub fn kv_bits_packed_dedup(&self) -> u64 {
+        self.kv_bits_packed_dedup_k + self.kv_bits_packed_dedup_v
+    }
+
+    /// How much the per-slot packed totals overcount actual pool bytes:
+    /// `kv_bits_packed / kv_bits_packed_dedup`. Exactly 1.0 with prefix
+    /// sharing off; > 1.0 when slots shared prefix pages.
+    pub fn dedup_factor(&self) -> f64 {
+        self.kv_bits_packed as f64 / self.kv_bits_packed_dedup().max(1) as f64
     }
 }
 
@@ -324,11 +363,13 @@ impl StepBackend for SynthBackend {
 /// is O(new rows) instead of O(total fill) and there is **no intermediate
 /// f32 staging mirror** (PR 1 kept one for lane mobility, doubling
 /// resident f32 KV per slot; PR 3 deleted it). A slot moves to a different
-/// lane either by a lane-to-lane slab copy (`DecodeEngine::move_lane` —
-/// watermarks stay valid, nothing is re-decoded) or, when the old lane is
-/// gone, by [`SlotKv::resync_full_into`], which re-decodes the whole
-/// prefix from the packed streams. Dropping a `SlotKv` releases the packed
-/// blocks (finished slots free immediately).
+/// lane by a lane-to-lane slab copy (`DecodeEngine::move_lane` —
+/// watermarks stay valid, nothing is re-decoded); if the old lane is gone,
+/// resetting each cache's watermark (`KvCache::reset_watermark`) makes the
+/// next sync replay the whole prefix from the packed pages — the same
+/// mechanism a prefix-adopted slot uses for its very first sync. Dropping
+/// a `SlotKv` releases its page references (finished slots free
+/// immediately; pages shared with other slots or the prefix cache live on).
 pub struct SlotKv {
     caches: Vec<KvCache>,
     /// Lane rows (the artifact's fixed context length `S`).
@@ -348,13 +389,29 @@ impl SlotKv {
     /// One cache per layer from a policy-resolved [`KvPlans`] table:
     /// per-layer, per-stream configs, with encode plans and decode LUTs
     /// shared by `Arc` — admitting a slot builds no plans at all (the
-    /// engine interned them once).
+    /// engine interned them once). Pages come from a **private** pool;
+    /// serving slots use [`SlotKv::from_plans_in`] with the engine's
+    /// shared pool so prefixes can be shared across slots.
     pub fn from_plans(plans: &KvPlans, dim: usize, pad_len: usize) -> Self {
+        let pool = Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS)));
+        Self::from_plans_in(plans, dim, pad_len, pool)
+    }
+
+    /// [`SlotKv::from_plans`] over a caller-provided shared [`PagePool`]
+    /// (every layer of every slot borrows pages from the engine's pool).
+    pub fn from_plans_in(
+        plans: &KvPlans,
+        dim: usize,
+        pad_len: usize,
+        pool: Rc<RefCell<PagePool>>,
+    ) -> Self {
         SlotKv {
             caches: plans
                 .layers
                 .iter()
-                .map(|(k, v)| KvCache::with_plans(dim, k.clone(), v.clone(), pad_len))
+                .map(|(k, v)| {
+                    KvCache::with_plans_in(dim, k.clone(), v.clone(), pad_len, pool.clone())
+                })
                 .collect(),
             pad_len,
             dim,
@@ -409,18 +466,37 @@ impl SlotKv {
         }
     }
 
-    /// Rebuild the **entire** decoded prefix (rows `0..fill`) in a lane by
-    /// re-decoding the packed streams — the lane-reassignment fallback for
-    /// when the previous lane's contents cannot be slab-copied. Resets the
-    /// dirty-row watermarks first, so the shared decode routine replays
-    /// every row; the result is bit-identical to what incremental syncs
-    /// had produced. Prefer `DecodeEngine::move_lane` (slab copy, no
-    /// decode) when both lanes are reachable.
-    pub fn resync_full_into(&mut self, k_lane: &mut [f32], v_lane: &mut [f32]) {
-        for cache in &mut self.caches {
-            cache.reset_watermark();
+    /// Adopt a shared prompt prefix of `rows` tokens: map each layer's
+    /// (K, V) page tables into layer `l`'s **empty** cache, refcount-only.
+    /// The watermarks stay 0, so the next [`SlotKv::sync_into`] decodes
+    /// the whole adopted prefix into the slot's lane in one pass — that
+    /// single decode replaces the per-token prefill of `rows` tokens.
+    pub fn adopt_prefix(&mut self, rows: usize, pages: &[(Vec<PageId>, Vec<PageId>)]) {
+        assert_eq!(pages.len(), self.caches.len(), "layer count mismatch");
+        for (cache, (k_ids, v_ids)) in self.caches.iter_mut().zip(pages) {
+            cache.adopt_pages(rows, k_ids, v_ids);
         }
-        self.sync_into(k_lane, v_lane);
+    }
+
+    /// Per-layer (K, V) page tables — what a prefix-cache registration
+    /// records at the prompt→decode transition.
+    pub fn page_table(&self) -> Vec<(Vec<PageId>, Vec<PageId>)> {
+        self.caches
+            .iter()
+            .map(|c| {
+                let (k, v) = c.page_ids();
+                (k.to_vec(), v.to_vec())
+            })
+            .collect()
+    }
+
+    /// Dedup-aware footprint charge `(K bits, V bits)` across layers:
+    /// every referenced page not yet charged pool-wide, marked charged
+    /// (see `KvCache::take_dedup_bits`).
+    pub fn take_dedup_bits(&self) -> (u64, u64) {
+        self.caches.iter().map(|c| c.take_dedup_bits()).fold((0, 0), |(ak, av), (k, v)| {
+            (ak + k, av + v)
+        })
     }
 
     /// Bit-true packed footprint across layers (K and V).
@@ -475,6 +551,11 @@ pub struct Slot {
     /// consumed into the prefill-chunk histogram when the slot feeds its
     /// batched-step token (phase B).
     chunk_fed: usize,
+    /// Whether this slot's finished prompt prefill has been offered to the
+    /// scheduler's prefix cache (`Scheduler::register_prefixes` runs once,
+    /// at the prompt→decode transition, when the packed pages cover
+    /// exactly the prompt rows).
+    prefix_registered: bool,
 }
 
 impl Slot {
@@ -520,6 +601,10 @@ pub struct DecodeEngine {
     /// Per-step token budget for chunked prefill (see
     /// [`DecodeEngine::set_prefill_budget`]); 1 = unchunked.
     prefill_budget: usize,
+    /// Shared page pool every quantized slot's caches borrow from — the
+    /// substrate of cross-slot prefix sharing (unused in FP32 baseline
+    /// mode, where slots carry no packed caches at all).
+    pool: Rc<RefCell<PagePool>>,
     k_f32: Vec<f32>,
     v_f32: Vec<f32>,
 }
@@ -578,9 +663,27 @@ impl DecodeEngine {
             metrics: Metrics::default(),
             serving: ServingMetrics::default(),
             prefill_budget: 1,
+            pool: Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS))),
             k_f32: vec![0.0; n],
             v_f32: vec![0.0; n],
         }
+    }
+
+    /// The engine's shared KV page pool (what a scheduler's prefix cache
+    /// retains entry pages in; see `Scheduler::enable_prefix_cache`).
+    pub fn page_pool(&self) -> Rc<RefCell<PagePool>> {
+        self.pool.clone()
+    }
+
+    /// Replace the page geometry (`--kv-page-rows`). Only valid before
+    /// any slot has allocated pages — page ids don't survive a pool swap.
+    pub fn set_kv_page_rows(&mut self, rows: usize) {
+        assert_eq!(
+            self.pool.borrow().live_pages(),
+            0,
+            "set_kv_page_rows after pages were allocated"
+        );
+        self.pool = Rc::new(RefCell::new(PagePool::new(rows)));
     }
 
     /// Set the per-step token budget for chunked prefill (both scheduling
@@ -642,9 +745,13 @@ impl DecodeEngine {
             state: SlotState::Prefilling,
             cursor: 0,
             output: req.prompt.clone(),
-            kv: self.kv.as_ref().map(|plans| SlotKv::from_plans(plans, d, s)),
+            kv: self
+                .kv
+                .as_ref()
+                .map(|plans| SlotKv::from_plans_in(plans, d, s, self.pool.clone())),
             fill: 0,
             chunk_fed: 0,
+            prefix_registered: false,
             req,
         }
     }
@@ -910,6 +1017,11 @@ impl DecodeEngine {
                     self.metrics.kv_bits_packed_k += kb;
                     self.metrics.kv_bits_packed_v += vb;
                     self.metrics.kv_bits_fp16 += kv.fp16_footprint_bits();
+                    // dedup-aware charge: pages shared with earlier
+                    // completions were already accounted and add zero here
+                    let (dk, dv) = kv.take_dedup_bits();
+                    self.metrics.kv_bits_packed_dedup_k += dk;
+                    self.metrics.kv_bits_packed_dedup_v += dv;
                 }
                 self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
                 self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
@@ -967,7 +1079,23 @@ impl DecodeEngine {
                 self.serving.promoted += 1;
             }
             self.serving.wait_steps.record(adm.waited_steps as f64);
-            let slot = self.make_slot(adm.req, adm.arrival);
+            let mut slot = self.make_slot(adm.req, adm.arrival);
+            // prefix-cache hit: map the shared prefix's packed pages into
+            // the fresh slot (refcount-only) and skip its prefill — the
+            // remaining suffix goes through the ordinary budgeted path
+            if let Some(kv) = slot.kv.as_mut() {
+                match sched.prefix_lookup(&slot.req.prompt) {
+                    Some((rows, pages)) => {
+                        kv.adopt_prefix(rows, &pages);
+                        slot.cursor = rows;
+                        slot.fill = rows;
+                        self.serving.prefix_hits += 1;
+                        self.serving.prefix_rows.record(rows as f64);
+                    }
+                    None if sched.prefix_enabled() => self.serving.prefix_misses += 1,
+                    None => {}
+                }
+            }
             sched.place(b, slot);
         }
     }
@@ -984,6 +1112,12 @@ impl DecodeEngine {
         if sched.active() > 0 {
             self.chunk_prefill(sched.slots_mut())?;
             self.step_slots(sched.slots_mut(), &mut done)?;
+        }
+        // offer freshly finished prefills to the prefix cache (no-op when
+        // the cache is disabled) and sample the shared-page gauge
+        sched.register_prefixes();
+        if sched.prefix_enabled() {
+            self.serving.shared_pages.record(self.pool.borrow().shared_pages() as f64);
         }
         let depth = sched.tick();
         self.serving.queue_depth.record(depth as f64);
@@ -1003,9 +1137,10 @@ impl DecodeEngine {
     /// Move the slot in lane `from` to the free lane `to` with a
     /// lane-to-lane slab copy: O(L·S·D) `memcpy`, **no packed re-decode**
     /// — the `SlotKv` watermarks stay valid because the new lane is
-    /// bit-identical to the old. (The fallback when the source lane is
-    /// unavailable is [`SlotKv::resync_full_into`].) The vacated lane is
-    /// zeroed, preserving the free-lanes-are-zero invariant.
+    /// bit-identical to the old. (When the source lane is unavailable,
+    /// reset each cache's watermark — `KvCache::reset_watermark` — and the
+    /// next sync replays the prefix from the packed pages.) The vacated
+    /// lane is zeroed, preserving the free-lanes-are-zero invariant.
     pub fn move_lane(&mut self, slots: &mut [Option<Slot>], from: usize, to: usize) {
         assert!(from != to, "move_lane: from == to");
         assert!(slots[to].is_none(), "move_lane: target lane {to} occupied");
@@ -1058,9 +1193,11 @@ mod tests {
     }
 
     #[test]
-    fn resync_full_reproduces_lane_after_move() {
-        // lane-reassignment fallback: the packed streams alone must
-        // rebuild the decoded prefix bit-identically in a fresh lane
+    fn watermark_reset_reproduces_lane_after_move() {
+        // lane-reassignment fallback: the packed pages alone must rebuild
+        // the decoded prefix bit-identically in a fresh lane after a
+        // per-cache watermark reset (the stale `resync_full_into` wrapper
+        // was deleted with the paged refactor; this is its contract)
         let (l, s, d) = (2usize, 8usize, 32usize);
         let mut rng = Rng::seeded(82);
         let mut kv = SlotKv::new(l, d, s, &NxConfig::nxfp(5));
@@ -1075,7 +1212,10 @@ mod tests {
         }
         let mut moved_k = vec![0.0f32; l * s * d];
         let mut moved_v = vec![0.0f32; l * s * d];
-        kv.resync_full_into(&mut moved_k, &mut moved_v);
+        for cache in &mut kv.caches {
+            cache.reset_watermark();
+        }
+        kv.sync_into(&mut moved_k, &mut moved_v);
         assert_eq!(moved_k, lane_k);
         assert_eq!(moved_v, lane_v);
     }

@@ -34,13 +34,41 @@
 //! The scheduler owns queue and lanes but never touches tensors; the
 //! engine (`DecodeEngine::step_continuous`) drives admission, stepping,
 //! and metrics. Lane *contents* live in the engine's step slabs; moving a
-//! slot between lanes is `DecodeEngine::move_lane` (slab copy) with
-//! `SlotKv::resync_full_into` (packed re-decode) as the fallback.
+//! slot between lanes is `DecodeEngine::move_lane` (slab copy) with a
+//! per-cache watermark reset (packed re-decode) as the fallback.
+//!
+//! # Prefix cache
+//!
+//! Under quantized KV the scheduler can also keep a **radix tree over
+//! completed prompt prefills** ([`Scheduler::enable_prefix_cache`]): when
+//! a slot finishes its prompt, its per-layer packed page tables are
+//! registered under the prompt's token sequence
+//! ([`Scheduler::register_prefixes`], retaining the pages); at admission
+//! the engine asks for the longest registered prefix of the new prompt
+//! ([`Scheduler::prefix_lookup`]) and maps those pages into the fresh slot
+//! read-only. Deterministic quantization makes this sound: KV row `i`
+//! depends only on tokens `0..=i`, so prompts sharing a token prefix
+//! store bit-identical packed rows for it. A lookup never covers the
+//! *whole* prompt — at least the final prompt token always goes through
+//! the batched step (its logits are sampled), which also guarantees an
+//! adopted slot still prefills at least one token.
+//!
+//! Admission cost becomes **suffix-aware**: the greedy key charges
+//! `ceil(suffix_len / budget)` steps, where `suffix_len` is the prompt
+//! minus its best cached prefix — a long prompt behind a hot system
+//! prompt is as cheap to admit as a short one. Capacity is bounded by
+//! `max_entries` with wholesale **epoch reset** (release every entry's
+//! page refs, clear the tree): crude next to LRU, but eviction is rare,
+//! O(entries), and never leaves dangling page refs.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::time::Instant;
 
-use super::{GenRequest, Slot};
+use crate::quant::page::{PageId, PagePool};
+
+use super::{GenRequest, Slot, SlotState};
 
 /// Which serving loop the front-end drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +108,185 @@ pub struct Admission {
     pub promoted: bool,
 }
 
+/// One registered prefill: the prompt's per-layer page tables, with one
+/// pool ref held per page for as long as the entry lives.
+struct PrefixEntry {
+    /// Prompt rows the page tables cover (== registered prompt length).
+    rows: usize,
+    /// Per-layer `(k_pages, v_pages)`, each `ceil(rows / page_rows)` long.
+    pages: Vec<(Vec<PageId>, Vec<PageId>)>,
+}
+
+/// Node in the radix tree over registered prompts. Every node is created
+/// by some registration whose prompt runs through it, so `entry` is
+/// always a valid index — a lookup that dies partway down an edge can
+/// still adopt from that node's entry (it shares every matched token).
+struct PrefixNode {
+    /// Token labels on the edge from the parent (root edge is empty).
+    edge: Vec<i32>,
+    entry: usize,
+    children: Vec<usize>,
+}
+
+/// Radix tree over completed prompt prefills; see the module docs.
+struct PrefixCache {
+    pool: Rc<RefCell<PagePool>>,
+    nodes: Vec<PrefixNode>,
+    entries: Vec<PrefixEntry>,
+    max_entries: usize,
+}
+
+impl PrefixCache {
+    fn new(pool: Rc<RefCell<PagePool>>, max_entries: usize) -> Self {
+        let max_entries = max_entries.max(1);
+        PrefixCache { pool, nodes: Vec::new(), entries: Vec::new(), max_entries }
+    }
+
+    /// Longest registered prefix of `prompt`: `(matched_rows, entry)`.
+    /// The entry's prompt shares at least `matched_rows` leading tokens,
+    /// so the first `ceil(matched_rows / page_rows)` pages of its tables
+    /// are bit-identical to what `prompt`'s own prefill would produce.
+    fn lookup(&self, prompt: &[i32]) -> Option<(usize, usize)> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let mut node = 0;
+        let mut depth = 0;
+        let mut best = None;
+        loop {
+            let Some(&next) = self.nodes[node]
+                .children
+                .iter()
+                .find(|&&c| self.nodes[c].edge.first() == prompt.get(depth))
+            else {
+                break;
+            };
+            let edge = &self.nodes[next].edge;
+            let mut m = 0;
+            while m < edge.len() && depth + m < prompt.len() && edge[m] == prompt[depth + m] {
+                m += 1;
+            }
+            depth += m;
+            best = Some((depth, self.nodes[next].entry));
+            if m < edge.len() || depth == prompt.len() {
+                break;
+            }
+            node = next;
+        }
+        best
+    }
+
+    /// Register a finished prefill. Retains every page in `pages`; skips
+    /// prompts already fully covered by an existing entry. At capacity the
+    /// whole cache epoch-resets first (releasing every held page ref).
+    fn register(&mut self, prompt: &[i32], pages: Vec<(Vec<PageId>, Vec<PageId>)>) {
+        if prompt.is_empty() {
+            return;
+        }
+        if let Some((rows, _)) = self.lookup(prompt) {
+            if rows == prompt.len() {
+                return;
+            }
+        }
+        if self.entries.len() >= self.max_entries {
+            self.release_all();
+        }
+        let mut pool = self.pool.borrow_mut();
+        for (k, v) in &pages {
+            for &id in k.iter().chain(v.iter()) {
+                pool.retain(id);
+            }
+        }
+        drop(pool);
+        let entry = self.entries.len();
+        self.entries.push(PrefixEntry { rows: prompt.len(), pages });
+        self.insert(prompt, entry);
+    }
+
+    fn insert(&mut self, prompt: &[i32], entry: usize) {
+        if self.nodes.is_empty() {
+            self.nodes.push(PrefixNode { edge: Vec::new(), entry, children: Vec::new() });
+        }
+        let mut node = 0;
+        let mut depth = 0;
+        loop {
+            let child = self.nodes[node]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].edge.first() == prompt.get(depth));
+            let Some(next) = child else {
+                // no edge starts with our next token: hang the remainder
+                // off `node` as a fresh leaf
+                if depth < prompt.len() {
+                    let leaf = self.nodes.len();
+                    self.nodes.push(PrefixNode {
+                        edge: prompt[depth..].to_vec(),
+                        entry,
+                        children: Vec::new(),
+                    });
+                    self.nodes[node].children.push(leaf);
+                }
+                return;
+            };
+            let mut m = 0;
+            while m < self.nodes[next].edge.len()
+                && depth + m < prompt.len()
+                && self.nodes[next].edge[m] == prompt[depth + m]
+            {
+                m += 1;
+            }
+            if m == self.nodes[next].edge.len() {
+                depth += m;
+                if depth == prompt.len() {
+                    return; // existing path already spells the prompt
+                }
+                node = next;
+                continue;
+            }
+            // edge diverges at m: split it with an intermediate node that
+            // inherits `next`'s entry (that entry's prompt runs through it)
+            let tail = self.nodes[next].edge.split_off(m);
+            let head = std::mem::replace(&mut self.nodes[next].edge, tail);
+            let inherited = self.nodes[next].entry;
+            let mid = self.nodes.len();
+            self.nodes.push(PrefixNode { edge: head, entry: inherited, children: vec![next] });
+            let pos = self.nodes[node].children.iter().position(|&c| c == next).unwrap();
+            self.nodes[node].children[pos] = mid;
+            if depth + m < prompt.len() {
+                let leaf = self.nodes.len();
+                self.nodes.push(PrefixNode {
+                    edge: prompt[depth + m..].to_vec(),
+                    entry,
+                    children: Vec::new(),
+                });
+                self.nodes[mid].children.push(leaf);
+            }
+            return;
+        }
+    }
+
+    /// Drop every entry's page refs and clear the tree.
+    fn release_all(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for e in self.entries.drain(..) {
+            for (k, v) in &e.pages {
+                for &id in k.iter().chain(v.iter()) {
+                    pool.release(id);
+                }
+            }
+        }
+        drop(pool);
+        self.nodes.clear();
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        self.release_all();
+    }
+}
+
 /// Admission queue + fixed lane pool. See the module docs for the policy.
 pub struct Scheduler {
     queue: VecDeque<Queued>,
@@ -92,6 +299,9 @@ pub struct Scheduler {
     /// by estimated prefill *steps* under this budget, not raw prompt
     /// length.
     prefill_budget: usize,
+    /// Radix prefix cache over completed prefills; `None` until the
+    /// front-end opts in via [`Scheduler::enable_prefix_cache`].
+    prefix: Option<PrefixCache>,
     /// Requests enqueued over the scheduler's lifetime.
     pub enqueued: u64,
 }
@@ -101,6 +311,9 @@ impl Scheduler {
     /// newcomers after this many engine steps.
     pub const DEFAULT_PROMOTE_AFTER: u64 = 64;
 
+    /// Default prefix-cache capacity before an epoch reset.
+    pub const DEFAULT_PREFIX_ENTRIES: usize = 512;
+
     pub fn new(max_batch: usize, promote_after: u64) -> Self {
         assert!(max_batch > 0);
         Scheduler {
@@ -109,7 +322,89 @@ impl Scheduler {
             promote_after: promote_after.max(1),
             step: 0,
             prefill_budget: 1,
+            prefix: None,
             enqueued: 0,
+        }
+    }
+
+    /// Turn on prefix sharing over `pool` (the engine's page pool — see
+    /// [`super::DecodeEngine::page_pool`]). Only meaningful with quantized
+    /// KV: fp16-lane-only slots have no page tables to register, so the
+    /// cache simply stays empty.
+    pub fn enable_prefix_cache(&mut self, pool: Rc<RefCell<PagePool>>, max_entries: usize) {
+        self.prefix = Some(PrefixCache::new(pool, max_entries));
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Rows of `prompt` a registered prefill already covers, capped at
+    /// `prompt.len() - 1` — the final prompt token always runs through the
+    /// batched step so its logits get sampled.
+    fn prefix_rows(&self, prompt: &[i32]) -> usize {
+        let cap = prompt.len().saturating_sub(1);
+        self.prefix
+            .as_ref()
+            .and_then(|pc| pc.lookup(prompt))
+            .map(|(rows, _)| rows.min(cap))
+            .unwrap_or(0)
+    }
+
+    /// Longest shared prefix for a prompt being admitted: the row count
+    /// plus the per-layer page tables covering exactly those rows (the
+    /// entry's tables truncated to `ceil(rows / page_rows)` pages). Pages
+    /// are **not** retained here — adoption
+    /// ([`super::SlotKv::adopt_prefix`]) takes the refs, and nothing can
+    /// release in between on this single-threaded path. Returns `None` on
+    /// a miss or when the match rounds down to zero rows.
+    pub fn prefix_lookup(
+        &self,
+        prompt: &[i32],
+    ) -> Option<(usize, Vec<(Vec<PageId>, Vec<PageId>)>)> {
+        let pc = self.prefix.as_ref()?;
+        let (rows, entry) = pc.lookup(prompt)?;
+        let rows = rows.min(prompt.len().saturating_sub(1));
+        if rows == 0 {
+            return None;
+        }
+        let n_pages = rows.div_ceil(pc.pool.borrow().page_rows());
+        let e = &pc.entries[entry];
+        debug_assert!(e.rows >= rows);
+        let pages = e
+            .pages
+            .iter()
+            .map(|(k, v)| (k[..n_pages].to_vec(), v[..n_pages].to_vec()))
+            .collect();
+        Some((rows, pages))
+    }
+
+    /// Register every slot that just finished its prompt (first step in
+    /// `Decoding`) into the prefix cache. Runs once per slot, at the one
+    /// moment its page tables cover exactly the prompt rows; the engine
+    /// calls this each step after `step_slots`. Registration retains the
+    /// slot's pages — including its current tail, which the slot will
+    /// copy-on-write at its next append.
+    pub fn register_prefixes(&mut self) {
+        let Some(pc) = self.prefix.as_mut() else { return };
+        for slot in self.slots.iter_mut().flatten() {
+            if slot.prefix_registered || slot.state != SlotState::Decoding {
+                continue;
+            }
+            slot.prefix_registered = true;
+            if let Some(kv) = slot.kv.as_ref() {
+                if kv.fill() == slot.req.prompt.len() {
+                    pc.register(&slot.req.prompt, kv.page_table());
+                }
+            }
+        }
+    }
+
+    /// Drop every cached prefix (and the page refs it holds). Leak tests
+    /// use this to prove the pool drains once slots are gone too.
+    pub fn clear_prefix_cache(&mut self) {
+        if let Some(pc) = self.prefix.as_mut() {
+            pc.release_all();
         }
     }
 
@@ -177,9 +472,11 @@ impl Scheduler {
 
     /// Pick the next request to admit: oldest urgent request if any has
     /// waited past `promote_after`, else the cheapest prefill under the
-    /// configured budget — fewest estimated prefill steps, which is
-    /// shortest-prompt-first at budget 1 (FIFO among equals — stable
-    /// because the scan keeps strictly-earlier entries on ties).
+    /// configured budget — fewest estimated prefill steps **for the
+    /// uncached suffix** (a prefix-cache hit makes a long prompt cheap),
+    /// which is shortest-prompt-first at budget 1 with the cache off
+    /// (FIFO among equals — stable because the scan keeps
+    /// strictly-earlier entries on ties).
     pub fn pop_next(&mut self) -> Option<Admission> {
         if self.queue.is_empty() {
             return None;
@@ -192,7 +489,10 @@ impl Scheduler {
             .queue
             .iter()
             .enumerate()
-            .min_by_key(|(i, q)| (self.prefill_steps(q.req.prompt.len()), *i))
+            .min_by_key(|(i, q)| {
+                let suffix = q.req.prompt.len() - self.prefix_rows(&q.req.prompt);
+                (self.prefill_steps(suffix), *i)
+            })
             .map(|(i, _)| i)
             .unwrap();
         let (idx, promoted) = match urgent {
@@ -305,6 +605,112 @@ mod tests {
         assert_eq!(s.queue_depth(), 1);
         assert_eq!(s.tick(), 1);
         assert_eq!(s.step_count(), 1);
+    }
+
+    #[test]
+    fn radix_lookup_finds_longest_registered_prefix() {
+        let pool = Rc::new(RefCell::new(PagePool::new(2)));
+        let mut pc = PrefixCache::new(pool, 8);
+        assert_eq!(pc.lookup(&[1, 2, 3]), None);
+        pc.register(&[1, 2, 3, 4], Vec::new());
+        pc.register(&[1, 2, 9], Vec::new()); // splits the [1,2,3,4] edge
+        assert_eq!(pc.lookup(&[1, 2, 3, 4, 7]), Some((4, 0)));
+        assert_eq!(pc.lookup(&[1, 2, 3, 8]), Some((3, 0))); // partial edge
+        assert_eq!(pc.lookup(&[1, 2, 9, 9]), Some((3, 1)));
+        assert_eq!(pc.lookup(&[1, 2, 8]), Some((2, 0))); // dies at the split
+        assert_eq!(pc.lookup(&[5, 1]), None);
+        // prompts the tree already spells register as no-ops
+        pc.register(&[1, 2], Vec::new());
+        pc.register(&[1, 2, 3, 4], Vec::new());
+        assert_eq!(pc.entries.len(), 2);
+    }
+
+    #[test]
+    fn prefix_lookup_truncates_tables_and_never_covers_whole_prompt() {
+        let pool = Rc::new(RefCell::new(PagePool::new(2)));
+        let mut ids = Vec::new();
+        for _ in 0..4 {
+            ids.push(pool.borrow_mut().alloc(4, 4));
+        }
+        let (ka, kb, va, vb) = (ids[0], ids[1], ids[2], ids[3]);
+        let mut s = Scheduler::new(1, 10);
+        assert!(!s.prefix_enabled());
+        assert!(s.prefix_lookup(&[5, 6]).is_none());
+        s.enable_prefix_cache(pool.clone(), 8);
+        assert!(s.prefix_enabled());
+        let prompt = vec![5, 6, 7, 8];
+        s.prefix.as_mut().unwrap().register(&prompt, vec![(vec![ka, kb], vec![va, vb])]);
+        assert_eq!(pool.borrow().refs(ka), 2); // registration holds a ref
+        // exact re-ask: capped at len-1 = 3 rows, still spanning both pages
+        let (rows, pages) = s.prefix_lookup(&prompt).unwrap();
+        assert_eq!(rows, 3);
+        assert_eq!(pages, vec![(vec![ka, kb], vec![va, vb])]);
+        // 2-row overlap: tables truncated to one page per stream
+        let (rows, pages) = s.prefix_lookup(&[5, 6, 0, 0]).unwrap();
+        assert_eq!(rows, 2);
+        assert_eq!(pages, vec![(vec![ka], vec![va])]);
+        // longer prompt sharing all 4 registered rows: no cap applies
+        assert_eq!(s.prefix_lookup(&[5, 6, 7, 8, 9]).unwrap().0, 4);
+        assert_eq!(s.prefix_lookup(&[5, 0]).unwrap().0, 1);
+        assert!(s.prefix_lookup(&[9, 9]).is_none());
+        // cap rounding to zero rows reports a miss, not a 0-row hit
+        assert!(s.prefix_lookup(&[5]).is_none());
+        // scheduler teardown releases the registration refs
+        drop(s);
+        assert_eq!(pool.borrow().refs(ka), 1);
+        assert_eq!(pool.borrow().shared_pages(), 0);
+    }
+
+    #[test]
+    fn greedy_admission_charges_only_the_uncached_suffix() {
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let mut s = Scheduler::new(2, 100);
+        s.set_prefill_budget(4);
+        s.enable_prefix_cache(pool, 8);
+        let shared: Vec<i32> = (0..32).collect();
+        s.prefix.as_mut().unwrap().register(&shared, Vec::new());
+        let mut long = shared.clone();
+        long.push(99); // 33 tokens but a 1-token suffix after the hit
+        s.enqueue(GenRequest { id: 0, prompt: long, max_new: 4 });
+        s.enqueue(GenRequest { id: 1, prompt: vec![1; 8], max_new: 4 });
+        // ceil(1/4) = 1 step beats ceil(8/4) = 2: the long prompt wins the
+        // greedy pick it would lose without the cache
+        assert_eq!(s.pop_next().unwrap().req.id, 0);
+        assert_eq!(s.pop_next().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn covered_prompt_registers_once() {
+        let pool = Rc::new(RefCell::new(PagePool::new(2)));
+        let mut pc = PrefixCache::new(pool.clone(), 8);
+        let a = pool.borrow_mut().alloc(4, 4);
+        pc.register(&[1, 2], vec![(vec![a], vec![a])]);
+        assert_eq!(pool.borrow().refs(a), 3);
+        pc.register(&[1, 2], vec![(vec![a], vec![a])]);
+        assert_eq!(pool.borrow().refs(a), 3); // covered: no second retain
+        assert_eq!(pc.entries.len(), 1);
+    }
+
+    #[test]
+    fn capacity_epoch_reset_releases_every_held_ref() {
+        let pool = Rc::new(RefCell::new(PagePool::new(2)));
+        let mut pc = PrefixCache::new(pool.clone(), 2);
+        let a = pool.borrow_mut().alloc(4, 4);
+        let b = pool.borrow_mut().alloc(4, 4);
+        let c = pool.borrow_mut().alloc(4, 4);
+        pc.register(&[1, 2], vec![(vec![a], vec![])]);
+        pc.register(&[3, 4], vec![(vec![b], vec![])]);
+        assert_eq!((pool.borrow().refs(a), pool.borrow().refs(b)), (2, 2));
+        // third registration hits max_entries: wholesale epoch reset first
+        pc.register(&[5, 6], vec![(vec![c], vec![])]);
+        assert_eq!((pool.borrow().refs(a), pool.borrow().refs(b)), (1, 1));
+        assert_eq!(pool.borrow().refs(c), 2);
+        assert_eq!(pc.entries.len(), 1);
+        assert!(pc.lookup(&[1, 2]).is_none()); // pre-reset entries are gone
+        assert_eq!(pc.lookup(&[5, 6, 7]).unwrap().0, 2);
+        pc.release_all();
+        assert_eq!(pool.borrow().refs(c), 1);
+        assert_eq!(pool.borrow().shared_pages(), 0);
     }
 
     #[test]

@@ -52,6 +52,15 @@ pub struct ServeOpts {
     /// modes (engine and admission policy); 1 = unchunked per-token
     /// prefill, `usize::MAX` = whole prompts in one step.
     pub prefill_budget: usize,
+    /// Rows per quantized-KV page (`--kv-page-rows`). Page geometry never
+    /// changes packed bytes or generations — it only sets the granularity
+    /// prefix sharing dedups at.
+    pub kv_page_rows: usize,
+    /// Share packed KV pages across prompts with a common token prefix
+    /// (`--prefix-cache`, continuous mode + quantized KV only). Off:
+    /// admission, generations, and packed bytes are bit-identical to a
+    /// build without the cache.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeOpts {
@@ -61,6 +70,8 @@ impl Default for ServeOpts {
             batch_window: Duration::from_millis(5),
             mode: SchedMode::Continuous,
             prefill_budget: DEFAULT_PREFILL_BUDGET,
+            kv_page_rows: crate::quant::page::DEFAULT_KV_PAGE_ROWS,
+            prefix_cache: true,
         }
     }
 }
@@ -96,10 +107,11 @@ impl ServerHandle {
             let mut rt = Runtime::cpu(artifacts_dir)?;
             let mut engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
             engine.set_prefill_budget(opts.prefill_budget);
+            engine.set_kv_page_rows(opts.kv_page_rows);
             let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
             match opts.mode {
                 SchedMode::Continuous => {
-                    run_continuous(&mut engine, &worker_rx, &resp_tx, log)
+                    run_continuous(&mut engine, &worker_rx, &resp_tx, opts.prefix_cache, log)
                 }
                 SchedMode::Wave => run_waves(
                     &mut engine,
@@ -144,12 +156,17 @@ fn run_continuous(
     engine: &mut DecodeEngine,
     worker_rx: &mpsc::Receiver<Msg>,
     resp_tx: &mpsc::Sender<GenResponse>,
+    prefix_cache: bool,
     log: bool,
 ) -> Result<ServeReport> {
     let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
     // admission ranks by prefill steps under the same budget the engine
     // chunks with (one knob: ServeOpts::prefill_budget)
     sched.set_prefill_budget(engine.prefill_budget());
+    // prefix sharing needs packed pages to share: fp16 lanes have none
+    if prefix_cache && engine.kv_plans().is_some() {
+        sched.enable_prefix_cache(engine.page_pool(), Scheduler::DEFAULT_PREFIX_ENTRIES);
+    }
     let mut shutting_down = false;
     // deterministic rejections answer at enqueue time instead of queuing
     // behind real work (admit() re-validates for direct Scheduler users)

@@ -305,6 +305,28 @@ impl QuantPolicy {
         Ok(agreed.flatten().map(|id| self.configs[id].clone()))
     }
 
+    /// Per-layer `(K, V)` KV resolution for consumers that can bake one
+    /// format per stream per layer (the layered kvq eval artifacts —
+    /// see `kvq_layered_artifact_name` in the CLI and `--kvq-layers` in
+    /// aot.py). Unlike [`QuantPolicy::kv_uniform`] this never fails on a
+    /// mixed policy: streams resolving to FP16 come back as `None`
+    /// entries (no fake-quant applied to them). Returns `None` when every
+    /// stream of every layer stays FP16.
+    pub fn kv_layers(&self, n_layers: usize) -> Option<Vec<(Option<NxConfig>, Option<NxConfig>)>> {
+        let layers: Vec<_> = (0..n_layers)
+            .map(|l| {
+                (
+                    self.resolve(TensorClass::kv(l, KvStream::Key)).cloned(),
+                    self.resolve(TensorClass::kv(l, KvStream::Value)).cloned(),
+                )
+            })
+            .collect();
+        if layers.iter().all(|(k, v)| k.is_none() && v.is_none()) {
+            return None;
+        }
+        Some(layers)
+    }
+
     /// Canonical spec-string form. Policies whose configs all have
     /// parseable spec names round-trip: `parse(p.render()) == p`.
     /// Non-canonical configs (custom block size, swept recycle targets…)
@@ -729,6 +751,36 @@ mod tests {
         let l = QuantPolicy::parse("layers.0.kv=mxfp6,kv=nxfp4").unwrap();
         assert!(l.kv_uniform(2).is_err());
         assert!(l.kv_uniform(1).unwrap().is_some()); // only layer 0 exists
+    }
+
+    #[test]
+    fn kv_layers_resolution() {
+        // uniformly fp16 (weights-only): nothing to bake
+        assert!(QuantPolicy::fp16().kv_layers(3).is_none());
+        assert!(QuantPolicy::parse("weights=nxfp4").unwrap().kv_layers(3).is_none());
+        // mixed streams resolve per layer where kv_uniform errors out
+        let m = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap();
+        assert!(m.kv_uniform(2).is_err());
+        let layers = m.kv_layers(2).unwrap();
+        assert_eq!(layers.len(), 2);
+        for (k, v) in &layers {
+            assert_eq!(k.as_ref().unwrap().bits, 5);
+            assert_eq!(v.as_ref().unwrap().name(), "MxFP4-E2M1");
+        }
+        // per-layer override with an fp16 stream: None entry for it
+        let l = QuantPolicy::parse("layers.0.kv.k=mxfp6,kv.v=fp16,kv=nxfp4").unwrap();
+        let layers = l.kv_layers(2).unwrap();
+        assert_eq!(layers[0].0.as_ref().unwrap().name(), "MxFP6-E2M3");
+        assert!(layers[0].1.is_none());
+        assert_eq!(layers[1].0.as_ref().unwrap().bits, 4);
+        assert!(layers[1].1.is_none());
+        // uniform policies agree with kv_uniform on every entry
+        let u = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let cfg = u.kv_uniform(2).unwrap().unwrap();
+        for (k, v) in u.kv_layers(2).unwrap() {
+            assert_eq!(k.as_ref(), Some(&cfg));
+            assert_eq!(v.as_ref(), Some(&cfg));
+        }
     }
 
     #[test]

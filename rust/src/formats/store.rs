@@ -193,6 +193,47 @@ impl BlockStore {
         }
     }
 
+    /// Drop every row past `rows`, keeping the first `rows` bit-identical.
+    /// The copy-on-write primitive of the paged KV cache: a truncated
+    /// clone of a shared page keeps exactly the adopted prefix. A no-op
+    /// when `rows >= self.rows`.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        if rows >= self.rows {
+            return;
+        }
+        let bpr = self.blocks_per_row();
+        self.rows = rows;
+        self.codes.truncate(rows * self.row_len);
+        self.e_shared.truncate(rows * bpr);
+        self.nano.truncate(rows * bpr);
+        self.fmt_mx.truncate(rows * bpr);
+    }
+
+    /// Append the first `rows` rows of `other` (same geometry) as new rows
+    /// of `self`, bit-identically. Because blocks never straddle rows, a
+    /// row's codes and per-block metadata are self-contained slices that
+    /// concatenate freely — this is how a paged cache materializes its
+    /// logical flat stream ([`BlockStore`] page concatenation) and how a
+    /// COW clone copies a prefix.
+    pub fn append_rows_from(&mut self, other: &BlockStore, rows: usize) {
+        assert_eq!(self.row_len, other.row_len, "row_len mismatch");
+        assert_eq!(self.block_size, other.block_size, "block_size mismatch");
+        assert!(rows <= other.rows, "append_rows_from: {} > {} rows", rows, other.rows);
+        let bpr = self.blocks_per_row();
+        self.rows += rows;
+        self.codes.extend_from_slice(&other.codes[..rows * self.row_len]);
+        self.e_shared.extend_from_slice(&other.e_shared[..rows * bpr]);
+        self.nano.extend_from_slice(&other.nano[..rows * bpr]);
+        self.fmt_mx.extend_from_slice(&other.fmt_mx[..rows * bpr]);
+    }
+
+    /// Owned copy of the first `rows` rows (COW page-split helper).
+    pub fn clone_prefix(&self, rows: usize) -> BlockStore {
+        let mut s = BlockStore::new(self.row_len, self.block_size);
+        s.append_rows_from(self, rows);
+        s
+    }
+
     pub fn clear(&mut self) {
         self.rows = 0;
         self.codes.clear();
@@ -271,6 +312,77 @@ mod tests {
         assert_eq!(legacy[1].codes, vec![4]); // row-0 tail block
         let back = BlockStore::from_block_codes(2, 5, 4, &legacy);
         assert_eq!(back, s);
+    }
+
+    /// Filled store with distinct per-cell values (5-value rows, k=2 →
+    /// partial tail block per row) so prefix copies are distinguishable.
+    fn filled(rows: usize) -> BlockStore {
+        let mut s = BlockStore::with_rows(rows, 5, 2);
+        for (i, c) in s.codes.iter_mut().enumerate() {
+            *c = i as u8;
+        }
+        for flat in 0..s.n_blocks() {
+            s.e_shared[flat] = flat as i16 - 7;
+            s.nano[flat] = (flat % 4) as u8;
+            s.fmt_mx[flat] = (flat % 2) as u8;
+        }
+        s
+    }
+
+    #[test]
+    fn truncate_rows_keeps_prefix_bit_identical() {
+        let full = filled(4);
+        for keep in 0..=4 {
+            let mut t = full.clone();
+            t.truncate_rows(keep);
+            assert_eq!(t, full.clone_prefix(keep), "keep={keep}");
+            assert_eq!(t.rows, keep);
+            assert_eq!(t.codes.len(), keep * 5);
+            assert_eq!(t.e_shared.len(), keep * 3);
+        }
+        // truncating past the end is a no-op
+        let mut t = full.clone();
+        t.truncate_rows(9);
+        assert_eq!(t, full);
+    }
+
+    #[test]
+    fn append_rows_from_concatenates_bit_identically() {
+        let full = filled(4);
+        // rebuild row-by-row from single-row prefixal pieces
+        let mut rebuilt = BlockStore::new(5, 2);
+        for r in 0..4 {
+            let mut piece = filled(4);
+            // drop rows before r by shifting: emulate a page holding row r
+            piece.codes.drain(..r * 5);
+            piece.e_shared.drain(..r * 3);
+            piece.nano.drain(..r * 3);
+            piece.fmt_mx.drain(..r * 3);
+            piece.rows -= r;
+            rebuilt.append_rows_from(&piece, 1);
+        }
+        assert_eq!(rebuilt, full);
+        // split/concat round trip at every cut point
+        for cut in 0..=4 {
+            let head = full.clone_prefix(cut);
+            let mut glued = head.clone();
+            let mut tail = full.clone();
+            tail.codes.drain(..cut * 5);
+            tail.e_shared.drain(..cut * 3);
+            tail.nano.drain(..cut * 3);
+            tail.fmt_mx.drain(..cut * 3);
+            tail.rows -= cut;
+            glued.append_rows_from(&tail, tail.rows);
+            assert_eq!(glued, full, "cut={cut}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "append_rows_from")]
+    fn append_rows_from_rejects_overrun() {
+        let mut s = BlockStore::new(5, 2);
+        let other = filled(2);
+        s.append_rows_from(&other, 3);
     }
 
     #[test]

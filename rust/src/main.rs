@@ -51,6 +51,20 @@ pub fn resolve_policy(a: &Args, legacy: &str, legacy_class: &str) -> Result<Quan
 /// `coordinator::DEFAULT_PREFILL_BUDGET` by a unit test).
 const DEFAULT_BUDGET_STR: &str = "64";
 
+/// `--kv-page-rows` default as a CLI string (pinned to
+/// `quant::page::DEFAULT_KV_PAGE_ROWS` by a unit test).
+const DEFAULT_PAGE_ROWS_STR: &str = "16";
+
+/// Parse an `on`/`off` switch (`--prefix-cache`); `1`/`true`/`yes` and
+/// `0`/`false`/`no` are accepted aliases.
+pub fn parse_switch(s: &str) -> Result<bool> {
+    match s.to_lowercase().as_str() {
+        "on" | "1" | "true" | "yes" => Ok(true),
+        "off" | "0" | "false" | "no" => Ok(false),
+        other => Err(anyhow!("bad switch value {other} (want on|off)")),
+    }
+}
+
 /// Parse a per-step prefill token budget: a positive integer, or
 /// `inf`/`max`/`unbounded` for whole-prompt-per-step chunking. 1 disables
 /// chunking (the legacy per-token schedule, bit-for-bit).
@@ -84,6 +98,44 @@ pub fn kvq_artifact_name(cfg: &NxConfig) -> String {
     } else {
         format!("{base}_{}", cfg.digest())
     }
+}
+
+/// Name of the **layered** KV-fake-quant eval artifact for a per-layer
+/// `(K, V)` resolution that is not uniform (see `QuantPolicy::kv_layers`).
+///
+/// The name hashes the comma-joined canonical spec-name tokens in layer
+/// order, K before V, FP16 streams as `fp16` — e.g. 2 layers of
+/// `kv.k=nxfp5,kv.v=mxfp4` hash `"nxfp5,mxfp4,nxfp5,mxfp4"`. aot.py's
+/// `--kvq-layers` builds the identical name from the identical token
+/// string (FNV-1a 64, truncated to 24 bits), so the CLI finds the
+/// artifact the compiler emitted without sharing any Rust-side state.
+/// Configs without a canonical spec name cannot cross the language
+/// boundary and are rejected.
+pub fn kvq_layered_artifact_name(
+    layers: &[(Option<NxConfig>, Option<NxConfig>)],
+) -> Result<String> {
+    let mut tokens = Vec::with_capacity(layers.len() * 2);
+    for (k, v) in layers {
+        for cfg in [k, v] {
+            tokens.push(match cfg {
+                None => "fp16".to_string(),
+                Some(c) => c.spec_name().ok_or_else(|| {
+                    anyhow!(
+                        "config {} has no canonical spec name; \
+                         layered kvq artifacts need parseable formats",
+                        c.name()
+                    )
+                })?,
+            });
+        }
+    }
+    let joined = tokens.join(",");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in joined.as_bytes() {
+        h ^= *byte as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    Ok(format!("eval_step_kvq_layers_{:06x}", h & 0xff_ffff))
 }
 
 fn default_corpus() -> Corpus {
@@ -127,18 +179,25 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let policy = resolve_policy(a, "format", "weights")?;
     let kv_policy = resolve_policy(a, "kv-format", "kv")?;
     let eval_ck = quantize_checkpoint(&ck, &spec.quantizable(), &policy);
-    // the kvq artifacts bake one format into the eval graph, so the KV
-    // side of the policy must be uniform here (serving has no such limit)
-    let kv = kv_policy.kv_uniform(spec.n_layers)?;
-    let step = match &kv {
-        Some(cfg) => rt.load(&kvq_artifact_name(cfg))?,
-        None => rt.load("eval_step")?,
+    // uniform KV policies keep the legacy per-format artifacts; mixed
+    // policies (per-stream or per-layer) route to a layered artifact
+    // whose name bakes the full per-layer resolution (see aot.py
+    // --kvq-layers for the build side)
+    let (step, kv_name) = match kv_policy.kv_uniform(spec.n_layers) {
+        Ok(Some(cfg)) => (rt.load(&kvq_artifact_name(&cfg))?, cfg.name()),
+        Ok(None) => (rt.load("eval_step")?, "FP16".to_string()),
+        Err(_) => {
+            let layers = kv_policy
+                .kv_layers(spec.n_layers)
+                .expect("mixed KV resolution implies a quantized stream");
+            (rt.load(&kvq_layered_artifact_name(&layers)?)?, kv_policy.name())
+        }
     };
     let p = perplexity(&step, &eval_ck, &corpus, spec.seq_len, 8)?;
     println!(
         "weights {:<18} kv {:<10} ppl {:.4}  ({} tokens)",
         policy.name(),
-        kv.as_ref().map(|c| c.name()).unwrap_or("FP16".into()),
+        kv_name,
         p.ppl(),
         p.tokens
     );
@@ -219,6 +278,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let n_req = a.get_usize("requests")?;
     let max_new = a.get_usize("max-new")?;
     let prefill_budget = parse_budget(&a.get_str("prefill-budget"))?;
+    let kv_page_rows = a.get_usize("kv-page-rows")?;
+    if kv_page_rows == 0 {
+        return Err(anyhow!("--kv-page-rows must be positive"));
+    }
+    let prefix_cache = parse_switch(&a.get_str("prefix-cache"))?;
     let corpus = default_corpus();
     let probes = Probe::generate(&corpus.spec, n_req, 99);
     let server = ServerHandle::spawn(
@@ -231,6 +295,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
             batch_window: Duration::from_millis(5),
             mode,
             prefill_budget,
+            kv_page_rows,
+            prefix_cache,
         },
     );
     for (i, p) in probes.iter().enumerate() {
@@ -264,6 +330,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
             "kv packed split: K {} KiB, V {} KiB (per-class footprint)",
             m.kv_bits_packed_k / 8 / 1024,
             m.kv_bits_packed_v / 8 / 1024
+        );
+    }
+    // dedup-aware footprint: with prefix sharing, pages adopted by later
+    // requests were charged once — the factor is 1.0x on disjoint traffic
+    if m.kv_bits_packed > 0 && m.kv_bits_packed_dedup() < m.kv_bits_packed {
+        println!(
+            "kv dedup: {} KiB charged -> {} KiB unique ({:.2}x, shared pages counted once)",
+            m.kv_bits_packed / 8 / 1024,
+            m.kv_bits_packed_dedup() / 8 / 1024,
+            m.dedup_factor()
         );
     }
     println!("{}", report.serving.summary());
@@ -358,6 +434,65 @@ mod tests {
     }
 
     #[test]
+    fn parse_switch_values() {
+        for on in ["on", "ON", "1", "true", "yes"] {
+            assert!(parse_switch(on).unwrap(), "{on}");
+        }
+        for off in ["off", "Off", "0", "false", "no"] {
+            assert!(!parse_switch(off).unwrap(), "{off}");
+        }
+        assert!(parse_switch("maybe").is_err());
+        assert!(parse_switch("").is_err());
+    }
+
+    #[test]
+    fn kv_page_rows_default_tracks_library_constant() {
+        assert_eq!(
+            DEFAULT_PAGE_ROWS_STR.parse::<usize>().unwrap(),
+            nxfp::quant::page::DEFAULT_KV_PAGE_ROWS
+        );
+    }
+
+    #[test]
+    fn layered_kvq_artifact_names_pin_the_token_hash() {
+        use nxfp::formats::policy::KvStream;
+        use nxfp::formats::TensorClass;
+        let layers = |p: &QuantPolicy, n: usize| {
+            (0..n)
+                .map(|l| {
+                    (
+                        p.resolve(TensorClass::kv(l, KvStream::Key)).cloned(),
+                        p.resolve(TensorClass::kv(l, KvStream::Value)).cloned(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        // hashes are pinned so aot.py's independent FNV implementation
+        // must reproduce them from the same token strings (see
+        // test_aot_manifest.py): "nxfp5,mxfp4,nxfp5,mxfp4" etc.
+        let mixed = QuantPolicy::parse("kv.k=nxfp5,kv.v=mxfp4").unwrap();
+        assert_eq!(
+            kvq_layered_artifact_name(&layers(&mixed, 2)).unwrap(),
+            "eval_step_kvq_layers_c83f63"
+        );
+        // per-layer mix with fp16 V streams: "mxfp6,fp16,nxfp4,fp16"
+        let per_layer = QuantPolicy::parse("layers.0.kv.k=mxfp6,kv.v=fp16,kv=nxfp4").unwrap();
+        assert_eq!(
+            kvq_layered_artifact_name(&layers(&per_layer, 2)).unwrap(),
+            "eval_step_kvq_layers_a4b3ae"
+        );
+        // one quantized layer: "nxfp4,nxfp4"
+        let uni = QuantPolicy::parse("kv=nxfp4").unwrap();
+        assert_eq!(
+            kvq_layered_artifact_name(&layers(&uni, 1)).unwrap(),
+            "eval_step_kvq_layers_619c6b"
+        );
+        // non-canonical configs can't cross the aot.py naming boundary
+        let custom = vec![(Some(NxConfig::nxfp(4).with_block_size(16)), None)];
+        assert!(kvq_layered_artifact_name(&custom).is_err());
+    }
+
+    #[test]
     fn kvq_artifact_names() {
         // default configs keep the legacy names (existing artifact
         // directories must still resolve)
@@ -441,6 +576,16 @@ fn main() {
             .opt("requests", Some("16"), "number of requests")
             .opt("max-new", Some("32"), "tokens to generate per request")
             .opt("max-batch", Some("4"), "batch lanes (must match artifact)")
+            .opt(
+                "kv-page-rows",
+                Some(DEFAULT_PAGE_ROWS_STR),
+                "rows per quantized-KV page (sharing granularity)",
+            )
+            .opt(
+                "prefix-cache",
+                Some("on"),
+                "share packed KV across common prompt prefixes: on|off",
+            )
             .parse(rest)
             .map_err(anyhow::Error::from)
             .and_then(|a| cmd_serve(&a)),

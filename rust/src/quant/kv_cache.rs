@@ -17,12 +17,25 @@
 //! stream are identical to a uniform cache of that stream's config
 //! (pinned by `tests/policy_equivalence.rs`).
 //!
-//! Storage + encode hot path: both streams live in flat [`BlockStore`]s
-//! (one contiguous codes buffer each, SoA metadata), and
-//! [`KvCache::append`] quantizes through the stream's resident
-//! [`EncodePlan`] + a shared [`EncodeScratch`] — zero heap allocations per
-//! appended row in steady state (the stores grow amortized; use
-//! [`KvCache::with_capacity`] to pre-reserve a whole context window).
+//! # Paged storage and copy-on-write prefix sharing
+//!
+//! Storage is **paged**: each stream holds a page table of [`PageId`]s
+//! into a shared refcounted [`PagePool`], every page a fixed-row-count
+//! [`BlockStore`] fragment laid out exactly like the old flat stream
+//! (pages concatenate bit-identically — [`KvCache::stores`] materializes
+//! the flat view on demand for tests). Row `r` lives in page
+//! `r / page_rows` at local row `r % page_rows`. This is what lets two
+//! serving slots whose prompts share a token prefix *share the packed
+//! pages covering it*: [`KvCache::adopt_pages`] maps a donor's prefix
+//! pages in read-only (refcount bump, zero copies), and the first
+//! divergent append copy-on-writes only the partially-covered tail page
+//! ([`PagePool::cow`]). Full shared pages are never copied.
+//!
+//! The encode hot path is unchanged: [`KvCache::append`] quantizes
+//! through the stream's resident [`EncodePlan`] + a shared
+//! [`EncodeScratch`] straight into the exclusively-owned tail page —
+//! zero heap allocations per appended row in steady state apart from the
+//! amortized page-granular grows.
 //!
 //! # Incremental dequantization contract
 //!
@@ -38,18 +51,26 @@
 //! * rows `0..watermark()` in the destination are then always
 //!   bit-identical to what a fresh [`KvCache::dequantize`] would produce
 //!   (both paths share one decode routine), and padding rows stay zero;
-//! * if the destination's contents are lost — the slot was reassigned to a
-//!   lane whose previous contents are unknown — call
-//!   [`KvCache::reset_watermark`] first and the next
-//!   [`KvCache::dequantize_into_slab`] re-decodes every row;
+//! * if the destination's contents are lost or were never populated — the
+//!   slot was reassigned to a fresh lane, or the cache adopted packed
+//!   prefix pages that have never been decoded into this lane — the
+//!   watermark is (or is reset to) 0 and the next
+//!   [`KvCache::dequantize_into_slab`] decodes every row from packed;
 //! * [`KvCache::clear`] resets both the cache and the watermark (the
 //!   caller must also zero or discard its staging buffers).
+//!
+//! The watermark is a **logical row counter** — paging does not change
+//! it. An adopted prefix starts with watermark 0, so its first decode
+//! materializes the whole shared prefix from packed pages into the lane
+//! (that one decode pass is the entire prefill cost of a prefix hit).
 //!
 //! Since PR 3 the decode destination is a raw `&mut [f32]` slab — the
 //! serving coordinator points it directly at the slot's lane of the batched
 //! step tensors, so there is no intermediate staging mirror (see
 //! `coordinator::SlotKv`).
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -59,6 +80,7 @@ use crate::formats::{
     BaseFormat, BlockStore, EncodePlan, EncodeScratch, KvStream as StreamKind, NxConfig,
     QuantPolicy, TensorClass,
 };
+use crate::quant::page::{PageId, PagePool, DEFAULT_KV_PAGE_ROWS};
 use crate::tensor::Tensor2;
 
 /// Interned runtime tables for one stream's config: the config itself,
@@ -154,36 +176,99 @@ impl KvPlans {
     }
 }
 
-/// One packed stream (K or V): its plan plus the flat storage.
+/// One packed stream (K or V): its plan plus a page table into the shared
+/// pool. `rows` is the stream's logical length; pages `0..n-1` are always
+/// full (`page_rows` rows each) and the tail page holds `rows % page_rows`
+/// rows once this stream has appended into it — an *adopted* tail may
+/// transiently hold extra donor rows until the first divergent append
+/// truncates or copy-on-writes them away.
 struct Stream {
     plan: KvStreamPlan,
-    store: BlockStore,
+    pool: Rc<RefCell<PagePool>>,
+    pages: Vec<PageId>,
+    rows: usize,
+    row_len: usize,
     blocks_per_row: usize,
 }
 
 impl Stream {
-    fn new(dim: usize, plan: KvStreamPlan, rows: usize) -> Self {
-        let mut store = BlockStore::new(dim, plan.cfg.block_size);
-        store.reserve_rows(rows);
+    fn new(dim: usize, plan: KvStreamPlan, rows: usize, pool: Rc<RefCell<PagePool>>) -> Self {
         let blocks_per_row = dim.div_ceil(plan.cfg.block_size);
-        Stream { plan, store, blocks_per_row }
+        let table_cap = rows.div_ceil(pool.borrow().page_rows().max(1));
+        Stream {
+            plan,
+            pool,
+            pages: Vec::with_capacity(table_cap),
+            rows: 0,
+            row_len: dim,
+            blocks_per_row,
+        }
+    }
+
+    /// Make the tail page exclusively writable with exactly
+    /// `rows % page_rows` local rows, allocating / copy-on-writing /
+    /// truncating as needed, and return its id. The write gate of the
+    /// COW contract: shared tails are split here and nowhere else.
+    fn writable_tail(&mut self) -> PageId {
+        let mut pool = self.pool.borrow_mut();
+        let local = self.rows % pool.page_rows();
+        if local == 0 {
+            // Page boundary: every prior page is exactly full (adopted
+            // page-aligned prefixes only ever donate full pages), so the
+            // next row starts a fresh exclusively-owned page.
+            let id = pool.alloc(self.row_len, self.plan.cfg.block_size);
+            self.pages.push(id);
+            return id;
+        }
+        let id = *self.pages.last().unwrap();
+        if pool.refs(id) > 1 {
+            // Shared tail (prefix adoption): diverge onto a private copy
+            // of just the rows we cover. Sharers keep the original.
+            let new_id = pool.cow(id, local);
+            *self.pages.last_mut().unwrap() = new_id;
+            return new_id;
+        }
+        if pool.rows(id) > local {
+            // Exclusively ours, but it still carries donor rows beyond
+            // our coverage (the sharer side evicted first): drop them.
+            pool.store_mut(id).truncate_rows(local);
+        }
+        id
     }
 
     /// Quantize-append one row through this stream's plan.
     fn append_row(&mut self, row: &[f32], scratch: &mut EncodeScratch) {
-        let r = self.store.push_row();
-        let (codes, e, nano, fmt) = self.store.row_slices_mut(r);
+        let id = self.writable_tail();
+        let mut pool = self.pool.borrow_mut();
+        let store = pool.store_mut(id);
+        let r = store.push_row();
+        let (codes, e, nano, fmt) = store.row_slices_mut(r);
         self.plan.plan.quantize_row_into(row, scratch, codes, e, nano, fmt);
+        self.rows += 1;
     }
 
-    /// Bulk-append `n` rows (one storage grow, per-row encoding unchanged
-    /// → bit-identical to `n` single appends by construction).
-    fn append_rows(&mut self, rows: &[f32], dim: usize, n: usize, scratch: &mut EncodeScratch) {
-        let r0 = self.store.push_rows(n);
-        for (i, row) in rows.chunks(dim).enumerate() {
-            let (codes, e, nano, fmt) = self.store.row_slices_mut(r0 + i);
-            self.plan.plan.quantize_row_into(row, scratch, codes, e, nano, fmt);
+    /// Bulk-append `n` rows. Storage grows page-granular (at most
+    /// `ceil(n / page_rows) + 1` grows per chunk instead of one per
+    /// token); per-row encoding is unchanged, so the packed bits are
+    /// bit-identical to `n` single appends by construction.
+    fn append_rows(&mut self, rows: &[f32], dim: usize, scratch: &mut EncodeScratch) {
+        for row in rows.chunks(dim) {
+            self.append_row(row, scratch);
         }
+    }
+
+    /// Adopt `rows` logical rows held by the given prefix pages (refcount
+    /// bump per page, zero copies). Only valid on an empty stream.
+    fn adopt(&mut self, rows: usize, ids: &[PageId]) {
+        assert_eq!(self.rows, 0, "adopt into a non-empty stream");
+        assert!(self.pages.is_empty());
+        let mut pool = self.pool.borrow_mut();
+        assert_eq!(ids.len(), rows.div_ceil(pool.page_rows()), "page table mismatch");
+        for &id in ids {
+            pool.retain(id);
+            self.pages.push(id);
+        }
+        self.rows = rows;
     }
 
     /// Shared decode routine: rows `from..to` into the row-major `out`
@@ -194,23 +279,76 @@ impl Stream {
         let cfg = &*self.plan.cfg;
         let lut = &*self.plan.lut;
         let base_mx = cfg.base == BaseFormat::Mx;
+        let pool = self.pool.borrow();
+        let page_rows = pool.page_rows();
         for r in from..to {
+            let store = pool.store(self.pages[r / page_rows]);
+            let local = r % page_rows;
             let row = &mut out[r * dim..(r + 1) * dim];
             for (bi, chunk) in row.chunks_mut(cfg.block_size).enumerate() {
-                let flat = r * self.blocks_per_row + bi;
+                let flat = local * self.blocks_per_row + bi;
                 let fmt_mx = if cfg.enable_am {
-                    self.store.fmt_mx[flat] != 0
+                    store.fmt_mx[flat] != 0
                 } else {
                     base_mx
                 };
                 let (table, offset) = lut.table(fmt_mx);
-                let scale = (1.0 + self.store.nano[flat] as f32 / 4.0)
-                    * crate::util::exp2i(self.store.e_shared[flat] as i32 + offset);
-                for (o, &c) in chunk.iter_mut().zip(self.store.block_codes(flat)) {
+                let scale = (1.0 + store.nano[flat] as f32 / 4.0)
+                    * crate::util::exp2i(store.e_shared[flat] as i32 + offset);
+                for (o, &c) in chunk.iter_mut().zip(store.block_codes(flat)) {
                     *o = table[c as usize] * scale;
                 }
             }
         }
+    }
+
+    /// Concatenate the page prefixes into one flat [`BlockStore`] —
+    /// bit-identical to the pre-paging layout (pages never straddle rows,
+    /// so rows concatenate freely; an adopted tail's extra donor rows are
+    /// clipped to this stream's logical length).
+    fn materialize(&self, dim: usize) -> BlockStore {
+        let pool = self.pool.borrow();
+        let page_rows = pool.page_rows();
+        let mut out = BlockStore::new(dim, self.plan.cfg.block_size);
+        out.reserve_rows(self.rows);
+        let mut remaining = self.rows;
+        for &id in &self.pages {
+            let take = remaining.min(page_rows);
+            out.append_rows_from(pool.store(id), take);
+            remaining -= take;
+        }
+        debug_assert_eq!(remaining, 0);
+        out
+    }
+
+    /// Dedup-aware footprint charge: bits of every not-yet-accounted page
+    /// this stream references, marking them accounted. Shared pages are
+    /// thereby charged exactly once pool-wide.
+    fn take_dedup_bits(&self, dim: usize) -> u64 {
+        let mut pool = self.pool.borrow_mut();
+        let bits_per_row = self.plan.cfg.footprint_bits(dim);
+        let mut total = 0u64;
+        for &id in &self.pages {
+            if pool.mark_accounted(id) {
+                total += pool.rows(id) as u64 * bits_per_row;
+            }
+        }
+        total
+    }
+
+    /// Release every page reference (pool recycles zero-ref pages).
+    fn clear(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for id in self.pages.drain(..) {
+            pool.release(id);
+        }
+        self.rows = 0;
+    }
+}
+
+impl Drop for Stream {
+    fn drop(&mut self) {
+        self.clear();
     }
 }
 
@@ -234,24 +372,45 @@ impl KvCache {
         Self::with_capacity(dim, cfg, 0)
     }
 
-    /// Like [`KvCache::new`], but pre-reserves storage for `rows` appended
-    /// rows so a full context window appends without reallocation.
+    /// Like [`KvCache::new`], but sizes the page tables for `rows`
+    /// appended rows up front (pages themselves allocate on demand).
     pub fn with_capacity(dim: usize, cfg: NxConfig, rows: usize) -> Self {
         let plan = KvStreamPlan::new(&cfg);
         Self::with_plans(dim, plan.clone(), plan, rows)
     }
 
-    /// Per-stream plans (the policy-resolved path; plans are normally
-    /// interned in a [`KvPlans`] and shared across layers and slots).
+    /// Per-stream plans with a **private** page pool (default page
+    /// geometry) — the standalone-cache path used by tests and non-serving
+    /// callers. Serving slots share one engine-wide pool via
+    /// [`KvCache::with_plans_in`].
     pub fn with_plans(dim: usize, k: KvStreamPlan, v: KvStreamPlan, rows: usize) -> Self {
+        let pool = Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS)));
+        Self::with_plans_in(dim, k, v, rows, pool)
+    }
+
+    /// Per-stream plans over a caller-provided shared [`PagePool`] — the
+    /// serving path: every slot's caches borrow pages from the engine's
+    /// pool, which is what makes cross-slot prefix sharing possible.
+    pub fn with_plans_in(
+        dim: usize,
+        k: KvStreamPlan,
+        v: KvStreamPlan,
+        rows: usize,
+        pool: Rc<RefCell<PagePool>>,
+    ) -> Self {
         KvCache {
-            k: Stream::new(dim, k, rows),
-            v: Stream::new(dim, v, rows),
+            k: Stream::new(dim, k, rows, pool.clone()),
+            v: Stream::new(dim, v, rows, pool),
             scratch: EncodeScratch::new(),
             dim,
             len: 0,
             clean: 0,
         }
+    }
+
+    /// The pool this cache's pages live in (both streams share it).
+    pub fn page_pool(&self) -> Rc<RefCell<PagePool>> {
+        self.k.pool.clone()
     }
 
     /// The key stream's config.
@@ -274,9 +433,8 @@ impl KvCache {
     }
 
     /// Quantize and append `n` (k, v) row pairs in one bulk operation
-    /// (the chunked-prefill path). Storage for the whole chunk is grown
-    /// **once** per stream ([`BlockStore::push_rows`]) instead of once per
-    /// token, then every row is encoded through the same
+    /// (the chunked-prefill path). Storage grows page-granular instead of
+    /// once per token; every row is encoded through the same
     /// `quantize_row_into` routine as [`KvCache::append`] — the packed
     /// bits are identical to `n` single-row appends by construction.
     /// `k_rows`/`v_rows` are row-major `[n, dim]`.
@@ -286,9 +444,41 @@ impl KvCache {
         if n == 0 {
             return;
         }
-        self.k.append_rows(k_rows, self.dim, n, &mut self.scratch);
-        self.v.append_rows(v_rows, self.dim, n, &mut self.scratch);
+        self.k.append_rows(k_rows, self.dim, &mut self.scratch);
+        self.v.append_rows(v_rows, self.dim, &mut self.scratch);
         self.len += n;
+    }
+
+    /// Adopt a shared prompt prefix: map `rows` logical rows held by the
+    /// given (K-pages, V-pages) tables into this **empty** cache, bumping
+    /// each page's refcount — zero rows are copied or re-quantized. The
+    /// watermark stays 0, so the next decode materializes the adopted
+    /// prefix from packed into the slot's lane; the first append past the
+    /// prefix copy-on-writes a partially-covered tail page.
+    pub fn adopt_pages(&mut self, rows: usize, k_ids: &[PageId], v_ids: &[PageId]) {
+        assert_eq!(self.len, 0, "adopt into a non-empty cache");
+        self.k.adopt(rows, k_ids);
+        self.v.adopt(rows, v_ids);
+        self.len = rows;
+    }
+
+    /// The (K, V) page tables — what a prefix-cache registration records.
+    pub fn page_ids(&self) -> (&[PageId], &[PageId]) {
+        (&self.k.pages, &self.v.pages)
+    }
+
+    /// Pages currently referenced per stream `(K, V)`.
+    pub fn page_count(&self) -> (usize, usize) {
+        (self.k.pages.len(), self.v.pages.len())
+    }
+
+    /// Dedup-aware footprint charge `(K bits, V bits)`: bits of every
+    /// referenced page not yet charged pool-wide, marking them charged.
+    /// Summed over all slots, shared pages count **once** — with prefix
+    /// sharing off this equals [`KvCache::footprint_bits_split`] summed
+    /// over slots, since every page then has exactly one owner.
+    pub fn take_dedup_bits(&self) -> (u64, u64) {
+        (self.k.take_dedup_bits(self.dim), self.v.take_dedup_bits(self.dim))
     }
 
     /// Rows already decoded into the caller's staging tensors (the
@@ -297,11 +487,13 @@ impl KvCache {
         self.clean
     }
 
-    /// The packed (K, V) [`BlockStore`]s — the stored bits themselves.
+    /// The packed (K, V) streams materialized as flat [`BlockStore`]s —
+    /// bit-identical to the pre-paging layout regardless of page geometry.
     /// Exposed so the chunk-invariance and policy-equivalence tests can
-    /// pin bit-identity of the packed streams; hot paths never need this.
-    pub fn stores(&self) -> (&BlockStore, &BlockStore) {
-        (&self.k.store, &self.v.store)
+    /// pin bit-identity of the packed streams; hot paths never need this
+    /// (it allocates and copies — the stored bits live in the pages).
+    pub fn stores(&self) -> (BlockStore, BlockStore) {
+        (self.k.materialize(self.dim), self.v.materialize(self.dim))
     }
 
     /// Dequantize the whole cache into `(len, dim)` tensors, padded to
@@ -339,10 +531,12 @@ impl KvCache {
     }
 
     /// Forget decode progress: the next [`KvCache::dequantize_into_slab`]
-    /// re-decodes every stored row. The lane-reassignment fallback — when a
-    /// slot moves to a lane whose previous contents are unknown and a
-    /// lane-to-lane slab copy was not possible, the packed streams are the
-    /// only source of truth left.
+    /// re-decodes every stored row from the packed pages. The
+    /// lane-reassignment fallback — when a slot moves to a lane whose
+    /// previous contents are unknown and a lane-to-lane slab copy was not
+    /// possible, the packed pages are the only source of truth left.
+    /// (This is also exactly the state [`KvCache::adopt_pages`] leaves a
+    /// fresh cache in: packed rows, watermark 0.)
     pub fn reset_watermark(&mut self) {
         self.clean = 0;
     }
@@ -369,9 +563,11 @@ impl KvCache {
         2 * (self.len * self.dim) as u64 * 16
     }
 
+    /// Release every page reference and reset the cache to empty (pages
+    /// whose refcount hits zero are recycled by the pool).
     pub fn clear(&mut self) {
-        self.k.store.clear();
-        self.v.store.clear();
+        self.k.clear();
+        self.v.clear();
         self.len = 0;
         self.clean = 0;
     }
@@ -563,21 +759,136 @@ mod tests {
     }
 
     #[test]
-    fn with_capacity_appends_without_reallocating() {
-        let dim = 64;
-        let rows = 16;
-        let mut cache = KvCache::with_capacity(dim, NxConfig::nxfp(4), rows);
-        let cap_codes = cache.stores().0.codes.capacity();
-        let cap_meta = cache.stores().0.e_shared.capacity();
-        assert!(cap_codes >= rows * dim);
+    fn page_geometry_tracks_appends() {
+        // pages fill to exactly page_rows before a new one is allocated,
+        // and the materialized flat view always covers len rows
+        let dim = 40;
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let plan = KvStreamPlan::new(&NxConfig::nxfp(4));
+        let mut cache = KvCache::with_plans_in(dim, plan.clone(), plan, 0, pool.clone());
         let row: Vec<f32> = (0..dim).map(|i| i as f32 * 0.1).collect();
-        for _ in 0..rows {
+        for n in 1..=9 {
             cache.append(&row, &row);
+            let want_pages = n.div_ceil(4);
+            assert_eq!(cache.page_count(), (want_pages, want_pages), "len={n}");
+            let (ks, _) = cache.stores();
+            assert_eq!(ks.rows, n);
         }
-        // steady state: the pre-reserved buffers never grew
-        assert_eq!(cache.stores().0.codes.capacity(), cap_codes);
-        assert_eq!(cache.stores().0.e_shared.capacity(), cap_meta);
-        assert_eq!(cache.len, rows);
+        // K and V streams allocate separate pages from the shared pool
+        assert_eq!(pool.borrow().live_pages(), 2 * 3);
+        assert_eq!(pool.borrow().shared_pages(), 0);
+        drop(cache);
+        assert_eq!(pool.borrow().live_pages(), 0, "drop must release every page");
+    }
+
+    #[test]
+    fn packed_bits_invariant_under_page_size() {
+        // the flat materialized stream must not depend on page geometry:
+        // any page_rows choice stores the exact same bits
+        let mut rng = Rng::seeded(80);
+        let dim = 45;
+        let rows: Vec<f32> = (0..11 * dim).map(|_| rng.normal_f32(0.0, 1.2)).collect();
+        let plan = KvStreamPlan::new(&NxConfig::nxfp(5));
+        let reference = {
+            let pool = Rc::new(RefCell::new(PagePool::new(1)));
+            let mut c = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool);
+            c.append_rows(&rows, &rows, 11);
+            c.stores()
+        };
+        for page_rows in [2usize, 3, 4, 11, 64] {
+            let pool = Rc::new(RefCell::new(PagePool::new(page_rows)));
+            let mut c = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool);
+            c.append_rows(&rows, &rows, 11);
+            assert_eq!(c.stores(), reference, "page_rows={page_rows}");
+            let (kd, vd) = c.dequantize(12);
+            let mut k_lane = vec![0.0f32; 12 * dim];
+            let mut v_lane = vec![0.0f32; 12 * dim];
+            c.dequantize_into_slab(&mut k_lane, &mut v_lane);
+            assert_eq!(&k_lane[..11 * dim], &kd.data[..11 * dim]);
+            assert_eq!(&v_lane[..11 * dim], &vd.data[..11 * dim]);
+        }
+    }
+
+    #[test]
+    fn adopt_pages_shares_then_cow_diverges() {
+        // two caches sharing a 6-row prefix over 4-row pages: page 0 is
+        // shared whole, page 1 (2 of 4 rows adopted) copy-on-writes at the
+        // first divergent append; the donor's bits never change
+        let mut rng = Rng::seeded(81);
+        let dim = 19;
+        let cfg = NxConfig::nxfp(4).with_block_size(16); // page splits blocks mid-row
+        let plan = KvStreamPlan::new(&cfg);
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let mk_row = |rng: &mut Rng| -> Vec<f32> {
+            (0..dim).map(|_| rng.normal_f32(0.0, 1.5)).collect()
+        };
+        let prefix: Vec<Vec<f32>> = (0..6).map(|_| mk_row(&mut rng)).collect();
+        let mut donor = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        for r in &prefix {
+            donor.append(r, r);
+        }
+        let donor_stores = donor.stores();
+        let (k_ids, v_ids) = {
+            let (k, v) = donor.page_ids();
+            (k.to_vec(), v.to_vec())
+        };
+        let mut adopter = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        adopter.adopt_pages(6, &k_ids, &v_ids);
+        assert_eq!(adopter.len, 6);
+        assert_eq!(adopter.watermark(), 0);
+        assert_eq!(pool.borrow().shared_pages(), 4); // 2 pages x 2 streams
+        // adopted view is bit-identical to the donor's prefix
+        assert_eq!(adopter.stores(), donor_stores);
+        // divergence: adopter appends its own rows; donor appends others
+        let div_a = mk_row(&mut rng);
+        let div_d = mk_row(&mut rng);
+        adopter.append(&div_a, &div_a);
+        donor.append(&div_d, &div_d);
+        assert_eq!(pool.borrow().shared_pages(), 2); // only the full pages remain shared
+        assert!(pool.borrow().cow_copies() >= 2); // adopter's K and V tails split
+        // both caches now match from-scratch controls built row by row
+        let mut ctl_a = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        let mut ctl_d = KvCache::with_plans_in(dim, plan.clone(), plan, 0, pool.clone());
+        for r in &prefix {
+            ctl_a.append(r, r);
+            ctl_d.append(r, r);
+        }
+        ctl_a.append(&div_a, &div_a);
+        ctl_d.append(&div_d, &div_d);
+        assert_eq!(adopter.stores(), ctl_a.stores(), "adopter diverged from control");
+        assert_eq!(donor.stores(), ctl_d.stores(), "donor corrupted by COW");
+        // lifecycle: dropping everything empties the pool
+        drop((donor, adopter, ctl_a, ctl_d));
+        assert_eq!(pool.borrow().live_pages(), 0);
+    }
+
+    #[test]
+    fn dedup_bits_charge_shared_pages_once() {
+        let dim = 32;
+        let cfg = NxConfig::nxfp(4);
+        let plan = KvStreamPlan::new(&cfg);
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let row = vec![0.5f32; dim];
+        let mut donor = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        for _ in 0..8 {
+            donor.append(&row, &row);
+        }
+        let (k_ids, v_ids) = {
+            let (k, v) = donor.page_ids();
+            (k.to_vec(), v.to_vec())
+        };
+        let mut adopter = KvCache::with_plans_in(dim, plan.clone(), plan, 0, pool.clone());
+        adopter.adopt_pages(8, &k_ids, &v_ids);
+        let bits_per_row = cfg.footprint_bits(dim);
+        // the per-slot packed view double-counts the shared rows
+        assert_eq!(donor.footprint_bits(), 2 * 8 * bits_per_row);
+        assert_eq!(adopter.footprint_bits(), 2 * 8 * bits_per_row);
+        // the dedup charge hands the bits to the first caller only
+        let (dk, dv) = donor.take_dedup_bits();
+        assert_eq!((dk, dv), (8 * bits_per_row, 8 * bits_per_row));
+        assert_eq!(adopter.take_dedup_bits(), (0, 0));
+        // repeated charge stays zero
+        assert_eq!(donor.take_dedup_bits(), (0, 0));
     }
 
     #[test]
@@ -623,18 +934,14 @@ mod tests {
     }
 
     #[test]
-    fn watermark_at_exact_capacity_fill() {
-        // fill a cache to exactly its pre-reserved context window through
-        // a mix of bulk and single appends: no reallocation anywhere, and
-        // the watermark decode into an exactly-sized slab stays correct
+    fn watermark_at_exact_window_fill() {
+        // fill a cache to exactly its context window through a mix of
+        // bulk and single appends: the watermark decode into an
+        // exactly-sized slab stays correct across page boundaries
         let mut rng = Rng::seeded(77);
         let (dim, rows) = (40, 12); // partial tail block (block 32)
         let mut cache = KvCache::with_capacity(dim, NxConfig::nxfp(4), rows);
-        let (cap_k_codes, cap_k_meta) = {
-            let (ks, _) = cache.stores();
-            (ks.codes.capacity(), ks.e_shared.capacity())
-        };
-        let mut k_lane = vec![0.0f32; rows * dim]; // exactly-capacity slab
+        let mut k_lane = vec![0.0f32; rows * dim]; // exactly-window slab
         let mut v_lane = vec![0.0f32; rows * dim];
         let chunk: Vec<f32> = (0..5 * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         cache.append_rows(&chunk, &chunk, 5);
@@ -652,10 +959,8 @@ mod tests {
         let (k_full, v_full) = cache.dequantize(rows);
         assert_eq!(k_lane, k_full.data);
         assert_eq!(v_lane, v_full.data);
-        // the context-window fill never reallocated the packed streams
-        let (ks, _) = cache.stores();
-        assert_eq!(ks.codes.capacity(), cap_k_codes);
-        assert_eq!(ks.e_shared.capacity(), cap_k_meta);
+        // 12 rows over the default 16-row pages: one page per stream
+        assert_eq!(cache.page_count(), (1, 1));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! per-block allocation and no post-hoc collection.
 
 pub mod kv_cache;
+pub mod page;
 
 use crate::formats::{BlockStore, EncodePlan, EncodeScratch, FormatTables, NxConfig};
 use crate::tensor::Tensor2;

@@ -1,0 +1,296 @@
+//! Refcounted page pool for the paged quantized KV cache.
+//!
+//! A **page** is a fixed-row-count [`BlockStore`] fragment of one KV
+//! stream (one layer, K or V side): `page_rows` quantized rows, laid out
+//! exactly like the flat stream so pages concatenate bit-identically via
+//! [`BlockStore::append_rows_from`]. Slots no longer own their rows —
+//! they hold page tables of [`PageId`]s into a shared [`PagePool`], which
+//! is what makes prefix sharing possible: two slots whose prompts share a
+//! token prefix share the packed pages covering it (refcount bump, zero
+//! copies) and copy-on-write only the partially-covered tail page at the
+//! first divergent append.
+//!
+//! Ownership rules:
+//!
+//! * `alloc` returns a page with `refs == 1`; `retain`/`release` adjust
+//!   the count; a page hitting zero refs is cleared and recycled through
+//!   the free list (ids are reused, never invalidated while referenced).
+//! * A holder may mutate a page **only while `refs == 1`**. To append
+//!   into a shared tail, call [`PagePool::cow`] first: it clones the
+//!   adopted prefix into a fresh page and drops the caller's ref on the
+//!   shared one.
+//! * Footprint dedup: each page carries an `accounted` flag so completed
+//!   requests can charge shared pages to the metrics exactly once
+//!   ([`PagePool::mark_accounted`]).
+//!
+//! The pool is deliberately single-threaded (`Rc<RefCell<PagePool>>` at
+//! the engine layer) — the decode engine itself is `!Send`.
+
+use crate::formats::BlockStore;
+
+/// Index into the pool's entry arena. Stable while any ref is held.
+pub type PageId = usize;
+
+/// Default rows per KV page (`--kv-page-rows`). Small enough that short
+/// shared prefixes still dedup whole pages, large enough that page-table
+/// overhead stays negligible next to the packed rows.
+pub const DEFAULT_KV_PAGE_ROWS: usize = 16;
+
+struct Entry {
+    store: BlockStore,
+    refs: u32,
+    /// Set once a completed request has charged this page to the
+    /// dedup-aware footprint; cleared on recycle.
+    accounted: bool,
+}
+
+/// Shared arena of refcounted KV pages. See the module docs for the
+/// ownership contract.
+pub struct PagePool {
+    page_rows: usize,
+    entries: Vec<Entry>,
+    free: Vec<PageId>,
+    /// Pages with `refs >= 2` right now (O(1) shared-page gauge).
+    shared: usize,
+    /// Lifetime counters for metrics/tests.
+    cow_copies: u64,
+    pages_allocated: u64,
+}
+
+impl PagePool {
+    pub fn new(page_rows: usize) -> Self {
+        assert!(page_rows > 0, "page_rows must be positive");
+        PagePool {
+            page_rows,
+            entries: Vec::new(),
+            free: Vec::new(),
+            shared: 0,
+            cow_copies: 0,
+            pages_allocated: 0,
+        }
+    }
+
+    /// Rows a full (non-tail) page holds.
+    #[inline]
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Allocate an empty page for a stream of the given geometry
+    /// (`refs == 1`). Recycles a free slot when one exists.
+    pub fn alloc(&mut self, row_len: usize, block_size: usize) -> PageId {
+        self.pages_allocated += 1;
+        match self.free.pop() {
+            Some(id) => {
+                let e = &mut self.entries[id];
+                debug_assert_eq!(e.refs, 0);
+                e.store = BlockStore::new(row_len, block_size);
+                e.refs = 1;
+                e.accounted = false;
+                id
+            }
+            None => {
+                self.entries.push(Entry {
+                    store: BlockStore::new(row_len, block_size),
+                    refs: 1,
+                    accounted: false,
+                });
+                self.entries.len() - 1
+            }
+        }
+    }
+
+    /// Add a reference (prefix adoption shares the page).
+    pub fn retain(&mut self, id: PageId) {
+        let e = &mut self.entries[id];
+        assert!(e.refs > 0, "retain on dead page {id}");
+        e.refs += 1;
+        if e.refs == 2 {
+            self.shared += 1;
+        }
+    }
+
+    /// Drop a reference; a page hitting zero is cleared and recycled.
+    pub fn release(&mut self, id: PageId) {
+        let e = &mut self.entries[id];
+        assert!(e.refs > 0, "release on dead page {id}");
+        e.refs -= 1;
+        if e.refs == 1 {
+            self.shared -= 1;
+        } else if e.refs == 0 {
+            e.store.clear();
+            e.accounted = false;
+            self.free.push(id);
+        }
+    }
+
+    #[inline]
+    pub fn refs(&self, id: PageId) -> u32 {
+        self.entries[id].refs
+    }
+
+    /// Rows currently stored in page `id`.
+    #[inline]
+    pub fn rows(&self, id: PageId) -> usize {
+        self.entries[id].store.rows
+    }
+
+    #[inline]
+    pub fn store(&self, id: PageId) -> &BlockStore {
+        &self.entries[id].store
+    }
+
+    /// Mutable store access — callers must hold the page exclusively
+    /// (`refs == 1`); shared tails go through [`PagePool::cow`] first.
+    #[inline]
+    pub fn store_mut(&mut self, id: PageId) -> &mut BlockStore {
+        debug_assert_eq!(self.entries[id].refs, 1, "mutating shared page {id}");
+        &mut self.entries[id].store
+    }
+
+    /// Copy-on-write split: clone the first `keep_rows` rows of `id` into
+    /// a fresh exclusively-owned page, then drop the caller's ref on `id`.
+    /// Returns the new page. The donor (and any other sharers) are
+    /// untouched beyond the refcount drop.
+    pub fn cow(&mut self, id: PageId, keep_rows: usize) -> PageId {
+        let copy = self.entries[id].store.clone_prefix(keep_rows);
+        let new_id = self.alloc(copy.row_len, copy.block_size);
+        self.entries[new_id].store = copy;
+        self.release(id);
+        self.cow_copies += 1;
+        new_id
+    }
+
+    /// First-charge gate for the dedup-aware footprint: returns `true`
+    /// exactly once per page lifetime (until the page is recycled).
+    pub fn mark_accounted(&mut self, id: PageId) -> bool {
+        let e = &mut self.entries[id];
+        assert!(e.refs > 0, "accounting dead page {id}");
+        !std::mem::replace(&mut e.accounted, true)
+    }
+
+    /// Pages currently holding at least one reference.
+    pub fn live_pages(&self) -> usize {
+        self.entries.len() - self.free.len()
+    }
+
+    /// Pages currently referenced by two or more holders.
+    #[inline]
+    pub fn shared_pages(&self) -> usize {
+        self.shared
+    }
+
+    /// Lifetime count of COW splits performed.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Lifetime count of page allocations (including COW clones).
+    pub fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_page(pool: &mut PagePool, rows: usize, seed: u8) -> PageId {
+        let id = pool.alloc(5, 2);
+        let st = pool.store_mut(id);
+        st.push_rows(rows);
+        for (i, c) in st.codes.iter_mut().enumerate() {
+            *c = seed.wrapping_add(i as u8);
+        }
+        for flat in 0..st.n_blocks() {
+            st.e_shared[flat] = seed as i16 + flat as i16;
+        }
+        id
+    }
+
+    #[test]
+    fn alloc_retain_release_lifecycle() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc(8, 4);
+        assert_eq!((pool.refs(a), pool.live_pages(), pool.shared_pages()), (1, 1, 0));
+        pool.retain(a);
+        assert_eq!((pool.refs(a), pool.shared_pages()), (2, 1));
+        pool.release(a);
+        assert_eq!((pool.refs(a), pool.shared_pages()), (1, 0));
+        pool.release(a);
+        assert_eq!(pool.live_pages(), 0);
+        // freed id is recycled, fresh and empty
+        let b = pool.alloc(8, 4);
+        assert_eq!(b, a);
+        assert_eq!(pool.rows(b), 0);
+        assert_eq!(pool.refs(b), 1);
+        assert_eq!(pool.pages_allocated(), 2);
+    }
+
+    #[test]
+    fn cow_clones_prefix_and_leaves_donor_intact() {
+        let mut pool = PagePool::new(4);
+        let donor = filled_page(&mut pool, 4, 10);
+        let donor_snapshot = pool.store(donor).clone();
+        pool.retain(donor); // second holder adopts, then diverges at row 2
+        let fresh = pool.cow(donor, 2);
+        assert_ne!(fresh, donor);
+        assert_eq!(pool.store(fresh), &donor_snapshot.clone_prefix(2));
+        assert_eq!(pool.store(donor), &donor_snapshot);
+        assert_eq!((pool.refs(donor), pool.refs(fresh)), (1, 1));
+        assert_eq!(pool.shared_pages(), 0);
+        assert_eq!(pool.cow_copies(), 1);
+    }
+
+    #[test]
+    fn cow_on_sole_ref_releases_original() {
+        let mut pool = PagePool::new(4);
+        let a = filled_page(&mut pool, 3, 1);
+        let b = pool.cow(a, 3);
+        // sole holder: original is recycled, clone carries the rows
+        assert_eq!(pool.live_pages(), 1);
+        assert_eq!(pool.rows(b), 3);
+    }
+
+    #[test]
+    fn mark_accounted_fires_once_per_lifetime() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc(8, 4);
+        assert!(pool.mark_accounted(a));
+        assert!(!pool.mark_accounted(a));
+        pool.retain(a);
+        assert!(!pool.mark_accounted(a)); // sharers still see it charged
+        pool.release(a);
+        pool.release(a);
+        let b = pool.alloc(8, 4);
+        assert_eq!(b, a);
+        assert!(pool.mark_accounted(b)); // recycle resets the flag
+    }
+
+    #[test]
+    #[should_panic(expected = "release on dead page")]
+    fn release_underflow_panics() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc(8, 4);
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    fn shared_gauge_tracks_multiple_pages() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc(8, 4);
+        let b = pool.alloc(8, 4);
+        pool.retain(a);
+        pool.retain(b);
+        pool.retain(b);
+        assert_eq!(pool.shared_pages(), 2);
+        pool.release(b);
+        assert_eq!(pool.shared_pages(), 2); // b still at 2 refs
+        pool.release(b);
+        assert_eq!(pool.shared_pages(), 1);
+        pool.release(a);
+        assert_eq!(pool.shared_pages(), 0);
+        assert_eq!(pool.live_pages(), 2);
+    }
+}

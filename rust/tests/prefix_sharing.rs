@@ -1,0 +1,212 @@
+//! Paged-KV prefix sharing invariants (see `coordinator/ARCHITECTURE.md`):
+//!
+//! 1. **Cache off is a no-op** — with `--prefix-cache off` the paged
+//!    storage is pure plumbing: generations AND packed KV bytes are
+//!    bit-identical across page geometries and to solo runs.
+//! 2. **Cache on is invisible to outputs** — shared-prefix traffic adopts
+//!    packed pages (prefix hits observed) yet every generation stays
+//!    bit-identical to the request's solo run; only steps and the
+//!    dedup-aware footprint improve.
+//! 3. **COW is exact at every split point** — divergence at any offset
+//!    within a page (including a page boundary) reproduces the solo
+//!    generation, on a block geometry that leaves a ragged block per row.
+//! 4. **No leaks** — after churn, retiring every slot and clearing the
+//!    prefix cache drains the page pool to zero.
+//! 5. **Dedup math is pinned** — on a symmetric shared-prefix workload
+//!    the dedup factor is exactly 2.0, not merely "> 1".
+//!
+//! All tests run on the deterministic `SynthBackend` — no PJRT runtime or
+//! `make artifacts` needed.
+
+use nxfp::coordinator::scheduler::Scheduler;
+use nxfp::coordinator::{DecodeEngine, GenRequest, GenResponse, SynthBackend};
+use nxfp::formats::{NxConfig, QuantPolicy};
+use nxfp::models::LmSpec;
+
+fn spec() -> LmSpec {
+    LmSpec { vocab: 48, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 64, seq_len: 24 }
+}
+
+/// Run a continuous-batching serve over `reqs` and return the responses
+/// plus the engine and scheduler for metric/pool inspection.
+fn serve(
+    kv: Option<NxConfig>,
+    page_rows: usize,
+    prefix_cache: bool,
+    reqs: &[GenRequest],
+    lanes: usize,
+) -> (Vec<GenResponse>, DecodeEngine, Scheduler) {
+    let sp = spec();
+    let policy: QuantPolicy = kv.into();
+    let mut eng =
+        DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, lanes);
+    eng.set_kv_page_rows(page_rows);
+    let mut sched = Scheduler::new(lanes, Scheduler::DEFAULT_PROMOTE_AFTER);
+    if prefix_cache {
+        sched.enable_prefix_cache(eng.page_pool(), 64);
+    }
+    for r in reqs {
+        sched.enqueue(r.clone());
+    }
+    let resps = eng.serve_continuous(&mut sched).unwrap();
+    assert_eq!(resps.len(), reqs.len());
+    (resps, eng, sched)
+}
+
+/// Tokens a request generates running completely alone (batch of 1).
+fn solo_tokens(kv: Option<NxConfig>, req: &GenRequest) -> Vec<i32> {
+    let sp = spec();
+    let policy: QuantPolicy = kv.into();
+    let mut eng = DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &policy, 1);
+    let resps = eng.serve_wave(vec![req.clone()]).unwrap();
+    resps.into_iter().next().unwrap().tokens
+}
+
+fn by_id(resps: &[GenResponse], id: u64) -> &GenResponse {
+    resps.iter().find(|r| r.id == id).unwrap()
+}
+
+/// A shared 12-token system prompt plus a distinct 3-token suffix each.
+fn shared_prefix_reqs(n: u64, max_new: usize) -> Vec<GenRequest> {
+    let sys: Vec<i32> = (0..12).map(|t| (t % 40) as i32 + 1).collect();
+    (0..n)
+        .map(|i| {
+            let mut p = sys.clone();
+            p.extend([40 + i as i32, 44, (41 + i) as i32 % 47]);
+            GenRequest { id: i, prompt: p, max_new }
+        })
+        .collect()
+}
+
+#[test]
+fn cache_off_is_bit_identical_across_page_geometries() {
+    let kv = Some(NxConfig::nxfp(4));
+    let reqs = shared_prefix_reqs(4, 4);
+    let (r16, e16, _) = serve(kv.clone(), 16, false, &reqs, 2);
+    let (r3, e3, _) = serve(kv.clone(), 3, false, &reqs, 2);
+    let (r1, e1, _) = serve(kv.clone(), 1, false, &reqs, 2);
+    for r in &reqs {
+        let want = solo_tokens(kv.clone(), r);
+        for (resps, label) in [(&r16, "16"), (&r3, "3"), (&r1, "1")] {
+            assert_eq!(by_id(resps, r.id).tokens, want, "req {} page_rows {label}", r.id);
+        }
+    }
+    // packed bytes are a function of rows and format, never of paging
+    assert_eq!(e16.metrics.kv_bits_packed, e3.metrics.kv_bits_packed);
+    assert_eq!(e16.metrics.kv_bits_packed, e1.metrics.kv_bits_packed);
+    // cache off: every page is charged by its own request, factor exactly 1
+    for e in [&e16, &e3, &e1] {
+        assert_eq!(e.metrics.kv_bits_packed_dedup(), e.metrics.kv_bits_packed);
+        assert_eq!(e.metrics.dedup_factor(), 1.0);
+        assert_eq!(e.serving.prefix_hits + e.serving.prefix_misses, 0);
+        assert_eq!(e.page_pool().borrow().cow_copies(), 0);
+        assert_eq!(e.page_pool().borrow().live_pages(), 0);
+    }
+}
+
+#[test]
+fn shared_prefix_traffic_hits_and_stays_bit_identical() {
+    let kv = Some(NxConfig::nxfp(4));
+    let reqs = shared_prefix_reqs(4, 4);
+    // one lane so each later request admits after the first registered
+    let (off, eoff, _) = serve(kv.clone(), 4, false, &reqs, 1);
+    let (on, eon, _) = serve(kv.clone(), 4, true, &reqs, 1);
+    for r in &reqs {
+        assert_eq!(by_id(&on, r.id).tokens, by_id(&off, r.id).tokens, "req {}", r.id);
+        assert_eq!(by_id(&on, r.id).tokens, solo_tokens(kv.clone(), r), "req {}", r.id);
+    }
+    // requests 1..3 each adopt the 12 shared rows
+    assert_eq!(eon.serving.prefix_hits, 3);
+    assert_eq!(eon.serving.prefix_misses, 1);
+    assert_eq!(eon.serving.prefix_hit_rate(), 0.75);
+    assert_eq!(eon.serving.prefix_rows.min(), 12.0);
+    assert_eq!(eon.serving.prefix_rows.max(), 12.0);
+    // at budget 1 each adopted row skips one prefill step: strictly fewer
+    // engine steps end to end on the same traffic
+    assert!(
+        eon.metrics.decode_steps + 3 * 12 <= eoff.metrics.decode_steps,
+        "expected 36 skipped steps: {} vs {}",
+        eon.metrics.decode_steps,
+        eoff.metrics.decode_steps
+    );
+    // the raw packed charge is unchanged; the dedup-aware charge counts
+    // each shared page once
+    assert_eq!(eon.metrics.kv_bits_packed, eoff.metrics.kv_bits_packed);
+    assert!(eon.metrics.kv_bits_packed_dedup() < eon.metrics.kv_bits_packed);
+    assert!(eon.metrics.dedup_factor() > 1.0);
+    assert!(eon.serving.shared_pages.max() > 0.0);
+}
+
+#[test]
+fn dedup_footprint_math_is_pinned_exactly() {
+    // geometry chosen so the numbers close in whole pages: prompt 15
+    // (12 shared + 3 distinct), max_new 4 -> 18 KV rows per request.
+    // Donor charges all 18; each adopter shares pages for rows 0..12 and
+    // charges only its 6 distinct rows. 4 requests:
+    //   packed = 4 * 18 = 72 row-units, dedup = 18 + 3 * 6 = 36
+    // -> factor exactly 2.0. (The cache's retained partial-tail pages are
+    // never charged: no completed request owns them.)
+    let kv = Some(NxConfig::nxfp(4));
+    let reqs = shared_prefix_reqs(4, 4);
+    let (_, eon, _) = serve(kv, 4, true, &reqs, 1);
+    assert_eq!(eon.metrics.kv_bits_packed_dedup() * 2, eon.metrics.kv_bits_packed);
+    assert_eq!(eon.metrics.dedup_factor(), 2.0);
+    // K and V charge identically under a uniform format
+    assert_eq!(eon.metrics.kv_bits_packed_dedup_k, eon.metrics.kv_bits_packed_dedup_v);
+}
+
+#[test]
+fn cow_divergence_is_bit_identical_at_every_split_point() {
+    // block_size 16 against d_model 24 leaves a ragged 8-element block in
+    // every row; page_rows 4 with split points 5..=12 covers every local
+    // offset within a page, including an exact page boundary (8 and 12)
+    let kv = Some(NxConfig::nxfp(4).with_block_size(16));
+    let base: Vec<i32> = (0..13).map(|t| 3 + (t * 7 % 37) as i32).collect();
+    for l in 5..=12usize {
+        let mut pa = base[..l].to_vec();
+        pa.push(45);
+        let mut pb = base[..l].to_vec();
+        pb.extend([46, 44]);
+        let ra = GenRequest { id: 0, prompt: pa, max_new: 5 };
+        let rb = GenRequest { id: 1, prompt: pb, max_new: 5 };
+        let (resps, eng, _) = serve(kv.clone(), 4, true, &[ra.clone(), rb.clone()], 1);
+        assert_eq!(eng.serving.prefix_hits, 1, "split {l}");
+        assert_eq!(eng.serving.prefix_rows.max(), l as f64, "split {l}");
+        assert_eq!(by_id(&resps, 0).tokens, solo_tokens(kv.clone(), &ra), "donor, split {l}");
+        assert_eq!(by_id(&resps, 1).tokens, solo_tokens(kv.clone(), &rb), "adopter, split {l}");
+    }
+}
+
+#[test]
+fn fp16_kv_with_cache_on_is_a_noop() {
+    let reqs = shared_prefix_reqs(3, 3);
+    let (on, eon, _) = serve(None, 4, true, &reqs, 1);
+    let (off, eoff, _) = serve(None, 4, false, &reqs, 1);
+    for r in &reqs {
+        assert_eq!(by_id(&on, r.id).tokens, by_id(&off, r.id).tokens, "req {}", r.id);
+    }
+    assert_eq!(eon.metrics.decode_steps, eoff.metrics.decode_steps);
+    // fp16 lanes have no packed pages: nothing to look up or register
+    assert_eq!(eon.serving.prefix_hits + eon.serving.prefix_misses, 0);
+    assert_eq!(eon.page_pool().borrow().live_pages(), 0);
+    assert_eq!(eon.metrics.kv_bits_packed, 0);
+}
+
+#[test]
+fn page_pool_drains_after_churn() {
+    let kv = Some(NxConfig::nxfp(4));
+    // two lanes, six requests with a shared 12-token prefix: concurrent
+    // prefills, adoptions, COW splits, epoch-free registrations
+    let reqs = shared_prefix_reqs(6, 3);
+    let (resps, eng, mut sched) = serve(kv.clone(), 4, true, &reqs, 2);
+    for r in &reqs {
+        assert_eq!(by_id(&resps, r.id).tokens, solo_tokens(kv.clone(), r), "req {}", r.id);
+    }
+    let pool = eng.page_pool();
+    // slots are all retired; only prefix-cache registrations hold pages
+    assert!(pool.borrow().live_pages() > 0);
+    assert!(pool.borrow().cow_copies() > 0, "COW was never exercised");
+    sched.clear_prefix_cache();
+    assert_eq!(pool.borrow().live_pages(), 0, "page leak after churn");
+    assert_eq!(pool.borrow().shared_pages(), 0);
+}
