@@ -16,13 +16,24 @@ artifact dir) the *last* one wins. Compared fields: every numeric field
 present in both records, with tok/s treated as higher-is-better and
 latency/step/bits fields as lower-is-better.
 
-This script never fails the build: perf on shared CI runners is noisy, so
+Perf never fails the build: throughput on shared CI runners is noisy, so
 the report is informational — the trajectory accumulates in the uploaded
 artifacts and regressions show up as a trend, not a single red build.
-The one escalation: a **>2x regression on a non-smoke record** is promoted
-to a GitHub `::warning::` annotation so it surfaces in the PR summary
-instead of scrolling by as prose (smoke records run at toy sizes where a
-2x swing is routine scheduler noise, so they stay prose).
+Two escalations exist:
+
+- a **>2x regression on a non-smoke record** is promoted to a GitHub
+  `::warning::` annotation so it surfaces in the PR summary instead of
+  scrolling by as prose (smoke records run at toy sizes where a 2x swing
+  is routine scheduler noise, so they stay prose);
+- a **nonzero `lost_requests` field on any current record** is a
+  correctness failure, not a perf delta: the fault-injection sweep
+  asserts every submitted request comes back, so a lost request means
+  the serving tier dropped work. That emits `::error::` and exits
+  nonzero — no previous artifact needed.
+
+Fault-injection sweeps encode their fault mode in `config` (e.g.
+`step=0.01`), so each fault rate is its own trajectory key and a faulted
+run is never compared against a fault-free one.
 """
 
 import json
@@ -40,6 +51,10 @@ LOWER_IS_BETTER = ("_ms", "_steps", "steps", "p50", "p95", "p99", "growth", "bit
 # Non-smoke regressions worse than this factor become ::warning::
 # annotations in the PR summary.
 WARN_FACTOR = 2.0
+
+# Fields that are correctness gates, not perf metrics: any current record
+# carrying a positive value for one of these fails the build outright.
+MUST_BE_ZERO = ("lost_requests",)
 
 
 def record_key(r):
@@ -107,26 +122,50 @@ def numeric_fields(old, new):
     return sorted(k for k, v in new.items() if ok(v) and ok(old.get(k)))
 
 
+def key_label(key):
+    bench, name, config, policy, smoke = key
+    label = f"{bench}/{name} [{config}]"
+    if policy and policy != config:
+        label += f" policy={policy}"
+    if smoke:
+        label += " (smoke)"
+    return label
+
+
+def correctness_errors(curr):
+    """`::error::` lines for MUST_BE_ZERO violations in the current run.
+    Checked against `curr` alone — a first trajectory point with lost
+    requests fails even though there is nothing to compare against."""
+    errors = []
+    for key in sorted(curr, key=str):
+        r = curr[key]
+        for f in MUST_BE_ZERO:
+            v = r.get(f)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0:
+                errors.append(
+                    f"::error title=lost requests::{key_label(key)}: {f}={v:g} "
+                    f"(must be 0 — the serving tier dropped requests)"
+                )
+    return errors
+
+
 def compare(prev, curr):
-    """Pure comparison: returns (report_lines, warning_lines)."""
+    """Pure comparison: returns (report_lines, warning_lines, error_lines)."""
     lines, warnings = [], []
+    errors = correctness_errors(curr)
     if not curr:
-        return (["[bench-compare] no current records; nothing to report"], [])
+        return (["[bench-compare] no current records; nothing to report"], [], errors)
     if not prev:
         lines.append(
             f"[bench-compare] no previous records — first trajectory point "
             f"({len(curr)} records recorded, nothing to compare)"
         )
-        return (lines, [])
+        return (lines, [], errors)
     lines.append(f"[bench-compare] {len(curr)} current records vs {len(prev)} previous\n")
     width = 52
     for key in sorted(curr, key=str):
-        bench, name, config, policy, smoke = key
-        label = f"{bench}/{name} [{config}]"
-        if policy and policy != config:
-            label += f" policy={policy}"
-        if smoke:
-            label += " (smoke)"
+        label = key_label(key)
+        smoke = key[4]
         old = prev.get(key)
         if old is None:
             lines.append(f"{label:<{width}} new scenario (no previous record)")
@@ -144,7 +183,7 @@ def compare(prev, curr):
         lines.append(f"{label:<{width}} " + "; ".join(parts))
     for key in sorted(set(prev) - set(curr), key=str):
         lines.append(f"{key}: present in previous run only")
-    return (lines, warnings)
+    return (lines, warnings, errors)
 
 
 def selftest():
@@ -176,24 +215,25 @@ def selftest():
     # a 2.5x non-smoke regression becomes exactly one ::warning::
     prev = {key(r): r for r in [rec("slow", tok_s=100.0)]}
     curr = {key(r): r for r in [rec("slow", tok_s=40.0)]}
-    _, warns = compare(prev, curr)
+    _, warns, errs = compare(prev, curr)
     assert len(warns) == 1 and "::warning" in warns[0] and "2.5x" in warns[0], warns
+    assert errs == [], errs
 
     # exactly-2x is NOT promoted (threshold is strict)
     curr2 = {key(r): r for r in [rec("slow", tok_s=50.0)]}
-    _, warns = compare(prev, curr2)
+    _, warns, _ = compare(prev, curr2)
     assert warns == [], warns
 
     # the same regression on a smoke record stays prose
     prev_s = {key(r): r for r in [rec("slow", smoke=True, tok_s=100.0)]}
     curr_s = {key(r): r for r in [rec("slow", smoke=True, tok_s=10.0)]}
-    lines, warns = compare(prev_s, curr_s)
+    lines, warns, _ = compare(prev_s, curr_s)
     assert warns == [] and any("worse" in l for l in lines), (lines, warns)
 
     # improvements and sub-threshold noise never warn
     prev3 = {key(r): r for r in [rec("ok", tok_s=100.0, p95_ms=10.0)]}
     curr3 = {key(r): r for r in [rec("ok", tok_s=130.0, p95_ms=14.0)]}
-    _, warns = compare(prev3, curr3)
+    _, warns, _ = compare(prev3, curr3)
     assert warns == [], warns
 
     # policy participates in the key: same (bench,name,config) under a
@@ -202,7 +242,7 @@ def selftest():
     moved = rec("mixed", tok_s=10.0)
     moved["policy"] = "kv.k=nxfp5,kv.v=mxfp4"
     curr4 = {record_key(moved): moved}
-    lines, warns = compare(prev4, curr4)
+    lines, warns, _ = compare(prev4, curr4)
     assert warns == [] and any("new scenario" in l for l in lines), (lines, warns)
 
     # legacy records (no policy field) keep comparing against new uniform
@@ -213,14 +253,48 @@ def selftest():
     uniform = rec("slow", tok_s=40.0)
     uniform["policy"] = "c"  # uniform benches emit policy == config
     curr6 = {record_key(uniform): uniform}
-    _, warns = compare(prev6, curr6)
+    _, warns, _ = compare(prev6, curr6)
     assert len(warns) == 1 and "2.5x" in warns[0], warns
 
     # multiple fields regressing on one record produce one warning each
     prev5 = {key(r): r for r in [rec("multi", tok_s=100.0, p95_ms=10.0)]}
     curr5 = {key(r): r for r in [rec("multi", tok_s=30.0, p95_ms=50.0)]}
-    _, warns = compare(prev5, curr5)
+    _, warns, _ = compare(prev5, curr5)
     assert len(warns) == 2, warns
+
+    # lost_requests == 0 is healthy: no error, and the field is reported
+    # as ordinary prose like any other numeric column
+    prev7 = {key(r): r for r in [rec("fault", tok_s=100.0, lost_requests=0)]}
+    curr7 = {key(r): r for r in [rec("fault", tok_s=95.0, lost_requests=0)]}
+    lines, warns, errs = compare(prev7, curr7)
+    assert errs == [] and warns == [], (errs, warns)
+    assert any("lost_requests" in l for l in lines), lines
+
+    # lost_requests > 0 fails the run: exactly one ::error:: per violating
+    # record, and it is an error — never a ::warning:: perf annotation
+    curr8 = {key(r): r for r in [rec("fault", tok_s=95.0, lost_requests=2)]}
+    _, warns, errs = compare(prev7, curr8)
+    assert len(errs) == 1 and "::error" in errs[0] and "lost_requests=2" in errs[0], errs
+    assert not any("lost_requests" in w for w in warns), warns
+
+    # the gate needs no previous artifact: a first trajectory point with
+    # lost requests still errors (fault sweeps must fail on day one)
+    _, _, errs = compare({}, curr8)
+    assert len(errs) == 1 and "::error" in errs[0], errs
+
+    # smoke records get no exemption from the correctness gate
+    smoke_lost = rec("fault", smoke=True, tok_s=5.0, lost_requests=1)
+    _, _, errs = compare({}, {key(smoke_lost): smoke_lost})
+    assert len(errs) == 1, errs
+
+    # fault modes key on config: step=0.05 never compares against the
+    # fault-free step=0 record
+    base = rec("fault-sweep", tok_s=100.0)
+    base["config"] = "step=0"
+    faulted = rec("fault-sweep", tok_s=30.0)
+    faulted["config"] = "step=0.05"
+    lines, warns, _ = compare({record_key(base): base}, {record_key(faulted): faulted})
+    assert warns == [] and any("new scenario" in l for l in lines), (lines, warns)
 
     print("[bench-compare] selftest OK")
     return 0
@@ -232,12 +306,14 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
-    lines, warnings = compare(load(sys.argv[1]), load(sys.argv[2]))
+    lines, warnings, errors = compare(load(sys.argv[1]), load(sys.argv[2]))
     for line in lines:
         print(line)
     for w in warnings:
         print(w)
-    return 0
+    for e in errors:
+        print(e)
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,420 @@
+"""Executable mirror of the Rust fault-domain serving logic
+(rust/src/coordinator/fault.rs + the containment paths in mod.rs and the
+policy knobs in scheduler.rs/server.rs).
+
+The container has no cargo toolchain, so the Rust side is desk-checked;
+this file re-implements the serving tier's fault state machine — seeded
+transient/NaN injection, bounded in-place retry, retire-and-requeue from
+the queue front, requeue budgets, queue caps (shed), queue-step deadlines,
+and graceful drain — over a deterministic per-slot-pure toy backend and a
+refcounted page pool, and drives it through the same scenarios
+rust/tests/fault_recovery.rs pins:
+
+* transient faults are invisible: completed outputs are bit-identical to a
+  fault-free run, on both the retry and the requeue path;
+* engine fault counters match the injector's ground truth exactly;
+* an exhausted requeue budget fails only the affected request
+  (BackendError) while the engine keeps serving;
+* NaN logits are caught before sampling and only the poisoned lane dies
+  on exhaustion (clean lanes commit, per-slot purity);
+* overload sheds and queue-step deadlines classify, never lose, requests;
+* the page pool drains to zero after fault churn;
+* drain stops admission, finishes in-flight work, sheds the rest.
+
+The fault *schedules* differ across languages (different RNGs) — what is
+pinned is the state machine, whose invariants must hold for every seed.
+"""
+
+import random
+from collections import deque
+
+COMPLETED, REJECTED, SHED, DEADLINE, BACKEND_ERROR = (
+    "completed", "rejected", "shed", "deadline", "backend_error",
+)
+
+VOCAB = 97
+PAGE_ROWS = 4
+
+
+def step_token(prompt, output):
+    """Per-slot-pure next token: a function of the slot's own history only
+    (mirror of SynthBackend's KV-sensitive hash)."""
+    acc = len(prompt) * 7
+    for t in prompt + output:
+        acc = (acc * 31 + t + 1) % 100003
+    return acc % VOCAB
+
+
+class TransientFault(Exception):
+    pass
+
+
+class FatalFault(Exception):
+    pass
+
+
+class FaultyBackend:
+    """Mirror of fault.rs FaultBackend: one seeded stream, fixed gate
+    order per call, counters as ground truth."""
+
+    def __init__(self, seed, step_rate=0.0, nan_rate=0.0, fatal_at_step=None):
+        self.rng = random.Random(seed)
+        self.step_rate = step_rate
+        self.nan_rate = nan_rate
+        self.fatal_at_step = fatal_at_step
+        self.calls = 0
+        self.step_errors = 0
+        self.nan_steps = 0
+        self.fatal_errors = 0
+
+    def step(self, lanes):
+        """One batched call over the occupied lanes. Returns
+        {lane: token_or_nan}; raises on injected errors."""
+        self.calls += 1
+        if self.fatal_at_step is not None and self.calls == self.fatal_at_step:
+            self.fatal_errors += 1
+            raise FatalFault(f"injected fatal at call {self.calls}")
+        # fixed gate order so the schedule is a pure function of
+        # (seed, call sequence): step_err, nan, nan_lane
+        step_err = self.rng.random() < self.step_rate
+        nan = self.rng.random() < self.nan_rate
+        nan_lane = self.rng.randrange(max(len(lanes), 1))
+        if step_err:
+            self.step_errors += 1
+            raise TransientFault(f"injected step error at call {self.calls}")
+        out = {b: step_token(sl["prompt"], sl["output"]) for b, sl in lanes.items()}
+        if nan:
+            self.nan_steps += 1
+            # the drawn lane may be empty — the injection still counts,
+            # exactly like poisoning an unoccupied lane's logits in Rust
+            lane_ids = sorted(lanes)
+            if nan_lane < len(lane_ids):
+                out[lane_ids[nan_lane]] = float("nan")
+        return out
+
+
+class PagePool:
+    def __init__(self):
+        self.refs = {}
+        self.next_id = 0
+
+    def alloc(self):
+        pid = self.next_id
+        self.next_id += 1
+        self.refs[pid] = 1
+        return pid
+
+    def release(self, pid):
+        self.refs[pid] -= 1
+        if self.refs[pid] == 0:
+            del self.refs[pid]
+
+    def live_pages(self):
+        return len(self.refs)
+
+
+class Engine:
+    """Mirror of DecodeEngine + Scheduler + the server's admission policy,
+    collapsed to the fault-relevant state machine."""
+
+    def __init__(self, backend, lanes=2, retry_max=3, requeue_max=8,
+                 queue_cap=None, max_queue_steps=None):
+        self.backend = backend
+        self.n_lanes = lanes
+        self.retry_max = retry_max
+        self.requeue_max = requeue_max
+        self.queue_cap = queue_cap
+        self.max_queue_steps = max_queue_steps
+        self.pool = PagePool()
+        self.queue = deque()
+        self.slots = {}
+        self.step_count = 0
+        self.draining = False
+        self.done = []
+        self.counters = dict(step_faults=0, nan_faults=0, retries=0,
+                             requeued=0, backend_failed=0, shed=0,
+                             deadline_expired=0)
+
+    # ---- admission -----------------------------------------------------
+    def submit(self, req):
+        if self.draining:
+            self.counters["shed"] += 1
+            self.done.append((req["id"], None, SHED))
+            return False
+        if not req["prompt"]:
+            self.done.append((req["id"], None, REJECTED))
+            return False
+        if self.queue_cap is not None and len(self.queue) >= self.queue_cap:
+            self.counters["shed"] += 1
+            self.done.append((req["id"], None, SHED))
+            return False
+        self.queue.append({"req": req, "enq_step": self.step_count, "requeues": 0})
+        return True
+
+    def _requeue(self, entry):
+        # queue *front*: a faulted request re-admits before fresh arrivals
+        entry["enq_step"] = self.step_count
+        self.queue.appendleft(entry)
+
+    def _admit(self):
+        while len(self.slots) < self.n_lanes and self.queue:
+            q = self.queue.popleft()
+            waited = self.step_count - q["enq_step"]
+            if self.max_queue_steps is not None and waited > self.max_queue_steps:
+                self.counters["deadline_expired"] += 1
+                self.done.append((q["req"]["id"], None, DEADLINE))
+                continue
+            lane = min(set(range(self.n_lanes)) - set(self.slots))
+            sl = {
+                "req": q["req"], "prompt": list(q["req"]["prompt"]),
+                "output": [], "requeues": q["requeues"], "pages": [],
+            }
+            # prefill: packed pages cover the prompt rows immediately
+            self._grow_pages(sl)
+            self.slots[lane] = sl
+
+    def _grow_pages(self, sl):
+        rows = len(sl["prompt"]) + len(sl["output"])
+        while len(sl["pages"]) * PAGE_ROWS < rows:
+            sl["pages"].append(self.pool.alloc())
+
+    # ---- fault containment ---------------------------------------------
+    def _retire(self, lane, reason):
+        sl = self.slots.pop(lane)
+        for pid in sl["pages"]:
+            self.pool.release(pid)
+        if reason == "requeue" and sl["requeues"] < self.requeue_max:
+            self.counters["requeued"] += 1
+            self._requeue({"req": sl["req"], "enq_step": self.step_count,
+                           "requeues": sl["requeues"] + 1})
+        else:
+            self.counters["backend_failed"] += 1
+            self.done.append((sl["req"]["id"], list(sl["output"]), BACKEND_ERROR))
+
+    def _step_with_retry(self):
+        """Mirror of step_with_retry + the pre-sampling NaN scan: returns
+        {lane: token} or None if the step was abandoned (slots retired)."""
+        attempt = 0
+        nan_attempts = 0
+        while True:
+            try:
+                out = self.backend.step(self.slots)
+            except TransientFault:
+                self.counters["step_faults"] += 1
+                attempt += 1
+                if attempt > self.retry_max:
+                    # exhausted: every occupied slot retires into requeue
+                    for lane in sorted(self.slots):
+                        self._retire(lane, "requeue")
+                    return None
+                self.counters["retries"] += 1
+                continue
+            except FatalFault:
+                # fatal: fail the affected slots, keep the engine alive
+                for lane in sorted(self.slots):
+                    self._retire(lane, "fatal")
+                return None
+            poisoned = [b for b, t in out.items() if t != t]  # NaN check
+            if not poisoned:
+                return out
+            self.counters["nan_faults"] += 1
+            nan_attempts += 1
+            if nan_attempts <= self.retry_max:
+                self.counters["retries"] += 1
+                continue
+            # exhausted: only the poisoned lanes die; clean lanes commit
+            # (per-slot purity makes the re-run identical for them)
+            for lane in poisoned:
+                self._retire(lane, "requeue")
+            return {b: t for b, t in out.items() if b not in poisoned}
+
+    # ---- the serve loop ------------------------------------------------
+    def step(self):
+        self._admit()
+        if not self.slots:
+            self.step_count += 1  # mirror of Scheduler::tick at step end
+            return
+        out = self._step_with_retry()
+        self.step_count += 1
+        if not out:
+            return
+        for lane, tok in sorted(out.items()):
+            sl = self.slots[lane]
+            sl["output"].append(tok)
+            self._grow_pages(sl)
+            if len(sl["output"]) >= sl["req"]["max_new"]:
+                done = self.slots.pop(lane)
+                for pid in done["pages"]:
+                    self.pool.release(pid)
+                self.done.append((done["req"]["id"], done["output"], COMPLETED))
+
+    def has_work(self):
+        return bool(self.queue or self.slots)
+
+    def serve(self):
+        while self.has_work():
+            self.step()
+        return sorted(self.done)
+
+    def drain(self):
+        """Mirror of ServerHandle::drain: stop admitting (submit sheds),
+        finish everything already accepted."""
+        self.draining = True
+        return self.serve()
+
+
+def requests(n=6):
+    return [
+        {"id": i, "prompt": [1, 2, 3, 4, 5 + i] if i % 2 == 0 else [7 + i, 9],
+         "max_new": 3 + i % 3}
+        for i in range(n)
+    ]
+
+
+def clean_run():
+    eng = Engine(FaultyBackend(seed=0))
+    for r in requests():
+        assert eng.submit(r)
+    return eng.serve()
+
+
+# ------------------------------------------------------------- scenarios
+
+
+def test_transient_faults_bit_identical_on_the_retry_path():
+    want = clean_run()
+    for seed in range(5):
+        be = FaultyBackend(seed, step_rate=0.25)
+        eng = Engine(be, retry_max=6)
+        for r in requests():
+            assert eng.submit(r)
+        got = eng.serve()
+        assert got == want, f"seed {seed} diverged under faults"
+        # counter exactness: engine vs injector ground truth
+        assert eng.counters["step_faults"] == be.step_errors
+        assert eng.counters["backend_failed"] == 0
+        assert eng.counters["requeued"] == 0
+
+
+def test_requeue_path_replays_bit_identically():
+    want = clean_run()
+    fired = False
+    for seed in range(5):
+        be = FaultyBackend(seed, step_rate=0.15)
+        eng = Engine(be, retry_max=0, requeue_max=10_000)
+        for r in requests():
+            assert eng.submit(r)
+        got = eng.serve()
+        assert got == want, f"seed {seed} diverged through requeue"
+        assert eng.counters["step_faults"] == be.step_errors
+        assert eng.counters["backend_failed"] == 0
+        if be.step_errors:
+            assert eng.counters["requeued"] > 0
+            fired = True
+    assert fired
+
+
+def test_nan_faults_are_caught_before_sampling():
+    want = clean_run()
+    fired = False
+    for seed in range(5):
+        be = FaultyBackend(seed, nan_rate=0.2)
+        eng = Engine(be, retry_max=6)
+        for r in requests():
+            assert eng.submit(r)
+        got = eng.serve()
+        assert got == want
+        assert eng.counters["nan_faults"] == be.nan_steps
+        fired = fired or be.nan_steps > 0
+    assert fired
+    # NaN never enters an output stream
+    for _, toks, _ in want:
+        assert all(isinstance(t, int) for t in toks)
+
+
+def test_exhausted_requeue_budget_fails_requests_not_the_engine():
+    be = FaultyBackend(seed=1, step_rate=1.0)  # every call faults
+    eng = Engine(be, retry_max=0, requeue_max=1)
+    for r in requests():
+        assert eng.submit(r)
+    got = eng.serve()
+    assert len(got) == len(requests())
+    assert all(reason == BACKEND_ERROR for _, _, reason in got)
+    # exactly one requeue per request before the budget trips
+    assert eng.counters["requeued"] == len(requests())
+    assert eng.counters["backend_failed"] == len(requests())
+    # fault churn leaked nothing
+    assert eng.pool.live_pages() == 0
+    # the engine still serves: swap in a clean backend, same instance
+    eng.backend = FaultyBackend(seed=0)
+    assert eng.submit({"id": 99, "prompt": [1, 2], "max_new": 2})
+    more = eng.serve()
+    assert any(i == 99 and reason == COMPLETED for i, _, reason in more)
+
+
+def test_fatal_fault_fails_only_the_affected_slots():
+    be = FaultyBackend(seed=0, fatal_at_step=4)
+    eng = Engine(be)
+    for r in requests():
+        assert eng.submit(r)
+    got = eng.serve()
+    assert be.fatal_errors == 1
+    assert len(got) == len(requests())
+    failed = sum(1 for _, _, reason in got if reason == BACKEND_ERROR)
+    completed = sum(1 for _, _, reason in got if reason == COMPLETED)
+    assert failed >= 1 and completed >= 1
+    assert failed + completed == len(got)
+    # the completed ones match the clean run exactly
+    clean = dict((i, t) for i, t, _ in clean_run())
+    for i, toks, reason in got:
+        if reason == COMPLETED:
+            assert toks == clean[i]
+
+
+def test_queue_cap_sheds_overflow_without_losing_requests():
+    eng = Engine(FaultyBackend(seed=0), queue_cap=2)
+    accepted = sum(1 for r in requests() if eng.submit(r))
+    assert accepted == 2
+    assert eng.counters["shed"] == 4
+    got = eng.serve()
+    assert len(got) == len(requests())  # every request answered
+    assert sum(1 for _, _, r in got if r == SHED) == 4
+    assert sum(1 for _, _, r in got if r == COMPLETED) == 2
+
+
+def test_queue_steps_deadline_expires_only_the_stale_tail():
+    eng = Engine(FaultyBackend(seed=0), max_queue_steps=0)
+    for r in requests():
+        assert eng.submit(r)
+    got = eng.serve()
+    assert len(got) == len(requests())
+    expired = sum(1 for _, _, r in got if r == DEADLINE)
+    completed = sum(1 for _, _, r in got if r == COMPLETED)
+    assert expired + completed == len(got)
+    assert completed >= 2, "the head of the queue admits fresh"
+    assert expired >= 1, "the waiting tail must expire"
+    assert eng.counters["deadline_expired"] == expired
+
+
+def test_drain_finishes_in_flight_and_sheds_new_submits():
+    eng = Engine(FaultyBackend(seed=0, step_rate=0.2), retry_max=6)
+    for r in requests(4):
+        assert eng.submit(r)
+    # a few steps in, drain: accepted work must still complete
+    eng.step()
+    eng.step()
+    eng.drain()
+    assert not eng.submit({"id": 51, "prompt": [3], "max_new": 1})
+    got = sorted(eng.done)
+    by_id = {i: reason for i, _, reason in got}
+    for r in requests(4):
+        assert by_id[r["id"]] == COMPLETED
+    assert by_id[51] == SHED
+    assert eng.pool.live_pages() == 0
+
+
+def test_rejected_requests_never_queue():
+    eng = Engine(FaultyBackend(seed=0))
+    assert not eng.submit({"id": 0, "prompt": [], "max_new": 3})
+    assert eng.done == [(0, None, REJECTED)]
+    assert not eng.has_work()

@@ -362,7 +362,7 @@ mod tests {
 
     #[test]
     fn step_ttft_records_first_token_step_once() {
-        use crate::coordinator::GenResponse;
+        use crate::coordinator::{FinishReason, GenResponse};
         let mut t = StepTtft::new();
         assert_eq!(t.mean(), 0.0);
         assert_eq!(t.quantile(0.5), 0);
@@ -371,6 +371,7 @@ mod tests {
             tokens: vec![0; generated],
             generated,
             latency: Duration::ZERO,
+            reason: FinishReason::Completed,
         };
         t.observe_done(3, &[resp(0, 2)]);
         t.observe_done(5, &[resp(0, 4), resp(1, 1), resp(2, 0)]);

@@ -1,0 +1,353 @@
+//! Seeded fault injection for the serving tier.
+//!
+//! [`FaultBackend`] wraps any [`StepBackend`] and injects deterministic,
+//! seeded faults from a [`FaultPlan`]: transient step errors, transient
+//! `prefill_chunk` failures, non-finite logits, per-step stalls, and one
+//! optional fatal error at a chosen step call. Every recovery path in the
+//! engine — bounded-backoff retry, retire-and-requeue from packed KV,
+//! NaN containment, fatal-fault slot failure — is testable on
+//! [`super::SynthBackend`] with no artifacts, and reproducible: the same
+//! plan against the same traffic injects the same faults at the same
+//! call sites on every run.
+//!
+//! # Transient vs fatal
+//!
+//! Injected transient faults carry a typed [`TransientFault`] root error;
+//! the engine classifies with [`is_transient`] (a `downcast_ref`, not
+//! string matching). Anything else — including the plan's `fatal_at_step`
+//! injection and every real backend error — is fatal: the engine does not
+//! retry it, and fails the affected slots with
+//! `FinishReason::BackendError` instead of killing the serve loop.
+//!
+//! # Determinism
+//!
+//! One RNG draw per fault gate per call, in a fixed order, whether or not
+//! the gate fires — so the fault schedule depends only on `(seed, call
+//! sequence)`. A retried call is a *new* call and draws fresh gates,
+//! which is what lets a transient fault clear on retry. [`FaultStats`]
+//! counts every injection; the fault-recovery tests assert the engine's
+//! `ServingMetrics` fault counters equal these exactly.
+
+use anyhow::Result;
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::{ChunkKv, StepBackend, StepOut};
+
+/// Typed root error for injected (and, in principle, real) transient
+/// backend failures — the marker [`is_transient`] classifies on.
+#[derive(Debug)]
+pub struct TransientFault(pub String);
+
+impl fmt::Display for TransientFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "transient backend fault: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransientFault {}
+
+/// Build a transient error (retryable by the engine).
+pub fn transient(msg: impl fmt::Display) -> anyhow::Error {
+    anyhow::Error::from(TransientFault(msg.to_string()))
+}
+
+/// True when the engine may retry the failed call: the error's root is a
+/// [`TransientFault`]. Everything else is fatal.
+pub fn is_transient(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<TransientFault>().is_some()
+}
+
+/// Deterministic, seeded fault schedule. All rates are probabilities per
+/// backend call, drawn from one seeded stream in a fixed gate order (see
+/// the module docs); `Default` injects nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a `step` call fails with a [`TransientFault`] before
+    /// reaching the inner backend.
+    pub step_error_rate: f64,
+    /// Probability a `prefill_chunk` call fails with a [`TransientFault`].
+    pub chunk_error_rate: f64,
+    /// Probability a successful `step` gets one lane's logits poisoned
+    /// with `NaN` (the lane is drawn from the same stream).
+    pub nan_rate: f64,
+    /// Probability a `step` call stalls for [`FaultPlan::stall`] first.
+    pub stall_rate: f64,
+    /// Injected stall duration (only with `stall_rate > 0`).
+    pub stall: Duration,
+    /// Inject one **fatal** (non-retryable) error at exactly this `step`
+    /// call (1-based count across the backend's lifetime).
+    pub fatal_at_step: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            step_error_rate: 0.0,
+            chunk_error_rate: 0.0,
+            nan_rate: 0.0,
+            stall_rate: 0.0,
+            stall: Duration::ZERO,
+            fatal_at_step: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Transient-step-errors-only plan (the bench fault sweep's shape).
+    pub fn transient_steps(seed: u64, rate: f64) -> Self {
+        FaultPlan { seed, step_error_rate: rate, ..FaultPlan::default() }
+    }
+
+    /// Parse a CLI/bench spec: comma-separated `key=value` with keys
+    /// `seed`, `step`, `chunk`, `nan`, `stall-rate` (probabilities in
+    /// `0..=1`), `stall-us`/`stall-ms` (duration), and `fatal-at` (step
+    /// call index). Example: `seed=7,step=0.05,nan=0.01,stall-ms=1`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad fault-plan entry {part} (want key=value)"))?;
+            let rate = |v: &str| -> Result<f64> {
+                v.parse::<f64>()
+                    .ok()
+                    .filter(|r| (0.0..=1.0).contains(r))
+                    .ok_or_else(|| anyhow::anyhow!("bad fault rate {v} (want 0..=1)"))
+            };
+            match key.trim() {
+                "seed" => plan.seed = val.parse()?,
+                "step" => plan.step_error_rate = rate(val)?,
+                "chunk" => plan.chunk_error_rate = rate(val)?,
+                "nan" => plan.nan_rate = rate(val)?,
+                "stall-rate" => plan.stall_rate = rate(val)?,
+                "stall-us" => plan.stall = Duration::from_micros(val.parse()?),
+                "stall-ms" => plan.stall = Duration::from_millis(val.parse()?),
+                "fatal-at" => plan.fatal_at_step = Some(val.parse()?),
+                other => anyhow::bail!("unknown fault-plan key {other}"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_noop(&self) -> bool {
+        self.step_error_rate == 0.0
+            && self.chunk_error_rate == 0.0
+            && self.nan_rate == 0.0
+            && self.stall_rate == 0.0
+            && self.fatal_at_step.is_none()
+    }
+}
+
+/// Counts of every fault actually injected — what the engine's
+/// `ServingMetrics` counters are asserted against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Transient `step` errors injected.
+    pub step_errors: u64,
+    /// Transient `prefill_chunk` errors injected.
+    pub chunk_errors: u64,
+    /// Steps whose logits got a poisoned lane.
+    pub nan_steps: u64,
+    /// Steps stalled before running.
+    pub stalls: u64,
+    /// Fatal errors injected (0 or 1).
+    pub fatal_errors: u64,
+}
+
+/// [`StepBackend`] wrapper injecting the plan's faults ahead of (or onto
+/// the output of) an inner backend. Obtain a [`FaultBackend::stats`]
+/// handle **before** boxing the wrapper into an engine — the handle stays
+/// live and counts every injection.
+pub struct FaultBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    rng: Rng,
+    stats: Rc<RefCell<FaultStats>>,
+    step_calls: u64,
+}
+
+impl<B: StepBackend> FaultBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        let rng = Rng::seeded(plan.seed);
+        FaultBackend { inner, plan, rng, stats: Rc::default(), step_calls: 0 }
+    }
+
+    /// Shared view of the injection counters (single-threaded, like the
+    /// engine itself).
+    pub fn stats(&self) -> Rc<RefCell<FaultStats>> {
+        self.stats.clone()
+    }
+
+    /// Draw one fault gate (always consumes a draw, even at rate 0, so
+    /// the schedule is a pure function of the seed and call sequence).
+    fn gate(&mut self, rate: f64) -> bool {
+        self.rng.f64() < rate
+    }
+}
+
+impl<B: StepBackend> StepBackend for FaultBackend<B> {
+    fn step(&mut self, tokens: &[i32], pos: &[i32], k: &[f32], v: &[f32]) -> Result<StepOut> {
+        self.step_calls += 1;
+        if self.plan.fatal_at_step == Some(self.step_calls) {
+            self.stats.borrow_mut().fatal_errors += 1;
+            anyhow::bail!("injected fatal backend failure (step call {})", self.step_calls);
+        }
+        // fixed gate order: stall, step error, nan lane (see module docs)
+        let stall = self.gate(self.plan.stall_rate);
+        let step_err = self.gate(self.plan.step_error_rate);
+        let nan = self.gate(self.plan.nan_rate);
+        let nan_lane = self.rng.below(tokens.len().max(1));
+        if stall {
+            self.stats.borrow_mut().stalls += 1;
+            if !self.plan.stall.is_zero() {
+                std::thread::sleep(self.plan.stall);
+            }
+        }
+        if step_err {
+            self.stats.borrow_mut().step_errors += 1;
+            return Err(transient(format!("injected step error (call {})", self.step_calls)));
+        }
+        let mut out = self.inner.step(tokens, pos, k, v)?;
+        if nan {
+            let vb = out.logits.len() / tokens.len().max(1);
+            for x in &mut out.logits[nan_lane * vb..(nan_lane + 1) * vb] {
+                *x = f32::NAN;
+            }
+            self.stats.borrow_mut().nan_steps += 1;
+        }
+        Ok(out)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<ChunkKv>> {
+        if self.gate(self.plan.chunk_error_rate) {
+            self.stats.borrow_mut().chunk_errors += 1;
+            return Err(transient(format!("injected prefill_chunk error (pos0 {pos0})")));
+        }
+        self.inner.prefill_chunk(tokens, pos0, k_lane, v_lane)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LmSpec;
+
+    #[test]
+    fn transient_classification_by_type_not_message() {
+        let t = transient("flaky link");
+        assert!(is_transient(&t));
+        assert!(format!("{t:#}").contains("flaky link"));
+        let fatal = anyhow::anyhow!("transient-sounding but untyped");
+        assert!(!is_transient(&fatal));
+    }
+
+    #[test]
+    fn plan_parses_and_rejects_junk() {
+        let p = FaultPlan::parse("seed=7,step=0.05,chunk=0.5,nan=0.01,stall-ms=2,stall-rate=1")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.step_error_rate, 0.05);
+        assert_eq!(p.chunk_error_rate, 0.5);
+        assert_eq!(p.nan_rate, 0.01);
+        assert_eq!(p.stall, Duration::from_millis(2));
+        assert_eq!(p.stall_rate, 1.0);
+        assert!(!p.is_noop());
+        assert_eq!(FaultPlan::parse("fatal-at=9").unwrap().fatal_at_step, Some(9));
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("step=1.5").is_err()); // rate out of range
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("step").is_err());
+    }
+
+    #[test]
+    fn injection_is_deterministic_and_counted() {
+        let spec = LmSpec::tiny();
+        let run = || {
+            let mut be = FaultBackend::new(
+                super::super::SynthBackend::new(&spec),
+                FaultPlan { seed: 11, step_error_rate: 0.5, ..FaultPlan::default() },
+            );
+            let stats = be.stats();
+            let lane = spec.n_layers * spec.seq_len * spec.d_model;
+            let (k, v) = (vec![0.0f32; lane], vec![0.0f32; lane]);
+            let outcomes: Vec<bool> =
+                (0..32).map(|i| be.step(&[i], &[0], &k, &v).is_ok()).collect();
+            (outcomes, *stats.borrow())
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b, "same seed must fault the same calls");
+        assert_eq!(sa, sb);
+        assert_eq!(sa.step_errors, a.iter().filter(|ok| !**ok).count() as u64);
+        assert!(sa.step_errors > 0 && sa.step_errors < 32, "rate 0.5 over 32 calls");
+    }
+
+    #[test]
+    fn nan_injection_poisons_exactly_one_lane() {
+        let spec = LmSpec::tiny();
+        let mut be = FaultBackend::new(
+            super::super::SynthBackend::new(&spec),
+            FaultPlan { seed: 3, nan_rate: 1.0, ..FaultPlan::default() },
+        );
+        let stats = be.stats();
+        let lane = spec.n_layers * spec.seq_len * spec.d_model;
+        let (k, v) = (vec![0.0f32; 2 * lane], vec![0.0f32; 2 * lane]);
+        let out = be.step(&[3, 5], &[0, 0], &k, &v).unwrap();
+        let vb = spec.vocab;
+        let poisoned = (0..2)
+            .filter(|b| out.logits[b * vb..(b + 1) * vb].iter().any(|x| !x.is_finite()))
+            .count();
+        assert_eq!(poisoned, 1);
+        assert_eq!(stats.borrow().nan_steps, 1);
+        // KV rows stay clean: only logits are poisoned
+        assert!(out.k_new.iter().chain(&out.v_new).all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn fatal_at_step_fires_once_and_is_not_transient() {
+        let spec = LmSpec::tiny();
+        let mut be = FaultBackend::new(
+            super::super::SynthBackend::new(&spec),
+            FaultPlan { seed: 1, fatal_at_step: Some(2), ..FaultPlan::default() },
+        );
+        let stats = be.stats();
+        let lane = spec.n_layers * spec.seq_len * spec.d_model;
+        let (k, v) = (vec![0.0f32; lane], vec![0.0f32; lane]);
+        assert!(be.step(&[1], &[0], &k, &v).is_ok());
+        let err = be.step(&[1], &[1], &k, &v).unwrap_err();
+        assert!(!is_transient(&err));
+        assert!(be.step(&[1], &[2], &k, &v).is_ok(), "fatal injection fires exactly once");
+        assert_eq!(stats.borrow().fatal_errors, 1);
+    }
+
+    #[test]
+    fn chunk_errors_gate_independently() {
+        let spec = LmSpec::tiny();
+        let mut be = FaultBackend::new(
+            super::super::SynthBackend::new(&spec),
+            FaultPlan { seed: 5, chunk_error_rate: 1.0, ..FaultPlan::default() },
+        );
+        let stats = be.stats();
+        let lane = spec.n_layers * spec.seq_len * spec.d_model;
+        let (k, v) = (vec![0.0f32; lane], vec![0.0f32; lane]);
+        let err = be.prefill_chunk(&[1, 2], 0, &k, &v).unwrap_err();
+        assert!(is_transient(&err));
+        assert_eq!(stats.borrow().chunk_errors, 1);
+        // step path unaffected by the chunk gate
+        assert!(be.step(&[1], &[0], &k, &v).is_ok());
+    }
+}

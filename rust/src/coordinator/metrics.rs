@@ -172,6 +172,32 @@ pub struct ServingMetrics {
     /// Pool pages referenced by ≥ 2 holders, sampled once per engine step
     /// while the prefix cache is enabled (the dedup gauge over time).
     pub shared_pages: Histogram,
+    /// Transient `step` faults absorbed (one per failed backend attempt,
+    /// retried or not). Under injection this equals the fault plan's
+    /// `step_errors` exactly.
+    pub step_faults: u64,
+    /// Transient `prefill_chunk` faults absorbed.
+    pub chunk_faults: u64,
+    /// Step outputs rejected for non-finite logits before sampling (one
+    /// per poisoned step attempt).
+    pub nan_faults: u64,
+    /// In-place retries performed (backoff sleeps taken) across step,
+    /// chunk, and NaN recovery.
+    pub retries: u64,
+    /// Slots retired by faults and requeued for bit-exact replay.
+    pub requeued: u64,
+    /// Requests failed with `FinishReason::BackendError` (fatal fault, or
+    /// transient churn past the retry/requeue budgets).
+    pub backend_failed: u64,
+    /// Requests shed by overload policy (queue at cap, or submitted while
+    /// draining) with `FinishReason::Shed`.
+    pub shed: u64,
+    /// Requests dropped at their deadline (wall clock or max queue steps)
+    /// with `FinishReason::Deadline`.
+    pub deadline_expired: u64,
+    /// Backoff slept per retry, in seconds (records zero-length backoffs
+    /// too, so `count == retries`).
+    pub retry_backoff: Histogram,
 }
 
 impl Default for ServingMetrics {
@@ -191,11 +217,25 @@ impl Default for ServingMetrics {
             prefix_misses: 0,
             prefix_rows: Histogram::for_counts(),
             shared_pages: Histogram::for_counts(),
+            step_faults: 0,
+            chunk_faults: 0,
+            nan_faults: 0,
+            retries: 0,
+            requeued: 0,
+            backend_failed: 0,
+            shed: 0,
+            deadline_expired: 0,
+            retry_backoff: Histogram::for_seconds(),
         }
     }
 }
 
 impl ServingMetrics {
+    /// Total faults absorbed across all injection/detection sites.
+    pub fn total_faults(&self) -> u64 {
+        self.step_faults + self.chunk_faults + self.nan_faults
+    }
+
     /// Fraction of prefix-cache lookups that adopted at least one row
     /// (0.0 when the cache is disabled or nothing was admitted).
     pub fn prefix_hit_rate(&self) -> f64 {
@@ -243,6 +283,21 @@ impl ServingMetrics {
                 self.prefix_rows.max(),
                 self.shared_pages.mean(),
                 self.shared_pages.max()
+            ));
+        }
+        if self.total_faults() + self.shed + self.deadline_expired > 0 {
+            out.push_str(&format!(
+                "\nfaults step/chunk/nan {}/{}/{}  retries {} (backoff p95 {:.2} ms)  \
+                 requeued {}  failed {}  shed {}  deadline {}",
+                self.step_faults,
+                self.chunk_faults,
+                self.nan_faults,
+                self.retries,
+                ms(self.retry_backoff.p95()),
+                self.requeued,
+                self.backend_failed,
+                self.shed,
+                self.deadline_expired
             ));
         }
         out
@@ -380,6 +435,16 @@ mod tests {
         m.prefix_misses = 1;
         m.prefix_rows.record(48.0);
         assert!(m.summary().contains("prefix cache hit rate 75% (3 of 4 lookups)"));
+        // fault line only renders once something went wrong
+        assert!(!m.summary().contains("faults"));
+        m.step_faults = 2;
+        m.nan_faults = 1;
+        m.retries = 3;
+        m.requeued = 1;
+        assert_eq!(m.total_faults(), 3);
+        let s = m.summary();
+        assert!(s.contains("faults step/chunk/nan 2/0/1"));
+        assert!(s.contains("requeued 1"));
     }
 
     #[test]

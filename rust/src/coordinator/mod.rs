@@ -66,6 +66,7 @@
 //! the dedup-aware footprint ([`Metrics::dedup_factor`]) improve on
 //! shared-prefix traffic.
 
+pub mod fault;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
@@ -93,6 +94,26 @@ pub struct GenRequest {
     pub max_new: usize,
 }
 
+/// Why a request's response was produced. Anything other than
+/// `Completed` is a policy or fault outcome; the response still carries
+/// whatever tokens were generated before the request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens (or filled the context window).
+    Completed,
+    /// Failed admission validation (empty or over-length prompt).
+    Rejected,
+    /// Dropped by overload policy: admission queue at `--queue-cap`, or
+    /// submitted while the server was draining.
+    Shed,
+    /// Missed its deadline (wall clock or max queue steps) — enforced at
+    /// admission and per step.
+    Deadline,
+    /// A backend fault the retry/requeue policy could not absorb killed
+    /// this slot (the engine itself keeps serving).
+    BackendError,
+}
+
 /// Completed generation.
 #[derive(Clone, Debug)]
 pub struct GenResponse {
@@ -103,6 +124,8 @@ pub struct GenResponse {
     /// Arrival → completion (queue wait included under the continuous
     /// scheduler; wave mode stamps arrival at wave start).
     pub latency: Duration,
+    /// How the request left the engine (`Completed` is the happy path).
+    pub reason: FinishReason,
 }
 
 /// Aggregate serving metrics.
@@ -162,6 +185,23 @@ impl Metrics {
 /// always an explicit opt-in ([`DecodeEngine::set_prefill_budget`]).
 pub const DEFAULT_PREFILL_BUDGET: usize = 64;
 
+/// Default bound on transient-fault retries per backend call
+/// (`--retry-max`). Attempt `n` backs off `base * 2^(n-1)`, capped at
+/// [`MAX_RETRY_BACKOFF`]; exhaustion retires the affected slots.
+pub const DEFAULT_RETRY_MAX: u32 = 3;
+
+/// Ceiling on one exponential-backoff sleep between retries.
+pub const MAX_RETRY_BACKOFF: Duration = Duration::from_millis(50);
+
+/// Default first-retry backoff (attempt `n` waits `2^(n-1)` times this).
+pub const DEFAULT_RETRY_BACKOFF: Duration = Duration::from_micros(100);
+
+/// How many times one request may be requeued after slot-killing faults
+/// before the engine gives up and fails it with
+/// [`FinishReason::BackendError`] — bounds churn under a persistently
+/// faulting backend.
+pub const DEFAULT_REQUEUE_MAX: u32 = 8;
+
 /// Output of one batched decode step.
 pub struct StepOut {
     /// `[B, V]` next-token logits.
@@ -216,6 +256,25 @@ pub trait StepBackend {
     ) -> Result<Option<ChunkKv>> {
         let _ = (tokens, pos0, k_lane, v_lane);
         Ok(None)
+    }
+}
+
+/// Delegation so wrappers generic over `B: StepBackend` — notably
+/// [`fault::FaultBackend`] — can wrap an engine's boxed backend without
+/// knowing its concrete type.
+impl StepBackend for Box<dyn StepBackend> {
+    fn step(&mut self, tokens: &[i32], pos: &[i32], k: &[f32], v: &[f32]) -> Result<StepOut> {
+        (**self).step(tokens, pos, k, v)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<ChunkKv>> {
+        (**self).prefill_chunk(tokens, pos0, k_lane, v_lane)
     }
 }
 
@@ -556,6 +615,22 @@ pub struct Slot {
     /// at the prompt→decode transition, when the packed pages cover
     /// exactly the prompt rows).
     prefix_registered: bool,
+    /// How many times this request has already been requeued by
+    /// slot-killing faults (bounds fault churn; see
+    /// [`DecodeEngine::set_requeue_max`]).
+    requeues: u32,
+}
+
+/// A faulted slot's request on its way back to the scheduler queue. The
+/// original arrival survives — latency spans the whole ordeal — and the
+/// requeue count bounds how often one request may churn. Re-admission
+/// replays the prompt prefill from scratch (or from the prefix cache's
+/// packed pages); deterministic encoding plus greedy sampling make the
+/// replayed generation bit-identical to an undisturbed run.
+pub struct Requeue {
+    pub req: GenRequest,
+    pub arrival: Instant,
+    pub requeues: u32,
 }
 
 impl Slot {
@@ -601,6 +676,18 @@ pub struct DecodeEngine {
     /// Per-step token budget for chunked prefill (see
     /// [`DecodeEngine::set_prefill_budget`]); 1 = unchunked.
     prefill_budget: usize,
+    /// Transient-fault retries per backend call before the affected slots
+    /// are retired (see [`DecodeEngine::set_retry_policy`]).
+    retry_max: u32,
+    /// First retry's backoff; attempt `n` waits `base * 2^(n-1)` capped
+    /// at [`MAX_RETRY_BACKOFF`].
+    retry_backoff_base: Duration,
+    /// Requeues one request may survive before a slot-killing fault fails
+    /// it with [`FinishReason::BackendError`].
+    requeue_max: u32,
+    /// Per-request wall-clock deadline, enforced at admission and per
+    /// step (`None` = no deadline).
+    deadline: Option<Duration>,
     /// Shared page pool every quantized slot's caches borrow from — the
     /// substrate of cross-slot prefix sharing (unused in FP32 baseline
     /// mode, where slots carry no packed caches at all).
@@ -663,6 +750,10 @@ impl DecodeEngine {
             metrics: Metrics::default(),
             serving: ServingMetrics::default(),
             prefill_budget: 1,
+            retry_max: DEFAULT_RETRY_MAX,
+            retry_backoff_base: DEFAULT_RETRY_BACKOFF,
+            requeue_max: DEFAULT_REQUEUE_MAX,
+            deadline: None,
             pool: Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS))),
             k_f32: vec![0.0; n],
             v_f32: vec![0.0; n],
@@ -702,6 +793,51 @@ impl DecodeEngine {
         self.prefill_budget
     }
 
+    /// Set the transient-fault retry policy: up to `max` retries per
+    /// backend call, attempt `n` backing off `base * 2^(n-1)` (capped at
+    /// [`MAX_RETRY_BACKOFF`]). `max` 0 disables in-place retry — every
+    /// transient fault immediately retires the affected slots (they still
+    /// requeue under the continuous scheduler). Tests pass
+    /// `Duration::ZERO` as `base` to retry without sleeping.
+    pub fn set_retry_policy(&mut self, max: u32, base: Duration) {
+        self.retry_max = max;
+        self.retry_backoff_base = base;
+    }
+
+    /// Bound how many times one request may be requeued by slot-killing
+    /// faults before it fails with [`FinishReason::BackendError`].
+    pub fn set_requeue_max(&mut self, max: u32) {
+        self.requeue_max = max;
+    }
+
+    /// Per-request wall-clock deadline (`None` = none). Enforced at
+    /// admission (a request that expired in the queue never takes a
+    /// lane) and per continuous step (an in-flight request past its
+    /// deadline is dropped with [`FinishReason::Deadline`] and its
+    /// partial output shipped).
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    /// Wrap the current backend in a [`fault::FaultBackend`] injecting
+    /// `plan` (bench/test only — this is how `--fault-plan` and the fault
+    /// sweep exercise the recovery paths on any backend). Returns the
+    /// injection counters; the engine's own `ServingMetrics` fault
+    /// counters are asserted against them in the fault-recovery tests.
+    pub fn inject_faults(&mut self, plan: &fault::FaultPlan) -> Rc<RefCell<fault::FaultStats>> {
+        struct Placeholder;
+        impl StepBackend for Placeholder {
+            fn step(&mut self, _: &[i32], _: &[i32], _: &[f32], _: &[f32]) -> Result<StepOut> {
+                anyhow::bail!("placeholder backend stepped")
+            }
+        }
+        let inner = std::mem::replace(&mut self.backend, Box::new(Placeholder));
+        let wrapped = fault::FaultBackend::new(inner, plan.clone());
+        let stats = wrapped.stats();
+        self.backend = Box::new(wrapped);
+        stats
+    }
+
     /// Elements in one `[L, S, D]` lane.
     fn lane_len(&self) -> usize {
         self.spec.n_layers * self.spec.seq_len * self.spec.d_model
@@ -730,12 +866,151 @@ impl DecodeEngine {
             tokens: req.prompt.clone(),
             generated: 0,
             latency: Duration::ZERO,
+            reason: FinishReason::Rejected,
         })
     }
 
     /// The engine's resolved KV plans (`None` = FP32 baseline).
     pub fn kv_plans(&self) -> Option<&KvPlans> {
         self.kv.as_ref()
+    }
+
+    /// Record one retry and sleep attempt `n`'s capped exponential
+    /// backoff (`base * 2^(n-1)`, at most [`MAX_RETRY_BACKOFF`]).
+    fn backoff(&mut self, attempt: u32) {
+        self.serving.retries += 1;
+        let exp = self.retry_backoff_base.saturating_mul(1u32 << (attempt - 1).min(20));
+        let wait = exp.min(MAX_RETRY_BACKOFF);
+        self.serving.retry_backoff.record(wait.as_secs_f64());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+
+    /// Run the batched step, retrying transient faults in place with
+    /// bounded backoff. In-place retry is bit-exact: a failed call
+    /// mutates no engine state, the inputs are unchanged, and re-running
+    /// the watermark sync would be a no-op — so the retried call is the
+    /// same call. Returns `Err` only on a fatal error or after
+    /// `retry_max` transient failures (every failed attempt counts into
+    /// `serving.step_faults`).
+    fn step_with_retry(&mut self, tokens: &[i32], pos: &[i32]) -> Result<StepOut> {
+        let mut attempt = 0u32;
+        loop {
+            match self.backend.step(tokens, pos, &self.k_f32, &self.v_f32) {
+                Ok(out) => return Ok(out),
+                Err(e) if fault::is_transient(&e) => {
+                    self.serving.step_faults += 1;
+                    attempt += 1;
+                    if attempt > self.retry_max {
+                        return Err(e);
+                    }
+                    self.backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// [`DecodeEngine::step_with_retry`]'s twin for the native
+    /// multi-token prefill path (failed attempts count into
+    /// `serving.chunk_faults`).
+    fn chunk_with_retry(&mut self, toks: &[i32], pos0: usize, b: usize) -> Result<Option<ChunkKv>> {
+        let lane = self.lane_len();
+        let mut attempt = 0u32;
+        loop {
+            let r = self.backend.prefill_chunk(
+                toks,
+                pos0,
+                &self.k_f32[b * lane..(b + 1) * lane],
+                &self.v_f32[b * lane..(b + 1) * lane],
+            );
+            match r {
+                Ok(out) => return Ok(out),
+                Err(e) if fault::is_transient(&e) => {
+                    self.serving.chunk_faults += 1;
+                    attempt += 1;
+                    if attempt > self.retry_max {
+                        return Err(e);
+                    }
+                    self.backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Retire lane `b`'s slot after a fault the retry policy could not
+    /// absorb: drop its packed KV (page references release immediately —
+    /// adopted prefix pages included), zero the lane, and either push a
+    /// [`Requeue`] for bit-exact replay or fail the request with
+    /// [`FinishReason::BackendError`] (requeue disallowed, fatal error,
+    /// or the request's requeue budget spent).
+    fn retire_faulted(
+        &mut self,
+        slots: &mut [Option<Slot>],
+        b: usize,
+        done: &mut Vec<GenResponse>,
+        requeue: &mut Vec<Requeue>,
+        allow_requeue: bool,
+        why: &str,
+    ) {
+        let lane = self.lane_len();
+        let sl = slots[b].take().expect("retire_faulted: empty lane");
+        self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
+        self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
+        if allow_requeue && sl.requeues < self.requeue_max {
+            self.serving.requeued += 1;
+            requeue.push(Requeue {
+                req: sl.req,
+                arrival: sl.arrival,
+                requeues: sl.requeues + 1,
+            });
+            return;
+        }
+        eprintln!("[serve] request {} failed ({why}), requeues {}", sl.req.id, sl.requeues);
+        self.serving.backend_failed += 1;
+        let generated = sl.output.len() - sl.req.prompt.len();
+        let latency = sl.arrival.elapsed();
+        self.serving.latency.record(latency.as_secs_f64());
+        done.push(GenResponse {
+            id: sl.req.id,
+            tokens: sl.output,
+            generated,
+            latency,
+            reason: FinishReason::BackendError,
+        });
+        self.metrics.requests += 1;
+    }
+
+    /// Enforce the wall-clock deadline on occupied lanes: an expired slot
+    /// is dropped mid-flight with [`FinishReason::Deadline`] (partial
+    /// output shipped, packed pages released, lane zeroed and freed).
+    fn expire_slots(&mut self, slots: &mut [Option<Slot>], done: &mut Vec<GenResponse>) {
+        let Some(deadline) = self.deadline else { return };
+        let lane = self.lane_len();
+        for b in 0..slots.len() {
+            let expired =
+                slots[b].as_ref().map_or(false, |sl| sl.arrival.elapsed() > deadline);
+            if !expired {
+                continue;
+            }
+            let sl = slots[b].take().unwrap();
+            self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
+            self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
+            self.serving.deadline_expired += 1;
+            let generated = sl.output.len() - sl.req.prompt.len();
+            let latency = sl.arrival.elapsed();
+            self.serving.latency.record(latency.as_secs_f64());
+            done.push(GenResponse {
+                id: sl.req.id,
+                tokens: sl.output,
+                generated,
+                latency,
+                reason: FinishReason::Deadline,
+            });
+            self.metrics.requests += 1;
+        }
     }
 
     fn make_slot(&self, req: GenRequest, arrival: Instant) -> Slot {
@@ -752,6 +1027,7 @@ impl DecodeEngine {
             fill: 0,
             chunk_fed: 0,
             prefix_registered: false,
+            requeues: 0,
             req,
         }
     }
@@ -771,11 +1047,21 @@ impl DecodeEngine {
     /// token: that one is fed by phase B, whose logits are sampled, so
     /// the sampling step sees the identical lane state the unchunked
     /// schedule builds (the chunk-invariance contract).
-    fn chunk_prefill(&mut self, slots: &mut [Option<Slot>]) -> Result<()> {
+    /// Chunk failures are contained per lane: a transient
+    /// `prefill_chunk` fault that outlives the retry budget (or a fatal
+    /// one) retires only the slot it was feeding — the other lanes'
+    /// chunks and the batched step proceed untouched.
+    fn chunk_prefill(
+        &mut self,
+        slots: &mut [Option<Slot>],
+        done: &mut Vec<GenResponse>,
+        requeue: &mut Vec<Requeue>,
+        allow_requeue: bool,
+    ) {
         let occupied = slots.iter().filter(|s| s.is_some()).count();
         let mut extra = self.prefill_budget.saturating_sub(occupied);
         if extra == 0 {
-            return Ok(());
+            return;
         }
         let mut order: Vec<(usize, usize)> = slots
             .iter()
@@ -794,15 +1080,28 @@ impl DecodeEngine {
                 break;
             }
             let n = extra.min(rem - 1);
-            if !self.feed_chunk_native(slots, b, n)? {
-                looped.push((b, n));
+            match self.feed_chunk_native(slots, b, n) {
+                Ok(true) => {}
+                Ok(false) => looped.push((b, n)),
+                Err(e) => {
+                    // the failed call mutated nothing: retire just this
+                    // lane (requeue replays its prefill bit-exactly)
+                    let transient = fault::is_transient(&e);
+                    self.retire_faulted(
+                        slots,
+                        b,
+                        done,
+                        requeue,
+                        allow_requeue && transient,
+                        &format!("prefill chunk: {e:#}"),
+                    );
+                }
             }
             extra -= n;
         }
         if !looped.is_empty() {
-            self.feed_chunk_looped(slots, &looped)?;
+            self.feed_chunk_looped(slots, &looped, done, requeue, allow_requeue);
         }
-        Ok(())
     }
 
     /// Feed `n` prompt tokens of the slot in lane `b` through the
@@ -831,17 +1130,13 @@ impl DecodeEngine {
                 &mut self.v_f32[b * lane..(b + 1) * lane],
             );
         }
-        let toks = &sl.req.prompt[sl.cursor..sl.cursor + n];
+        let toks: Vec<i32> = sl.req.prompt[sl.cursor..sl.cursor + n].to_vec();
         let pos0 = sl.fill;
-        let chunk = self.backend.prefill_chunk(
-            toks,
-            pos0,
-            &self.k_f32[b * lane..(b + 1) * lane],
-            &self.v_f32[b * lane..(b + 1) * lane],
-        )?;
+        let chunk = self.chunk_with_retry(&toks, pos0, b)?;
         let Some(ck) = chunk else {
             return Ok(false);
         };
+        let sl = slots[b].as_mut().expect("feed_chunk: empty lane");
         debug_assert_eq!(ck.k_rows.len(), l * n * d);
         debug_assert_eq!(ck.v_rows.len(), l * n * d);
         if let Some(kv) = &mut sl.kv {
@@ -874,7 +1169,10 @@ impl DecodeEngine {
         &mut self,
         slots: &mut [Option<Slot>],
         chunks: &[(usize, usize)],
-    ) -> Result<()> {
+        done: &mut Vec<GenResponse>,
+        requeue: &mut Vec<Requeue>,
+        allow_requeue: bool,
+    ) {
         let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
         let lane = self.lane_len();
         let rounds = chunks.iter().map(|&(_, n)| n).max().unwrap_or(0);
@@ -895,7 +1193,28 @@ impl DecodeEngine {
                     );
                 }
             }
-            let out = self.backend.step(&tokens, &pos, &self.k_f32, &self.v_f32)?;
+            let out = match self.step_with_retry(&tokens, &pos) {
+                Ok(out) => out,
+                Err(e) => {
+                    // rounds 0..i committed cleanly (per-slot purity):
+                    // lanes whose chunk already finished keep their
+                    // state; only the still-chunking lanes retire
+                    let transient = fault::is_transient(&e);
+                    for &(b, n) in chunks {
+                        if i < n && slots[b].is_some() {
+                            self.retire_faulted(
+                                slots,
+                                b,
+                                done,
+                                requeue,
+                                allow_requeue && transient,
+                                &format!("prefill loop: {e:#}"),
+                            );
+                        }
+                    }
+                    return;
+                }
+            };
             self.metrics.decode_steps += 1;
             for &(b, n) in chunks {
                 if i >= n {
@@ -918,18 +1237,29 @@ impl DecodeEngine {
                 sl.chunk_fed += 1;
             }
         }
-        Ok(())
     }
 
     /// One batched decode step over every occupied lane: sync quantized KV
     /// incrementally into the slabs, run the backend, append the fresh KV
     /// rows, advance prefill cursors, sample greedily, and retire finished
     /// slots (their lanes are zeroed and freed for the next admission).
+    ///
+    /// Backend faults never escape: transient step errors retry in place
+    /// with bounded backoff (bit-exact — see
+    /// [`DecodeEngine::step_with_retry`]); exhaustion retires every
+    /// occupied slot into `requeue` for replay; non-finite logits are
+    /// detected **before sampling**, retried like a transient fault, and
+    /// on exhaustion retire only the poisoned lanes (per-slot purity lets
+    /// the clean lanes commit the same output); a fatal error fails every
+    /// occupied slot with [`FinishReason::BackendError`] while the engine
+    /// itself keeps serving.
     fn step_slots(
         &mut self,
         slots: &mut [Option<Slot>],
         done: &mut Vec<GenResponse>,
-    ) -> Result<()> {
+        requeue: &mut Vec<Requeue>,
+        allow_requeue: bool,
+    ) {
         let (l, s, d, vb) =
             (self.spec.n_layers, self.spec.seq_len, self.spec.d_model, self.spec.vocab);
         let bsz = self.max_batch;
@@ -955,7 +1285,84 @@ impl DecodeEngine {
                 );
             }
         }
-        let out = self.backend.step(&tokens, &pos, &self.k_f32, &self.v_f32)?;
+        let mut nan_attempts = 0u32;
+        let out = loop {
+            match self.step_with_retry(&tokens, &pos) {
+                Ok(out) => {
+                    // poisoned logits are a backend fault caught before
+                    // sampling, never shipped as garbage tokens (greedy
+                    // argmax would also panic on NaN); every lane is
+                    // scanned — non-finite output anywhere means the
+                    // backend misbehaved, occupied or not
+                    let poisoned: Vec<usize> = (0..bsz)
+                        .filter(|&b| {
+                            out.logits[b * vb..(b + 1) * vb].iter().any(|x| !x.is_finite())
+                        })
+                        .collect();
+                    if poisoned.is_empty() {
+                        break out;
+                    }
+                    self.serving.nan_faults += 1;
+                    nan_attempts += 1;
+                    if nan_attempts <= self.retry_max {
+                        // inputs unchanged: the re-run recomputes clean
+                        // lanes bit-identically
+                        self.backoff(nan_attempts);
+                        continue;
+                    }
+                    // exhausted: only the poisoned occupied lanes retire;
+                    // per-slot purity lets the clean lanes commit this
+                    // output (an empty poisoned lane is never sampled)
+                    for b in poisoned {
+                        if slots[b].is_some() {
+                            self.retire_faulted(
+                                slots,
+                                b,
+                                done,
+                                requeue,
+                                allow_requeue,
+                                "non-finite logits",
+                            );
+                        }
+                    }
+                    break out;
+                }
+                Err(e) if fault::is_transient(&e) => {
+                    // retry budget spent: requeue every occupied slot for
+                    // bit-exact replay and abandon this step — the engine
+                    // keeps serving
+                    for b in 0..bsz {
+                        if slots[b].is_some() {
+                            self.retire_faulted(
+                                slots,
+                                b,
+                                done,
+                                requeue,
+                                allow_requeue,
+                                &format!("step retries exhausted: {e:#}"),
+                            );
+                        }
+                    }
+                    return;
+                }
+                Err(e) => {
+                    // fatal: fail every occupied slot, keep the engine up
+                    for b in 0..bsz {
+                        if slots[b].is_some() {
+                            self.retire_faulted(
+                                slots,
+                                b,
+                                done,
+                                requeue,
+                                false,
+                                &format!("fatal backend error: {e:#}"),
+                            );
+                        }
+                    }
+                    return;
+                }
+            }
+        };
         self.metrics.decode_steps += 1;
 
         // per-step prefill-vs-decode token split (phase-A chunks count
@@ -1027,7 +1434,13 @@ impl DecodeEngine {
                 self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
                 let latency = sl.arrival.elapsed();
                 self.serving.latency.record(latency.as_secs_f64());
-                done.push(GenResponse { id: sl.req.id, generated, tokens: sl.output, latency });
+                done.push(GenResponse {
+                    id: sl.req.id,
+                    generated,
+                    tokens: sl.output,
+                    latency,
+                    reason: FinishReason::Completed,
+                });
                 self.metrics.requests += 1;
             }
         }
@@ -1035,15 +1448,28 @@ impl DecodeEngine {
             self.serving.step_prefill_tokens.record(prefill_toks as f64);
             self.serving.step_decode_tokens.record(decode_toks as f64);
         }
-        Ok(())
     }
 
-    /// Serve a wave of up to `max_batch` requests to completion (the
-    /// legacy scheduling mode: every lane is held until the whole wave
-    /// drains). Invalid requests are rejected individually — they complete
-    /// immediately with `generated == 0` and do not abort the wave.
-    pub fn serve_wave(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
-        assert!(reqs.len() <= self.max_batch);
+    /// Serve requests wave-at-a-time (the legacy scheduling mode: every
+    /// lane is held until the whole wave drains). More than `max_batch`
+    /// requests run as sequential sub-waves — the historical
+    /// oversized-input panic is gone. Invalid requests are rejected
+    /// individually — they complete immediately with `generated == 0` and
+    /// do not abort the wave. Wave mode has no queue to requeue into, so
+    /// faults that outlive the retry budget fail their slots with
+    /// [`FinishReason::BackendError`].
+    pub fn serve_wave(&mut self, mut reqs: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        let mut responses = Vec::new();
+        while reqs.len() > self.max_batch {
+            let rest = reqs.split_off(self.max_batch);
+            responses.extend(self.serve_one_wave(std::mem::replace(&mut reqs, rest)));
+        }
+        responses.extend(self.serve_one_wave(reqs));
+        Ok(responses)
+    }
+
+    fn serve_one_wave(&mut self, reqs: Vec<GenRequest>) -> Vec<GenResponse> {
+        debug_assert!(reqs.len() <= self.max_batch);
         let wave_start = Instant::now();
         let mut responses = Vec::new();
         let mut slots: Vec<Option<Slot>> = Vec::with_capacity(self.max_batch);
@@ -1057,21 +1483,44 @@ impl DecodeEngine {
             }
         }
         slots.resize_with(self.max_batch, || None);
+        let mut no_requeue = Vec::new();
         while slots.iter().any(Option::is_some) {
-            self.chunk_prefill(&mut slots)?;
-            self.step_slots(&mut slots, &mut responses)?;
+            self.expire_slots(&mut slots, &mut responses);
+            self.chunk_prefill(&mut slots, &mut responses, &mut no_requeue, false);
+            if slots.iter().any(Option::is_some) {
+                self.step_slots(&mut slots, &mut responses, &mut no_requeue, false);
+            }
         }
+        debug_assert!(no_requeue.is_empty());
         self.metrics.wall += wave_start.elapsed();
-        Ok(responses)
+        responses
     }
 
     /// Fill free lanes from the scheduler queue. Validation rejections
-    /// complete immediately into `done` without consuming a lane.
+    /// and queue-expired deadlines complete immediately into `done`
+    /// without consuming a lane.
     fn admit(&mut self, sched: &mut Scheduler, done: &mut Vec<GenResponse>) {
         while let Some(b) = sched.free_lane() {
             let Some(adm) = sched.pop_next() else { break };
             if let Some(resp) = self.validate(&adm.req) {
                 done.push(resp);
+                continue;
+            }
+            // deadline enforcement at admission: the scheduler tracked
+            // the queue-steps bound; the wall clock is checked here
+            let wall_expired = self.deadline.map_or(false, |d| adm.arrival.elapsed() > d);
+            if adm.expired || wall_expired {
+                self.serving.deadline_expired += 1;
+                let latency = adm.arrival.elapsed();
+                self.serving.latency.record(latency.as_secs_f64());
+                done.push(GenResponse {
+                    id: adm.req.id,
+                    tokens: adm.req.prompt,
+                    generated: 0,
+                    latency,
+                    reason: FinishReason::Deadline,
+                });
+                self.metrics.requests += 1;
                 continue;
             }
             self.serving.admitted += 1;
@@ -1080,6 +1529,7 @@ impl DecodeEngine {
             }
             self.serving.wait_steps.record(adm.waited_steps as f64);
             let mut slot = self.make_slot(adm.req, adm.arrival);
+            slot.requeues = adm.requeues;
             // prefix-cache hit: map the shared prefix's packed pages into
             // the fresh slot (refcount-only) and skip its prefill — the
             // remaining suffix goes through the ordinary budgeted path
@@ -1108,10 +1558,19 @@ impl DecodeEngine {
     pub fn step_continuous(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
         let t0 = Instant::now();
         let mut done = Vec::new();
+        let mut requeue = Vec::new();
+        self.expire_slots(sched.slots_mut(), &mut done);
         self.admit(sched, &mut done);
         if sched.active() > 0 {
-            self.chunk_prefill(sched.slots_mut())?;
-            self.step_slots(sched.slots_mut(), &mut done)?;
+            self.chunk_prefill(sched.slots_mut(), &mut done, &mut requeue, true);
+            if sched.active() > 0 {
+                self.step_slots(sched.slots_mut(), &mut done, &mut requeue, true);
+            }
+        }
+        // faulted slots' requests go back to the *front* of the queue:
+        // re-admission replays their prefill from packed KV bit-exactly
+        for r in requeue {
+            sched.requeue(r);
         }
         // offer freshly finished prefills to the prefix cache (no-op when
         // the cache is disabled) and sample the shared-page gauge
@@ -1472,19 +1931,101 @@ mod tests {
             GenRequest { id: 1, prompt: vec![5], max_new: 2 },
             GenRequest { id: 2, prompt: vec![], max_new: 2 }, // rejected
         ];
-        // 3 reqs > max_batch 2 would assert; split waves
-        let mut resps = engine.serve_wave(reqs[..2].to_vec()).unwrap();
-        resps.extend(engine.serve_wave(reqs[2..].to_vec()).unwrap());
+        // 3 reqs > max_batch 2: serve_wave splits into sequential
+        // sub-waves instead of asserting (the historical panic)
+        let resps = engine.serve_wave(reqs).unwrap();
         assert_eq!(resps.len(), 3);
         let by_id = |id: u64| resps.iter().find(|r| r.id == id).unwrap();
         assert_eq!(by_id(0).generated, 4);
+        assert_eq!(by_id(0).reason, FinishReason::Completed);
         assert_eq!(by_id(1).generated, 2);
         assert_eq!(by_id(2).generated, 0);
+        assert_eq!(by_id(2).reason, FinishReason::Rejected);
         assert_eq!(engine.metrics.requests, 2);
         assert_eq!(engine.serving.rejected, 1);
         assert!(engine.metrics.kv_savings() > 0.5);
         // free lanes are zero after the waves drained
         let (k0, v0) = engine.lane(0);
         assert!(k0.iter().chain(v0).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn wave_transient_faults_retry_to_bit_identical_tokens() {
+        let spec = LmSpec::tiny();
+        let policy = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let reqs = vec![
+            GenRequest { id: 0, prompt: vec![1, 2, 3, 4], max_new: 5 },
+            GenRequest { id: 1, prompt: vec![9, 8], max_new: 3 },
+        ];
+        let clean = {
+            let mut eng = DecodeEngine::with_backend(
+                spec.clone(),
+                Box::new(SynthBackend::new(&spec)),
+                &policy,
+                2,
+            );
+            eng.serve_wave(reqs.clone()).unwrap()
+        };
+        let mut eng = DecodeEngine::with_backend(
+            spec.clone(),
+            Box::new(SynthBackend::new(&spec)),
+            &policy,
+            2,
+        );
+        eng.set_retry_policy(6, Duration::ZERO);
+        let stats = eng.inject_faults(&fault::FaultPlan {
+            seed: 21,
+            step_error_rate: 0.3,
+            nan_rate: 0.1,
+            ..fault::FaultPlan::default()
+        });
+        let faulted = eng.serve_wave(reqs).unwrap();
+        assert!(stats.borrow().step_errors > 0, "plan must actually fire");
+        assert_eq!(eng.serving.step_faults, stats.borrow().step_errors);
+        assert_eq!(eng.serving.nan_faults, stats.borrow().nan_steps);
+        assert_eq!(eng.serving.backend_failed, 0, "rate 0.3 cannot beat 6 retries here");
+        for (c, f) in clean.iter().zip(&faulted) {
+            assert_eq!(c.id, f.id);
+            assert_eq!(c.tokens, f.tokens, "request {} diverged under faults", c.id);
+            assert_eq!(f.reason, FinishReason::Completed);
+        }
+    }
+
+    #[test]
+    fn wave_fault_without_retry_budget_fails_slots_not_engine() {
+        // wave mode has no queue: retry budget 0 means the first
+        // transient fault downgrades every occupied slot to BackendError
+        // — but the engine survives and serves the next wave cleanly
+        let spec = LmSpec::tiny();
+        let policy = QuantPolicy::uniform(NxConfig::nxfp(4));
+        let mut eng = DecodeEngine::with_backend(
+            spec.clone(),
+            Box::new(SynthBackend::new(&spec)),
+            &policy,
+            2,
+        );
+        eng.set_retry_policy(0, Duration::ZERO);
+        eng.inject_faults(&fault::FaultPlan {
+            seed: 2,
+            step_error_rate: 1.0,
+            ..fault::FaultPlan::default()
+        });
+        let req = GenRequest { id: 7, prompt: vec![1, 2], max_new: 3 };
+        let resps = eng.serve_wave(vec![req.clone()]).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].reason, FinishReason::BackendError);
+        assert_eq!(eng.serving.backend_failed, 1);
+        // pages released, lane zeroed
+        assert_eq!(eng.page_pool().borrow().live_pages(), 0);
+        let (k0, v0) = eng.lane(0);
+        assert!(k0.iter().chain(v0).all(|&x| x == 0.0));
+        // a fault-free engine after the storm: swap in a clean backend
+        let mut clean = DecodeEngine::with_backend(
+            spec.clone(),
+            Box::new(SynthBackend::new(&spec)),
+            &policy,
+            2,
+        );
+        assert_eq!(clean.serve_wave(vec![req]).unwrap()[0].reason, FinishReason::Completed);
     }
 }

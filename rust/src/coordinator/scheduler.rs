@@ -68,7 +68,7 @@ use std::time::Instant;
 
 use crate::quant::page::{PageId, PagePool};
 
-use super::{GenRequest, Slot, SlotState};
+use super::{GenRequest, Requeue, Slot, SlotState};
 
 /// Which serving loop the front-end drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +96,9 @@ struct Queued {
     req: GenRequest,
     arrival: Instant,
     enq_step: u64,
+    /// Times this request has already been requeued by slot-killing
+    /// faults (0 for fresh arrivals).
+    requeues: u32,
 }
 
 /// What `pop_next` decided, so the engine can account promotions.
@@ -106,6 +109,12 @@ pub struct Admission {
     pub waited_steps: u64,
     /// True when the anti-starvation rule overrode the greedy pick.
     pub promoted: bool,
+    /// Requeue count carried through from a faulted slot.
+    pub requeues: u32,
+    /// True when the request waited past the max-queue-steps deadline
+    /// ([`Scheduler::set_max_queue_steps`]) — the engine answers it with
+    /// `FinishReason::Deadline` instead of admitting it.
+    pub expired: bool,
 }
 
 /// One registered prefill: the prompt's per-layer page tables, with one
@@ -302,6 +311,14 @@ pub struct Scheduler {
     /// Radix prefix cache over completed prefills; `None` until the
     /// front-end opts in via [`Scheduler::enable_prefix_cache`].
     prefix: Option<PrefixCache>,
+    /// Bounded-admission cap: [`Scheduler::enqueue`] sheds arrivals once
+    /// the queue holds this many (`usize::MAX` = unbounded). Requeues of
+    /// already-admitted work are exempt — a faulted slot's request never
+    /// turns into a shed.
+    queue_cap: usize,
+    /// Queue-steps deadline: a request that waits more than this many
+    /// engine steps pops as [`Admission::expired`] (`None` = no bound).
+    max_queue_steps: Option<u64>,
     /// Requests enqueued over the scheduler's lifetime.
     pub enqueued: u64,
 }
@@ -323,8 +340,24 @@ impl Scheduler {
             step: 0,
             prefill_budget: 1,
             prefix: None,
+            queue_cap: usize::MAX,
+            max_queue_steps: None,
             enqueued: 0,
         }
+    }
+
+    /// Bound the admission queue (`--queue-cap`); `usize::MAX` (the
+    /// default) never sheds. Clamped to at least 1.
+    pub fn set_queue_cap(&mut self, cap: usize) {
+        self.queue_cap = cap.max(1);
+    }
+
+    /// Expire requests that wait more than `steps` engine steps in the
+    /// queue (`None` = no bound). Enforced at pop time: an expired
+    /// request still pops — flagged — so the engine can answer it with
+    /// `FinishReason::Deadline` in arrival-ordered turn.
+    pub fn set_max_queue_steps(&mut self, steps: Option<u64>) {
+        self.max_queue_steps = steps;
     }
 
     /// Turn on prefix sharing over `pool` (the engine's page pool — see
@@ -430,10 +463,35 @@ impl Scheduler {
     }
 
     /// Add a request to the admission queue (stamps arrival time and the
-    /// current engine step for the promotion clock).
-    pub fn enqueue(&mut self, req: GenRequest) {
+    /// current engine step for the promotion clock). With the queue at
+    /// its cap the request is **shed**: handed back as `Some(req)` for
+    /// the front-end to answer with `FinishReason::Shed` — never silently
+    /// dropped. `None` means accepted.
+    pub fn enqueue(&mut self, req: GenRequest) -> Option<GenRequest> {
+        if self.queue.len() >= self.queue_cap {
+            return Some(req);
+        }
         self.enqueued += 1;
-        self.queue.push_back(Queued { req, arrival: Instant::now(), enq_step: self.step });
+        self.queue.push_back(Queued {
+            req,
+            arrival: Instant::now(),
+            enq_step: self.step,
+            requeues: 0,
+        });
+        None
+    }
+
+    /// Put a faulted slot's request back at the **front** of the queue
+    /// (it already waited its turn once; its original arrival survives so
+    /// latency spans the whole ordeal). Exempt from the queue cap, not
+    /// double-counted in `enqueued`, and re-stamps the promotion clock.
+    pub fn requeue(&mut self, r: Requeue) {
+        self.queue.push_front(Queued {
+            req: r.req,
+            arrival: r.arrival,
+            enq_step: self.step,
+            requeues: r.requeues,
+        });
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -500,11 +558,14 @@ impl Scheduler {
             None => (greedy, false),
         };
         let q = self.queue.remove(idx).unwrap();
+        let waited_steps = self.step.saturating_sub(q.enq_step);
         Some(Admission {
-            waited_steps: self.step.saturating_sub(q.enq_step),
+            waited_steps,
+            expired: self.max_queue_steps.map_or(false, |max| waited_steps > max),
             req: q.req,
             arrival: q.arrival,
             promoted,
+            requeues: q.requeues,
         })
     }
 
@@ -711,6 +772,51 @@ mod tests {
         pc.release_all();
         assert_eq!(pool.borrow().refs(c), 1);
         assert_eq!(pool.borrow().shared_pages(), 0);
+    }
+
+    #[test]
+    fn queue_cap_sheds_instead_of_growing() {
+        let mut s = Scheduler::new(1, 10);
+        s.set_queue_cap(2);
+        assert!(s.enqueue(req(0, 1)).is_none());
+        assert!(s.enqueue(req(1, 1)).is_none());
+        // cap hit: the request comes straight back, never silently dropped
+        let shed = s.enqueue(req(2, 1)).unwrap();
+        assert_eq!(shed.id, 2);
+        assert_eq!(s.queue_depth(), 2);
+        assert_eq!(s.enqueued, 2);
+        // requeues are exempt: faulted in-flight work re-enters even at cap
+        s.requeue(Requeue { req: req(0, 1), arrival: Instant::now(), requeues: 1 });
+        assert_eq!(s.queue_depth(), 3);
+        assert_eq!(s.enqueued, 2, "requeue must not double-count");
+    }
+
+    #[test]
+    fn requeue_goes_to_front_and_carries_its_count() {
+        let mut s = Scheduler::new(1, 100);
+        s.enqueue(req(1, 1));
+        s.requeue(Requeue { req: req(0, 1), arrival: Instant::now(), requeues: 3 });
+        let a = s.pop_next().unwrap();
+        assert_eq!(a.req.id, 0, "requeued request is at the queue front");
+        assert_eq!(a.requeues, 3);
+        assert!(!a.expired);
+        assert_eq!(s.pop_next().unwrap().requeues, 0);
+    }
+
+    #[test]
+    fn max_queue_steps_flags_expired_admissions() {
+        let mut s = Scheduler::new(1, 100);
+        s.set_max_queue_steps(Some(2));
+        s.enqueue(req(0, 1));
+        s.tick();
+        s.enqueue(req(1, 1));
+        s.tick();
+        s.tick();
+        // id 0 waited 3 > 2 steps; id 1 waited 2 <= 2
+        let popped: Vec<(u64, bool)> =
+            std::iter::from_fn(|| s.pop_next().map(|a| (a.req.id, a.expired))).collect();
+        assert!(popped.contains(&(0, true)));
+        assert!(popped.contains(&(1, false)));
     }
 
     #[test]

@@ -26,15 +26,22 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::fault::FaultPlan;
 use super::metrics::ServingMetrics;
 use super::scheduler::{SchedMode, Scheduler};
-use super::{DecodeEngine, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET};
+use super::{
+    DecodeEngine, FinishReason, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET,
+    DEFAULT_RETRY_BACKOFF, DEFAULT_RETRY_MAX,
+};
 use crate::formats::QuantPolicy;
 use crate::models::{Checkpoint, LmSpec};
 use crate::runtime::Runtime;
 
 enum Msg {
     Req(GenRequest),
+    /// Stop admitting (new submits are answered `FinishReason::Shed`),
+    /// finish in-flight work, then report.
+    Drain,
     Shutdown,
 }
 
@@ -61,6 +68,23 @@ pub struct ServeOpts {
     /// admission, generations, and packed bytes are bit-identical to a
     /// build without the cache.
     pub prefix_cache: bool,
+    /// Bounded admission queue (`--queue-cap`): arrivals past this depth
+    /// are answered `FinishReason::Shed` instead of queueing without
+    /// bound. `usize::MAX` = unbounded (the default).
+    pub queue_cap: usize,
+    /// Per-request wall-clock deadline (`--deadline-ms`), enforced at
+    /// admission and per step; `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// Per-request queue-steps deadline: a request that waits more than
+    /// this many engine steps is answered `FinishReason::Deadline` at
+    /// admission; `None` = no bound.
+    pub max_queue_steps: Option<u64>,
+    /// Transient-fault retries per backend call (`--retry-max`) before
+    /// the affected slots retire into the requeue path.
+    pub retry_max: u32,
+    /// Seeded fault injection (`--fault-plan`; bench/test only): wraps
+    /// the backend in a `FaultBackend` before serving.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServeOpts {
@@ -72,6 +96,11 @@ impl Default for ServeOpts {
             prefill_budget: DEFAULT_PREFILL_BUDGET,
             kv_page_rows: crate::quant::page::DEFAULT_KV_PAGE_ROWS,
             prefix_cache: true,
+            queue_cap: usize::MAX,
+            deadline: None,
+            max_queue_steps: None,
+            retry_max: DEFAULT_RETRY_MAX,
+            fault: None,
         }
     }
 }
@@ -108,10 +137,15 @@ impl ServerHandle {
             let mut engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
             engine.set_prefill_budget(opts.prefill_budget);
             engine.set_kv_page_rows(opts.kv_page_rows);
+            engine.set_retry_policy(opts.retry_max, DEFAULT_RETRY_BACKOFF);
+            engine.set_deadline(opts.deadline);
+            if let Some(plan) = &opts.fault {
+                engine.inject_faults(plan);
+            }
             let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
             match opts.mode {
                 SchedMode::Continuous => {
-                    run_continuous(&mut engine, &worker_rx, &resp_tx, opts.prefix_cache, log)
+                    run_continuous(&mut engine, &worker_rx, &resp_tx, &opts, log)
                 }
                 SchedMode::Wave => run_waves(
                     &mut engine,
@@ -126,8 +160,12 @@ impl ServerHandle {
         ServerHandle { tx, rx, join: Some(join) }
     }
 
-    pub fn submit(&self, req: GenRequest) {
-        let _ = self.tx.send(Msg::Req(req));
+    /// Submit a request. Returns whether the worker will see it: `false`
+    /// means the worker is gone (shut down, drained, or dead) and the
+    /// request was **not** accepted — never a silent drop. `true` from a
+    /// draining worker still yields a response: `FinishReason::Shed`.
+    pub fn submit(&self, req: GenRequest) -> bool {
+        self.tx.send(Msg::Req(req)).is_ok()
     }
 
     /// Blocking receive of the next completed response.
@@ -139,14 +177,27 @@ impl ServerHandle {
         self.rx.recv_timeout(d).ok()
     }
 
-    /// Finish outstanding work and return the final accounting.
-    pub fn shutdown(mut self) -> Result<ServeReport> {
+    /// Finish outstanding work and return the final accounting. A second
+    /// call (or a call after [`Self::drain`]) returns an error instead of
+    /// panicking.
+    pub fn shutdown(&mut self) -> Result<ServeReport> {
         let _ = self.tx.send(Msg::Shutdown);
-        self.join
-            .take()
-            .expect("already joined")
-            .join()
-            .map_err(|_| anyhow::anyhow!("server worker panicked"))?
+        self.join_inner()
+    }
+
+    /// Graceful drain: stop admitting (submits already in flight are
+    /// answered `FinishReason::Shed`), finish every active request, then
+    /// return the final accounting. Subsequent `submit` returns `false`.
+    pub fn drain(&mut self) -> Result<ServeReport> {
+        let _ = self.tx.send(Msg::Drain);
+        self.join_inner()
+    }
+
+    fn join_inner(&mut self) -> Result<ServeReport> {
+        match self.join.take() {
+            Some(j) => j.join().map_err(|_| anyhow::anyhow!("server worker panicked"))?,
+            None => Err(anyhow::anyhow!("server already shut down")),
+        }
     }
 }
 
@@ -156,32 +207,62 @@ fn run_continuous(
     engine: &mut DecodeEngine,
     worker_rx: &mpsc::Receiver<Msg>,
     resp_tx: &mpsc::Sender<GenResponse>,
-    prefix_cache: bool,
+    opts: &ServeOpts,
     log: bool,
 ) -> Result<ServeReport> {
     let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
     // admission ranks by prefill steps under the same budget the engine
     // chunks with (one knob: ServeOpts::prefill_budget)
     sched.set_prefill_budget(engine.prefill_budget());
+    sched.set_queue_cap(opts.queue_cap);
+    sched.set_max_queue_steps(opts.max_queue_steps);
     // prefix sharing needs packed pages to share: fp16 lanes have none
-    if prefix_cache && engine.kv_plans().is_some() {
+    if opts.prefix_cache && engine.kv_plans().is_some() {
         sched.enable_prefix_cache(engine.page_pool(), Scheduler::DEFAULT_PREFIX_ENTRIES);
     }
     let mut shutting_down = false;
+    let mut draining = false;
+    // overload/drain rejections answer immediately: the request never
+    // queues, and the caller learns why via FinishReason::Shed
+    let shed = |engine: &mut DecodeEngine, r: GenRequest| {
+        engine.serving.shed += 1;
+        let _ = resp_tx.send(GenResponse {
+            id: r.id,
+            tokens: r.prompt,
+            generated: 0,
+            latency: Duration::ZERO,
+            reason: FinishReason::Shed,
+        });
+    };
     // deterministic rejections answer at enqueue time instead of queuing
     // behind real work (admit() re-validates for direct Scheduler users)
-    let accept = |engine: &mut DecodeEngine, r: GenRequest, sched: &mut Scheduler| {
+    let accept = |engine: &mut DecodeEngine, r: GenRequest, sched: &mut Scheduler, drn: bool| {
+        if drn {
+            shed(engine, r);
+            return;
+        }
         match engine.validate(&r) {
             Some(resp) => {
                 let _ = resp_tx.send(resp);
             }
-            None => sched.enqueue(r),
+            None => {
+                if let Some(back) = sched.enqueue(r) {
+                    shed(engine, back);
+                }
+            }
         }
     };
     loop {
         // fully idle and not shutting down: block for the next message
         if !sched.has_work() {
             if shutting_down {
+                // requests racing the drain/shutdown message are answered
+                // (shed), not silently dropped: submit() returned `true`
+                while let Ok(msg) = worker_rx.try_recv() {
+                    if let Msg::Req(r) = msg {
+                        shed(&mut *engine, r);
+                    }
+                }
                 if log {
                     eprintln!("[serve] continuous summary: {}", engine.serving.summary());
                 }
@@ -190,7 +271,12 @@ fn run_continuous(
                 return Ok(report);
             }
             match worker_rx.recv() {
-                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched),
+                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched, draining),
+                Ok(Msg::Drain) => {
+                    shutting_down = true;
+                    draining = true;
+                    continue;
+                }
                 Ok(Msg::Shutdown) | Err(_) => {
                     shutting_down = true;
                     continue;
@@ -200,7 +286,11 @@ fn run_continuous(
         // non-blocking drain: arrivals join the queue between steps
         loop {
             match worker_rx.try_recv() {
-                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched),
+                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched, draining),
+                Ok(Msg::Drain) => {
+                    shutting_down = true;
+                    draining = true;
+                }
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
                     break;
@@ -245,7 +335,7 @@ fn run_waves(
         if pending.is_empty() && !shutting_down {
             match worker_rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
-                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+                Ok(Msg::Drain) | Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
             }
         }
         if !shutting_down {
@@ -254,7 +344,7 @@ fn run_waves(
                 let left = deadline.saturating_duration_since(std::time::Instant::now());
                 match worker_rx.recv_timeout(left) {
                     Ok(Msg::Req(r)) => pending.push(r),
-                    Ok(Msg::Shutdown) => {
+                    Ok(Msg::Drain) | Ok(Msg::Shutdown) => {
                         shutting_down = true;
                         break;
                     }
@@ -267,6 +357,21 @@ fn run_waves(
             }
         }
         if pending.is_empty() && shutting_down {
+            // answer any stragglers still in the channel (requests racing
+            // a drain/shutdown) before the final report, so no submit that
+            // returned `true` goes unanswered
+            while let Ok(msg) = worker_rx.try_recv() {
+                if let Msg::Req(r) = msg {
+                    engine.serving.shed += 1;
+                    let _ = resp_tx.send(GenResponse {
+                        id: r.id,
+                        tokens: r.prompt,
+                        generated: 0,
+                        latency: Duration::ZERO,
+                        reason: FinishReason::Shed,
+                    });
+                }
+            }
             return Ok(ServeReport { metrics: engine.metrics, serving: engine.serving.clone() });
         }
         let wave: Vec<GenRequest> = pending.drain(..pending.len().min(max_batch)).collect();

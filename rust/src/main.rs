@@ -20,9 +20,10 @@ use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use nxfp::coordinator::fault::FaultPlan;
 use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::{ServeOpts, ServerHandle};
-use nxfp::coordinator::GenRequest;
+use nxfp::coordinator::{FinishReason, GenRequest};
 use nxfp::eval::{checkpoint_footprint, perplexity, quantize_checkpoint, reasoning_accuracy};
 use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
@@ -54,6 +55,23 @@ const DEFAULT_BUDGET_STR: &str = "64";
 /// `--kv-page-rows` default as a CLI string (pinned to
 /// `quant::page::DEFAULT_KV_PAGE_ROWS` by a unit test).
 const DEFAULT_PAGE_ROWS_STR: &str = "16";
+
+/// `--retry-max` default as a CLI string (pinned to
+/// `coordinator::DEFAULT_RETRY_MAX` by a unit test).
+const DEFAULT_RETRY_STR: &str = "3";
+
+/// Parse an admission-queue cap: a positive integer, or
+/// `unbounded`/`inf`/`max` for no cap (the default — arrivals never shed).
+pub fn parse_queue_cap(s: &str) -> Result<usize> {
+    match s.to_lowercase().as_str() {
+        "unbounded" | "inf" | "max" => Ok(usize::MAX),
+        t => t
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("bad queue cap {s} (positive integer or 'unbounded')")),
+    }
+}
 
 /// Parse an `on`/`off` switch (`--prefix-cache`); `1`/`true`/`yes` and
 /// `0`/`false`/`no` are accepted aliases.
@@ -283,9 +301,17 @@ fn cmd_serve(a: &Args) -> Result<()> {
         return Err(anyhow!("--kv-page-rows must be positive"));
     }
     let prefix_cache = parse_switch(&a.get_str("prefix-cache"))?;
+    let queue_cap = parse_queue_cap(&a.get_str("queue-cap"))?;
+    let deadline_ms = a.get_usize("deadline-ms")?;
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
+    let retry_max = a.get_usize("retry-max")? as u32;
+    let fault = match a.get("fault-plan") {
+        None | Some("") => None,
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+    };
     let corpus = default_corpus();
     let probes = Probe::generate(&corpus.spec, n_req, 99);
-    let server = ServerHandle::spawn(
+    let mut server = ServerHandle::spawn(
         artifacts_dir(a),
         spec,
         ck,
@@ -297,14 +323,26 @@ fn cmd_serve(a: &Args) -> Result<()> {
             prefill_budget,
             kv_page_rows,
             prefix_cache,
+            queue_cap,
+            deadline,
+            max_queue_steps: None,
+            retry_max,
+            fault,
         },
     );
     for (i, p) in probes.iter().enumerate() {
-        server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new });
+        if !server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new }) {
+            return Err(anyhow!("server dropped before request {i} was accepted"));
+        }
     }
     for _ in 0..n_req {
         let resp = server.recv().ok_or_else(|| anyhow!("server dropped"))?;
-        println!("req {:>3}  {} tokens in {:?}", resp.id, resp.generated, resp.latency);
+        let note = if resp.reason == FinishReason::Completed {
+            String::new()
+        } else {
+            format!("  [{:?}]", resp.reason)
+        };
+        println!("req {:>3}  {} tokens in {:?}{note}", resp.id, resp.generated, resp.latency);
     }
     let report = server.shutdown()?;
     let m = report.metrics;
@@ -454,6 +492,23 @@ mod tests {
     }
 
     #[test]
+    fn parse_queue_cap_values() {
+        assert_eq!(parse_queue_cap("8").unwrap(), 8);
+        assert_eq!(parse_queue_cap("unbounded").unwrap(), usize::MAX);
+        assert_eq!(parse_queue_cap("INF").unwrap(), usize::MAX);
+        assert!(parse_queue_cap("0").is_err());
+        assert!(parse_queue_cap("some").is_err());
+    }
+
+    #[test]
+    fn retry_max_default_tracks_library_constant() {
+        assert_eq!(
+            DEFAULT_RETRY_STR.parse::<u32>().unwrap(),
+            nxfp::coordinator::DEFAULT_RETRY_MAX
+        );
+    }
+
+    #[test]
     fn layered_kvq_artifact_names_pin_the_token_hash() {
         use nxfp::formats::policy::KvStream;
         use nxfp::formats::TensorClass;
@@ -585,6 +640,22 @@ fn main() {
                 "prefix-cache",
                 Some("on"),
                 "share packed KV across common prompt prefixes: on|off",
+            )
+            .opt(
+                "queue-cap",
+                Some("unbounded"),
+                "admission queue depth; past it arrivals are shed",
+            )
+            .opt("deadline-ms", Some("0"), "per-request wall deadline in ms (0 = none)")
+            .opt(
+                "retry-max",
+                Some(DEFAULT_RETRY_STR),
+                "transient-fault retries per backend call",
+            )
+            .opt(
+                "fault-plan",
+                None,
+                "seeded fault injection, e.g. seed=7,step=0.01,nan=0.005",
             )
             .parse(rest)
             .map_err(anyhow::Error::from)

@@ -24,7 +24,7 @@ fn server_completes_all_requests_and_batches() {
     // an untrained checkpoint is fine: the server's correctness is about
     // scheduling, not text quality
     let ck = Checkpoint::init(&spec, 11);
-    let server = ServerHandle::spawn(
+    let mut server = ServerHandle::spawn(
         PathBuf::from("artifacts"),
         spec,
         ck,
@@ -34,15 +34,16 @@ fn server_completes_all_requests_and_batches() {
             batch_window: Duration::from_millis(20),
             mode: SchedMode::Continuous,
             prefill_budget: 16,
+            ..Default::default()
         },
     );
     let n_req = 10usize; // more requests than lanes: admission must churn
     for i in 0..n_req {
-        server.submit(GenRequest {
+        assert!(server.submit(GenRequest {
             id: i as u64,
             prompt: vec![0, (5 + i) as i32, 70],
             max_new: 3 + (i % 3),
-        });
+        }));
     }
     let mut seen = std::collections::BTreeSet::new();
     for _ in 0..n_req {
@@ -78,7 +79,7 @@ fn server_shutdown_without_requests_is_clean() {
     }
     let spec = LmSpec::small();
     let ck = Checkpoint::init(&spec, 12);
-    let server = ServerHandle::spawn(
+    let mut server = ServerHandle::spawn(
         PathBuf::from("artifacts"),
         spec,
         ck,
@@ -88,8 +89,13 @@ fn server_shutdown_without_requests_is_clean() {
             batch_window: Duration::from_millis(1),
             mode: SchedMode::Wave,
             prefill_budget: 1,
+            ..Default::default()
         },
     );
     let report = server.shutdown().unwrap();
     assert_eq!(report.metrics.requests, 0);
+    // a second shutdown is a well-defined error, not a panic
+    assert!(server.shutdown().is_err());
+    // the worker is gone: submits are refused rather than silently dropped
+    assert!(!server.submit(GenRequest { id: 99, prompt: vec![0, 1], max_new: 1 }));
 }
