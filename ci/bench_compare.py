@@ -56,6 +56,12 @@ WARN_FACTOR = 2.0
 # carrying a positive value for one of these fails the build outright.
 MUST_BE_ZERO = ("lost_requests",)
 
+# Record-layout metadata, not measurements: emitted since schema_version 1
+# (older baseline artifacts predate them, so both sides are optional).
+# Excluded from the numeric diff — run_seq in particular is an emission
+# counter that would otherwise read as a fake perf delta.
+META_FIELDS = ("schema_version", "run_seq")
+
 
 def record_key(r):
     # records predating the policy field key as policy == config, which is
@@ -119,7 +125,9 @@ def numeric_fields(old, new):
     def ok(v):
         return isinstance(v, (int, float)) and not isinstance(v, bool)
 
-    return sorted(k for k, v in new.items() if ok(v) and ok(old.get(k)))
+    return sorted(
+        k for k, v in new.items() if k not in META_FIELDS and ok(v) and ok(old.get(k))
+    )
 
 
 def key_label(key):
@@ -286,6 +294,22 @@ def selftest():
     smoke_lost = rec("fault", smoke=True, tok_s=5.0, lost_requests=1)
     _, _, errs = compare({}, {key(smoke_lost): smoke_lost})
     assert len(errs) == 1, errs
+
+    # schema metadata never participates in the diff: a versioned record
+    # (schema_version/run_seq present) compares cleanly against an
+    # unversioned baseline, and a run_seq drop is not a regression
+    legacy9 = {"bench": "b", "name": "v", "config": "c", "smoke": False, "tok_s": 100.0}
+    vers9 = rec("v", tok_s=98.0, schema_version=1, run_seq=7)
+    vers9["policy"] = "c"  # uniform policy == config, matching the legacy key
+    lines, warns, errs = compare({record_key(legacy9): legacy9}, {key(vers9): vers9})
+    assert warns == [] and errs == [], (warns, errs)
+    assert any("tok_s" in l for l in lines), lines
+    assert not any("schema_version" in l or "run_seq" in l for l in lines), lines
+    # both sides versioned, run_seq 9 -> 0 (fresh process): still silent
+    prev9 = {key(r): r for r in [rec("v", tok_s=100.0, schema_version=1, run_seq=9)]}
+    curr9 = {key(r): r for r in [rec("v", tok_s=100.0, schema_version=1, run_seq=0)]}
+    lines, warns, _ = compare(prev9, curr9)
+    assert warns == [] and not any("run_seq" in l for l in lines), (lines, warns)
 
     # fault modes key on config: step=0.05 never compares against the
     # fault-free step=0 record

@@ -1,0 +1,332 @@
+"""Python mirror of the serving-tier observability probes.
+
+Two independent contracts are pinned here, against the same NumPy oracle
+(`compile.kernels.ref`) that pins the encode golden vectors:
+
+1. **CodeOccupancy** — `rust/src/obs/occupancy.rs` re-derives the
+   per-block scale from encoder metadata (`(1 + nano/4) * 2^(e+offset)`)
+   and counts clipped elements, per-code hits, vacant levels, and
+   recycled-code hits. `PyCodeOccupancy` below performs the identical
+   arithmetic on top of `ref.quantize_block`, and the exact integer
+   counters for nxfp4 / mxfp4 / mxfp6 on a deterministic LCG tensor are
+   pinned. The LCG matches the Rust tests in occupancy.rs bit for bit
+   (same multiplier/increment, wrapping u64), so both sides observe the
+   same tensor.
+
+2. **Prometheus text shape** — `rust/src/obs/export.rs` renders
+   `ServingMetrics` + occupancy tables in Prometheus text format. The
+   validator below checks the structural invariants every conforming
+   exposition must satisfy (TYPE declarations, cumulative histogram
+   buckets, `+Inf` == `_count`, `_sum`/`_count` terminators, labeled
+   occupancy series) against a handcrafted sample mirroring the Rust
+   renderer, and — when `NXFP_METRICS_PROM` points at a real file
+   written by `serve --metrics-out` or the bench artifact step — against
+   actual Rust output.
+"""
+
+import math
+import os
+import re
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+MASK = (1 << 64) - 1
+LCG_MUL = 6364136223846793005
+LCG_INC = 1442695040888963407
+
+
+def lcg_tensor(n, seed):
+    """Bit-exact mirror of `lcg_tensor` in rust/src/obs/occupancy.rs."""
+    s = (seed * LCG_MUL + 1) & MASK
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        s = (s * LCG_MUL + LCG_INC) & MASK
+        out[i] = np.float32((s >> 33) / np.float32(1 << 31)) * np.float32(2.0) - np.float32(1.0)
+    return out
+
+
+class PyCodeOccupancy:
+    """Mirror of CodeOccupancy::observe_row on top of ref.quantize_block."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.counts = np.zeros(1 << cfg.bits, dtype=np.int64)
+        self.clipped = 0
+        self.total = 0
+        self.recycle_enabled = cfg.enable_cr
+
+    @property
+    def recycle_code(self):
+        return 1 << (self.cfg.bits - 1)
+
+    def observe(self, v):
+        k = self.cfg.block_size
+        assert len(v) % k == 0
+        for start in range(0, len(v), k):
+            blk = v[start : start + k]
+            q = ref.quantize_block(blk, self.cfg)
+            bf = ref.block_format(self.cfg, q["fmt_mx"])
+            # same scale arithmetic as the encoder and the Rust probe; an
+            # all-zero block underflows scale to 0 -> inv=inf -> 0*inf=NaN,
+            # and NaN compares false under the strict > just like Rust
+            with np.errstate(over="ignore", invalid="ignore"):
+                scale = np.float32(
+                    np.float32(1.0 + q["nano"] / 4.0) * ref.exp2i(q["e"] + bf.offset)
+                )
+                inv = np.float32(np.float32(1.0) / scale)
+                for x, c in zip(blk, q["codes"]):
+                    if abs(np.float32(np.float32(x) * inv)) > bf.top:  # strict, NaN-safe
+                        self.clipped += 1
+                    self.counts[int(c)] += 1
+            self.total += len(blk)
+
+    def merge(self, other):
+        self.counts += other.counts
+        self.clipped += other.clipped
+        self.total += other.total
+
+    def clip_rate(self):
+        return self.clipped / self.total if self.total else 0.0
+
+    def vacant_fraction(self):
+        return int((self.counts == 0).sum()) / len(self.counts)
+
+    def recycle_rate(self):
+        return int(self.counts[self.recycle_code]) / self.total if self.total else 0.0
+
+
+def observe_tensor(cfg, v):
+    occ = PyCodeOccupancy(cfg)
+    occ.observe(v)
+    return occ
+
+
+# ---------------------------------------------------------------------------
+# CodeOccupancy pins: exact integer counters on lcg_tensor(256, 7).
+# If any of these move, the encode arithmetic itself moved — that is a
+# golden-contract break, not a tolerance issue.
+# ---------------------------------------------------------------------------
+
+OCC_PINS = {
+    # name -> (cfg factory, clipped, vacant_levels, recycle_hits, n_levels)
+    "nxfp4": (lambda: ref.NxConfig.nxfp(4), 18, 0, 7, 16),
+    "mxfp4": (lambda: ref.NxConfig.mxfp(4), 63, 1, 0, 16),
+    "mxfp6": (lambda: ref.NxConfig.mxfp(6), 14, 3, 0, 64),
+}
+
+
+@pytest.mark.parametrize("name", sorted(OCC_PINS))
+def test_occupancy_counters_pin_against_oracle(name):
+    factory, clipped, vacant, recycle_hits, n_levels = OCC_PINS[name]
+    cfg = factory()
+    occ = observe_tensor(cfg, lcg_tensor(256, 7))
+    assert occ.total == 256
+    assert int(occ.counts.sum()) == 256, "every element lands on exactly one code"
+    assert len(occ.counts) == n_levels
+    assert occ.clipped == clipped
+    assert int((occ.counts == 0).sum()) == vacant
+    assert int(occ.counts[occ.recycle_code]) == recycle_hits
+    # the derived rates surfaced in metrics export follow from the pins
+    assert occ.clip_rate() == pytest.approx(clipped / 256)
+    assert occ.vacant_fraction() == pytest.approx(vacant / n_levels)
+    assert occ.recycle_rate() == pytest.approx(recycle_hits / 256)
+
+
+def test_recycled_code_fires_only_with_code_recycling():
+    # nxfp4 recycles the packed -0 code into an extra top level; mxfp4
+    # never emits it, so for MX the recycle code IS the vacant level.
+    nx = observe_tensor(ref.NxConfig.nxfp(4), lcg_tensor(256, 7))
+    mx = observe_tensor(ref.NxConfig.mxfp(4), lcg_tensor(256, 7))
+    assert nx.recycle_enabled and nx.counts[nx.recycle_code] > 0
+    assert not mx.recycle_enabled and mx.counts[mx.recycle_code] == 0
+    assert mx.recycle_rate() == 0.0
+    vacant_codes = np.flatnonzero(mx.counts == 0)
+    assert vacant_codes.tolist() == [mx.recycle_code]
+
+
+def test_block_outlier_absorbs_headroom_so_nothing_clips():
+    # one huge outlier per block forces the shared scale up: the outlier
+    # saturates exactly at the top level (strictly-greater test fails)
+    # and everything else lands inside the grid — mirrors the Rust
+    # outliers_clip_and_recycling_fires_only_when_enabled test.
+    cfg = ref.NxConfig.nxfp(4)
+    v = lcg_tensor(128, 9)
+    for b in range(len(v) // cfg.block_size):
+        v[b * cfg.block_size] = np.float32(300.0)
+    occ = observe_tensor(cfg, v)
+    assert occ.total == 128
+    assert occ.clipped == 0
+    assert occ.clip_rate() == 0.0
+
+
+def test_zero_tensor_and_empty_table_edge_cases():
+    cfg = ref.NxConfig.nxfp(4)
+    empty = PyCodeOccupancy(cfg)
+    assert empty.clip_rate() == 0.0
+    assert empty.recycle_rate() == 0.0
+    assert empty.vacant_fraction() == 1.0
+    occ = observe_tensor(cfg, np.zeros(cfg.block_size * 2, dtype=np.float32))
+    assert int(occ.counts[0]) == cfg.block_size * 2
+    assert occ.vacant_fraction() == (len(occ.counts) - 1) / len(occ.counts)
+
+
+def test_merge_sums_counters():
+    cfg = ref.NxConfig.nxfp(4)
+    v = lcg_tensor(128, 3)
+    a = observe_tensor(cfg, v)
+    b = observe_tensor(cfg, v)
+    clip = a.clipped
+    a.merge(b)
+    assert a.total == 256
+    assert a.clipped == 2 * clip
+    assert int(a.counts.sum()) == 256
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text-format shape validation.
+# ---------------------------------------------------------------------------
+
+METRIC_LINE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?P<labels>\{[^}]*\})? (?P<value>\S+)$"
+)
+
+
+def validate_prometheus(text):
+    """Structural validation of a Prometheus text exposition.
+
+    Checks the invariants the Rust renderer promises: every sample is
+    preceded by a # TYPE for its family, histogram buckets are cumulative
+    and non-decreasing with sorted finite bounds, le="+Inf" equals
+    `_count`, and `_sum`/`_count` are present for every histogram.
+    Returns {family: type} for the caller to assert on coverage.
+    """
+    types = {}
+    samples = []  # (name, labels, value)
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP"):
+            continue
+        if line.startswith("# TYPE"):
+            _, _, fam, kind = line.split(maxsplit=3)
+            assert kind in ("counter", "gauge", "histogram"), f"line {ln}: bad type {kind}"
+            types[fam] = kind
+            continue
+        m = METRIC_LINE.match(line)
+        assert m, f"line {ln}: unparseable sample {line!r}"
+        val = float(m.group("value")) if m.group("value") != "+Inf" else math.inf
+        samples.append((m.group("name"), m.group("labels") or "", val))
+
+    def family(name):
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in types:
+                return name[: -len(suffix)]
+        return name
+
+    hist = {}  # family -> {"buckets": [(le, cum)], "sum": v, "count": v}
+    for name, labels, value in samples:
+        fam = family(name)
+        assert fam in types, f"sample {name} has no # TYPE declaration"
+        kind = types[fam]
+        if kind == "counter":
+            assert value >= 0 and value == int(value), f"{name}: counter must be a whole number"
+        elif kind == "histogram":
+            h = hist.setdefault(fam, {"buckets": [], "sum": None, "count": None})
+            if name.endswith("_bucket"):
+                le = re.search(r'le="([^"]+)"', labels)
+                assert le, f"{name}: bucket without le label"
+                bound = math.inf if le.group(1) == "+Inf" else float(le.group(1))
+                h["buckets"].append((bound, value))
+            elif name.endswith("_sum"):
+                h["sum"] = value
+            elif name.endswith("_count"):
+                h["count"] = value
+    for fam, h in hist.items():
+        assert h["sum"] is not None and h["count"] is not None, f"{fam}: missing _sum/_count"
+        bounds = [b for b, _ in h["buckets"]]
+        cums = [c for _, c in h["buckets"]]
+        assert bounds == sorted(bounds), f"{fam}: bucket bounds not sorted"
+        assert bounds and bounds[-1] == math.inf, f"{fam}: missing le=+Inf bucket"
+        assert cums == sorted(cums), f"{fam}: bucket counts not cumulative"
+        assert cums[-1] == h["count"], f"{fam}: +Inf bucket != _count"
+    return types
+
+
+# Handcrafted sample mirroring rust/src/obs/export.rs output shape:
+# counters as nxfp_*_total, bare gauges, histograms with zero-count
+# buckets elided and {:.6e} bounds, labeled occupancy series.
+SAMPLE_PROM = """\
+# HELP nxfp_requests_total requests completed
+# TYPE nxfp_requests_total counter
+nxfp_requests_total 6
+# HELP nxfp_tokens_per_sec decode throughput
+# TYPE nxfp_tokens_per_sec gauge
+nxfp_tokens_per_sec 811.25
+# HELP nxfp_admitted_total requests admitted to a lane
+# TYPE nxfp_admitted_total counter
+nxfp_admitted_total 6
+# HELP nxfp_latency_seconds end-to-end request latency
+# TYPE nxfp_latency_seconds histogram
+nxfp_latency_seconds_bucket{le="1.000000e-3"} 2
+nxfp_latency_seconds_bucket{le="1.600000e-2"} 5
+nxfp_latency_seconds_bucket{le="+Inf"} 6
+nxfp_latency_seconds_sum 0.0421
+nxfp_latency_seconds_count 6
+# TYPE nxfp_occupancy_elements_total counter
+nxfp_occupancy_elements_total{config="NxFP4 k=32 nano+amx+cr"} 4096
+# TYPE nxfp_occupancy_clipped_total counter
+nxfp_occupancy_clipped_total{config="NxFP4 k=32 nano+amx+cr"} 288
+# TYPE nxfp_occupancy_clip_rate gauge
+nxfp_occupancy_clip_rate{config="NxFP4 k=32 nano+amx+cr"} 0.0703125
+# TYPE nxfp_occupancy_vacant_fraction gauge
+nxfp_occupancy_vacant_fraction{config="NxFP4 k=32 nano+amx+cr"} 0
+# TYPE nxfp_occupancy_recycle_rate gauge
+nxfp_occupancy_recycle_rate{config="NxFP4 k=32 nano+amx+cr"} 0.027
+"""
+
+
+def test_prometheus_validator_accepts_conforming_exposition():
+    types = validate_prometheus(SAMPLE_PROM)
+    assert types["nxfp_requests_total"] == "counter"
+    assert types["nxfp_latency_seconds"] == "histogram"
+    assert types["nxfp_occupancy_clip_rate"] == "gauge"
+
+
+@pytest.mark.parametrize(
+    "mutation",
+    [
+        # non-cumulative buckets
+        ('nxfp_latency_seconds_bucket{le="1.600000e-2"} 5', 'nxfp_latency_seconds_bucket{le="1.600000e-2"} 1'),
+        # +Inf bucket disagrees with _count
+        ('nxfp_latency_seconds_bucket{le="+Inf"} 6', 'nxfp_latency_seconds_bucket{le="+Inf"} 7'),
+        # histogram loses its terminator
+        ("nxfp_latency_seconds_count 6", ""),
+        # sample with no TYPE declaration
+        ("nxfp_requests_total 6", "nxfp_mystery_total 6"),
+        # fractional counter
+        ("nxfp_admitted_total 6", "nxfp_admitted_total 6.5"),
+    ],
+)
+def test_prometheus_validator_rejects_malformed_expositions(mutation):
+    old, new = mutation
+    assert old in SAMPLE_PROM
+    with pytest.raises(AssertionError):
+        validate_prometheus(SAMPLE_PROM.replace(old, new))
+
+
+def test_real_metrics_file_when_available():
+    """Validate actual Rust renderer output when CI (or a human) points
+    NXFP_METRICS_PROM at a file written by `serve --metrics-out` or the
+    NXFP_OBS_OUT bench artifact step."""
+    path = os.environ.get("NXFP_METRICS_PROM", "")
+    if not path or not os.path.exists(path):
+        pytest.skip("NXFP_METRICS_PROM not set / file absent")
+    with open(path) as f:
+        types = validate_prometheus(f.read())
+    assert types.get("nxfp_requests_total") == "counter"
+    assert types.get("nxfp_latency_seconds") == "histogram"
+    # the bench artifact runs with occupancy probes on
+    assert types.get("nxfp_occupancy_clip_rate") == "gauge"

@@ -19,9 +19,13 @@
 //! TTFT-in-steps. A third scenario runs shared-system-prompt traffic
 //! through the paged-KV prefix cache (on vs off) and gates on
 //! bit-identical generations, dedup factor > 1, and strictly fewer
-//! steps. With `NXFP_BENCH_JSON=<dir>`, appends records to
-//! `BENCH_scheduler.json`. Set `NXFP_BENCH_SMOKE=1` for a seconds-scale
-//! CI smoke run.
+//! steps. A final observability scenario gates the tracing overhead
+//! contract (bit-identical generations with the trace sink on) and
+//! reports the code-occupancy probe rates; with `NXFP_OBS_OUT=<dir>` it
+//! also writes `trace.jsonl` / `metrics.prom` / `metrics.json` artifacts
+//! from a traced fault run and validates the trace in-process. With
+//! `NXFP_BENCH_JSON=<dir>`, appends records to `BENCH_scheduler.json`.
+//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
 
 use nxfp::bench_util::{banner, emit_bench_json, quantile_duration, smoke_env, StepTtft, Table};
 use nxfp::coordinator::fault::FaultPlan;
@@ -29,6 +33,9 @@ use nxfp::coordinator::scheduler::Scheduler;
 use nxfp::coordinator::{DecodeEngine, FinishReason, GenRequest, GenResponse, SynthBackend};
 use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
+use nxfp::obs::{
+    check_trace, read_jsonl, write_metrics, Trace, TraceSink, TraceSummary, DEFAULT_TRACE_CAP,
+};
 use nxfp::util::rng::Rng;
 use std::time::{Duration, Instant};
 
@@ -536,4 +543,123 @@ fn main() {
         reqs.len(),
         reqs.len()
     );
+
+    // ---- observability: tracing overhead + code-occupancy probes --------
+    banner("HotpathScheduler", "observability: tracing overhead, occupancy probes");
+    let mut rng = Rng::seeded(46);
+    let reqs = traffic(bursts, per_burst, seq, &mut rng);
+    println!(
+        "traffic: {} requests, continuous mode (acceptance: tracing on is \
+         bit-identical to tracing off, the in-memory trace passes the \
+         lifecycle checker, occupancy probes report nonzero coverage)\n",
+        reqs.len()
+    );
+    let mut obs_runs = Vec::new();
+    for traced in [false, true] {
+        let label = if traced { "on" } else { "off" };
+        let mut eng = engine(seq, &kv);
+        if traced {
+            eng.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
+            eng.enable_occupancy();
+        }
+        let mut sched = Scheduler::new(MAX_BATCH, Scheduler::DEFAULT_PROMOTE_AFTER);
+        sched.set_trace_sink(eng.trace_sink());
+        for r in &reqs {
+            sched.enqueue(r.clone());
+        }
+        let resps = eng.serve_continuous(&mut sched).expect("obs run failed");
+        assert_eq!(resps.len(), reqs.len(), "tracing {label}: lost responses");
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            resps.into_iter().map(|r| (r.id, r.tokens)).collect();
+        toks.sort();
+        let m = &eng.metrics;
+        let mut fields = vec![("tok_s", m.tokens_per_sec())];
+        if traced {
+            // the live ring must already satisfy the lifecycle checker
+            let trace = Trace {
+                entries: eng.trace_sink().entries(),
+                summary: Some(TraceSummary::from_serving(&eng.serving)),
+            };
+            let viol = check_trace(&trace);
+            assert!(viol.is_empty(), "live trace failed the checker: {viol:?}");
+            let occ = eng.occupancy_report();
+            assert!(!occ.is_empty(), "occupancy probes reported no tables");
+            for o in &occ {
+                println!("{}", o.summary());
+                assert!(o.total > 0, "occupancy probe saw no codes");
+            }
+            fields.push(("occ_clip_rate", occ[0].clip_rate()));
+            fields.push(("occ_vacant_fraction", occ[0].vacant_fraction()));
+            fields.push(("occ_recycle_rate", occ[0].recycle_rate()));
+            println!(
+                "tracing on: {} trace entries, {:.0} tok/s",
+                trace.entries.len(),
+                m.tokens_per_sec()
+            );
+        } else {
+            println!("tracing off: {:.0} tok/s", m.tokens_per_sec());
+        }
+        emit_bench_json(
+            "scheduler",
+            &format!("obs-tracing-{label}"),
+            &kv.name(),
+            &kv.name(),
+            &fields,
+        );
+        obs_runs.push(toks);
+    }
+    assert_eq!(obs_runs[0], obs_runs[1], "tracing changed a generation");
+    println!("tracing on vs off: bit-identical generations");
+
+    // with NXFP_OBS_OUT=<dir>, write the CI observability artifacts from a
+    // traced fault run (so Retry events appear) and re-validate the JSONL
+    // round trip through the same checker `nxfp trace check` uses
+    if let Ok(dir) = std::env::var("NXFP_OBS_OUT") {
+        if !dir.is_empty() {
+            let dir = std::path::PathBuf::from(dir);
+            let mut eng = engine(seq, &kv);
+            eng.set_retry_policy(8, Duration::from_micros(50));
+            // scan seeds like the fault sweep so the artifact trace
+            // actually contains Retry events
+            let mut fired = 0u64;
+            for seed in 7u64..23 {
+                let mut e = engine(seq, &kv);
+                e.set_retry_policy(8, Duration::from_micros(50));
+                let stats = e.inject_faults(&FaultPlan::transient_steps(seed, 0.05));
+                e.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
+                e.enable_occupancy();
+                let mut sched = Scheduler::new(MAX_BATCH, Scheduler::DEFAULT_PROMOTE_AFTER);
+                sched.set_trace_sink(e.trace_sink());
+                for r in &reqs {
+                    sched.enqueue(r.clone());
+                }
+                let resps = e.serve_continuous(&mut sched).expect("obs fault run failed");
+                assert_eq!(resps.len(), reqs.len(), "obs fault run: lost responses");
+                fired = stats.borrow().step_errors;
+                eng = e;
+                if fired > 0 {
+                    break;
+                }
+            }
+            let occ = eng.occupancy_report();
+            let summary = TraceSummary::from_serving(&eng.serving);
+            let trace_path = dir.join("trace.jsonl");
+            eng.trace_sink().write_jsonl(&trace_path, &summary).expect("trace write failed");
+            write_metrics(&dir.join("metrics.prom"), &eng.metrics, &eng.serving, &occ)
+                .expect("prometheus write failed");
+            write_metrics(&dir.join("metrics.json"), &eng.metrics, &eng.serving, &occ)
+                .expect("metrics json write failed");
+            let trace = read_jsonl(&trace_path).expect("trace reread failed");
+            let viol = check_trace(&trace);
+            assert!(viol.is_empty(), "obs artifact trace failed the checker: {viol:?}");
+            println!(
+                "obs artifacts written to {} ({} trace entries, {} injected faults, \
+                 {} retries)",
+                dir.display(),
+                trace.entries.len(),
+                fired,
+                eng.serving.retries
+            );
+        }
+    }
 }

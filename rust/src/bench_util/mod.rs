@@ -104,6 +104,17 @@ pub fn smoke_env() -> bool {
     std::env::var("NXFP_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
 }
 
+/// Version of the bench-JSON record layout. Bumped when the meaning of a
+/// shared field changes; additive fields do not bump it. `bench_compare.py`
+/// accepts records with or without the version stamp (pre-versioning
+/// baselines) and skips the meta fields when diffing numerics.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Monotonic per-process sequence of emitted bench records, so a reader
+/// can reconstruct emission order even after lines from several benches
+/// are concatenated or sorted.
+static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
 /// Append one machine-readable result record so the perf trajectory is
 /// tracked across PRs. When `NXFP_BENCH_JSON=<dir>` is set, the record is
 /// appended as one JSON line to `<dir>/BENCH_<bench>.json` (the directory
@@ -112,12 +123,14 @@ pub fn smoke_env() -> bool {
 /// `"fp16"`/`"fp32"` for unquantized baselines) so the trajectory can
 /// distinguish mixed-precision runs that share a `config` label.
 /// `fields` are numeric measurements (tok/s, p95 ms, speedups,
-/// effective_bits); non-finite values serialize as `null`.
+/// effective_bits); non-finite values serialize as `null`. Every record
+/// carries `schema_version` ([`BENCH_SCHEMA_VERSION`]) and a per-process
+/// `run_seq` emission counter.
 ///
 /// ```json
 /// {"bench":"scheduler","name":"continuous","config":"NxFP4 (NM+AM+CR)",
-///  "policy":"NxFP4 (NM+AM+CR)","smoke":false,"tok_s":1234.5,"p95_ms":8.1,
-///  "effective_bits":4.34}
+///  "policy":"NxFP4 (NM+AM+CR)","smoke":false,"schema_version":1,
+///  "run_seq":0,"tok_s":1234.5,"p95_ms":8.1,"effective_bits":4.34}
 /// ```
 pub fn emit_bench_json(
     bench: &str,
@@ -142,8 +155,10 @@ pub fn emit_bench_json(
         }
         out
     };
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut line = format!(
-        "{{\"bench\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"policy\":\"{}\",\"smoke\":{}",
+        "{{\"bench\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"policy\":\"{}\",\"smoke\":{},\
+         \"schema_version\":{BENCH_SCHEMA_VERSION},\"run_seq\":{seq}",
         esc(bench),
         esc(name),
         esc(config),

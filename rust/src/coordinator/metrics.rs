@@ -127,6 +127,50 @@ impl Histogram {
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
+
+    /// Sum of all recorded samples (0.0 when empty).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Raw per-bucket counts, for exporters that need the full shape.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper bound of bucket `i` (`lo · growth^(i+1)`): the Prometheus
+    /// `le` value for that bucket.
+    pub fn bucket_bound(&self, i: usize) -> f64 {
+        self.lo * self.growth.powi(i as i32 + 1)
+    }
+
+    /// Bucket geometry `(lo, growth, buckets)` — two histograms merge iff
+    /// these match.
+    pub fn geometry(&self) -> (f64, f64, usize) {
+        (self.lo, self.growth, self.counts.len())
+    }
+
+    /// Fold another histogram with identical geometry into this one:
+    /// bucket counts, totals, and sums add; min/max fold (an empty side
+    /// contributes nothing since its min/max are ±infinity sentinels).
+    /// The rollup primitive for multi-replica aggregation and exporters.
+    pub fn merge(&mut self, other: &Histogram) -> anyhow::Result<()> {
+        if self.geometry() != other.geometry() {
+            anyhow::bail!(
+                "histogram geometry mismatch: {:?} vs {:?}",
+                self.geometry(),
+                other.geometry()
+            );
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        Ok(())
+    }
 }
 
 /// Per-request serving statistics, recorded by the engine/scheduler as
@@ -377,6 +421,71 @@ mod tests {
         let mut h = Histogram::new(1.0, 100.0, 4);
         h.record(1.0);
         assert_eq!(h.quantile(0.5), 1.0);
+    }
+
+    #[test]
+    fn merge_sums_same_geometry_histograms() {
+        let mut a = Histogram::for_seconds();
+        let mut b = Histogram::for_seconds();
+        for v in [0.001, 0.004, 0.020] {
+            a.record(v);
+        }
+        for v in [0.002, 0.100] {
+            b.record(v);
+        }
+        // reference: everything recorded into one histogram
+        let mut all = Histogram::for_seconds();
+        for v in [0.001, 0.004, 0.020, 0.002, 0.100] {
+            all.record(v);
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.count(), 5);
+        assert!((a.sum() - all.sum()).abs() < 1e-12);
+        assert_eq!(a.min(), 0.001);
+        assert_eq!(a.max(), 0.100);
+        assert_eq!(a.bucket_counts(), all.bucket_counts());
+        assert_eq!(a.p95(), all.p95());
+    }
+
+    #[test]
+    fn merge_handles_empty_sides() {
+        let mut a = Histogram::for_counts();
+        let mut b = Histogram::for_counts();
+        b.record(7.0);
+        a.merge(&b).unwrap();
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min(), 7.0);
+        assert_eq!(a.max(), 7.0);
+        // merging an empty histogram changes nothing
+        let empty = Histogram::for_counts();
+        a.merge(&empty).unwrap();
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min(), 7.0);
+    }
+
+    #[test]
+    fn merge_rejects_geometry_mismatch() {
+        let mut a = Histogram::for_seconds();
+        let b = Histogram::for_counts();
+        assert!(a.merge(&b).is_err());
+        let c = Histogram::new(1e-6, 1e3, 161); // same span, different buckets
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_recorded_values() {
+        let mut h = Histogram::for_seconds();
+        h.record(0.0123);
+        let (i, _) = h
+            .bucket_counts()
+            .iter()
+            .enumerate()
+            .find(|(_, &c)| c > 0)
+            .expect("one bucket populated");
+        assert!(h.bucket_bound(i) >= 0.0123, "upper bound contains the sample");
+        if i > 0 {
+            assert!(h.bucket_bound(i - 1) <= 0.0123 * 1.0001);
+        }
     }
 
     #[test]

@@ -74,11 +74,13 @@ pub mod server;
 use anyhow::Result;
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::formats::{NxConfig, QuantPolicy};
+use crate::formats::{EncodePlan, NxConfig, QuantPolicy};
 use crate::models::{Checkpoint, LmSpec};
-use crate::quant::kv_cache::{KvCache, KvPlans};
+use crate::obs::{CodeOccupancy, TraceEvent, TraceSink};
+use crate::quant::kv_cache::{KvCache, KvPlans, KvStreamPlan};
 use crate::quant::page::{PageId, PagePool, DEFAULT_KV_PAGE_ROWS};
 use crate::runtime::{lit, Runtime, Step};
 use crate::train::params_to_literals;
@@ -507,6 +509,19 @@ impl SlotKv {
         &self.caches
     }
 
+    /// Attach the engine's per-layer `(K, V)` occupancy probe tables to
+    /// this slot's caches (shared `Rc`s — every slot feeds the same
+    /// per-config aggregates; see `DecodeEngine::enable_occupancy`).
+    pub fn set_probes(
+        &mut self,
+        probes: &[(Rc<RefCell<CodeOccupancy>>, Rc<RefCell<CodeOccupancy>>)],
+    ) {
+        debug_assert_eq!(probes.len(), self.caches.len());
+        for (cache, (k, v)) in self.caches.iter_mut().zip(probes) {
+            cache.set_probes(Some(k.clone()), Some(v.clone()));
+        }
+    }
+
     /// Incrementally decode rows appended since the previous call straight
     /// into this slot's `[L, S, D]` lanes of the batched step tensors. The
     /// lane must persist across steps (the engine keeps the slab alive and
@@ -660,6 +675,23 @@ impl Slot {
     }
 }
 
+/// Occupancy-table interning: streams whose `EncodePlan` is the same
+/// `Arc` (the `KvPlans` interning guarantee) share one table, so the
+/// report has exactly one entry per distinct config.
+fn intern_occ(
+    sp: &KvStreamPlan,
+    uniq: &mut Vec<(Arc<EncodePlan>, Rc<RefCell<CodeOccupancy>>)>,
+) -> Rc<RefCell<CodeOccupancy>> {
+    for (p, t) in uniq.iter() {
+        if Arc::ptr_eq(p, &sp.plan) {
+            return t.clone();
+        }
+    }
+    let t = Rc::new(RefCell::new(CodeOccupancy::new(&sp.cfg)));
+    uniq.push((sp.plan.clone(), t.clone()));
+    t
+}
+
 /// Batched decode engine. `B` (max batch) and `S` (max context) are baked
 /// into the artifact; the engine pads unused lanes and owns the persistent
 /// `[B, L, S, D]` step slabs (free lanes are always zero).
@@ -688,6 +720,17 @@ pub struct DecodeEngine {
     /// Per-request wall-clock deadline, enforced at admission and per
     /// step (`None` = no deadline).
     deadline: Option<Duration>,
+    /// Structured trace sink (disabled by default: every emission is one
+    /// null check; see `obs::TraceSink`).
+    trace: TraceSink,
+    /// Per-layer `(K, V)` occupancy probe tables handed to every admitted
+    /// slot's caches; empty until [`DecodeEngine::enable_occupancy`].
+    probes: Vec<(Rc<RefCell<CodeOccupancy>>, Rc<RefCell<CodeOccupancy>>)>,
+    /// The distinct tables behind `probes` (one per interned config).
+    occ_tables: Vec<Rc<RefCell<CodeOccupancy>>>,
+    /// `(prefill tokens, decode tokens)` fed by the most recent
+    /// [`DecodeEngine::step_slots`] — the step-span token split.
+    last_step_split: (u64, u64),
     /// Shared page pool every quantized slot's caches borrow from — the
     /// substrate of cross-slot prefix sharing (unused in FP32 baseline
     /// mode, where slots carry no packed caches at all).
@@ -754,6 +797,10 @@ impl DecodeEngine {
             retry_backoff_base: DEFAULT_RETRY_BACKOFF,
             requeue_max: DEFAULT_REQUEUE_MAX,
             deadline: None,
+            trace: TraceSink::disabled(),
+            probes: Vec::new(),
+            occ_tables: Vec::new(),
+            last_step_split: (0, 0),
             pool: Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS))),
             k_f32: vec![0.0; n],
             v_f32: vec![0.0; n],
@@ -819,6 +866,62 @@ impl DecodeEngine {
         self.deadline = deadline;
     }
 
+    /// Install a structured trace sink (see `obs::TraceSink`). The server
+    /// front-end clones the same sink into the [`Scheduler`] so engine
+    /// and scheduler emissions share one ring and one step clock.
+    pub fn set_trace_sink(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// A clone of the engine's trace sink (shared ring).
+    pub fn trace_sink(&self) -> TraceSink {
+        self.trace.clone()
+    }
+
+    /// Turn on live code-occupancy probes: one [`CodeOccupancy`] table
+    /// per **interned** config (plans shared across layers/streams feed
+    /// one aggregate), attached to every subsequently admitted slot's
+    /// caches. No-op in FP32 baseline mode or when already enabled.
+    /// Probe overhead is a few mul/cmp per encoded element, and only on
+    /// slots admitted after this call.
+    pub fn enable_occupancy(&mut self) {
+        if !self.probes.is_empty() {
+            return;
+        }
+        let Some(plans) = self.kv.as_ref() else { return };
+        let mut uniq: Vec<(Arc<EncodePlan>, Rc<RefCell<CodeOccupancy>>)> = Vec::new();
+        let probes: Vec<_> = plans
+            .layers
+            .iter()
+            .map(|(k, v)| (intern_occ(k, &mut uniq), intern_occ(v, &mut uniq)))
+            .collect();
+        self.probes = probes;
+        self.occ_tables = uniq.into_iter().map(|(_, t)| t).collect();
+    }
+
+    /// Snapshot of every occupancy probe table (one per interned config;
+    /// empty when probes are off).
+    pub fn occupancy_report(&self) -> Vec<CodeOccupancy> {
+        self.occ_tables.iter().map(|t| t.borrow().clone()).collect()
+    }
+
+    /// Complete `req` as shed by overload policy (queue cap or drain),
+    /// counting it and emitting its trace lifecycle. The server
+    /// front-end routes shed requests through here so metrics and traces
+    /// stay in exact agreement.
+    pub fn shed_response(&mut self, req: GenRequest) -> GenResponse {
+        self.serving.shed += 1;
+        self.trace.event(Some(req.id), TraceEvent::Shed);
+        self.trace.event(Some(req.id), TraceEvent::Finished { reason: FinishReason::Shed });
+        GenResponse {
+            id: req.id,
+            tokens: req.prompt,
+            generated: 0,
+            latency: Duration::ZERO,
+            reason: FinishReason::Shed,
+        }
+    }
+
     /// Wrap the current backend in a [`fault::FaultBackend`] injecting
     /// `plan` (bench/test only — this is how `--fault-plan` and the fault
     /// sweep exercise the recovery paths on any backend). Returns the
@@ -861,6 +964,7 @@ impl DecodeEngine {
             req.prompt.len()
         );
         self.serving.rejected += 1;
+        self.trace.event(Some(req.id), TraceEvent::Finished { reason: FinishReason::Rejected });
         Some(GenResponse {
             id: req.id,
             tokens: req.prompt.clone(),
@@ -879,6 +983,7 @@ impl DecodeEngine {
     /// backoff (`base * 2^(n-1)`, at most [`MAX_RETRY_BACKOFF`]).
     fn backoff(&mut self, attempt: u32) {
         self.serving.retries += 1;
+        self.trace.event(None, TraceEvent::Retry { attempt });
         let exp = self.retry_backoff_base.saturating_mul(1u32 << (attempt - 1).min(20));
         let wait = exp.min(MAX_RETRY_BACKOFF);
         self.serving.retry_backoff.record(wait.as_secs_f64());
@@ -970,6 +1075,8 @@ impl DecodeEngine {
         }
         eprintln!("[serve] request {} failed ({why}), requeues {}", sl.req.id, sl.requeues);
         self.serving.backend_failed += 1;
+        self.trace
+            .event(Some(sl.req.id), TraceEvent::Finished { reason: FinishReason::BackendError });
         let generated = sl.output.len() - sl.req.prompt.len();
         let latency = sl.arrival.elapsed();
         self.serving.latency.record(latency.as_secs_f64());
@@ -999,6 +1106,9 @@ impl DecodeEngine {
             self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
             self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
             self.serving.deadline_expired += 1;
+            self.trace.event(Some(sl.req.id), TraceEvent::DeadlineExpired);
+            self.trace
+                .event(Some(sl.req.id), TraceEvent::Finished { reason: FinishReason::Deadline });
             let generated = sl.output.len() - sl.req.prompt.len();
             let latency = sl.arrival.elapsed();
             self.serving.latency.record(latency.as_secs_f64());
@@ -1020,10 +1130,13 @@ impl DecodeEngine {
             state: SlotState::Prefilling,
             cursor: 0,
             output: req.prompt.clone(),
-            kv: self
-                .kv
-                .as_ref()
-                .map(|plans| SlotKv::from_plans_in(plans, d, s, self.pool.clone())),
+            kv: self.kv.as_ref().map(|plans| {
+                let mut kv = SlotKv::from_plans_in(plans, d, s, self.pool.clone());
+                if !self.probes.is_empty() {
+                    kv.set_probes(&self.probes);
+                }
+                kv
+            }),
             fill: 0,
             chunk_fed: 0,
             prefix_registered: false,
@@ -1389,6 +1502,8 @@ impl DecodeEngine {
                 // batched-step token of the prompt
                 let fed = sl.chunk_fed as u64 + 1;
                 self.serving.prefill_chunk.record(fed as f64);
+                self.trace
+                    .event(Some(sl.req.id), TraceEvent::PrefillChunk { tokens: fed as usize });
                 prefill_toks += fed;
                 sl.chunk_fed = 0;
                 sl.cursor += 1; // still consuming the prompt
@@ -1434,6 +1549,10 @@ impl DecodeEngine {
                 self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
                 let latency = sl.arrival.elapsed();
                 self.serving.latency.record(latency.as_secs_f64());
+                self.trace.event(
+                    Some(sl.req.id),
+                    TraceEvent::Finished { reason: FinishReason::Completed },
+                );
                 done.push(GenResponse {
                     id: sl.req.id,
                     generated,
@@ -1448,6 +1567,7 @@ impl DecodeEngine {
             self.serving.step_prefill_tokens.record(prefill_toks as f64);
             self.serving.step_decode_tokens.record(decode_toks as f64);
         }
+        self.last_step_split = (prefill_toks, decode_toks);
     }
 
     /// Serve requests wave-at-a-time (the legacy scheduling mode: every
@@ -1478,6 +1598,7 @@ impl DecodeEngine {
                 Some(resp) => responses.push(resp),
                 None => {
                     self.serving.admitted += 1;
+                    self.trace.event(Some(req.id), TraceEvent::Admitted { lane: slots.len() });
                     slots.push(Some(self.make_slot(req, Instant::now())));
                 }
             }
@@ -1511,6 +1632,11 @@ impl DecodeEngine {
             let wall_expired = self.deadline.map_or(false, |d| adm.arrival.elapsed() > d);
             if adm.expired || wall_expired {
                 self.serving.deadline_expired += 1;
+                self.trace.event(Some(adm.req.id), TraceEvent::DeadlineExpired);
+                self.trace.event(
+                    Some(adm.req.id),
+                    TraceEvent::Finished { reason: FinishReason::Deadline },
+                );
                 let latency = adm.arrival.elapsed();
                 self.serving.latency.record(latency.as_secs_f64());
                 done.push(GenResponse {
@@ -1523,9 +1649,12 @@ impl DecodeEngine {
                 self.metrics.requests += 1;
                 continue;
             }
+            let rid = adm.req.id;
             self.serving.admitted += 1;
+            self.trace.event(Some(rid), TraceEvent::Admitted { lane: b });
             if adm.promoted {
                 self.serving.promoted += 1;
+                self.trace.event(Some(rid), TraceEvent::Promoted);
             }
             self.serving.wait_steps.record(adm.waited_steps as f64);
             let mut slot = self.make_slot(adm.req, adm.arrival);
@@ -1540,6 +1669,7 @@ impl DecodeEngine {
                         slot.cursor = rows;
                         slot.fill = rows;
                         self.serving.prefix_hits += 1;
+                        self.trace.event(Some(rid), TraceEvent::PrefixAdopted { rows });
                         self.serving.prefix_rows.record(rows as f64);
                     }
                     None if sched.prefix_enabled() => self.serving.prefix_misses += 1,
@@ -1557,14 +1687,25 @@ impl DecodeEngine {
     /// newly arrived requests join between steps — no wave barrier.
     pub fn step_continuous(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
         let t0 = Instant::now();
+        let tracing = self.trace.is_enabled();
         let mut done = Vec::new();
         let mut requeue = Vec::new();
         self.expire_slots(sched.slots_mut(), &mut done);
         self.admit(sched, &mut done);
+        let (mut phase_a_us, mut phase_b_us) = (0u64, 0u64);
+        self.last_step_split = (0, 0);
         if sched.active() > 0 {
+            let ta = tracing.then(Instant::now);
             self.chunk_prefill(sched.slots_mut(), &mut done, &mut requeue, true);
+            if let Some(t) = ta {
+                phase_a_us = t.elapsed().as_micros() as u64;
+            }
             if sched.active() > 0 {
+                let tb = tracing.then(Instant::now);
                 self.step_slots(sched.slots_mut(), &mut done, &mut requeue, true);
+                if let Some(t) = tb {
+                    phase_b_us = t.elapsed().as_micros() as u64;
+                }
             }
         }
         // faulted slots' requests go back to the *front* of the queue:
@@ -1577,6 +1718,16 @@ impl DecodeEngine {
         sched.register_prefixes();
         if sched.prefix_enabled() {
             self.serving.shared_pages.record(self.pool.borrow().shared_pages() as f64);
+        }
+        // span is stamped with the *current* step (tick advances after)
+        if tracing {
+            self.trace.span(
+                phase_a_us,
+                phase_b_us,
+                sched.active(),
+                self.last_step_split.0 as usize,
+                self.last_step_split.1 as usize,
+            );
         }
         let depth = sched.tick();
         self.serving.queue_depth.record(depth as f64);

@@ -66,6 +66,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::obs::{TraceEvent, TraceSink};
 use crate::quant::page::{PageId, PagePool};
 
 use super::{GenRequest, Requeue, Slot, SlotState};
@@ -321,6 +322,9 @@ pub struct Scheduler {
     max_queue_steps: Option<u64>,
     /// Requests enqueued over the scheduler's lifetime.
     pub enqueued: u64,
+    /// Trace sink for `Enqueued`/`Requeued` lifecycle events; the no-op
+    /// sink (the default) costs one null check per emission site.
+    trace: TraceSink,
 }
 
 impl Scheduler {
@@ -343,7 +347,15 @@ impl Scheduler {
             queue_cap: usize::MAX,
             max_queue_steps: None,
             enqueued: 0,
+            trace: TraceSink::disabled(),
         }
+    }
+
+    /// Attach a trace sink (a clone of the engine's, so queue-side and
+    /// slot-side events land in one ring in emission order).
+    pub fn set_trace_sink(&mut self, sink: TraceSink) {
+        sink.set_step(self.step);
+        self.trace = sink;
     }
 
     /// Bound the admission queue (`--queue-cap`); `usize::MAX` (the
@@ -472,6 +484,7 @@ impl Scheduler {
             return Some(req);
         }
         self.enqueued += 1;
+        self.trace.event(Some(req.id), TraceEvent::Enqueued);
         self.queue.push_back(Queued {
             req,
             arrival: Instant::now(),
@@ -486,6 +499,7 @@ impl Scheduler {
     /// latency spans the whole ordeal). Exempt from the queue cap, not
     /// double-counted in `enqueued`, and re-stamps the promotion clock.
     pub fn requeue(&mut self, r: Requeue) {
+        self.trace.event(Some(r.req.id), TraceEvent::Requeued);
         self.queue.push_front(Queued {
             req: r.req,
             arrival: r.arrival,
@@ -573,6 +587,9 @@ impl Scheduler {
     /// queue depth (the engine records it).
     pub fn tick(&mut self) -> usize {
         self.step += 1;
+        // keep the shared step clock coherent for events emitted between
+        // engine steps (enqueues, drain sheds)
+        self.trace.set_step(self.step);
         self.queue.len()
     }
 

@@ -30,12 +30,18 @@ use super::fault::FaultPlan;
 use super::metrics::ServingMetrics;
 use super::scheduler::{SchedMode, Scheduler};
 use super::{
-    DecodeEngine, FinishReason, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET,
+    DecodeEngine, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET,
     DEFAULT_RETRY_BACKOFF, DEFAULT_RETRY_MAX,
 };
 use crate::formats::QuantPolicy;
 use crate::models::{Checkpoint, LmSpec};
+use crate::obs::{write_metrics, CodeOccupancy, TraceSink, TraceSummary, DEFAULT_TRACE_CAP};
 use crate::runtime::Runtime;
+
+/// Continuous mode rewrites `--metrics-out` every this many engine steps
+/// (cheap: a few KB of text), so a live server's metrics file is never
+/// more than a snapshot interval stale.
+const METRICS_SNAPSHOT_STEPS: u64 = 256;
 
 enum Msg {
     Req(GenRequest),
@@ -47,7 +53,7 @@ enum Msg {
 
 /// Front-end configuration for [`ServerHandle::spawn`] — everything about
 /// *scheduling*, as opposed to the model/format arguments.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// Batch lanes (must match the artifact's baked `B`).
     pub max_batch: usize,
@@ -85,6 +91,18 @@ pub struct ServeOpts {
     /// Seeded fault injection (`--fault-plan`; bench/test only): wraps
     /// the backend in a `FaultBackend` before serving.
     pub fault: Option<FaultPlan>,
+    /// Write the structured JSONL event trace here at drain/shutdown
+    /// (`--trace-out`). `None` leaves the no-op sink installed: the
+    /// traced lifecycle costs one null check per would-be event.
+    pub trace_out: Option<PathBuf>,
+    /// Write a metrics export here (`--metrics-out`): Prometheus text,
+    /// or JSON when the extension is `.json`. Written at drain/shutdown
+    /// and refreshed every [`METRICS_SNAPSHOT_STEPS`] continuous steps.
+    pub metrics_out: Option<PathBuf>,
+    /// Attach live code-occupancy probes to every slot's KV caches
+    /// (`--occupancy`): per-config clip/vacant/recycle rates in the
+    /// metrics export and [`ServeReport::occupancy`].
+    pub occupancy: bool,
 }
 
 impl Default for ServeOpts {
@@ -101,6 +119,9 @@ impl Default for ServeOpts {
             max_queue_steps: None,
             retry_max: DEFAULT_RETRY_MAX,
             fault: None,
+            trace_out: None,
+            metrics_out: None,
+            occupancy: false,
         }
     }
 }
@@ -109,6 +130,9 @@ impl Default for ServeOpts {
 pub struct ServeReport {
     pub metrics: Metrics,
     pub serving: ServingMetrics,
+    /// Per-config occupancy probe tables (empty unless
+    /// [`ServeOpts::occupancy`] was set).
+    pub occupancy: Vec<CodeOccupancy>,
 }
 
 /// Handle to a running server worker.
@@ -142,19 +166,18 @@ impl ServerHandle {
             if let Some(plan) = &opts.fault {
                 engine.inject_faults(plan);
             }
+            if opts.trace_out.is_some() {
+                engine.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
+            }
+            if opts.occupancy {
+                engine.enable_occupancy();
+            }
             let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
             match opts.mode {
                 SchedMode::Continuous => {
                     run_continuous(&mut engine, &worker_rx, &resp_tx, &opts, log)
                 }
-                SchedMode::Wave => run_waves(
-                    &mut engine,
-                    &worker_rx,
-                    &resp_tx,
-                    opts.max_batch,
-                    opts.batch_window,
-                    log,
-                ),
+                SchedMode::Wave => run_waves(&mut engine, &worker_rx, &resp_tx, &opts, log),
             }
         });
         ServerHandle { tx, rx, join: Some(join) }
@@ -211,6 +234,8 @@ fn run_continuous(
     log: bool,
 ) -> Result<ServeReport> {
     let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
+    // the scheduler shares the engine's trace ring and step clock
+    sched.set_trace_sink(engine.trace_sink());
     // admission ranks by prefill steps under the same budget the engine
     // chunks with (one knob: ServeOpts::prefill_budget)
     sched.set_prefill_budget(engine.prefill_budget());
@@ -222,17 +247,11 @@ fn run_continuous(
     }
     let mut shutting_down = false;
     let mut draining = false;
+    let mut steps = 0u64;
     // overload/drain rejections answer immediately: the request never
     // queues, and the caller learns why via FinishReason::Shed
     let shed = |engine: &mut DecodeEngine, r: GenRequest| {
-        engine.serving.shed += 1;
-        let _ = resp_tx.send(GenResponse {
-            id: r.id,
-            tokens: r.prompt,
-            generated: 0,
-            latency: Duration::ZERO,
-            reason: FinishReason::Shed,
-        });
+        let _ = resp_tx.send(engine.shed_response(r));
     };
     // deterministic rejections answer at enqueue time instead of queuing
     // behind real work (admit() re-validates for direct Scheduler users)
@@ -266,8 +285,13 @@ fn run_continuous(
                 if log {
                     eprintln!("[serve] continuous summary: {}", engine.serving.summary());
                 }
-                let report =
-                    ServeReport { metrics: engine.metrics, serving: engine.serving.clone() };
+                let occ = engine.occupancy_report();
+                write_obs_outputs(engine, opts, &occ);
+                let report = ServeReport {
+                    metrics: engine.metrics,
+                    serving: engine.serving.clone(),
+                    occupancy: occ,
+                };
                 return Ok(report);
             }
             match worker_rx.recv() {
@@ -315,6 +339,31 @@ fn run_continuous(
             }
             let _ = resp_tx.send(resp);
         }
+        steps += 1;
+        if opts.metrics_out.is_some() && steps % METRICS_SNAPSHOT_STEPS == 0 {
+            let occ = engine.occupancy_report();
+            if let Some(path) = &opts.metrics_out {
+                if let Err(e) = write_metrics(path, &engine.metrics, &engine.serving, &occ) {
+                    eprintln!("[serve] metrics snapshot failed ({}): {e:#}", path.display());
+                }
+            }
+        }
+    }
+}
+
+/// Write the `--metrics-out` / `--trace-out` artifacts (best-effort: a
+/// failed write is logged, never fatal — the in-memory report survives).
+fn write_obs_outputs(engine: &DecodeEngine, opts: &ServeOpts, occ: &[CodeOccupancy]) {
+    if let Some(path) = &opts.metrics_out {
+        if let Err(e) = write_metrics(path, &engine.metrics, &engine.serving, occ) {
+            eprintln!("[serve] metrics write failed ({}): {e:#}", path.display());
+        }
+    }
+    if let Some(path) = &opts.trace_out {
+        let summary = TraceSummary::from_serving(&engine.serving);
+        if let Err(e) = engine.trace_sink().write_jsonl(path, &summary) {
+            eprintln!("[serve] trace write failed ({}): {e:#}", path.display());
+        }
     }
 }
 
@@ -324,10 +373,10 @@ fn run_waves(
     engine: &mut DecodeEngine,
     worker_rx: &mpsc::Receiver<Msg>,
     resp_tx: &mpsc::Sender<GenResponse>,
-    max_batch: usize,
-    batch_window: Duration,
+    opts: &ServeOpts,
     log: bool,
 ) -> Result<ServeReport> {
+    let (max_batch, batch_window) = (opts.max_batch, opts.batch_window);
     let mut pending: Vec<GenRequest> = Vec::new();
     let mut shutting_down = false;
     loop {
@@ -362,17 +411,16 @@ fn run_waves(
             // returned `true` goes unanswered
             while let Ok(msg) = worker_rx.try_recv() {
                 if let Msg::Req(r) = msg {
-                    engine.serving.shed += 1;
-                    let _ = resp_tx.send(GenResponse {
-                        id: r.id,
-                        tokens: r.prompt,
-                        generated: 0,
-                        latency: Duration::ZERO,
-                        reason: FinishReason::Shed,
-                    });
+                    let _ = resp_tx.send(engine.shed_response(r));
                 }
             }
-            return Ok(ServeReport { metrics: engine.metrics, serving: engine.serving.clone() });
+            let occ = engine.occupancy_report();
+            write_obs_outputs(engine, opts, &occ);
+            return Ok(ServeReport {
+                metrics: engine.metrics,
+                serving: engine.serving.clone(),
+                occupancy: occ,
+            });
         }
         let wave: Vec<GenRequest> = pending.drain(..pending.len().min(max_batch)).collect();
         if wave.is_empty() {

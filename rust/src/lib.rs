@@ -25,6 +25,7 @@ pub mod dequant;
 pub mod eval;
 pub mod formats;
 pub mod models;
+pub mod obs;
 pub mod profile;
 pub mod quant;
 pub mod runtime;

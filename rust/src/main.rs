@@ -6,6 +6,7 @@
 //! nxfp reason    --ckpt ckpt.bin --format nxfp4 --probes 200
 //! nxfp quantize  --ckpt ckpt.bin --quant "weights=nxfp4,layers.0-1.*=mxfp6"
 //! nxfp serve     --ckpt ckpt.bin --quant "kv.k=nxfp5,kv.v=mxfp4" --requests 16
+//! nxfp trace     check --in trace.jsonl
 //! nxfp profile   --model Llama3-8B
 //! nxfp info
 //! ```
@@ -309,6 +310,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
         None | Some("") => None,
         Some(spec) => Some(FaultPlan::parse(spec)?),
     };
+    let opt_path = |name: &str| {
+        a.get(name).filter(|s| !s.trim().is_empty()).map(PathBuf::from)
+    };
+    let trace_out = opt_path("trace-out");
+    let metrics_out = opt_path("metrics-out");
+    let occupancy = parse_switch(&a.get_str("occupancy"))?;
     let corpus = default_corpus();
     let probes = Probe::generate(&corpus.spec, n_req, 99);
     let mut server = ServerHandle::spawn(
@@ -328,6 +335,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
             max_queue_steps: None,
             retry_max,
             fault,
+            trace_out,
+            metrics_out,
+            occupancy,
         },
     );
     for (i, p) in probes.iter().enumerate() {
@@ -381,7 +391,38 @@ fn cmd_serve(a: &Args) -> Result<()> {
         );
     }
     println!("{}", report.serving.summary());
+    for occ in &report.occupancy {
+        println!("{}", occ.summary());
+    }
     Ok(())
+}
+
+/// `nxfp trace <show|check> --in <trace.jsonl>` — reconstruct per-request
+/// timelines from a serving trace, or validate it against the event-order
+/// state machine and the embedded counter summary.
+fn cmd_trace(a: &Args) -> Result<()> {
+    let action = a.positional.first().map(String::as_str).unwrap_or("show");
+    let path = PathBuf::from(a.get_str("in"));
+    let trace = nxfp::obs::read_jsonl(&path)?;
+    match action {
+        "check" => {
+            let violations = nxfp::obs::check_trace(&trace);
+            if violations.is_empty() {
+                println!("trace OK: {} entries", trace.entries.len());
+                Ok(())
+            } else {
+                for v in &violations {
+                    eprintln!("violation: {v}");
+                }
+                Err(anyhow!("{} trace violation(s) in {}", violations.len(), path.display()))
+            }
+        }
+        "show" => {
+            print!("{}", nxfp::obs::render_timelines(&nxfp::obs::timelines(&trace)));
+            Ok(())
+        }
+        other => Err(anyhow!("unknown trace action `{other}` (want show|check)")),
+    }
 }
 
 fn cmd_profile(a: &Args) -> Result<()> {
@@ -416,6 +457,11 @@ fn cmd_info() -> Result<()> {
     println!("examples: nxfp eval --ckpt artifacts/model.ckpt --format nxfp4");
     println!("          nxfp serve --quant \"kv.k=nxfp5,kv.v=mxfp4\"");
     println!("          nxfp quantize --quant \"layers.0-1.weights=mxfp6,weights=nxfp4\"");
+    println!(
+        "          nxfp serve --trace-out trace.jsonl --metrics-out metrics.prom \
+         --occupancy on"
+    );
+    println!("          nxfp trace check --in trace.jsonl");
     Ok(())
 }
 
@@ -581,7 +627,7 @@ mod tests {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = argv.split_first() else {
-        eprintln!("usage: nxfp <train|eval|reason|quantize|serve|profile|info> [--help]");
+        eprintln!("usage: nxfp <train|eval|reason|quantize|serve|trace|profile|info> [--help]");
         std::process::exit(2);
     };
     let common = |a: Args| a.opt("artifacts", Some("artifacts"), "artifacts directory");
@@ -657,9 +703,25 @@ fn main() {
                 None,
                 "seeded fault injection, e.g. seed=7,step=0.01,nan=0.005",
             )
+            .opt("trace-out", None, "write a JSONL event trace here at shutdown")
+            .opt(
+                "metrics-out",
+                None,
+                "write metrics here at shutdown (.json = JSON, else Prometheus text)",
+            )
+            .opt(
+                "occupancy",
+                Some("off"),
+                "live code-occupancy probes on the KV encode path: on|off",
+            )
             .parse(rest)
             .map_err(anyhow::Error::from)
             .and_then(|a| cmd_serve(&a)),
+        "trace" => Args::new("nxfp trace", "inspect or validate a serving trace (show|check)")
+            .opt("in", Some("trace.jsonl"), "JSONL trace written by serve --trace-out")
+            .parse(rest)
+            .map_err(anyhow::Error::from)
+            .and_then(|a| cmd_trace(&a)),
         "profile" => common(Args::new("nxfp profile", "Fig.3-style scaled-weight profile"))
             .opt("model", Some("Llama3-8B"), "synthetic model profile")
             .parse(rest)

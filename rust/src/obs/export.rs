@@ -1,0 +1,323 @@
+//! Metrics export: Prometheus-text and JSON renderers over the engine's
+//! `Metrics` / `ServingMetrics`, plus the live [`CodeOccupancy`] probes.
+//!
+//! The Prometheus renderer emits the standard text exposition format:
+//! counters as `nxfp_*_total`, gauges bare, histograms as cumulative
+//! `_bucket{le="..."}` series over the log-spaced bucket geometry
+//! `Histogram` already uses (bound of bucket *i* is `lo·growth^(i+1)`),
+//! with zero-count buckets elided — cumulative sums stay valid — and the
+//! mandatory `le="+Inf"` / `_sum` / `_count` terminators. The JSON
+//! renderer carries the same counters plus per-histogram summaries
+//! (count/sum/mean/p50/p95/min/max); both are hand-rolled like the rest
+//! of the repo's JSON (no serde).
+//!
+//! [`write_metrics`] picks the renderer from the file extension
+//! (`.json` → JSON, anything else → Prometheus text), so
+//! `--metrics-out metrics.prom` and `--metrics-out metrics.json` both
+//! do the obvious thing.
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::coordinator::metrics::{Histogram, ServingMetrics};
+use crate::coordinator::Metrics;
+use crate::obs::occupancy::CodeOccupancy;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    // zero-count buckets add nothing to the cumulative sum, so eliding
+    // them keeps the series exact while keeping 100+-bucket histograms
+    // readable
+    let mut cum = 0u64;
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{:.6e}\"}} {cum}", h.bucket_bound(i));
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+fn serving_counters(s: &ServingMetrics) -> [(&'static str, &'static str, u64); 13] {
+    [
+        ("admitted", "requests admitted into the batch", s.admitted),
+        ("promoted", "admissions via the anti-starvation rule", s.promoted),
+        ("rejected", "requests rejected by validation", s.rejected),
+        ("prefix_hits", "admissions that adopted cached prefix rows", s.prefix_hits),
+        ("prefix_misses", "admissions with no usable cached prefix", s.prefix_misses),
+        ("step_faults", "transient faults during batched decode steps", s.step_faults),
+        ("chunk_faults", "transient faults during prefill chunks", s.chunk_faults),
+        ("nan_faults", "steps rejected by NaN containment", s.nan_faults),
+        ("retries", "in-place retries of faulted backend calls", s.retries),
+        ("requeued", "slots retired to the queue front after faults", s.requeued),
+        ("backend_failed", "requests failed after exhausting retries", s.backend_failed),
+        ("shed", "requests dropped by overload policy", s.shed),
+        ("deadline_expired", "requests dropped by deadline enforcement", s.deadline_expired),
+    ]
+}
+
+fn serving_histograms(s: &ServingMetrics) -> [(&'static str, &'static str, &Histogram); 10] {
+    [
+        ("latency_seconds", "end-to-end request latency", &s.latency),
+        ("ttft_seconds", "time to first generated token", &s.ttft),
+        ("wait_steps", "scheduler steps spent queued before admission", &s.wait_steps),
+        ("queue_depth", "admission queue depth sampled per step", &s.queue_depth),
+        ("prefill_chunk_tokens", "prompt tokens fed per prefill chunk", &s.prefill_chunk),
+        ("step_prefill_tokens", "prompt tokens fed per engine step", &s.step_prefill_tokens),
+        ("step_decode_tokens", "tokens decoded per engine step", &s.step_decode_tokens),
+        ("prefix_rows_adopted", "cached prefix rows adopted per hit", &s.prefix_rows),
+        ("shared_pages", "KV pages shared via prefix COW, per step", &s.shared_pages),
+        ("retry_backoff_seconds", "backoff slept before each retry", &s.retry_backoff),
+    ]
+}
+
+/// Render the Prometheus text exposition for one engine's metrics.
+pub fn render_prometheus(m: &Metrics, s: &ServingMetrics, occ: &[CodeOccupancy]) -> String {
+    let mut out = String::new();
+    prom_counter(&mut out, "nxfp_requests_total", "requests completed", m.requests);
+    prom_counter(&mut out, "nxfp_tokens_generated_total", "tokens generated", m.tokens_generated);
+    prom_counter(&mut out, "nxfp_decode_steps_total", "batched decode steps", m.decode_steps);
+    prom_gauge(&mut out, "nxfp_wall_seconds", "wall time spent stepping", m.wall.as_secs_f64());
+    prom_gauge(&mut out, "nxfp_tokens_per_sec", "decode throughput", m.tokens_per_sec());
+    prom_gauge(&mut out, "nxfp_kv_bits_packed", "packed KV footprint", m.kv_bits_packed as f64);
+    prom_gauge(
+        &mut out,
+        "nxfp_kv_bits_fp16",
+        "fp16-equivalent KV footprint",
+        m.kv_bits_fp16 as f64,
+    );
+    prom_gauge(&mut out, "nxfp_kv_savings", "fp16 bits per packed bit", m.kv_savings());
+    for (name, help, v) in serving_counters(s) {
+        prom_counter(&mut out, &format!("nxfp_{name}_total"), help, v);
+    }
+    for (name, help, h) in serving_histograms(s) {
+        prom_histogram(&mut out, &format!("nxfp_{name}"), help, h);
+    }
+    for o in occ {
+        let label = format!("{{config=\"{}\"}}", esc(&o.config));
+        let _ = writeln!(out, "# TYPE nxfp_occupancy_elements_total counter");
+        let _ = writeln!(out, "nxfp_occupancy_elements_total{label} {}", o.total);
+        let _ = writeln!(out, "# TYPE nxfp_occupancy_clipped_total counter");
+        let _ = writeln!(out, "nxfp_occupancy_clipped_total{label} {}", o.clipped);
+        let _ = writeln!(out, "# TYPE nxfp_occupancy_clip_rate gauge");
+        let _ = writeln!(out, "nxfp_occupancy_clip_rate{label} {}", o.clip_rate());
+        let _ = writeln!(out, "# TYPE nxfp_occupancy_vacant_fraction gauge");
+        let _ = writeln!(out, "nxfp_occupancy_vacant_fraction{label} {}", o.vacant_fraction());
+        let _ = writeln!(out, "# TYPE nxfp_occupancy_recycle_rate gauge");
+        let _ = writeln!(out, "nxfp_occupancy_recycle_rate{label} {}", o.recycle_rate());
+    }
+    out
+}
+
+fn json_hist(out: &mut String, name: &str, h: &Histogram) {
+    let _ = write!(
+        out,
+        "\"{name}\":{{\"count\":{},\"sum\":{},\"mean\":{},\"p50\":{},\"p95\":{},\
+         \"min\":{},\"max\":{}}}",
+        h.count(),
+        h.sum(),
+        h.mean(),
+        h.p50(),
+        h.p95(),
+        h.min(),
+        h.max()
+    );
+}
+
+/// Render the same metrics as one JSON object.
+pub fn render_metrics_json(m: &Metrics, s: &ServingMetrics, occ: &[CodeOccupancy]) -> String {
+    let mut out = String::from("{");
+    let _ = write!(
+        out,
+        "\"requests\":{},\"tokens_generated\":{},\"decode_steps\":{},\"wall_seconds\":{},\
+         \"tokens_per_sec\":{},\"kv_bits_packed\":{},\"kv_bits_fp16\":{},\"kv_savings\":{}",
+        m.requests,
+        m.tokens_generated,
+        m.decode_steps,
+        m.wall.as_secs_f64(),
+        m.tokens_per_sec(),
+        m.kv_bits_packed,
+        m.kv_bits_fp16,
+        m.kv_savings()
+    );
+    out.push_str(",\"serving\":{");
+    let mut first = true;
+    for (name, _, v) in serving_counters(s) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "\"{name}\":{v}");
+    }
+    for (name, _, h) in serving_histograms(s) {
+        out.push(',');
+        json_hist(&mut out, name, h);
+    }
+    out.push_str("},\"occupancy\":[");
+    for (i, o) in occ.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"config\":\"{}\",\"bits\":{},\"total\":{},\"clipped\":{},\"clip_rate\":{},\
+             \"vacant_fraction\":{},\"recycle_rate\":{}}}",
+            esc(&o.config),
+            o.bits,
+            o.total,
+            o.clipped,
+            o.clip_rate(),
+            o.vacant_fraction(),
+            o.recycle_rate()
+        );
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Write metrics to `path`, choosing the format from the extension
+/// (`.json` → JSON object, anything else → Prometheus text).
+pub fn write_metrics(
+    path: &Path,
+    m: &Metrics,
+    s: &ServingMetrics,
+    occ: &[CodeOccupancy],
+) -> Result<()> {
+    let text = if path.extension().is_some_and(|e| e == "json") {
+        render_metrics_json(m, s, occ)
+    } else {
+        render_prometheus(m, s, occ)
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, text).with_context(|| format!("writing metrics {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::NxConfig;
+
+    fn sample() -> (Metrics, ServingMetrics, Vec<CodeOccupancy>) {
+        let mut m = Metrics::default();
+        m.requests = 3;
+        m.tokens_generated = 48;
+        m.decode_steps = 16;
+        m.kv_bits_packed = 1000;
+        m.kv_bits_fp16 = 4000;
+        let mut s = ServingMetrics::default();
+        s.admitted = 3;
+        s.retries = 2;
+        for v in [0.001, 0.002, 0.010, 0.500] {
+            s.latency.record(v);
+        }
+        s.queue_depth.record(2.0);
+        let mut occ = CodeOccupancy::new(&NxConfig::nxfp(4));
+        occ.counts[0] = 10;
+        occ.counts[3] = 5;
+        occ.counts[8] = 1;
+        occ.total = 16;
+        occ.clipped = 2;
+        (m, s, vec![occ])
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_and_terminated() {
+        let (m, s, occ) = sample();
+        let text = render_prometheus(&m, &s, &occ);
+        assert!(text.contains("# TYPE nxfp_latency_seconds histogram"));
+        assert!(text.contains("# TYPE nxfp_admitted_total counter"));
+        assert!(text.contains("nxfp_admitted_total 3"));
+        // cumulative bucket counts are non-decreasing and end at count
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in text.lines().filter(|l| l.starts_with("nxfp_latency_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative buckets must be non-decreasing: {line}");
+            last = v;
+            if line.contains("le=\"+Inf\"") {
+                inf = Some(v);
+            }
+        }
+        assert_eq!(inf, Some(4), "+Inf bucket must equal count");
+        assert!(text.contains("nxfp_latency_seconds_count 4"));
+        assert!(text.contains("nxfp_latency_seconds_sum"));
+        assert!(text.contains("nxfp_occupancy_clip_rate{config=\"NxFP4"));
+    }
+
+    #[test]
+    fn bucket_bounds_cover_recorded_values() {
+        let (m, s, occ) = sample();
+        let text = render_prometheus(&m, &s, &occ);
+        // every emitted le bound parses as a positive float
+        for line in text.lines().filter(|l| l.contains("_bucket{le=\"") && !l.contains("+Inf")) {
+            let bound = line.split("le=\"").nth(1).unwrap().split('"').next().unwrap();
+            let b: f64 = bound.parse().unwrap();
+            assert!(b > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_renderer_carries_counters_histograms_and_probes() {
+        let (m, s, occ) = sample();
+        let text = render_metrics_json(&m, &s, &occ);
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        assert!(text.contains("\"admitted\":3"));
+        assert!(text.contains("\"retries\":2"));
+        assert!(text.contains("\"latency_seconds\":{\"count\":4"));
+        assert!(text.contains("\"occupancy\":[{\"config\":\"NxFP4"));
+        assert!(text.contains("\"clip_rate\":0.125"));
+        // config names with parens/spaces must be escaped-safe
+        assert!(!text.contains("\n{"), "single JSON object expected");
+    }
+
+    #[test]
+    fn write_metrics_picks_format_from_extension() {
+        let (m, s, occ) = sample();
+        let dir = std::env::temp_dir().join(format!("nxfp-export-{}", std::process::id()));
+        let prom = dir.join("metrics.prom");
+        let json = dir.join("metrics.json");
+        write_metrics(&prom, &m, &s, &occ).unwrap();
+        write_metrics(&json, &m, &s, &occ).unwrap();
+        let p = std::fs::read_to_string(&prom).unwrap();
+        let j = std::fs::read_to_string(&json).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(p.contains("# TYPE"));
+        assert!(j.starts_with('{'));
+    }
+}

@@ -1,0 +1,1007 @@
+//! Serving-tier observability: structured trace events, metrics export,
+//! and live quantization-fidelity probes.
+//!
+//! Three pillars, all opt-in and all zero-cost when disabled:
+//!
+//! * **Structured traces** — a bounded [`TraceRing`] records typed
+//!   request-lifecycle events ([`TraceEvent`]) and per-step span records
+//!   ([`StepSpan`]), each stamped with the deterministic scheduler step
+//!   clock *and* wall time. The engine, scheduler, and server all emit
+//!   through a shared [`TraceSink`] handle; a disabled sink is a `None`
+//!   behind an `Option` — no allocation, no clock reads, no branches
+//!   beyond one null check. Traces serialize to JSONL
+//!   ([`TraceSink::write_jsonl`]) and load back ([`read_jsonl`]) for the
+//!   `nxfp trace` subcommand and the trace tests.
+//! * **Metrics export** ([`export`]) — Prometheus-text and JSON renderers
+//!   over the engine's `Metrics`/`ServingMetrics` (counters plus
+//!   log-bucketed histograms with explicit bucket bounds).
+//! * **Fidelity probes** ([`occupancy`]) — per-interned-config
+//!   [`CodeOccupancy`] tables fed from the encode hot path, measuring the
+//!   paper's three pathologies (outlier clipping, vacant levels, recycled
+//!   −0 code) on live KV traffic.
+//!
+//! # Event-order contract
+//!
+//! Every event is emitted at the exact site where the matching
+//! `ServingMetrics` counter increments, so a complete trace agrees with
+//! the counters *exactly* — [`check_trace`] verifies both the per-request
+//! lifecycle (state machine below) and, when the trailing summary record
+//! is present and nothing was evicted from the ring, the counter
+//! equalities. Legal per-request lifecycles:
+//!
+//! ```text
+//! New ──Enqueued──► Queued ──Admitted──► Active ──Finished──► Done
+//!  │                  │  ▲                 │ │
+//!  │                  │  └────Requeued─────┘ ├─ Promoted / PrefixAdopted
+//!  │                  │                      └─ PrefillChunk
+//!  ├──Admitted──► Active            (wave mode skips the queue)
+//!  └──Shed / Finished{…}──► …       (cap shed, drain shed, rejection)
+//! ```
+//!
+//! `Retry{attempt}` is batch-scoped (`req == None`) and exempt from the
+//! per-request machine; `DeadlineExpired` may fire from `Queued`
+//! (admission-time expiry) or `Active` (in-flight expiry).
+
+pub mod export;
+pub mod occupancy;
+
+pub use export::{render_metrics_json, render_prometheus, write_metrics};
+pub use occupancy::CodeOccupancy;
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::FinishReason;
+
+/// Default [`TraceRing`] capacity (entries). Large enough that the CI
+/// smoke workloads never evict; eviction is counted, not silent.
+pub const DEFAULT_TRACE_CAP: usize = 1 << 16;
+
+/// Typed request-lifecycle event. Each variant is emitted at the exact
+/// site where the matching `ServingMetrics` counter increments (see the
+/// module docs for the legality rules [`check_trace`] enforces).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Accepted into the admission queue (`Scheduler::enqueue`).
+    Enqueued,
+    /// Placed into lane `lane` of the batch.
+    Admitted { lane: usize },
+    /// Fed `tokens` prompt tokens this step (phase-A chunk + step token).
+    PrefillChunk { tokens: usize },
+    /// Admission used the anti-starvation promotion rule.
+    Promoted,
+    /// One in-place retry of a faulted backend call (batch-scoped:
+    /// `req == None`).
+    Retry { attempt: u32 },
+    /// Slot retired by a fault and pushed back to the queue front.
+    Requeued,
+    /// Admission adopted `rows` cached prefix rows.
+    PrefixAdopted { rows: usize },
+    /// Dropped by overload policy (queue cap or drain).
+    Shed,
+    /// Deadline enforcement dropped the request (admission or in-flight).
+    DeadlineExpired,
+    /// Response produced; `reason` matches the `GenResponse` exactly.
+    Finished { reason: FinishReason },
+}
+
+impl TraceEvent {
+    /// Stable wire name (the JSONL `event` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Enqueued => "enqueued",
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::PrefillChunk { .. } => "prefill_chunk",
+            TraceEvent::Promoted => "promoted",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Requeued => "requeued",
+            TraceEvent::PrefixAdopted { .. } => "prefix_adopted",
+            TraceEvent::Shed => "shed",
+            TraceEvent::DeadlineExpired => "deadline_expired",
+            TraceEvent::Finished { .. } => "finished",
+        }
+    }
+}
+
+/// Stable wire name of a [`FinishReason`].
+pub fn reason_name(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Completed => "completed",
+        FinishReason::Rejected => "rejected",
+        FinishReason::Shed => "shed",
+        FinishReason::Deadline => "deadline",
+        FinishReason::BackendError => "backend_error",
+    }
+}
+
+fn reason_from_name(s: &str) -> Option<FinishReason> {
+    Some(match s {
+        "completed" => FinishReason::Completed,
+        "rejected" => FinishReason::Rejected,
+        "shed" => FinishReason::Shed,
+        "deadline" => FinishReason::Deadline,
+        "backend_error" => FinishReason::BackendError,
+        _ => return None,
+    })
+}
+
+/// One recorded lifecycle event, stamped with both clocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Deterministic scheduler step clock at emission.
+    pub step: u64,
+    /// Microseconds since the ring's epoch (sink creation).
+    pub wall_us: u64,
+    /// Request id; `None` for batch-scoped events (`Retry`).
+    pub req: Option<u64>,
+    pub event: TraceEvent,
+}
+
+/// One per-step span record: what a continuous-batching step did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepSpan {
+    pub step: u64,
+    pub wall_us: u64,
+    /// Phase-A (chunked prefill) duration.
+    pub phase_a_us: u64,
+    /// Phase-B (batched decode step) duration.
+    pub phase_b_us: u64,
+    /// Lanes occupied after the step.
+    pub occupancy: usize,
+    /// Prompt tokens fed this step across all slots.
+    pub prefill_tokens: usize,
+    /// Decode (generation) tokens sampled this step.
+    pub decode_tokens: usize,
+}
+
+/// One ring entry: an event or a span.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEntry {
+    Event(TraceRecord),
+    Span(StepSpan),
+}
+
+impl TraceEntry {
+    fn stamps(&self) -> (u64, u64) {
+        match self {
+            TraceEntry::Event(r) => (r.step, r.wall_us),
+            TraceEntry::Span(s) => (s.step, s.wall_us),
+        }
+    }
+}
+
+/// Bounded in-memory trace sink. Oldest entries are evicted (and counted
+/// in `dropped`) once `cap` is reached, so a long-running server has a
+/// hard memory bound.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: VecDeque<TraceEntry>,
+    cap: usize,
+    dropped: u64,
+    epoch: Instant,
+    step: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        TraceRing {
+            buf: VecDeque::with_capacity(cap.min(4096)),
+            cap,
+            dropped: 0,
+            epoch: Instant::now(),
+            step: 0,
+        }
+    }
+
+    fn wall_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn push(&mut self, entry: TraceEntry) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(entry);
+    }
+}
+
+/// Cloneable handle to a shared [`TraceRing`], or a no-op when disabled.
+/// The engine, scheduler, and server each hold a clone; a disabled sink
+/// costs one `Option` discriminant check per call site and reads no
+/// clocks.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    ring: Option<Rc<RefCell<TraceRing>>>,
+}
+
+impl TraceSink {
+    /// The no-op sink (also `Default`).
+    pub fn disabled() -> Self {
+        TraceSink { ring: None }
+    }
+
+    /// An enabled sink over a fresh ring of `cap` entries.
+    pub fn enabled(cap: usize) -> Self {
+        TraceSink { ring: Some(Rc::new(RefCell::new(TraceRing::new(cap)))) }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Record one lifecycle event, stamped with the current step clock
+    /// and wall time. No-op (no clock read) when disabled.
+    #[inline]
+    pub fn event(&self, req: Option<u64>, event: TraceEvent) {
+        if let Some(ring) = &self.ring {
+            let mut r = ring.borrow_mut();
+            let (step, wall_us) = (r.step, r.wall_us());
+            r.push(TraceEntry::Event(TraceRecord { step, wall_us, req, event }));
+        }
+    }
+
+    /// Record one per-step span. The ring stamps step and wall time.
+    #[inline]
+    pub fn span(
+        &self,
+        phase_a_us: u64,
+        phase_b_us: u64,
+        occupancy: usize,
+        prefill_tokens: usize,
+        decode_tokens: usize,
+    ) {
+        if let Some(ring) = &self.ring {
+            let mut r = ring.borrow_mut();
+            let (step, wall_us) = (r.step, r.wall_us());
+            r.push(TraceEntry::Span(StepSpan {
+                step,
+                wall_us,
+                phase_a_us,
+                phase_b_us,
+                occupancy,
+                prefill_tokens,
+                decode_tokens,
+            }));
+        }
+    }
+
+    /// Advance the deterministic step clock (the scheduler's tick count).
+    #[inline]
+    pub fn set_step(&self, step: u64) {
+        if let Some(ring) = &self.ring {
+            ring.borrow_mut().step = step;
+        }
+    }
+
+    /// Entries evicted from the ring so far (0 when disabled).
+    pub fn dropped(&self) -> u64 {
+        self.ring.as_ref().map_or(0, |r| r.borrow().dropped)
+    }
+
+    /// Number of entries currently held (0 when disabled).
+    pub fn len(&self) -> usize {
+        self.ring.as_ref().map_or(0, |r| r.borrow().buf.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the current entries (for tests and in-process checks).
+    pub fn entries(&self) -> Vec<TraceEntry> {
+        self.ring.as_ref().map_or_else(Vec::new, |r| r.borrow().buf.iter().cloned().collect())
+    }
+
+    /// Serialize the ring to JSONL: one record per entry plus a trailing
+    /// `summary` record carrying the server's counters, so
+    /// [`check_trace`] can validate counter agreement from the file
+    /// alone. No-op `Ok(())` when disabled.
+    pub fn write_jsonl(&self, path: &Path, summary: &TraceSummary) -> Result<()> {
+        let Some(ring) = &self.ring else { return Ok(()) };
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let r = ring.borrow();
+        let mut out = String::new();
+        for e in &r.buf {
+            out.push_str(&entry_to_json(e));
+            out.push('\n');
+        }
+        let mut s = summary.clone();
+        s.dropped = r.dropped;
+        out.push_str(&s.to_json());
+        out.push('\n');
+        std::fs::write(path, out).with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+/// The trailing JSONL record: the `ServingMetrics` counters the trace's
+/// event counts must agree with, plus the ring's eviction count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    pub admitted: u64,
+    pub promoted: u64,
+    pub rejected: u64,
+    pub retries: u64,
+    pub requeued: u64,
+    pub backend_failed: u64,
+    pub shed: u64,
+    pub deadline_expired: u64,
+    pub prefix_hits: u64,
+    pub dropped: u64,
+}
+
+impl TraceSummary {
+    pub fn from_serving(s: &ServingMetrics) -> Self {
+        TraceSummary {
+            admitted: s.admitted,
+            promoted: s.promoted,
+            rejected: s.rejected,
+            retries: s.retries,
+            requeued: s.requeued,
+            backend_failed: s.backend_failed,
+            shed: s.shed,
+            deadline_expired: s.deadline_expired,
+            prefix_hits: s.prefix_hits,
+            dropped: 0,
+        }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"type\":\"summary\",\"admitted\":{},\"promoted\":{},\"rejected\":{},\
+             \"retries\":{},\"requeued\":{},\"backend_failed\":{},\"shed\":{},\
+             \"deadline_expired\":{},\"prefix_hits\":{},\"dropped\":{}}}",
+            self.admitted,
+            self.promoted,
+            self.rejected,
+            self.retries,
+            self.requeued,
+            self.backend_failed,
+            self.shed,
+            self.deadline_expired,
+            self.prefix_hits,
+            self.dropped
+        )
+    }
+}
+
+fn entry_to_json(e: &TraceEntry) -> String {
+    match e {
+        TraceEntry::Event(r) => {
+            let mut s =
+                format!("{{\"type\":\"event\",\"step\":{},\"wall_us\":{},", r.step, r.wall_us);
+            match r.req {
+                Some(id) => {
+                    let _ = write!(s, "\"req\":{id},");
+                }
+                None => s.push_str("\"req\":null,"),
+            }
+            let _ = write!(s, "\"event\":\"{}\"", r.event.name());
+            match &r.event {
+                TraceEvent::Admitted { lane } => {
+                    let _ = write!(s, ",\"lane\":{lane}");
+                }
+                TraceEvent::PrefillChunk { tokens } => {
+                    let _ = write!(s, ",\"tokens\":{tokens}");
+                }
+                TraceEvent::Retry { attempt } => {
+                    let _ = write!(s, ",\"attempt\":{attempt}");
+                }
+                TraceEvent::PrefixAdopted { rows } => {
+                    let _ = write!(s, ",\"rows\":{rows}");
+                }
+                TraceEvent::Finished { reason } => {
+                    let _ = write!(s, ",\"reason\":\"{}\"", reason_name(*reason));
+                }
+                _ => {}
+            }
+            s.push('}');
+            s
+        }
+        TraceEntry::Span(sp) => format!(
+            "{{\"type\":\"span\",\"step\":{},\"wall_us\":{},\"phase_a_us\":{},\
+             \"phase_b_us\":{},\"occupancy\":{},\"prefill_tokens\":{},\"decode_tokens\":{}}}",
+            sp.step,
+            sp.wall_us,
+            sp.phase_a_us,
+            sp.phase_b_us,
+            sp.occupancy,
+            sp.prefill_tokens,
+            sp.decode_tokens
+        ),
+    }
+}
+
+/// A parsed trace file: entries in emission order plus the optional
+/// trailing summary.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+    pub summary: Option<TraceSummary>,
+}
+
+/// Minimal flat-JSON value (the trace wire format never nests).
+#[derive(Clone, Debug, PartialEq)]
+enum Jv {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+/// Parse one flat JSON object (string/number/bool/null values only).
+/// Returns `None` on malformed input — tolerant enough for hand-written
+/// traces, strict enough to reject garbage.
+fn parse_flat_json(line: &str) -> Option<Vec<(String, Jv)>> {
+    let b: Vec<char> = line.trim().chars().collect();
+    let mut i = 0usize;
+    let skip_ws = |i: &mut usize| {
+        while *i < b.len() && b[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_str = |i: &mut usize| -> Option<String> {
+        if b.get(*i) != Some(&'"') {
+            return None;
+        }
+        *i += 1;
+        let mut s = String::new();
+        while *i < b.len() {
+            match b[*i] {
+                '"' => {
+                    *i += 1;
+                    return Some(s);
+                }
+                '\\' => {
+                    *i += 1;
+                    match b.get(*i)? {
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        '/' => s.push('/'),
+                        'n' => s.push('\n'),
+                        't' => s.push('\t'),
+                        'u' => {
+                            let hex: String = b.get(*i + 1..*i + 5)?.iter().collect();
+                            let code = u32::from_str_radix(&hex, 16).ok()?;
+                            s.push(char::from_u32(code)?);
+                            *i += 4;
+                        }
+                        _ => return None,
+                    }
+                    *i += 1;
+                }
+                c => {
+                    s.push(c);
+                    *i += 1;
+                }
+            }
+        }
+        None
+    };
+    skip_ws(&mut i);
+    if b.get(i) != Some(&'{') {
+        return None;
+    }
+    i += 1;
+    let mut out = Vec::new();
+    skip_ws(&mut i);
+    if b.get(i) == Some(&'}') {
+        return Some(out);
+    }
+    loop {
+        skip_ws(&mut i);
+        let key = parse_str(&mut i)?;
+        skip_ws(&mut i);
+        if b.get(i) != Some(&':') {
+            return None;
+        }
+        i += 1;
+        skip_ws(&mut i);
+        let val = match b.get(i)? {
+            '"' => Jv::Str(parse_str(&mut i)?),
+            't' if b.get(i..i + 4)?.iter().collect::<String>() == "true" => {
+                i += 4;
+                Jv::Bool(true)
+            }
+            'f' if b.get(i..i + 5)?.iter().collect::<String>() == "false" => {
+                i += 5;
+                Jv::Bool(false)
+            }
+            'n' if b.get(i..i + 4)?.iter().collect::<String>() == "null" => {
+                i += 4;
+                Jv::Null
+            }
+            _ => {
+                let start = i;
+                while i < b.len() && "+-0123456789.eE".contains(b[i]) {
+                    i += 1;
+                }
+                let txt: String = b[start..i].iter().collect();
+                Jv::Num(txt.parse().ok()?)
+            }
+        };
+        out.push((key, val));
+        skip_ws(&mut i);
+        match b.get(i)? {
+            ',' => i += 1,
+            '}' => return Some(out),
+            _ => return None,
+        }
+    }
+}
+
+fn field<'a>(obj: &'a [(String, Jv)], key: &str) -> Option<&'a Jv> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn num_field(obj: &[(String, Jv)], key: &str) -> Option<u64> {
+    match field(obj, key)? {
+        Jv::Num(n) => Some(*n as u64),
+        _ => None,
+    }
+}
+
+fn str_field<'a>(obj: &'a [(String, Jv)], key: &str) -> Option<&'a str> {
+    match field(obj, key)? {
+        Jv::Str(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn entry_from_fields(obj: &[(String, Jv)]) -> Option<TraceEntry> {
+    let step = num_field(obj, "step")?;
+    let wall_us = num_field(obj, "wall_us")?;
+    match str_field(obj, "type")? {
+        "span" => Some(TraceEntry::Span(StepSpan {
+            step,
+            wall_us,
+            phase_a_us: num_field(obj, "phase_a_us")?,
+            phase_b_us: num_field(obj, "phase_b_us")?,
+            occupancy: num_field(obj, "occupancy")? as usize,
+            prefill_tokens: num_field(obj, "prefill_tokens")? as usize,
+            decode_tokens: num_field(obj, "decode_tokens")? as usize,
+        })),
+        "event" => {
+            let req = match field(obj, "req")? {
+                Jv::Num(n) => Some(*n as u64),
+                Jv::Null => None,
+                _ => return None,
+            };
+            let event = match str_field(obj, "event")? {
+                "enqueued" => TraceEvent::Enqueued,
+                "admitted" => TraceEvent::Admitted { lane: num_field(obj, "lane")? as usize },
+                "prefill_chunk" => {
+                    TraceEvent::PrefillChunk { tokens: num_field(obj, "tokens")? as usize }
+                }
+                "promoted" => TraceEvent::Promoted,
+                "retry" => TraceEvent::Retry { attempt: num_field(obj, "attempt")? as u32 },
+                "requeued" => TraceEvent::Requeued,
+                "prefix_adopted" => {
+                    TraceEvent::PrefixAdopted { rows: num_field(obj, "rows")? as usize }
+                }
+                "shed" => TraceEvent::Shed,
+                "deadline_expired" => TraceEvent::DeadlineExpired,
+                "finished" => {
+                    TraceEvent::Finished { reason: reason_from_name(str_field(obj, "reason")?)? }
+                }
+                _ => return None,
+            };
+            Some(TraceEntry::Event(TraceRecord { step, wall_us, req, event }))
+        }
+        _ => None,
+    }
+}
+
+fn summary_from_fields(obj: &[(String, Jv)]) -> Option<TraceSummary> {
+    let g = |k| num_field(obj, k).unwrap_or(0);
+    Some(TraceSummary {
+        admitted: g("admitted"),
+        promoted: g("promoted"),
+        rejected: g("rejected"),
+        retries: g("retries"),
+        requeued: g("requeued"),
+        backend_failed: g("backend_failed"),
+        shed: g("shed"),
+        deadline_expired: g("deadline_expired"),
+        prefix_hits: g("prefix_hits"),
+        dropped: g("dropped"),
+    })
+}
+
+/// Load a JSONL trace written by [`TraceSink::write_jsonl`].
+pub fn read_jsonl(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text)
+}
+
+/// Parse JSONL trace text (see [`read_jsonl`]).
+pub fn parse_trace(text: &str) -> Result<Trace> {
+    let mut trace = Trace::default();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = parse_flat_json(line)
+            .ok_or_else(|| anyhow!("trace line {}: malformed JSON", ln + 1))?;
+        match str_field(&obj, "type") {
+            Some("summary") => {
+                trace.summary = summary_from_fields(&obj);
+            }
+            Some(_) => {
+                let e = entry_from_fields(&obj)
+                    .ok_or_else(|| anyhow!("trace line {}: bad record", ln + 1))?;
+                trace.entries.push(e);
+            }
+            None => return Err(anyhow!("trace line {}: missing type", ln + 1)),
+        }
+    }
+    Ok(trace)
+}
+
+/// Validate a trace: clock monotonicity, per-request lifecycle legality,
+/// and (when the summary is present and the ring evicted nothing) exact
+/// agreement between event counts and the `ServingMetrics` counters.
+/// Returns human-readable violations; empty means the trace is legal.
+pub fn check_trace(trace: &Trace) -> Vec<String> {
+    let mut viol = Vec::new();
+    let (mut last_step, mut last_wall) = (0u64, 0u64);
+    for e in &trace.entries {
+        let (s, w) = e.stamps();
+        if s < last_step {
+            viol.push(format!("step clock went backwards: {s} after {last_step}"));
+        }
+        if w < last_wall {
+            viol.push(format!("wall clock went backwards: {w}us after {last_wall}us"));
+        }
+        (last_step, last_wall) = (s, w);
+    }
+    if trace.summary.as_ref().map_or(0, |s| s.dropped) > 0 {
+        // evicted entries: per-request prefixes and counts are incomplete,
+        // only the clock checks above are meaningful
+        return viol;
+    }
+
+    #[derive(Clone, Copy, PartialEq, Debug)]
+    enum St {
+        New,
+        Queued,
+        Active,
+        Done,
+    }
+    let mut states: BTreeMap<u64, St> = BTreeMap::new();
+    for e in &trace.entries {
+        let TraceEntry::Event(r) = e else { continue };
+        let Some(id) = r.req else { continue };
+        let st = states.entry(id).or_insert(St::New);
+        match (&r.event, *st) {
+            (TraceEvent::Enqueued, St::New) => *st = St::Queued,
+            (TraceEvent::Requeued, St::Active) => *st = St::Queued,
+            (TraceEvent::Admitted { .. }, St::New | St::Queued) => *st = St::Active,
+            (
+                TraceEvent::Promoted
+                | TraceEvent::PrefixAdopted { .. }
+                | TraceEvent::PrefillChunk { .. },
+                St::Active,
+            ) => {}
+            (TraceEvent::Shed, St::New | St::Queued) => {}
+            (TraceEvent::DeadlineExpired, St::New | St::Queued | St::Active) => {}
+            (TraceEvent::Finished { .. }, St::Done) => {
+                viol.push(format!("req {id}: Finished after Finished"));
+            }
+            (TraceEvent::Finished { .. }, _) => *st = St::Done,
+            (ev, st) => viol.push(format!("req {id}: illegal {ev:?} in state {st:?}")),
+        }
+    }
+
+    if let Some(sum) = &trace.summary {
+        let mut by_name: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut finished: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for e in &trace.entries {
+            if let TraceEntry::Event(r) = e {
+                *by_name.entry(r.event.name()).or_default() += 1;
+                if let TraceEvent::Finished { reason } = &r.event {
+                    *finished.entry(reason_name(*reason)).or_default() += 1;
+                }
+            }
+        }
+        let c = |m: &BTreeMap<&'static str, u64>, k: &str| m.get(k).copied().unwrap_or(0);
+        let checks = [
+            ("admitted events", c(&by_name, "admitted"), sum.admitted),
+            ("promoted events", c(&by_name, "promoted"), sum.promoted),
+            ("retry events", c(&by_name, "retry"), sum.retries),
+            ("requeued events", c(&by_name, "requeued"), sum.requeued),
+            ("shed events", c(&by_name, "shed"), sum.shed),
+            ("deadline events", c(&by_name, "deadline_expired"), sum.deadline_expired),
+            ("prefix_adopted events", c(&by_name, "prefix_adopted"), sum.prefix_hits),
+            ("finished(rejected)", c(&finished, "rejected"), sum.rejected),
+            ("finished(backend_error)", c(&finished, "backend_error"), sum.backend_failed),
+            ("finished(shed)", c(&finished, "shed"), sum.shed),
+            ("finished(deadline)", c(&finished, "deadline"), sum.deadline_expired),
+        ];
+        for (what, got, want) in checks {
+            if got != want {
+                viol.push(format!("{what}: trace has {got}, counters say {want}"));
+            }
+        }
+    }
+    viol
+}
+
+/// Per-request timeline reconstructed from a trace: the queue-wait /
+/// prefill / decode breakdown `nxfp trace show` renders.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub req: u64,
+    pub first_wall_us: u64,
+    pub admitted_wall_us: Option<u64>,
+    pub last_prefill_wall_us: Option<u64>,
+    pub finished_wall_us: Option<u64>,
+    pub enq_step: Option<u64>,
+    pub admit_step: Option<u64>,
+    pub finish_step: Option<u64>,
+    pub prefill_tokens: usize,
+    pub prefill_chunks: usize,
+    pub prefix_rows: usize,
+    pub requeues: u64,
+    pub reason: Option<FinishReason>,
+}
+
+impl Timeline {
+    /// First event → admission (µs); 0 when never admitted.
+    pub fn queue_wait_us(&self) -> u64 {
+        self.admitted_wall_us.map_or(0, |a| a.saturating_sub(self.first_wall_us))
+    }
+
+    /// Admission → last prefill chunk (µs).
+    pub fn prefill_us(&self) -> u64 {
+        match (self.admitted_wall_us, self.last_prefill_wall_us) {
+            (Some(a), Some(p)) => p.saturating_sub(a),
+            _ => 0,
+        }
+    }
+
+    /// Last prefill chunk (or admission) → finish (µs).
+    pub fn decode_us(&self) -> u64 {
+        let start = self.last_prefill_wall_us.or(self.admitted_wall_us);
+        match (start, self.finished_wall_us) {
+            (Some(s), Some(f)) => f.saturating_sub(s),
+            _ => 0,
+        }
+    }
+}
+
+/// Reconstruct one [`Timeline`] per request id, sorted by id.
+pub fn timelines(trace: &Trace) -> Vec<Timeline> {
+    let mut by_req: BTreeMap<u64, Timeline> = BTreeMap::new();
+    for e in &trace.entries {
+        let TraceEntry::Event(r) = e else { continue };
+        let Some(id) = r.req else { continue };
+        let t = by_req.entry(id).or_insert_with(|| Timeline {
+            req: id,
+            first_wall_us: r.wall_us,
+            ..Timeline::default()
+        });
+        match &r.event {
+            TraceEvent::Enqueued => t.enq_step = t.enq_step.or(Some(r.step)),
+            TraceEvent::Admitted { .. } => {
+                t.admitted_wall_us = Some(r.wall_us);
+                t.admit_step = Some(r.step);
+            }
+            TraceEvent::PrefillChunk { tokens } => {
+                t.prefill_tokens += tokens;
+                t.prefill_chunks += 1;
+                t.last_prefill_wall_us = Some(r.wall_us);
+            }
+            TraceEvent::PrefixAdopted { rows } => t.prefix_rows += rows,
+            TraceEvent::Requeued => t.requeues += 1,
+            TraceEvent::Finished { reason } => {
+                t.finished_wall_us = Some(r.wall_us);
+                t.finish_step = Some(r.step);
+                t.reason = Some(*reason);
+            }
+            _ => {}
+        }
+    }
+    by_req.into_values().collect()
+}
+
+/// Render timelines as the `nxfp trace show` table.
+pub fn render_timelines(ts: &[Timeline]) -> String {
+    let ms = |us: u64| us as f64 / 1e3;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:>6}  {:<13} {:>10} {:>10} {:>10}  {:>7} {:>7} {:>5} {:>4}",
+        "req", "reason", "wait ms", "prefill ms", "decode ms", "pf tok", "chunks", "adopt", "rq"
+    );
+    for t in ts {
+        let reason = t.reason.map_or("(in flight)".to_string(), |r| reason_name(r).to_string());
+        let _ = writeln!(
+            out,
+            "{:>6}  {:<13} {:>10.3} {:>10.3} {:>10.3}  {:>7} {:>7} {:>5} {:>4}",
+            t.req,
+            reason,
+            ms(t.queue_wait_us()),
+            ms(t.prefill_us()),
+            ms(t.decode_us()),
+            t.prefill_tokens,
+            t.prefill_chunks,
+            t.prefix_rows,
+            t.requeues
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> TraceSink {
+        let sink = TraceSink::enabled(64);
+        sink.event(Some(1), TraceEvent::Enqueued);
+        sink.set_step(1);
+        sink.event(Some(1), TraceEvent::Admitted { lane: 0 });
+        sink.event(Some(1), TraceEvent::PrefillChunk { tokens: 8 });
+        sink.span(5, 12, 1, 8, 0);
+        sink.set_step(2);
+        sink.event(None, TraceEvent::Retry { attempt: 1 });
+        sink.event(Some(1), TraceEvent::Finished { reason: FinishReason::Completed });
+        sink
+    }
+
+    fn summary_for_sample() -> TraceSummary {
+        TraceSummary { admitted: 1, retries: 1, ..TraceSummary::default() }
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = TraceSink::disabled();
+        sink.event(Some(1), TraceEvent::Enqueued);
+        sink.span(1, 2, 3, 4, 5);
+        sink.set_step(9);
+        assert!(!sink.is_enabled());
+        assert!(sink.is_empty());
+        assert_eq!(sink.dropped(), 0);
+        assert!(TraceSink::default().entries().is_empty());
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_evictions() {
+        let sink = TraceSink::enabled(4);
+        for i in 0..10 {
+            sink.event(Some(i), TraceEvent::Enqueued);
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 6);
+        let first = match &sink.entries()[0] {
+            TraceEntry::Event(r) => r.req,
+            _ => None,
+        };
+        assert_eq!(first, Some(6), "oldest entries evicted first");
+    }
+
+    #[test]
+    fn events_carry_both_clocks_monotonically() {
+        let sink = sample_trace();
+        let entries = sink.entries();
+        assert_eq!(entries.len(), 6);
+        let mut last = (0u64, 0u64);
+        for e in &entries {
+            let s = e.stamps();
+            assert!(s.0 >= last.0 && s.1 >= last.1, "clocks must be monotone");
+            last = s;
+        }
+        match &entries[1] {
+            TraceEntry::Event(r) => assert_eq!(r.step, 1),
+            _ => panic!("expected event"),
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_bit_exactly() {
+        let sink = sample_trace();
+        let dir = std::env::temp_dir().join(format!("nxfp-obs-{}", std::process::id()));
+        let path = dir.join("trace.jsonl");
+        sink.write_jsonl(&path, &summary_for_sample()).unwrap();
+        let trace = read_jsonl(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(trace.entries, sink.entries());
+        let sum = trace.summary.expect("summary record");
+        assert_eq!(sum.admitted, 1);
+        assert_eq!(sum.retries, 1);
+        assert_eq!(sum.dropped, 0);
+        assert!(check_trace(&trace).is_empty(), "{:?}", check_trace(&trace));
+    }
+
+    #[test]
+    fn parser_rejects_garbage_and_accepts_whitespace() {
+        assert!(parse_trace("").unwrap().entries.is_empty());
+        assert!(parse_trace("{\"type\":\"span\"}").is_err(), "span missing fields");
+        assert!(parse_trace("not json").is_err());
+        let line = "{ \"type\": \"event\", \"step\": 1, \"wall_us\": 2, \
+                    \"req\": 7, \"event\": \"enqueued\" }";
+        let t = parse_trace(line).unwrap();
+        assert_eq!(t.entries.len(), 1);
+    }
+
+    #[test]
+    fn check_catches_lifecycle_violations() {
+        // Finished before Admitted is fine (rejection), but events after
+        // Finished are not
+        let sink = TraceSink::enabled(16);
+        sink.event(Some(3), TraceEvent::Finished { reason: FinishReason::Rejected });
+        sink.event(Some(3), TraceEvent::Admitted { lane: 0 });
+        let trace = Trace { entries: sink.entries(), summary: None };
+        let viol = check_trace(&trace);
+        assert_eq!(viol.len(), 1, "{viol:?}");
+        assert!(viol[0].contains("req 3"));
+        // PrefillChunk without admission is illegal
+        let sink = TraceSink::enabled(16);
+        sink.event(Some(4), TraceEvent::PrefillChunk { tokens: 2 });
+        let trace = Trace { entries: sink.entries(), summary: None };
+        assert_eq!(check_trace(&trace).len(), 1);
+        // double admission is illegal
+        let sink = TraceSink::enabled(16);
+        sink.event(Some(5), TraceEvent::Admitted { lane: 0 });
+        sink.event(Some(5), TraceEvent::Admitted { lane: 1 });
+        let trace = Trace { entries: sink.entries(), summary: None };
+        assert_eq!(check_trace(&trace).len(), 1);
+    }
+
+    #[test]
+    fn check_catches_counter_disagreement() {
+        let sink = sample_trace();
+        let trace = Trace {
+            entries: sink.entries(),
+            summary: Some(TraceSummary { admitted: 2, retries: 1, ..TraceSummary::default() }),
+        };
+        let viol = check_trace(&trace);
+        assert!(viol.iter().any(|v| v.contains("admitted")), "{viol:?}");
+    }
+
+    #[test]
+    fn check_skips_counts_when_ring_evicted() {
+        let trace = Trace {
+            entries: Vec::new(),
+            summary: Some(TraceSummary {
+                admitted: 5,
+                dropped: 3,
+                ..TraceSummary::default()
+            }),
+        };
+        assert!(check_trace(&trace).is_empty(), "evicted traces can't be count-checked");
+    }
+
+    #[test]
+    fn timelines_reconstruct_breakdown() {
+        let sink = sample_trace();
+        let trace = Trace { entries: sink.entries(), summary: None };
+        let ts = timelines(&trace);
+        assert_eq!(ts.len(), 1);
+        let t = &ts[0];
+        assert_eq!(t.req, 1);
+        assert_eq!(t.prefill_tokens, 8);
+        assert_eq!(t.prefill_chunks, 1);
+        assert_eq!(t.reason, Some(FinishReason::Completed));
+        assert_eq!(t.enq_step, Some(0));
+        assert_eq!(t.admit_step, Some(1));
+        assert_eq!(t.finish_step, Some(2));
+        let rendered = render_timelines(&ts);
+        assert!(rendered.contains("completed"));
+        assert!(rendered.lines().count() >= 2);
+    }
+}

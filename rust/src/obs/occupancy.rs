@@ -1,0 +1,240 @@
+//! Live quantization-fidelity probes: per-config code-occupancy tables.
+//!
+//! The paper motivates NanoMantissa, adaptive microexponents, and code
+//! recycling with three measurable pathologies of block floating-point
+//! direct casts: outliers the top representable level cannot track,
+//! quantization levels no element ever lands on, and the wasted −0 code.
+//! `profile/mod.rs` measures them offline on static tensors; this module
+//! measures them *live*, on the exact codes the serving encode hot path
+//! emits, one [`CodeOccupancy`] table per interned `NxConfig`.
+//!
+//! The probe re-derives the per-block scale from the metadata the
+//! encoder already produced (`e_shared`, `nano`, `fmt_mx`) — the same
+//! `(1 + nano/4) · 2^(e+offset)` arithmetic as `encode_candidate` — so
+//! clip detection sees exactly the scaled magnitudes the winning
+//! candidate saw, with zero change to encode results. Overhead is a
+//! handful of mul/cmp per element, and only when a probe is attached.
+
+use std::fmt::Write as _;
+
+use crate::formats::encode::EncodePlan;
+use crate::formats::NxConfig;
+use crate::util::exp2i;
+
+/// Occupancy counters for one block format config: one counter per code
+/// point (2^bits) plus a clip counter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodeOccupancy {
+    /// `NxConfig::name()` of the config this table observes.
+    pub config: String,
+    /// Code width in bits; `counts.len() == 1 << bits`.
+    pub bits: u8,
+    /// Hits per code point, indexed by the packed code value.
+    pub counts: Vec<u64>,
+    /// Elements whose scaled magnitude exceeded the top level (strictly).
+    pub clipped: u64,
+    /// Elements observed in total.
+    pub total: u64,
+    /// Whether the config emits the recycled −0 code at all.
+    pub recycle_enabled: bool,
+}
+
+impl CodeOccupancy {
+    pub fn new(cfg: &NxConfig) -> Self {
+        CodeOccupancy {
+            config: cfg.name(),
+            bits: cfg.bits,
+            counts: vec![0; 1usize << cfg.bits],
+            clipped: 0,
+            total: 0,
+            recycle_enabled: cfg.enable_cr,
+        }
+    }
+
+    /// Observe one encoded row: `codes`/`e`/`nano`/`fmt` are exactly the
+    /// outputs of `EncodePlan::quantize_row_into` for `v`. Counts every
+    /// winning code and every clipped element (scaled `|a| > top`,
+    /// strictly — NaN compares false and is projected, not clipped).
+    pub fn observe_row(
+        &mut self,
+        plan: &EncodePlan,
+        v: &[f32],
+        codes: &[u8],
+        e: &[i16],
+        nano: &[u8],
+        fmt: &[u8],
+    ) {
+        let k = plan.cfg.block_size;
+        for (bi, chunk) in v.chunks(k).enumerate() {
+            let bf = plan.tabs.get(fmt[bi] != 0);
+            let scale = (1.0 + nano[bi] as f32 / 4.0) * exp2i(e[bi] as i32 + bf.offset);
+            let inv = 1.0 / scale;
+            let top = bf.top();
+            for (j, &x) in chunk.iter().enumerate() {
+                let a = x * inv;
+                if a.abs() > top {
+                    self.clipped += 1;
+                }
+                self.counts[codes[bi * k + j] as usize] += 1;
+            }
+            self.total += chunk.len() as u64;
+        }
+    }
+
+    /// Fold another table (same config) into this one.
+    pub fn merge(&mut self, other: &CodeOccupancy) {
+        debug_assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.clipped += other.clipped;
+        self.total += other.total;
+    }
+
+    /// The code value recycling repurposes (`1 << (bits-1)`, packed −0).
+    pub fn recycle_code(&self) -> usize {
+        1usize << (self.bits - 1)
+    }
+
+    /// Fraction of elements whose scaled magnitude exceeded the top
+    /// level — the paper's outlier pathology.
+    pub fn clip_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.total as f64
+        }
+    }
+
+    /// Fraction of the 2^bits code points never emitted — the paper's
+    /// vacant-level pathology. 1.0 until anything is observed.
+    pub fn vacant_fraction(&self) -> f64 {
+        let vacant = self.counts.iter().filter(|&&c| c == 0).count();
+        vacant as f64 / self.counts.len() as f64
+    }
+
+    /// Fraction of elements that landed on the recycled −0 code. Always
+    /// 0 when recycling is off (the encoder never emits that code).
+    pub fn recycle_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[self.recycle_code()] as f64 / self.total as f64
+        }
+    }
+
+    /// One-line human summary for logs and bench banners.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{}: n={} clip={:.4} vacant={:.3} recycle={:.4}",
+            self.config,
+            self.total,
+            self.clip_rate(),
+            self.vacant_fraction(),
+            self.recycle_rate()
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::encode::{EncodePlan, EncodeScratch};
+    use crate::formats::quantize_block;
+
+    fn observe_tensor(cfg: &NxConfig, v: &[f32]) -> CodeOccupancy {
+        let plan = EncodePlan::new(cfg);
+        let mut scratch = EncodeScratch::new();
+        let blocks = v.len() / cfg.block_size;
+        let mut codes = vec![0u8; v.len()];
+        let mut e = vec![0i16; blocks];
+        let mut nano = vec![0u8; blocks];
+        let mut fmt = vec![0u8; blocks];
+        plan.quantize_row_into(v, &mut scratch, &mut codes, &mut e, &mut nano, &mut fmt);
+        let mut occ = CodeOccupancy::new(cfg);
+        occ.observe_row(&plan, v, &codes, &e, &nano, &fmt);
+        occ
+    }
+
+    /// Deterministic pseudo-random tensor (LCG — no external RNG dep).
+    fn lcg_tensor(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn counts_cover_every_element_and_match_reference_encode() {
+        let cfg = NxConfig::nxfp(4);
+        let v = lcg_tensor(256, 7);
+        let occ = observe_tensor(&cfg, &v);
+        assert_eq!(occ.total, 256);
+        assert_eq!(occ.counts.iter().sum::<u64>(), 256);
+        // cross-check against the reference block quantizer's codes
+        let tabs = cfg.tables();
+        let mut ref_counts = vec![0u64; 1 << cfg.bits];
+        for chunk in v.chunks(cfg.block_size) {
+            let q = quantize_block(chunk, &cfg, &tabs);
+            for &c in &q.codes {
+                ref_counts[c as usize] += 1;
+            }
+        }
+        assert_eq!(occ.counts, ref_counts);
+    }
+
+    #[test]
+    fn outliers_clip_and_recycling_fires_only_when_enabled() {
+        // one huge outlier per block forces the shared scale up, so the
+        // outlier itself saturates exactly at top (not clipped) while a
+        // tensor without headroom shows zero clips
+        let cfg = NxConfig::nxfp(4);
+        let mut v = lcg_tensor(128, 9);
+        for b in 0..v.len() / cfg.block_size {
+            v[b * cfg.block_size] = 300.0;
+        }
+        let occ = observe_tensor(&cfg, &v);
+        assert_eq!(occ.total, 128);
+        assert!(occ.clip_rate() < 1.0);
+        assert!(occ.recycle_enabled);
+        // recycling off: the −0 code never appears
+        let mx = NxConfig::mxfp(4);
+        let occ_mx = observe_tensor(&mx, &lcg_tensor(128, 9));
+        assert!(!occ_mx.recycle_enabled);
+        assert_eq!(occ_mx.counts[occ_mx.recycle_code()], 0);
+        assert_eq!(occ_mx.recycle_rate(), 0.0);
+    }
+
+    #[test]
+    fn vacant_fraction_and_empty_table_edge_cases() {
+        let cfg = NxConfig::nxfp(4);
+        let occ = CodeOccupancy::new(&cfg);
+        assert_eq!(occ.clip_rate(), 0.0);
+        assert_eq!(occ.recycle_rate(), 0.0);
+        assert_eq!(occ.vacant_fraction(), 1.0);
+        // an all-zero tensor lands every element on code 0
+        let v = vec![0.0f32; cfg.block_size * 2];
+        let occ = observe_tensor(&cfg, &v);
+        assert_eq!(occ.counts[0], v.len() as u64);
+        assert_eq!(occ.vacant_fraction(), (occ.counts.len() - 1) as f64 / occ.counts.len() as f64);
+    }
+
+    #[test]
+    fn merge_sums_counters() {
+        let cfg = NxConfig::nxfp(4);
+        let v = lcg_tensor(128, 3);
+        let mut a = observe_tensor(&cfg, &v);
+        let b = observe_tensor(&cfg, &v);
+        let clip = a.clipped;
+        a.merge(&b);
+        assert_eq!(a.total, 256);
+        assert_eq!(a.clipped, clip * 2);
+        assert_eq!(a.counts.iter().sum::<u64>(), 256);
+    }
+}

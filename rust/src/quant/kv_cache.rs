@@ -80,6 +80,7 @@ use crate::formats::{
     BaseFormat, BlockStore, EncodePlan, EncodeScratch, KvStream as StreamKind, NxConfig,
     QuantPolicy, TensorClass,
 };
+use crate::obs::CodeOccupancy;
 use crate::quant::page::{PageId, PagePool, DEFAULT_KV_PAGE_ROWS};
 use crate::tensor::Tensor2;
 
@@ -189,6 +190,9 @@ struct Stream {
     rows: usize,
     row_len: usize,
     blocks_per_row: usize,
+    /// Optional live code-occupancy probe fed from the encode hot path.
+    /// `None` (the default) costs one branch per appended row.
+    probe: Option<Rc<RefCell<CodeOccupancy>>>,
 }
 
 impl Stream {
@@ -202,6 +206,7 @@ impl Stream {
             rows: 0,
             row_len: dim,
             blocks_per_row,
+            probe: None,
         }
     }
 
@@ -244,6 +249,9 @@ impl Stream {
         let r = store.push_row();
         let (codes, e, nano, fmt) = store.row_slices_mut(r);
         self.plan.plan.quantize_row_into(row, scratch, codes, e, nano, fmt);
+        if let Some(p) = &self.probe {
+            p.borrow_mut().observe_row(&self.plan.plan, row, codes, e, nano, fmt);
+        }
         self.rows += 1;
     }
 
@@ -411,6 +419,19 @@ impl KvCache {
     /// The pool this cache's pages live in (both streams share it).
     pub fn page_pool(&self) -> Rc<RefCell<PagePool>> {
         self.k.pool.clone()
+    }
+
+    /// Attach live [`CodeOccupancy`] probes to the K and V streams. Every
+    /// subsequently appended row is observed (adopted prefix rows are
+    /// not — they were observed when the donor encoded them). Tables are
+    /// shared `Rc`s so many slots can feed one per-config aggregate.
+    pub fn set_probes(
+        &mut self,
+        k: Option<Rc<RefCell<CodeOccupancy>>>,
+        v: Option<Rc<RefCell<CodeOccupancy>>>,
+    ) {
+        self.k.probe = k;
+        self.v.probe = v;
     }
 
     /// The key stream's config.
