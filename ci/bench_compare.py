@@ -320,6 +320,33 @@ def selftest():
     lines, warns, _ = compare({record_key(base): base}, {record_key(faulted): faulted})
     assert warns == [] and any("new scenario" in l for l in lines), (lines, warns)
 
+    # fleet sizes key on config the same way: a replicas=4 record is its
+    # own trajectory, never compared against the replicas=2 one even when
+    # bench/name/policy all match
+    fleet = lambda n, **fields: dict(
+        bench="fleet",
+        name="shared-prefix-drain",
+        config=f"replicas={n}",
+        policy="p",
+        smoke=False,
+        **fields,
+    )
+    prev_f = {record_key(fleet(2, tok_s=200.0, lost_requests=0)): fleet(2, tok_s=200.0)}
+    curr_f = {record_key(fleet(4, tok_s=60.0, lost_requests=0)): fleet(4, tok_s=60.0)}
+    lines, warns, errs = compare(prev_f, curr_f)
+    assert warns == [] and errs == [], (warns, errs)
+    assert any("new scenario" in l for l in lines), lines
+    # same size compares as a normal trajectory (and can warn)
+    prev_f4 = {record_key(fleet(4, tok_s=200.0)): fleet(4, tok_s=200.0)}
+    _, warns, _ = compare(prev_f4, curr_f)
+    assert len(warns) == 1 and "3.3x" in warns[0], warns
+
+    # the lost_requests gate covers fleet records like any other bench:
+    # a dropped request through a drain/kill fails the run outright
+    lost_f = fleet(4, tok_s=60.0, lost_requests=1)
+    _, _, errs = compare({}, {record_key(lost_f): lost_f})
+    assert len(errs) == 1 and "::error" in errs[0] and "fleet" in errs[0], errs
+
     print("[bench-compare] selftest OK")
     return 0
 

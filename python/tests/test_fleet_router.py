@@ -1,0 +1,603 @@
+"""Executable mirror of the fleet serving tier (rust/src/coordinator/
+router.rs, the LRU PrefixCache in scheduler.rs, and the ServingMetrics
+rollup in metrics.rs).
+
+The container has no cargo toolchain, so the Rust side is desk-checked;
+this file re-implements the three novel pieces of the multi-replica PR in
+plain Python and drives them through the same scenarios the Rust unit and
+integration tests pin:
+
+- the prefix-affinity router: least-loaded dispatch with a radix tree over
+  dispatched prompts, a slack window that lets affinity override load, and
+  owner-preserving edge splits ("first dispatcher owns the prefix");
+- the LRU radix prefix cache that replaced the PR 6 epoch reset: per-entry
+  logical-clock touches, least-recently-used eviction releasing page refs,
+  and deepest-first path repair keeping the tree consistent under churn;
+- the log-bucketed histogram merge and fleet rollup: counter sums are
+  exact, geometry mismatches surface as errors (never panics), and a
+  mismatch on one histogram does not corrupt the others.
+
+A divergence between the two implementations shows up here as a failure
+against the numbers documented in rust/src/coordinator/router.rs and
+rust/tests/fleet_router.rs.
+"""
+
+import math
+
+import pytest
+
+# ---------------------------------------------------------------- router
+
+MAX_AFF_NODES = 4096
+DEFAULT_MIN_AFFINITY = 8
+
+
+class Router:
+    """Mirror of rust `coordinator::router::Router`."""
+
+    def __init__(self, n_replicas, slack):
+        assert n_replicas > 0
+        # nodes[0] is the sentinel root: (edge, replica, children)
+        self.nodes = [([], 0, [])]
+        self.outstanding = [0] * n_replicas
+        self.routable = [True] * n_replicas
+        self.min_affinity = DEFAULT_MIN_AFFINITY
+        self.slack = max(slack, 1)
+
+    def least_loaded(self):
+        live = [(o, i) for i, o in enumerate(self.outstanding) if self.routable[i]]
+        if not live:
+            live = list(zip(self.outstanding, range(len(self.outstanding))))
+        return min(live)[1]
+
+    def affinity(self, prompt):
+        node, depth, best = 0, 0, None
+        while True:
+            nxt = next(
+                (
+                    c
+                    for c in self.nodes[node][2]
+                    if self.nodes[c][0][:1] == list(prompt[depth : depth + 1])
+                ),
+                None,
+            )
+            if nxt is None:
+                break
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            if m > 0:
+                best = (depth + m, self.nodes[nxt][1])
+            if m < len(edge) or depth + m >= len(prompt):
+                break
+            depth += m
+            node = nxt
+        if best and best[0] >= self.min_affinity:
+            return best[1]
+        return None
+
+    def register(self, prompt, replica):
+        if len(self.nodes) >= MAX_AFF_NODES:
+            return
+        node, depth = 0, 0
+        while depth < len(prompt):
+            nxt = next(
+                (c for c in self.nodes[node][2] if self.nodes[c][0][:1] == [prompt[depth]]),
+                None,
+            )
+            if nxt is None:
+                self.nodes.append((list(prompt[depth:]), replica, []))
+                self.nodes[node][2].append(len(self.nodes) - 1)
+                return
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            if m == len(edge):
+                node, depth = nxt, depth + m
+                continue
+            # split: the mid node inherits the deeper node's owner — the
+            # first dispatcher keeps owning the shared prefix
+            tail = edge[m:]
+            self.nodes[nxt] = (tail, self.nodes[nxt][1], self.nodes[nxt][2])
+            mid = (edge[:m], self.nodes[nxt][1], [nxt])
+            self.nodes.append(mid)
+            kids = self.nodes[node][2]
+            kids[kids.index(nxt)] = len(self.nodes) - 1
+            node, depth = len(self.nodes) - 1, depth + m
+
+    def route(self, prompt):
+        least = self.least_loaded()
+        aff = self.affinity(prompt)
+        if (
+            aff is not None
+            and self.routable[aff]
+            and self.outstanding[aff] < self.outstanding[least] + self.slack
+        ):
+            choice = aff
+        else:
+            choice = least
+        self.outstanding[choice] += 1
+        self.register(prompt, choice)
+        return choice
+
+    def complete(self, replica):
+        self.outstanding[replica] = max(0, self.outstanding[replica] - 1)
+
+
+def sys_prompt(tag, n=12):
+    return [(tag * 11 + t * 3) % 47 for t in range(n)]
+
+
+def test_least_loaded_breaks_ties_low_and_skips_unroutable():
+    r = Router(3, 1)
+    assert r.least_loaded() == 0
+    r.outstanding = [2, 1, 1]
+    assert r.least_loaded() == 1
+    r.routable[1] = False
+    assert r.least_loaded() == 2
+
+
+def test_affinity_sticks_within_slack_then_spills():
+    r = Router(2, 2)
+    p = lambda sfx: sys_prompt(0) + [sfx]
+    assert r.route(p(1)) == 0  # no affinity yet: least-loaded
+    assert r.route(p(2)) == 0  # affinity holds within slack
+    # outstanding [2, 0]: the guard 2 < 0 + 2 fails, so the router spills
+    assert r.route(p(3)) == 1
+    r.complete(0)
+    r.complete(0)
+    assert r.route(p(4)) == 0  # load drained: affinity resumes
+    # a 2-token match is below min_affinity: least-loaded wins
+    short = Router(2, 2)
+    short.route(sys_prompt(0))
+    short.outstanding = [1, 0]
+    assert short.route(sys_prompt(0)[:2] + [99] * 6) == 1
+
+
+def test_affinity_owner_survives_edge_splits():
+    r = Router(3, 8)
+    base = sys_prompt(1, 16)
+    assert r.route(base) == 0
+    # a prompt diverging at token 10 splits the edge; the mid node must
+    # keep replica 0 as owner, so the original prefix still routes home
+    r.outstanding = [0, 0, 0]
+    r.route(base[:10] + [99] * 6)
+    r.outstanding = [1, 1, 0]  # least-loaded would say 2
+    assert r.affinity(base) == 0
+
+
+def test_unroutable_affinity_falls_through_to_least_loaded():
+    r = Router(2, 8)
+    p = sys_prompt(2) + [7]
+    assert r.route(p) == 0
+    r.routable[0] = False
+    assert r.route(sys_prompt(2) + [8]) == 1
+
+
+def xorshift32(seed):
+    x = seed or 1
+
+    def step():
+        nonlocal x
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        return x
+
+    return step
+
+
+def test_dispatch_is_deterministic_for_a_seeded_arrival_order():
+    def run():
+        rng = xorshift32(0xC0FFEE)
+        r = Router(4, 2)
+        routes = []
+        for _ in range(64):
+            fam = rng() % 3
+            prompt = sys_prompt(fam) + [rng() % 40, rng() % 40]
+            routes.append(r.route(prompt))
+            if rng() % 4 == 0 and any(r.outstanding):
+                busy = max(range(4), key=lambda i: r.outstanding[i])
+                r.complete(busy)
+        return routes
+
+    a, b = run(), run()
+    assert a == b
+    assert len(set(a)) > 1  # the workload actually spread across replicas
+
+
+def test_node_cap_degrades_to_least_loaded_not_failure():
+    r = Router(2, 1)
+    r.nodes = r.nodes * MAX_AFF_NODES  # saturate the tree
+    assert r.route(sys_prompt(3) + [1]) in (0, 1)
+    assert sum(r.outstanding) == 1  # routed fine, just unregistered
+
+
+# ------------------------------------------------- LRU radix prefix cache
+
+
+class PagePool:
+    """Refcounted page pool, as in test_paged_kv.py but tracking live ids."""
+
+    def __init__(self):
+        self.refs = {}
+        self.next_id = 0
+
+    def alloc(self):
+        pid = self.next_id
+        self.next_id += 1
+        self.refs[pid] = 1
+        return pid
+
+    def retain(self, pid):
+        self.refs[pid] += 1
+
+    def release(self, pid):
+        self.refs[pid] -= 1
+        if self.refs[pid] == 0:
+            del self.refs[pid]
+
+
+class PrefixCache:
+    """Mirror of the LRU `PrefixCache` in rust coordinator/scheduler.rs.
+
+    Entries live in a slab (evicted slots are reused so node->entry
+    indices stay stable); every lookup/registration touch bumps a logical
+    clock; at capacity the least-recently-touched entry is evicted,
+    releasing its page refs and repairing the radix path deepest-first.
+    """
+
+    def __init__(self, pool, max_entries):
+        self.pool = pool
+        self.nodes = []  # [edge, entry, children]
+        self.entries = []  # slab of dict|None
+        self.free_entries = []
+        self.free_nodes = []
+        self.clock = 0
+        self.max_entries = max(max_entries, 1)
+
+    def live_entries(self):
+        return len(self.entries) - len(self.free_entries)
+
+    def touch(self, entry):
+        self.clock += 1
+        if self.entries[entry] is not None:
+            self.entries[entry]["last_used"] = self.clock
+
+    def lookup(self, prompt):
+        if not self.nodes:
+            return None
+        node, depth, best = 0, 0, None
+        while True:
+            nxt = next(
+                (
+                    c
+                    for c in self.nodes[node][2]
+                    if self.nodes[c][0][:1] == list(prompt[depth : depth + 1])
+                ),
+                None,
+            )
+            if nxt is None:
+                break
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            depth += m
+            best = (depth, self.nodes[nxt][1])
+            if m < len(edge) or depth == len(prompt):
+                break
+            node = nxt
+        if best:
+            self.touch(best[1])
+        return best
+
+    def register(self, prompt, pages):
+        if not prompt:
+            return
+        hit = self.lookup(prompt)
+        if hit and hit[0] == len(prompt):
+            return
+        if self.live_entries() >= self.max_entries:
+            self.evict_lru()
+        for pid in pages:
+            self.pool.retain(pid)
+        self.clock += 1
+        e = {"pages": list(pages), "prompt": list(prompt), "last_used": self.clock}
+        if self.free_entries:
+            entry = self.free_entries.pop()
+            self.entries[entry] = e
+        else:
+            self.entries.append(e)
+            entry = len(self.entries) - 1
+        self.insert(prompt, entry)
+
+    def evict_lru(self):
+        live = [(e["last_used"], i) for i, e in enumerate(self.entries) if e is not None]
+        if not live:
+            return
+        victim = min(live)[1]
+        e = self.entries[victim]
+        self.entries[victim] = None
+        self.free_entries.append(victim)
+        for pid in e["pages"]:
+            self.pool.release(pid)
+        self.repair_path(e["prompt"], victim)
+
+    def repair_path(self, prompt, victim):
+        if not self.nodes:
+            return
+        path, node, depth = [0], 0, 0
+        while depth < len(prompt):
+            nxt = next(
+                (c for c in self.nodes[node][2] if self.nodes[c][0][:1] == [prompt[depth]]),
+                None,
+            )
+            if nxt is None:
+                break
+            edge_len = len(self.nodes[nxt][0])
+            if len(prompt) - depth < edge_len:
+                break
+            path.append(nxt)
+            depth += edge_len
+            node = nxt
+        for i in reversed(range(len(path))):
+            n = path[i]
+            if self.nodes[n][1] != victim:
+                continue
+            if self.nodes[n][2]:
+                self.nodes[n][1] = self.nodes[self.nodes[n][2][0]][1]
+            elif i == 0:
+                self.nodes = []
+                self.free_nodes = []
+            else:
+                parent = path[i - 1]
+                self.nodes[parent][2].remove(n)
+                self.nodes[n][0] = []
+                self.free_nodes.append(n)
+
+    def new_node(self, edge, entry, children):
+        n = [list(edge), entry, children]
+        if self.free_nodes:
+            i = self.free_nodes.pop()
+            self.nodes[i] = n
+            return i
+        self.nodes.append(n)
+        return len(self.nodes) - 1
+
+    def insert(self, prompt, entry):
+        if not self.nodes:
+            self.nodes.append([[], entry, []])
+        node, depth = 0, 0
+        while True:
+            nxt = next(
+                (
+                    c
+                    for c in self.nodes[node][2]
+                    if self.nodes[c][0][:1] == list(prompt[depth : depth + 1])
+                ),
+                None,
+            )
+            if nxt is None:
+                if depth < len(prompt):
+                    leaf = self.new_node(prompt[depth:], entry, [])
+                    self.nodes[node][2].append(leaf)
+                return
+            edge = self.nodes[nxt][0]
+            m = 0
+            while m < len(edge) and depth + m < len(prompt) and edge[m] == prompt[depth + m]:
+                m += 1
+            if m == len(edge):
+                depth += m
+                if depth == len(prompt):
+                    return  # existing path already spells the prompt
+                node = nxt
+                continue
+            # edge diverges at m: split with a mid node inheriting nxt's
+            # entry (that entry's prompt runs through it)
+            tail = edge[m:]
+            self.nodes[nxt][0] = tail
+            mid = self.new_node(edge[:m], self.nodes[nxt][1], [nxt])
+            kids = self.nodes[node][2]
+            kids[kids.index(nxt)] = mid
+            if depth + m < len(prompt):
+                leaf = self.new_node(prompt[depth + m :], entry, [])
+                self.nodes[mid][2].append(leaf)
+            return
+
+
+def test_lru_evicts_cold_entry_and_releases_its_pages():
+    pool = PagePool()
+    cache = PrefixCache(pool, max_entries=2)
+    pa, pb, pc = pool.alloc(), pool.alloc(), pool.alloc()
+    cache.register([1, 2, 3], [pa])
+    cache.register([4, 5, 6], [pb])
+    assert pool.refs[pa] == 2 and pool.refs[pb] == 2
+    cache.lookup([1, 2, 3])  # touch A: B becomes the LRU victim
+    cache.register([7, 8, 9], [pc])
+    assert cache.live_entries() == 2
+    assert pool.refs[pa] == 2 and pool.refs[pc] == 2
+    assert pool.refs[pb] == 1  # cache ref released, original holder remains
+    assert cache.lookup([4, 5, 6]) is None
+    assert cache.lookup([1, 2, 3]) is not None
+
+
+def test_eviction_repairs_split_paths_and_reuses_slots():
+    pool = PagePool()
+    cache = PrefixCache(pool, max_entries=2)
+    pages = [pool.alloc() for _ in range(3)]
+    cache.register([1, 2, 3, 4, 5, 6], [pages[0]])
+    # shares [1,2,3]: splits the first entry's edge
+    cache.register([1, 2, 3, 9, 9, 9], [pages[1]])
+    cache.lookup([1, 2, 3, 9, 9, 9])  # victim will be the first entry
+    cache.register([8, 8, 8], [pages[2]])
+    # the split survivor still resolves through the repaired mid node
+    hit = cache.lookup([1, 2, 3, 9, 9, 9])
+    assert hit is not None and hit[0] == 6
+    assert cache.lookup([1, 2, 3, 4, 5, 6])[0] == 3  # only the shared part
+    # slab churn: evicted entry/node slots are reused, not leaked
+    assert len(cache.free_entries) + cache.live_entries() == len(cache.entries)
+    before = len(cache.nodes)
+    cache.register([1, 2, 3, 4, 0, 0], [pool.alloc()])
+    assert len(cache.nodes) <= before + 2
+
+
+def test_churn_never_leaks_page_refs():
+    pool = PagePool()
+    cache = PrefixCache(pool, max_entries=4)
+    owned = []
+    for i in range(64):
+        pid = pool.alloc()
+        owned.append(pid)
+        cache.register([i % 8, i % 5, i, i + 1], [pid])
+    live_cache_refs = sum(pool.refs[p] - 1 for p in owned if p in pool.refs)
+    assert cache.live_entries() <= 4
+    assert live_cache_refs == sum(
+        len(e["pages"]) for e in cache.entries if e is not None
+    )
+
+
+# --------------------------------------- histogram merge and fleet rollup
+
+
+class Histogram:
+    """Mirror of rust `coordinator::metrics::Histogram` (+ merge)."""
+
+    def __init__(self, lo, hi, buckets):
+        assert lo > 0 and hi > lo and buckets >= 2
+        self.lo = lo
+        self.growth = (hi / lo) ** (1.0 / buckets)
+        self.counts = [0] * buckets
+        self.total = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def geometry(self):
+        return (self.lo, self.growth, len(self.counts))
+
+    def bucket(self, v):
+        if v <= self.lo:
+            return 0
+        return min(int(math.log(v / self.lo) / math.log(self.growth)), len(self.counts) - 1)
+
+    def record(self, v):
+        v = v if (math.isfinite(v) and v > 0) else 0.0
+        self.counts[self.bucket(v)] += 1
+        self.total += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def merge(self, other):
+        if self.geometry() != other.geometry():
+            raise ValueError(
+                f"histogram geometry mismatch: {self.geometry()} vs {other.geometry()}"
+            )
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.total += other.total
+        self.sum += other.sum
+        if other.total:
+            self.min = min(self.min, other.min)
+            self.max = max(self.max, other.max)
+
+
+COUNTERS = (
+    "admitted",
+    "promoted",
+    "rejected",
+    "prefix_hits",
+    "prefix_misses",
+    "step_faults",
+    "chunk_faults",
+    "nan_faults",
+    "retries",
+    "requeued",
+    "backend_failed",
+    "shed",
+    "deadline_expired",
+)
+
+
+class ServingMetrics:
+    """Counters + named histograms, with the rollup-merge contract."""
+
+    def __init__(self, latency_geom=(1e-6, 1e3, 162)):
+        for c in COUNTERS:
+            setattr(self, c, 0)
+        self.hists = {
+            "latency": Histogram(*latency_geom),
+            "ttft": Histogram(1e-6, 1e3, 162),
+            "wait_steps": Histogram(1.0, 1e6, 108),
+        }
+
+    def merge(self, other):
+        """Counter sums are exact and unconditional; histogram geometry
+        mismatches are collected as errors, mirroring the Rust behavior of
+        `ServingMetrics::merge` returning `Err` instead of panicking."""
+        for c in COUNTERS:
+            setattr(self, c, getattr(self, c) + getattr(other, c))
+        errs = []
+        for name, h in self.hists.items():
+            try:
+                h.merge(other.hists[name])
+            except ValueError as e:
+                errs.append(f"{name}: {e}")
+        return errs
+
+
+def test_merge_sums_counters_and_buckets_exactly():
+    a, b = ServingMetrics(), ServingMetrics()
+    a.admitted, b.admitted = 3, 5
+    a.prefix_hits, b.prefix_hits = 2, 9
+    for v in (0.001, 0.25):
+        a.hists["latency"].record(v)
+    b.hists["latency"].record(40.0)
+    assert a.merge(b) == []
+    assert a.admitted == 8 and a.prefix_hits == 11
+    assert a.hists["latency"].total == 3
+    assert a.hists["latency"].min == 0.001 and a.hists["latency"].max == 40.0
+    assert sum(a.hists["latency"].counts) == 3
+
+
+def test_geometry_mismatch_is_an_error_with_exact_counters():
+    a = ServingMetrics()
+    b = ServingMetrics(latency_geom=(1e-3, 1e2, 50))
+    a.shed, b.shed = 1, 2
+    b.hists["latency"].record(0.5)
+    b.hists["ttft"].record(0.1)
+    errs = a.merge(b)
+    # exactly the mismatched histogram errors; the others merged fine
+    assert len(errs) == 1 and errs[0].startswith("latency:"), errs
+    assert "geometry mismatch" in errs[0]
+    assert a.shed == 3  # counters summed despite the error
+    assert a.hists["latency"].total == 0  # mismatched hist left untouched
+    assert a.hists["ttft"].total == 1  # disjoint histograms unaffected
+
+
+def test_fleet_rollup_equals_per_replica_sums():
+    replicas = []
+    for i in range(4):
+        s = ServingMetrics()
+        s.admitted = 7 + i
+        s.requeued = i
+        for k in range(i + 1):
+            s.hists["latency"].record(0.01 * (k + 1))
+        replicas.append(s)
+    rollup = ServingMetrics()
+    errors = []
+    for i, r in enumerate(replicas):
+        errors.extend(f"replica {i}: {e}" for e in rollup.merge(r))
+    assert errors == []
+    assert rollup.admitted == sum(r.admitted for r in replicas)
+    assert rollup.requeued == sum(r.requeued for r in replicas)
+    assert rollup.hists["latency"].total == sum(
+        r.hists["latency"].total for r in replicas
+    )
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

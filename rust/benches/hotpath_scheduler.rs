@@ -23,13 +23,19 @@
 //! contract (bit-identical generations with the trace sink on) and
 //! reports the code-occupancy probe rates; with `NXFP_OBS_OUT=<dir>` it
 //! also writes `trace.jsonl` / `metrics.prom` / `metrics.json` artifacts
-//! from a traced fault run and validates the trace in-process. With
-//! `NXFP_BENCH_JSON=<dir>`, appends records to `BENCH_scheduler.json`.
-//! Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
+//! from a traced fault run and validates the trace in-process. A fleet
+//! scenario serves the same shared-prefix burst through 1/2/4 router-fronted
+//! replicas with a mid-run graceful drain, gating on zero lost requests,
+//! bit-identical generations, exact rollup sums, and per-replica prefix
+//! hits. With `NXFP_BENCH_JSON=<dir>`, appends records to
+//! `BENCH_scheduler.json` (fleet rows go to `BENCH_fleet.json`, keyed
+//! `replicas=N`). Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
 
 use nxfp::bench_util::{banner, emit_bench_json, quantile_duration, smoke_env, StepTtft, Table};
 use nxfp::coordinator::fault::FaultPlan;
+use nxfp::coordinator::router::FleetHandle;
 use nxfp::coordinator::scheduler::Scheduler;
+use nxfp::coordinator::server::ServeOpts;
 use nxfp::coordinator::{DecodeEngine, FinishReason, GenRequest, GenResponse, SynthBackend};
 use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::LmSpec;
@@ -137,6 +143,23 @@ fn shared_prefix_traffic(n: usize, sys_len: usize, rng: &mut Rng) -> Vec<GenRequ
     (0..n)
         .map(|i| {
             let mut prompt = sys.clone();
+            prompt.extend((0..4).map(|_| rng.below(60) as i32 + 1));
+            GenRequest { id: i as u64, prompt, max_new: 4 }
+        })
+        .collect()
+}
+
+/// Fleet traffic: `n` requests cycling over four *distinct* `sys_len`-token
+/// system prompts with short user suffixes — multiple prefix families so
+/// affinity routing has real placement decisions to make (a single family
+/// would pin everything to one replica).
+fn fleet_shared_traffic(n: usize, sys_len: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    let sys: Vec<Vec<i32>> = (0..4)
+        .map(|_| (0..sys_len).map(|_| rng.below(60) as i32 + 1).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let mut prompt = sys[i % 4].clone();
             prompt.extend((0..4).map(|_| rng.below(60) as i32 + 1));
             GenRequest { id: i as u64, prompt, max_new: 4 }
         })
@@ -610,6 +633,130 @@ fn main() {
     }
     assert_eq!(obs_runs[0], obs_runs[1], "tracing changed a generation");
     println!("tracing on vs off: bit-identical generations");
+
+    // ---- fleet: multi-replica serving through the prefix-affinity router
+    banner("HotpathScheduler", "fleet: replicas 1/2/4, affinity routing, mid-run drain");
+    let sys_len = (seq / 3).max(8);
+    let n_reqs = bursts * per_burst;
+    let fleet_reqs = fleet_shared_traffic(n_reqs, sys_len, &mut Rng::seeded(47));
+    println!(
+        "traffic: {n_reqs} requests over 4 distinct {sys_len}-token system prompts, \
+         submitted as one burst (acceptance: zero lost requests through a mid-run \
+         drain, bit-identical to the single-replica run, exact rollup sums, \
+         prefix hits on every loaded replica)\n"
+    );
+    let fleet_opts = ServeOpts {
+        max_batch: MAX_BATCH,
+        prefill_budget: 16,
+        // full pages under the shared prefix even at the smoke spec
+        kv_page_rows: 8,
+        ..Default::default()
+    };
+    let mut t = Table::new(&[
+        "replicas", "tok/s", "lost", "redispatched", "hit rate", "p50 lat ms", "p95 lat ms",
+    ]);
+    let mut fleet_runs: Vec<(Vec<(u64, Vec<i32>)>, f64)> = Vec::new();
+    for n in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let mut fleet = FleetHandle::spawn(n, spec(seq), kv.clone(), fleet_opts.clone());
+        for r in &fleet_reqs {
+            assert!(fleet.submit(r.clone()), "fleet {n}: submit {} refused", r.id);
+        }
+        let mut resps = Vec::with_capacity(n_reqs);
+        for _ in 0..n_reqs / 4 {
+            resps.push(fleet.recv().expect("fleet response"));
+        }
+        if n > 1 {
+            // graceful mid-run drain: replica 0 finishes its backlog, the
+            // router stops routing there, racing dispatches replay elsewhere
+            fleet.drain_replica(0);
+        }
+        while resps.len() < n_reqs {
+            resps.push(fleet.recv().expect("fleet response after drain"));
+        }
+        let wall = t0.elapsed();
+        let report = fleet.shutdown().expect("fleet shutdown");
+        // hard gates: nothing lost, nothing non-Completed, rollup exact
+        assert_eq!(resps.len(), n_reqs, "fleet {n}: lost responses");
+        let completed =
+            resps.iter().filter(|r| r.reason == FinishReason::Completed).count();
+        assert_eq!(completed, n_reqs, "fleet {n}: non-Completed responses");
+        assert!(report.merge_errors.is_empty(), "fleet {n}: {:?}", report.merge_errors);
+        assert_eq!(
+            report.metrics.tokens_generated,
+            report.replicas.iter().map(|r| r.metrics.tokens_generated).sum::<u64>(),
+            "fleet {n}: rollup drift"
+        );
+        assert_eq!(
+            report.serving.prefix_hits,
+            report.replicas.iter().map(|r| r.serving.prefix_hits).sum::<u64>(),
+            "fleet {n}: prefix-hit rollup drift"
+        );
+        // affinity keeps each prefix family on one replica, so every
+        // replica that saw real load reuses its family's pages
+        for (i, rep) in report.replicas.iter().enumerate() {
+            if rep.serving.admitted >= (2 * MAX_BATCH) as u64 {
+                assert!(
+                    rep.serving.prefix_hits > 0,
+                    "fleet {n}: replica {i} admitted {} with zero prefix hits",
+                    rep.serving.admitted
+                );
+            }
+        }
+        let tps = report.metrics.tokens_generated as f64 / wall.as_secs_f64();
+        let lats: Vec<Duration> = resps.iter().map(|r| r.latency).collect();
+        let (p50, p95) = (quantile_duration(&lats, 0.5), quantile_duration(&lats, 0.95));
+        let hit_rate = report.serving.prefix_hit_rate();
+        t.row(&[
+            format!("{n}"),
+            format!("{tps:.0}"),
+            "0".to_string(),
+            format!("{}", report.redispatched),
+            format!("{:.0}%", hit_rate * 100.0),
+            format!("{:.2}", p50.as_secs_f64() * 1e3),
+            format!("{:.2}", p95.as_secs_f64() * 1e3),
+        ]);
+        emit_bench_json(
+            "fleet",
+            "shared-prefix-drain",
+            // config keys the replica count so bench_compare tracks each
+            // fleet size as its own trajectory
+            &format!("replicas={n}"),
+            &kv.name(),
+            &[
+                ("tok_s", tps),
+                ("lost_requests", 0.0),
+                ("redispatched", report.redispatched as f64),
+                ("prefix_hit_rate", hit_rate),
+                ("p50_ms", p50.as_secs_f64() * 1e3),
+                ("p95_ms", p95.as_secs_f64() * 1e3),
+                ("effective_bits", kv_bits),
+            ],
+        );
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            resps.into_iter().map(|r| (r.id, r.tokens)).collect();
+        toks.sort();
+        fleet_runs.push((toks, tps));
+    }
+    t.print();
+    // placement, drain redistribution, and replay are invisible in tokens
+    assert_eq!(fleet_runs[0].0, fleet_runs[1].0, "fleet of 2 diverged from solo");
+    assert_eq!(fleet_runs[0].0, fleet_runs[2].0, "fleet of 4 diverged from solo");
+    let (solo_tps, best_tps) = (
+        fleet_runs[0].1,
+        fleet_runs.iter().map(|r| r.1).fold(f64::MIN, f64::max),
+    );
+    println!(
+        "\nfleet vs solo: bit-identical generations, best fleet {:.2}x solo tok/s \
+         (acceptance: >= 1x with replicas stepping on their own threads; only a \
+         degenerate-serialization floor is asserted — wall-clock noise belongs \
+         to the JSON trajectory)",
+        best_tps / solo_tps
+    );
+    assert!(
+        best_tps >= solo_tps * 0.5,
+        "fleet serialized: best {best_tps:.0} tok/s vs solo {solo_tps:.0}"
+    );
 
     // with NXFP_OBS_OUT=<dir>, write the CI observability artifacts from a
     // traced fault run (so Retry events appear) and re-validate the JSONL

@@ -290,6 +290,52 @@ impl ServingMetrics {
         self.prefix_hits as f64 / lookups as f64
     }
 
+    /// Fold another replica's serving metrics into this rollup. Counters
+    /// are summed **unconditionally and exactly**; histograms merge
+    /// bucket-wise via [`Histogram::merge`]. A geometry mismatch degrades
+    /// only the mismatched histogram (this side's data is kept untouched)
+    /// and is surfaced in the returned error — so a fleet rollup across
+    /// heterogeneous builds still reports exact counters, with the
+    /// histogram gaps named instead of panicking mid-report.
+    pub fn merge(&mut self, other: &ServingMetrics) -> anyhow::Result<()> {
+        self.admitted += other.admitted;
+        self.promoted += other.promoted;
+        self.rejected += other.rejected;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.step_faults += other.step_faults;
+        self.chunk_faults += other.chunk_faults;
+        self.nan_faults += other.nan_faults;
+        self.retries += other.retries;
+        self.requeued += other.requeued;
+        self.backend_failed += other.backend_failed;
+        self.shed += other.shed;
+        self.deadline_expired += other.deadline_expired;
+        let pairs: [(&str, &mut Histogram, &Histogram); 10] = [
+            ("latency", &mut self.latency, &other.latency),
+            ("ttft", &mut self.ttft, &other.ttft),
+            ("wait_steps", &mut self.wait_steps, &other.wait_steps),
+            ("queue_depth", &mut self.queue_depth, &other.queue_depth),
+            ("prefill_chunk", &mut self.prefill_chunk, &other.prefill_chunk),
+            ("step_prefill_tokens", &mut self.step_prefill_tokens, &other.step_prefill_tokens),
+            ("step_decode_tokens", &mut self.step_decode_tokens, &other.step_decode_tokens),
+            ("prefix_rows", &mut self.prefix_rows, &other.prefix_rows),
+            ("shared_pages", &mut self.shared_pages, &other.shared_pages),
+            ("retry_backoff", &mut self.retry_backoff, &other.retry_backoff),
+        ];
+        let mut errs = Vec::new();
+        for (name, mine, theirs) in pairs {
+            if let Err(e) = mine.merge(theirs) {
+                errs.push(format!("{name}: {e:#}"));
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("{}", errs.join("; "))
+        }
+    }
+
     /// Human-readable one-block summary for logs and the CLI.
     pub fn summary(&self) -> String {
         let ms = |s: f64| s * 1e3;
@@ -470,6 +516,48 @@ mod tests {
         assert!(a.merge(&b).is_err());
         let c = Histogram::new(1e-6, 1e3, 161); // same span, different buckets
         assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn serving_merge_sums_counters_and_histograms() {
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        a.admitted = 7;
+        a.prefix_hits = 3;
+        a.shed = 1;
+        a.latency.record(0.010);
+        b.admitted = 5;
+        b.prefix_hits = 2;
+        b.requeued = 4;
+        b.latency.record(0.030);
+        b.ttft.record(0.002);
+        a.merge(&b).unwrap();
+        assert_eq!(a.admitted, 12);
+        assert_eq!(a.prefix_hits, 5);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.requeued, 4);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.latency.max(), 0.030);
+        assert_eq!(a.ttft.count(), 1);
+    }
+
+    #[test]
+    fn serving_merge_mismatch_is_error_with_exact_counters() {
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        // one replica built with a different latency geometry
+        b.latency = Histogram::new(1e-3, 1e2, 50);
+        b.latency.record(0.5);
+        b.admitted = 9;
+        b.ttft.record(0.004);
+        let err = a.merge(&b).unwrap_err().to_string();
+        assert!(err.contains("latency"), "err: {err}");
+        assert!(!err.contains("ttft"), "only the mismatched histogram is named: {err}");
+        // counters summed exactly despite the error; the mismatched
+        // histogram kept this side's (empty) data, the rest merged
+        assert_eq!(a.admitted, 9);
+        assert_eq!(a.latency.count(), 0);
+        assert_eq!(a.ttft.count(), 1);
     }
 
     #[test]

@@ -68,6 +68,7 @@
 
 pub mod fault;
 pub mod metrics;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
@@ -178,6 +179,24 @@ impl Metrics {
     /// sharing off; > 1.0 when slots shared prefix pages.
     pub fn dedup_factor(&self) -> f64 {
         self.kv_bits_packed as f64 / self.kv_bits_packed_dedup().max(1) as f64
+    }
+
+    /// Fold another engine's counters into this rollup (fleet totals are
+    /// exact sums). `wall` sums each replica's *stepping* time — replicas
+    /// step concurrently, so it is aggregate compute, not fleet
+    /// wall-clock; rate helpers like [`Self::tokens_per_sec`] read as
+    /// per-replica averages on a rollup.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.tokens_generated += other.tokens_generated;
+        self.decode_steps += other.decode_steps;
+        self.wall += other.wall;
+        self.kv_bits_packed += other.kv_bits_packed;
+        self.kv_bits_packed_k += other.kv_bits_packed_k;
+        self.kv_bits_packed_v += other.kv_bits_packed_v;
+        self.kv_bits_fp16 += other.kv_bits_fp16;
+        self.kv_bits_packed_dedup_k += other.kv_bits_packed_dedup_k;
+        self.kv_bits_packed_dedup_v += other.kv_bits_packed_dedup_v;
     }
 }
 
@@ -1751,16 +1770,69 @@ impl DecodeEngine {
     /// reset each cache's watermark — `KvCache::reset_watermark` — and the
     /// next sync replays the prefix from the packed pages.) The vacated
     /// lane is zeroed, preserving the free-lanes-are-zero invariant.
-    pub fn move_lane(&mut self, slots: &mut [Option<Slot>], from: usize, to: usize) {
-        assert!(from != to, "move_lane: from == to");
-        assert!(slots[to].is_none(), "move_lane: target lane {to} occupied");
-        let slot = slots[from].take().expect("move_lane: source lane empty");
+    ///
+    /// An occupied target or empty source is an `Err`, not a panic: a
+    /// replica thread must survive a bad move (route the error through
+    /// [`DecodeEngine::move_lane_contained`] so the affected slot requeues
+    /// and the lanes stay untouched). The invariants remain
+    /// `debug_assert!`s so debug builds still catch the caller bug at the
+    /// call site.
+    pub fn move_lane(&mut self, slots: &mut [Option<Slot>], from: usize, to: usize) -> Result<()> {
+        debug_assert!(from != to, "move_lane: from == to");
+        debug_assert!(from < slots.len() && to < slots.len(), "move_lane: lane out of range");
+        if from == to || from >= slots.len() || to >= slots.len() {
+            anyhow::bail!("move_lane: bad lanes {from} -> {to} (pool of {})", slots.len());
+        }
+        if slots[to].is_some() {
+            anyhow::bail!("move_lane: target lane {to} occupied");
+        }
+        let Some(slot) = slots[from].take() else {
+            anyhow::bail!("move_lane: source lane {from} empty");
+        };
         let lane = self.lane_len();
         self.k_f32.copy_within(from * lane..(from + 1) * lane, to * lane);
         self.v_f32.copy_within(from * lane..(from + 1) * lane, to * lane);
         self.k_f32[from * lane..(from + 1) * lane].fill(0.0);
         self.v_f32[from * lane..(from + 1) * lane].fill(0.0);
         slots[to] = Some(slot);
+        Ok(())
+    }
+
+    /// [`DecodeEngine::move_lane`] routed through the fault-containment
+    /// ladder: a failed move no longer kills the serving thread — the
+    /// affected source slot retires through the requeue path (replayed
+    /// from the prompt bit-exactly at its next admission, or failed with
+    /// [`FinishReason::BackendError`] into `done` once past the requeue
+    /// budget) and the replica keeps serving. Returns whether the move
+    /// actually happened.
+    pub fn move_lane_contained(
+        &mut self,
+        sched: &mut Scheduler,
+        from: usize,
+        to: usize,
+        done: &mut Vec<GenResponse>,
+    ) -> bool {
+        let err = match self.move_lane(sched.slots_mut(), from, to) {
+            Ok(()) => return true,
+            Err(e) => e,
+        };
+        let mut requeue = Vec::new();
+        if sched.slots().get(from).map_or(false, Option::is_some) {
+            self.retire_faulted(
+                sched.slots_mut(),
+                from,
+                done,
+                &mut requeue,
+                true,
+                &format!("lane move {from} -> {to} failed: {err:#}"),
+            );
+        } else {
+            eprintln!("[serve] lane move {from} -> {to} failed with no source slot: {err:#}");
+        }
+        for r in requeue {
+            sched.requeue(r);
+        }
+        false
     }
 
     /// Read-only view of one lane of the step slabs (tests).

@@ -57,11 +57,14 @@
 //! `ceil(suffix_len / budget)` steps, where `suffix_len` is the prompt
 //! minus its best cached prefix — a long prompt behind a hot system
 //! prompt is as cheap to admit as a short one. Capacity is bounded by
-//! `max_entries` with wholesale **epoch reset** (release every entry's
-//! page refs, clear the tree): crude next to LRU, but eviction is rare,
-//! O(entries), and never leaves dangling page refs.
+//! `max_entries` with per-entry **LRU eviction**: every lookup or
+//! registration stamps the touched entry with a logical clock, and a
+//! registration at capacity evicts only the stalest entry (releasing its
+//! page refs and repairing the radix path its prompt created), so a hot
+//! system prompt survives arbitrary churn of cold one-off prompts instead
+//! of being dropped by a wholesale epoch reset.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::Instant;
@@ -125,6 +128,12 @@ struct PrefixEntry {
     rows: usize,
     /// Per-layer `(k_pages, v_pages)`, each `ceil(rows / page_rows)` long.
     pages: Vec<(Vec<PageId>, Vec<PageId>)>,
+    /// The registered prompt itself, kept so LRU eviction can walk and
+    /// repair exactly the radix path this entry created or inherited.
+    prompt: Vec<i32>,
+    /// Logical-clock stamp of the last lookup/registration touch (`Cell`
+    /// because lookups run through `&self`).
+    last_used: Cell<u64>,
 }
 
 /// Node in the radix tree over registered prompts. Every node is created
@@ -142,14 +151,43 @@ struct PrefixNode {
 struct PrefixCache {
     pool: Rc<RefCell<PagePool>>,
     nodes: Vec<PrefixNode>,
-    entries: Vec<PrefixEntry>,
+    /// Entry slab: `None` marks an evicted slot awaiting reuse, so the
+    /// entry indices stored in nodes stay stable across evictions.
+    entries: Vec<Option<PrefixEntry>>,
+    free_entries: Vec<usize>,
+    /// Node slots unlinked by eviction, reused by later inserts.
+    free_nodes: Vec<usize>,
+    /// Logical LRU clock, bumped on every touch.
+    clock: Cell<u64>,
     max_entries: usize,
 }
 
 impl PrefixCache {
     fn new(pool: Rc<RefCell<PagePool>>, max_entries: usize) -> Self {
         let max_entries = max_entries.max(1);
-        PrefixCache { pool, nodes: Vec::new(), entries: Vec::new(), max_entries }
+        PrefixCache {
+            pool,
+            nodes: Vec::new(),
+            entries: Vec::new(),
+            free_entries: Vec::new(),
+            free_nodes: Vec::new(),
+            clock: Cell::new(0),
+            max_entries,
+        }
+    }
+
+    /// Entries currently resident (slab slots minus the free list).
+    fn live_entries(&self) -> usize {
+        self.entries.len() - self.free_entries.len()
+    }
+
+    /// Stamp `entry` with a fresh logical-clock tick.
+    fn touch(&self, entry: usize) {
+        let t = self.clock.get() + 1;
+        self.clock.set(t);
+        if let Some(e) = self.entries[entry].as_ref() {
+            e.last_used.set(t);
+        }
     }
 
     /// Longest registered prefix of `prompt`: `(matched_rows, entry)`.
@@ -183,12 +221,16 @@ impl PrefixCache {
             }
             node = next;
         }
+        if let Some((_, e)) = best {
+            self.touch(e);
+        }
         best
     }
 
     /// Register a finished prefill. Retains every page in `pages`; skips
     /// prompts already fully covered by an existing entry. At capacity the
-    /// whole cache epoch-resets first (releasing every held page ref).
+    /// least-recently-touched entry is evicted first (releasing its page
+    /// refs), so a hot prefix survives churn of cold ones.
     fn register(&mut self, prompt: &[i32], pages: Vec<(Vec<PageId>, Vec<PageId>)>) {
         if prompt.is_empty() {
             return;
@@ -198,8 +240,8 @@ impl PrefixCache {
                 return;
             }
         }
-        if self.entries.len() >= self.max_entries {
-            self.release_all();
+        if self.live_entries() >= self.max_entries {
+            self.evict_lru();
         }
         let mut pool = self.pool.borrow_mut();
         for (k, v) in &pages {
@@ -208,9 +250,119 @@ impl PrefixCache {
             }
         }
         drop(pool);
-        let entry = self.entries.len();
-        self.entries.push(PrefixEntry { rows: prompt.len(), pages });
+        let t = self.clock.get() + 1;
+        self.clock.set(t);
+        let e = PrefixEntry {
+            rows: prompt.len(),
+            pages,
+            prompt: prompt.to_vec(),
+            last_used: Cell::new(t),
+        };
+        let entry = match self.free_entries.pop() {
+            Some(i) => {
+                self.entries[i] = Some(e);
+                i
+            }
+            None => {
+                self.entries.push(Some(e));
+                self.entries.len() - 1
+            }
+        };
         self.insert(prompt, entry);
+    }
+
+    /// Evict the least-recently-touched entry: release its page refs,
+    /// then repair the radix tree along the entry's own prompt path.
+    fn evict_lru(&mut self) {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (e.last_used.get(), i)))
+            .min()
+            .map(|(_, i)| i);
+        let Some(victim) = victim else { return };
+        let e = self.entries[victim].take().unwrap();
+        self.free_entries.push(victim);
+        let mut pool = self.pool.borrow_mut();
+        for (k, v) in &e.pages {
+            for &id in k.iter().chain(v.iter()) {
+                pool.release(id);
+            }
+        }
+        drop(pool);
+        self.repair_path(&e.prompt, victim);
+    }
+
+    /// Remove every reference to `victim` from the nodes on `prompt`'s
+    /// path, deepest-first. Every node referencing an entry lies on that
+    /// entry's prompt path (created by its registration, or inherited at
+    /// an edge split the prompt runs through), so walking the stored
+    /// prompt visits every node to fix: a childless node unlinks (its
+    /// subtree spelled only the victim's prompt), one with children
+    /// re-points at its first child's entry — live by then, because
+    /// deeper path nodes were repaired first and off-path children never
+    /// reference the victim. Sibling edges are not re-merged after an
+    /// unlink; lookups stay correct either way.
+    fn repair_path(&mut self, prompt: &[i32], victim: usize) {
+        if self.nodes.is_empty() {
+            return;
+        }
+        let mut path = vec![0usize];
+        let mut node = 0;
+        let mut depth = 0;
+        while depth < prompt.len() {
+            let Some(&next) = self.nodes[node]
+                .children
+                .iter()
+                .find(|&&c| self.nodes[c].edge.first() == prompt.get(depth))
+            else {
+                break;
+            };
+            // the victim's own path always matches whole edges
+            let edge_len = self.nodes[next].edge.len();
+            if prompt.len() - depth < edge_len {
+                break;
+            }
+            path.push(next);
+            depth += edge_len;
+            node = next;
+        }
+        for i in (0..path.len()).rev() {
+            let n = path[i];
+            if self.nodes[n].entry != victim {
+                continue;
+            }
+            match self.nodes[n].children.first().copied() {
+                Some(c) => self.nodes[n].entry = self.nodes[c].entry,
+                None if i == 0 => {
+                    // childless root: the whole tree spelled the victim
+                    self.nodes.clear();
+                    self.free_nodes.clear();
+                }
+                None => {
+                    let parent = path[i - 1];
+                    self.nodes[parent].children.retain(|&c| c != n);
+                    self.nodes[n].edge = Vec::new();
+                    self.free_nodes.push(n);
+                }
+            }
+        }
+    }
+
+    /// Allocate a node, reusing a slot unlinked by eviction if any.
+    fn new_node(&mut self, edge: Vec<i32>, entry: usize, children: Vec<usize>) -> usize {
+        let n = PrefixNode { edge, entry, children };
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = n;
+                i
+            }
+            None => {
+                self.nodes.push(n);
+                self.nodes.len() - 1
+            }
+        }
     }
 
     fn insert(&mut self, prompt: &[i32], entry: usize) {
@@ -229,12 +381,7 @@ impl PrefixCache {
                 // no edge starts with our next token: hang the remainder
                 // off `node` as a fresh leaf
                 if depth < prompt.len() {
-                    let leaf = self.nodes.len();
-                    self.nodes.push(PrefixNode {
-                        edge: prompt[depth..].to_vec(),
-                        entry,
-                        children: Vec::new(),
-                    });
+                    let leaf = self.new_node(prompt[depth..].to_vec(), entry, Vec::new());
                     self.nodes[node].children.push(leaf);
                 }
                 return;
@@ -259,17 +406,11 @@ impl PrefixCache {
             let tail = self.nodes[next].edge.split_off(m);
             let head = std::mem::replace(&mut self.nodes[next].edge, tail);
             let inherited = self.nodes[next].entry;
-            let mid = self.nodes.len();
-            self.nodes.push(PrefixNode { edge: head, entry: inherited, children: vec![next] });
+            let mid = self.new_node(head, inherited, vec![next]);
             let pos = self.nodes[node].children.iter().position(|&c| c == next).unwrap();
             self.nodes[node].children[pos] = mid;
             if depth + m < prompt.len() {
-                let leaf = self.nodes.len();
-                self.nodes.push(PrefixNode {
-                    edge: prompt[depth + m..].to_vec(),
-                    entry,
-                    children: Vec::new(),
-                });
+                let leaf = self.new_node(prompt[depth + m..].to_vec(), entry, Vec::new());
                 self.nodes[mid].children.push(leaf);
             }
             return;
@@ -279,7 +420,7 @@ impl PrefixCache {
     /// Drop every entry's page refs and clear the tree.
     fn release_all(&mut self) {
         let mut pool = self.pool.borrow_mut();
-        for e in self.entries.drain(..) {
+        for e in self.entries.drain(..).flatten() {
             for (k, v) in &e.pages {
                 for &id in k.iter().chain(v.iter()) {
                     pool.release(id);
@@ -287,7 +428,9 @@ impl PrefixCache {
             }
         }
         drop(pool);
+        self.free_entries.clear();
         self.nodes.clear();
+        self.free_nodes.clear();
     }
 }
 
@@ -332,7 +475,7 @@ impl Scheduler {
     /// newcomers after this many engine steps.
     pub const DEFAULT_PROMOTE_AFTER: u64 = 64;
 
-    /// Default prefix-cache capacity before an epoch reset.
+    /// Default prefix-cache capacity before LRU eviction begins.
     pub const DEFAULT_PREFIX_ENTRIES: usize = 512;
 
     pub fn new(max_batch: usize, promote_after: u64) -> Self {
@@ -414,7 +557,8 @@ impl Scheduler {
             return None;
         }
         let n_pages = rows.div_ceil(pc.pool.borrow().page_rows());
-        let e = &pc.entries[entry];
+        // entries reachable from the tree are live by the repair invariant
+        let e = pc.entries[entry].as_ref()?;
         debug_assert!(e.rows >= rows);
         let pages = e
             .pages
@@ -583,6 +727,23 @@ impl Scheduler {
         })
     }
 
+    /// Tear down all pending work: every queued request plus every
+    /// in-flight slot's request (queue front first, then lanes in index
+    /// order). Slots are dropped, releasing their pages; the fleet router
+    /// uses this on an abrupt replica kill to requeue the replica's work
+    /// from the prompt onto survivors — deterministic quantization plus
+    /// the per-slot-pure backend make the replay bit-identical (the same
+    /// argument as the single-replica requeue ladder).
+    pub fn take_unserved(&mut self) -> Vec<GenRequest> {
+        let mut out: Vec<GenRequest> = self.queue.drain(..).map(|q| q.req).collect();
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                out.push(s.req);
+            }
+        }
+        out
+    }
+
     /// Advance the promotion clock one engine step and report the sampled
     /// queue depth (the engine records it).
     pub fn tick(&mut self) -> usize {
@@ -700,7 +861,7 @@ mod tests {
         // prompts the tree already spells register as no-ops
         pc.register(&[1, 2], Vec::new());
         pc.register(&[1, 2, 3, 4], Vec::new());
-        assert_eq!(pc.entries.len(), 2);
+        assert_eq!(pc.live_entries(), 2);
     }
 
     #[test]
@@ -766,11 +927,11 @@ mod tests {
         assert_eq!(pool.borrow().refs(a), 3);
         pc.register(&[1, 2], vec![(vec![a], vec![a])]);
         assert_eq!(pool.borrow().refs(a), 3); // covered: no second retain
-        assert_eq!(pc.entries.len(), 1);
+        assert_eq!(pc.live_entries(), 1);
     }
 
     #[test]
-    fn capacity_epoch_reset_releases_every_held_ref() {
+    fn lru_eviction_keeps_hot_prefix_and_releases_cold_refs() {
         let pool = Rc::new(RefCell::new(PagePool::new(2)));
         let mut pc = PrefixCache::new(pool.clone(), 2);
         let a = pool.borrow_mut().alloc(4, 4);
@@ -779,16 +940,53 @@ mod tests {
         pc.register(&[1, 2], vec![(vec![a], vec![])]);
         pc.register(&[3, 4], vec![(vec![b], vec![])]);
         assert_eq!((pool.borrow().refs(a), pool.borrow().refs(b)), (2, 2));
-        // third registration hits max_entries: wholesale epoch reset first
+        // keep [1,2] hot: the lookup stamps its recency past [3,4]'s
+        assert_eq!(pc.lookup(&[1, 2, 9]).unwrap().0, 2);
+        // the registration at capacity evicts exactly the cold [3,4] —
+        // releasing its ref — while the hot entry survives
         pc.register(&[5, 6], vec![(vec![c], vec![])]);
-        assert_eq!((pool.borrow().refs(a), pool.borrow().refs(b)), (1, 1));
+        assert_eq!(pool.borrow().refs(b), 1, "cold entry must release its ref");
+        assert_eq!(pool.borrow().refs(a), 2, "hot entry must survive capacity pressure");
         assert_eq!(pool.borrow().refs(c), 2);
-        assert_eq!(pc.entries.len(), 1);
-        assert!(pc.lookup(&[1, 2]).is_none()); // pre-reset entries are gone
+        assert_eq!(pc.live_entries(), 2);
+        assert!(pc.lookup(&[3, 4]).is_none(), "evicted prefix still resolves");
+        assert_eq!(pc.lookup(&[1, 2, 3]).unwrap().0, 2);
         assert_eq!(pc.lookup(&[5, 6, 7]).unwrap().0, 2);
+        // churn of cold one-offs never touches the repeatedly-hit prefix
+        for t in 0..8 {
+            assert_eq!(pc.lookup(&[1, 2, t]).unwrap().0, 2);
+            pc.register(&[20 + t, 30], Vec::new());
+        }
+        assert_eq!(pool.borrow().refs(a), 2, "hot entry evicted under churn");
+        assert_eq!(pc.lookup(&[1, 2]).unwrap().0, 2);
         pc.release_all();
-        assert_eq!(pool.borrow().refs(c), 1);
+        assert_eq!((pool.borrow().refs(a), pool.borrow().refs(c)), (1, 1));
         assert_eq!(pool.borrow().shared_pages(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_repairs_shared_radix_paths() {
+        let pool = Rc::new(RefCell::new(PagePool::new(2)));
+        let mut pc = PrefixCache::new(pool.clone(), 2);
+        pc.register(&[1, 2, 3, 4], Vec::new()); // entry 0
+        pc.register(&[1, 2, 9], Vec::new()); // splits the edge; mid inherits entry 0
+        // touch entry 1 so entry 0 is the LRU victim
+        assert_eq!(pc.lookup(&[1, 2, 9, 9]).unwrap().0, 3);
+        // evicting [1,2,3,4] must repair the split node that inherited its
+        // entry: the shared [1,2] prefix re-points at the survivor and the
+        // [3,4] tail unlinks, so no node references a freed slab slot
+        pc.register(&[7, 7], Vec::new());
+        assert_eq!(pc.live_entries(), 2);
+        let (rows, e) = pc.lookup(&[1, 2, 0]).unwrap();
+        assert_eq!(rows, 2);
+        assert!(pc.entries[e].is_some(), "repair left a dangling entry index");
+        assert_eq!(pc.lookup(&[1, 2, 3, 4]).unwrap().0, 2, "evicted tail must not match");
+        assert_eq!(pc.lookup(&[1, 2, 9]).unwrap().0, 3);
+        assert_eq!(pc.lookup(&[7, 7, 1]).unwrap().0, 2);
+        // evicted slab and node slots are reused, not leaked
+        pc.register(&[8, 8], Vec::new()); // evicts another entry into the free lists
+        assert_eq!(pc.live_entries(), 2);
+        assert!(pc.entries.len() <= 3, "slab must reuse freed entry slots");
     }
 
     #[test]

@@ -30,7 +30,7 @@ use super::fault::FaultPlan;
 use super::metrics::ServingMetrics;
 use super::scheduler::{SchedMode, Scheduler};
 use super::{
-    DecodeEngine, GenRequest, GenResponse, Metrics, DEFAULT_PREFILL_BUDGET,
+    DecodeEngine, GenRequest, GenResponse, Metrics, SynthBackend, DEFAULT_PREFILL_BUDGET,
     DEFAULT_RETRY_BACKOFF, DEFAULT_RETRY_MAX,
 };
 use crate::formats::QuantPolicy;
@@ -38,10 +38,11 @@ use crate::models::{Checkpoint, LmSpec};
 use crate::obs::{write_metrics, CodeOccupancy, TraceSink, TraceSummary, DEFAULT_TRACE_CAP};
 use crate::runtime::Runtime;
 
-/// Continuous mode rewrites `--metrics-out` every this many engine steps
-/// (cheap: a few KB of text), so a live server's metrics file is never
-/// more than a snapshot interval stale.
-const METRICS_SNAPSHOT_STEPS: u64 = 256;
+/// Default snapshot cadence ([`ServeOpts::metrics_snapshot_steps`]): the
+/// worker rewrites `--metrics-out` every this many engine steps (cheap: a
+/// few KB of text), so a live server's metrics file is never more than a
+/// snapshot interval stale.
+pub const METRICS_SNAPSHOT_STEPS: u64 = 256;
 
 enum Msg {
     Req(GenRequest),
@@ -49,6 +50,10 @@ enum Msg {
     /// finish in-flight work, then report.
     Drain,
     Shutdown,
+    /// Abrupt stop: abandon queued and in-flight work immediately and
+    /// report it back through [`ServeReport::unserved`] — the fleet
+    /// router replays it on surviving replicas.
+    Kill,
 }
 
 /// Front-end configuration for [`ServerHandle::spawn`] — everything about
@@ -103,6 +108,12 @@ pub struct ServeOpts {
     /// (`--occupancy`): per-config clip/vacant/recycle rates in the
     /// metrics export and [`ServeReport::occupancy`].
     pub occupancy: bool,
+    /// Snapshot cadence for `metrics_out`: continuous mode rewrites the
+    /// export every this many engine steps; wave mode rewrites it after
+    /// any wave that crosses a multiple of it (per-wave granularity —
+    /// a wave never pauses mid-flight to write text). Defaults to
+    /// [`METRICS_SNAPSHOT_STEPS`]; tests shrink it.
+    pub metrics_snapshot_steps: u64,
 }
 
 impl Default for ServeOpts {
@@ -122,6 +133,7 @@ impl Default for ServeOpts {
             trace_out: None,
             metrics_out: None,
             occupancy: false,
+            metrics_snapshot_steps: METRICS_SNAPSHOT_STEPS,
         }
     }
 }
@@ -133,12 +145,19 @@ pub struct ServeReport {
     /// Per-config occupancy probe tables (empty unless
     /// [`ServeOpts::occupancy`] was set).
     pub occupancy: Vec<CodeOccupancy>,
+    /// Requests accepted but never answered, handed back by
+    /// [`ServerHandle::kill`] for replay elsewhere (queue order first,
+    /// then in-flight slots by lane). Always empty on a graceful
+    /// shutdown or drain — those paths answer everything.
+    pub unserved: Vec<GenRequest>,
 }
 
 /// Handle to a running server worker.
 pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
-    rx: mpsc::Receiver<GenResponse>,
+    // Option so a fleet router can detach the stream (`take_rx`) and pump
+    // it from a forwarder thread instead of polling N handles.
+    rx: Option<mpsc::Receiver<GenResponse>>,
     join: Option<JoinHandle<Result<ServeReport>>>,
 }
 
@@ -157,30 +176,47 @@ impl ServerHandle {
         let (tx, worker_rx) = mpsc::channel::<Msg>();
         let (resp_tx, rx) = mpsc::channel::<GenResponse>();
         let join = std::thread::spawn(move || -> Result<ServeReport> {
+            // the runtime outlives the engine on this thread; it cannot
+            // move through the generic `spawn_with` seam (not Send)
             let mut rt = Runtime::cpu(artifacts_dir)?;
             let mut engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
-            engine.set_prefill_budget(opts.prefill_budget);
-            engine.set_kv_page_rows(opts.kv_page_rows);
-            engine.set_retry_policy(opts.retry_max, DEFAULT_RETRY_BACKOFF);
-            engine.set_deadline(opts.deadline);
-            if let Some(plan) = &opts.fault {
-                engine.inject_faults(plan);
-            }
-            if opts.trace_out.is_some() {
-                engine.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
-            }
-            if opts.occupancy {
-                engine.enable_occupancy();
-            }
-            let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
-            match opts.mode {
-                SchedMode::Continuous => {
-                    run_continuous(&mut engine, &worker_rx, &resp_tx, &opts, log)
-                }
-                SchedMode::Wave => run_waves(&mut engine, &worker_rx, &resp_tx, &opts, log),
-            }
+            serve_thread(&mut engine, &worker_rx, &resp_tx, &opts)
         });
-        ServerHandle { tx, rx, join: Some(join) }
+        ServerHandle { tx, rx: Some(rx), join: Some(join) }
+    }
+
+    /// Spawn a worker around an engine built by `make_engine` on the
+    /// worker thread itself (engines are not Send: they hold
+    /// `Rc<RefCell<PagePool>>`). All scheduling opts — budget, retry
+    /// policy, deadline, faults, trace, occupancy — are applied here, so
+    /// every spawn flavor serves identically.
+    pub fn spawn_with<F>(make_engine: F, opts: ServeOpts) -> ServerHandle
+    where
+        F: FnOnce(&ServeOpts) -> Result<DecodeEngine> + Send + 'static,
+    {
+        let (tx, worker_rx) = mpsc::channel::<Msg>();
+        let (resp_tx, rx) = mpsc::channel::<GenResponse>();
+        let join = std::thread::spawn(move || -> Result<ServeReport> {
+            let mut engine = make_engine(&opts)?;
+            serve_thread(&mut engine, &worker_rx, &resp_tx, &opts)
+        });
+        ServerHandle { tx, rx: Some(rx), join: Some(join) }
+    }
+
+    /// Artifact-free worker over the deterministic [`SynthBackend`] —
+    /// the fleet router's per-replica engine (and the bench/test seam).
+    pub fn spawn_synth(spec: LmSpec, kv: QuantPolicy, opts: ServeOpts) -> ServerHandle {
+        Self::spawn_with(
+            move |opts| {
+                Ok(DecodeEngine::with_backend(
+                    spec.clone(),
+                    Box::new(SynthBackend::new(&spec)),
+                    &kv,
+                    opts.max_batch,
+                ))
+            },
+            opts,
+        )
     }
 
     /// Submit a request. Returns whether the worker will see it: `false`
@@ -191,13 +227,21 @@ impl ServerHandle {
         self.tx.send(Msg::Req(req)).is_ok()
     }
 
-    /// Blocking receive of the next completed response.
+    /// Blocking receive of the next completed response. `None` once the
+    /// worker is gone — or always, after [`Self::take_rx`] detached the
+    /// stream.
     pub fn recv(&self) -> Option<GenResponse> {
-        self.rx.recv().ok()
+        self.rx.as_ref()?.recv().ok()
     }
 
     pub fn recv_timeout(&self, d: Duration) -> Option<GenResponse> {
-        self.rx.recv_timeout(d).ok()
+        self.rx.as_ref()?.recv_timeout(d).ok()
+    }
+
+    /// Detach the response stream so a fleet forwarder thread can own it;
+    /// `recv`/`recv_timeout` on the handle return `None` afterwards.
+    pub fn take_rx(&mut self) -> Option<mpsc::Receiver<GenResponse>> {
+        self.rx.take()
     }
 
     /// Finish outstanding work and return the final accounting. A second
@@ -216,12 +260,90 @@ impl ServerHandle {
         self.join_inner()
     }
 
+    /// Start a graceful drain without joining: the worker stops
+    /// admitting (racing submits are answered `FinishReason::Shed`),
+    /// finishes its backlog, and exits. Collect the report later with
+    /// [`Self::drain`]/[`Self::shutdown`] — the router uses this to
+    /// drain one replica while traffic keeps flowing elsewhere.
+    pub fn begin_drain(&self) {
+        let _ = self.tx.send(Msg::Drain);
+    }
+
+    /// Abrupt kill: abandon queued and in-flight work immediately and
+    /// return the report with [`ServeReport::unserved`] — every accepted
+    /// request that never produced a response, in deterministic order,
+    /// for the caller to replay from the prompt elsewhere (bit-identical:
+    /// same determinism argument as requeue-from-prompt replay).
+    pub fn kill(&mut self) -> Result<ServeReport> {
+        let _ = self.tx.send(Msg::Kill);
+        self.join_inner()
+    }
+
     fn join_inner(&mut self) -> Result<ServeReport> {
         match self.join.take() {
             Some(j) => j.join().map_err(|_| anyhow::anyhow!("server worker panicked"))?,
             None => Err(anyhow::anyhow!("server already shut down")),
         }
     }
+}
+
+/// Shared worker body: apply every scheduling opt to the freshly built
+/// engine, then run the mode's serve loop. Both spawn flavors (PJRT
+/// artifacts and synthetic backends) funnel through here so they serve
+/// identically.
+fn serve_thread(
+    engine: &mut DecodeEngine,
+    worker_rx: &mpsc::Receiver<Msg>,
+    resp_tx: &mpsc::Sender<GenResponse>,
+    opts: &ServeOpts,
+) -> Result<ServeReport> {
+    engine.set_prefill_budget(opts.prefill_budget);
+    engine.set_kv_page_rows(opts.kv_page_rows);
+    engine.set_retry_policy(opts.retry_max, DEFAULT_RETRY_BACKOFF);
+    engine.set_deadline(opts.deadline);
+    if let Some(plan) = &opts.fault {
+        engine.inject_faults(plan);
+    }
+    if opts.trace_out.is_some() {
+        engine.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
+    }
+    if opts.occupancy {
+        engine.enable_occupancy();
+    }
+    let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
+    match opts.mode {
+        SchedMode::Continuous => run_continuous(engine, worker_rx, resp_tx, opts, log),
+        SchedMode::Wave => run_waves(engine, worker_rx, resp_tx, opts, log),
+    }
+}
+
+/// Kill-path epilogue: sweep requests still sitting in the channel into
+/// `unserved` (they were accepted — `submit` returned `true`), write the
+/// observability artifacts, and report. Nothing is answered: the caller
+/// owns replaying `unserved`.
+fn finish_kill(
+    engine: &mut DecodeEngine,
+    mut unserved: Vec<GenRequest>,
+    worker_rx: &mpsc::Receiver<Msg>,
+    opts: &ServeOpts,
+    log: bool,
+) -> Result<ServeReport> {
+    while let Ok(msg) = worker_rx.try_recv() {
+        if let Msg::Req(r) = msg {
+            unserved.push(r);
+        }
+    }
+    if log {
+        eprintln!("[serve] killed with {} unserved request(s)", unserved.len());
+    }
+    let occ = engine.occupancy_report();
+    write_obs_outputs(engine, opts, &occ);
+    Ok(ServeReport {
+        metrics: engine.metrics,
+        serving: engine.serving.clone(),
+        occupancy: occ,
+        unserved,
+    })
 }
 
 /// Continuous worker loop: drain arrivals into the scheduler between
@@ -291,6 +413,7 @@ fn run_continuous(
                     metrics: engine.metrics,
                     serving: engine.serving.clone(),
                     occupancy: occ,
+                    unserved: Vec::new(),
                 };
                 return Ok(report);
             }
@@ -301,6 +424,10 @@ fn run_continuous(
                     draining = true;
                     continue;
                 }
+                Ok(Msg::Kill) => {
+                    let unserved = sched.take_unserved();
+                    return finish_kill(engine, unserved, worker_rx, opts, log);
+                }
                 Ok(Msg::Shutdown) | Err(_) => {
                     shutting_down = true;
                     continue;
@@ -308,12 +435,17 @@ fn run_continuous(
             }
         }
         // non-blocking drain: arrivals join the queue between steps
+        let mut killed = false;
         loop {
             match worker_rx.try_recv() {
                 Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched, draining),
                 Ok(Msg::Drain) => {
                     shutting_down = true;
                     draining = true;
+                }
+                Ok(Msg::Kill) => {
+                    killed = true;
+                    break;
                 }
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
@@ -325,6 +457,10 @@ fn run_continuous(
                     break;
                 }
             }
+        }
+        if killed {
+            let unserved = sched.take_unserved();
+            return finish_kill(engine, unserved, worker_rx, opts, log);
         }
         for resp in engine.step_continuous(&mut sched)? {
             if log {
@@ -340,7 +476,7 @@ fn run_continuous(
             let _ = resp_tx.send(resp);
         }
         steps += 1;
-        if opts.metrics_out.is_some() && steps % METRICS_SNAPSHOT_STEPS == 0 {
+        if opts.metrics_out.is_some() && steps % opts.metrics_snapshot_steps.max(1) == 0 {
             let occ = engine.occupancy_report();
             if let Some(path) = &opts.metrics_out {
                 if let Err(e) = write_metrics(path, &engine.metrics, &engine.serving, &occ) {
@@ -379,11 +515,15 @@ fn run_waves(
     let (max_batch, batch_window) = (opts.max_batch, opts.batch_window);
     let mut pending: Vec<GenRequest> = Vec::new();
     let mut shutting_down = false;
+    // wave-mode snapshots fire between waves: a wave that crosses a
+    // multiple of the snapshot interval rewrites the export afterwards
+    let mut last_snapshot_steps = 0u64;
     loop {
         // block for the first request, then drain within the window
         if pending.is_empty() && !shutting_down {
             match worker_rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Kill) => return finish_kill(engine, pending, worker_rx, opts, log),
                 Ok(Msg::Drain) | Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
             }
         }
@@ -393,6 +533,7 @@ fn run_waves(
                 let left = deadline.saturating_duration_since(std::time::Instant::now());
                 match worker_rx.recv_timeout(left) {
                     Ok(Msg::Req(r)) => pending.push(r),
+                    Ok(Msg::Kill) => return finish_kill(engine, pending, worker_rx, opts, log),
                     Ok(Msg::Drain) | Ok(Msg::Shutdown) => {
                         shutting_down = true;
                         break;
@@ -420,6 +561,7 @@ fn run_waves(
                 metrics: engine.metrics,
                 serving: engine.serving.clone(),
                 occupancy: occ,
+                unserved: Vec::new(),
             });
         }
         let wave: Vec<GenRequest> = pending.drain(..pending.len().min(max_batch)).collect();
@@ -430,6 +572,18 @@ fn run_waves(
         let before = engine.metrics;
         for resp in engine.serve_wave(wave)? {
             let _ = resp_tx.send(resp);
+        }
+        // periodic snapshot at per-wave granularity: same cadence knob as
+        // the continuous loop, so a long wave-mode run stays scrapeable
+        if let Some(path) = &opts.metrics_out {
+            let snap = opts.metrics_snapshot_steps.max(1);
+            if engine.metrics.decode_steps / snap != last_snapshot_steps / snap {
+                last_snapshot_steps = engine.metrics.decode_steps;
+                let occ = engine.occupancy_report();
+                if let Err(e) = write_metrics(path, &engine.metrics, &engine.serving, &occ) {
+                    eprintln!("[serve] metrics snapshot failed ({}): {e:#}", path.display());
+                }
+            }
         }
         if log {
             let m = engine.metrics;

@@ -22,13 +22,16 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use nxfp::coordinator::fault::FaultPlan;
+use nxfp::coordinator::metrics::ServingMetrics;
+use nxfp::coordinator::router::{replica_path, FleetHandle};
 use nxfp::coordinator::scheduler::SchedMode;
 use nxfp::coordinator::server::{ServeOpts, ServerHandle};
-use nxfp::coordinator::{FinishReason, GenRequest};
+use nxfp::coordinator::{FinishReason, GenRequest, Metrics};
 use nxfp::eval::{checkpoint_footprint, perplexity, quantize_checkpoint, reasoning_accuracy};
 use nxfp::formats::{NxConfig, QuantPolicy};
 use nxfp::models::corpus::Probe;
 use nxfp::models::{Checkpoint, Corpus, GrammarSpec, LmSpec, ModelProfile};
+use nxfp::obs::write_fleet_metrics;
 use nxfp::profile::profile_scaled;
 use nxfp::runtime::Runtime;
 use nxfp::train::{TrainConfig, Trainer};
@@ -60,6 +63,9 @@ const DEFAULT_PAGE_ROWS_STR: &str = "16";
 /// `--retry-max` default as a CLI string (pinned to
 /// `coordinator::DEFAULT_RETRY_MAX` by a unit test).
 const DEFAULT_RETRY_STR: &str = "3";
+
+/// `--replicas` default as a CLI string: one engine, no fleet tier.
+const DEFAULT_REPLICAS_STR: &str = "1";
 
 /// Parse an admission-queue cap: a positive integer, or
 /// `unbounded`/`inf`/`max` for no cap (the default — arrivals never shed).
@@ -316,30 +322,33 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let trace_out = opt_path("trace-out");
     let metrics_out = opt_path("metrics-out");
     let occupancy = parse_switch(&a.get_str("occupancy"))?;
+    let replicas = a.get_usize("replicas")?;
+    if replicas == 0 {
+        return Err(anyhow!("--replicas must be positive"));
+    }
+    let opts = ServeOpts {
+        max_batch: a.get_usize("max-batch")?,
+        batch_window: Duration::from_millis(5),
+        mode,
+        prefill_budget,
+        kv_page_rows,
+        prefix_cache,
+        queue_cap,
+        deadline,
+        max_queue_steps: None,
+        retry_max,
+        fault,
+        trace_out,
+        metrics_out,
+        occupancy,
+        ..ServeOpts::default()
+    };
+    if replicas > 1 {
+        return serve_fleet(a, spec, ck, kv, opts, replicas, n_req, max_new);
+    }
     let corpus = default_corpus();
     let probes = Probe::generate(&corpus.spec, n_req, 99);
-    let mut server = ServerHandle::spawn(
-        artifacts_dir(a),
-        spec,
-        ck,
-        kv,
-        ServeOpts {
-            max_batch: a.get_usize("max-batch")?,
-            batch_window: Duration::from_millis(5),
-            mode,
-            prefill_budget,
-            kv_page_rows,
-            prefix_cache,
-            queue_cap,
-            deadline,
-            max_queue_steps: None,
-            retry_max,
-            fault,
-            trace_out,
-            metrics_out,
-            occupancy,
-        },
-    );
+    let mut server = ServerHandle::spawn(artifacts_dir(a), spec, ck, kv, opts);
     for (i, p) in probes.iter().enumerate() {
         if !server.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new }) {
             return Err(anyhow!("server dropped before request {i} was accepted"));
@@ -394,6 +403,74 @@ fn cmd_serve(a: &Args) -> Result<()> {
     for occ in &report.occupancy {
         println!("{}", occ.summary());
     }
+    Ok(())
+}
+
+/// `nxfp serve --replicas N`: front N PJRT workers with the fleet
+/// router. Each replica builds its own runtime and engine (suffixed
+/// `.rN` observability exports); the original `--metrics-out` path gets
+/// the fleet rollup with per-replica `{replica="i"}` series.
+fn serve_fleet(
+    a: &Args,
+    spec: LmSpec,
+    ck: Checkpoint,
+    kv: QuantPolicy,
+    opts: ServeOpts,
+    n_replicas: usize,
+    n_req: usize,
+    max_new: usize,
+) -> Result<()> {
+    let fleet_metrics_out = opts.metrics_out.clone();
+    let handles: Vec<ServerHandle> = (0..n_replicas)
+        .map(|i| {
+            let mut o = opts.clone();
+            o.trace_out = o.trace_out.map(|p| replica_path(&p, i));
+            o.metrics_out = o.metrics_out.map(|p| replica_path(&p, i));
+            ServerHandle::spawn(artifacts_dir(a), spec, ck.clone(), kv.clone(), o)
+        })
+        .collect();
+    let mut fleet = FleetHandle::from_handles(handles, opts.max_batch);
+    let corpus = default_corpus();
+    let probes = Probe::generate(&corpus.spec, n_req, 99);
+    for (i, p) in probes.iter().enumerate() {
+        if !fleet.submit(GenRequest { id: i as u64, prompt: p.prompt.clone(), max_new }) {
+            return Err(anyhow!("fleet dropped before request {i} was accepted"));
+        }
+    }
+    for _ in 0..n_req {
+        let resp = fleet.recv().ok_or_else(|| anyhow!("fleet dropped"))?;
+        let note = if resp.reason == FinishReason::Completed {
+            String::new()
+        } else {
+            format!("  [{:?}]", resp.reason)
+        };
+        println!("req {:>3}  {} tokens in {:?}{note}", resp.id, resp.generated, resp.latency);
+    }
+    let report = fleet.shutdown()?;
+    if let Some(path) = &fleet_metrics_out {
+        let views: Vec<(&Metrics, &ServingMetrics)> =
+            report.replicas.iter().map(|r| (&r.metrics, &r.serving)).collect();
+        write_fleet_metrics(path, &report.metrics, &report.serving, &views, &report.merge_errors)?;
+    }
+    println!(
+        "fleet of {n_replicas}: served {} reqs, {} tokens ({} re-dispatched)",
+        report.metrics.requests,
+        report.metrics.tokens_generated,
+        report.redispatched
+    );
+    for (i, r) in report.replicas.iter().enumerate() {
+        println!(
+            "replica {i}: {} reqs, {} tokens, {:.1} tok/s, prefix hit rate {:.0}%",
+            r.metrics.requests,
+            r.metrics.tokens_generated,
+            r.metrics.tokens_per_sec(),
+            r.serving.prefix_hit_rate() * 100.0
+        );
+    }
+    for e in &report.merge_errors {
+        eprintln!("rollup merge error: {e}");
+    }
+    println!("{}", report.serving.summary());
     Ok(())
 }
 
@@ -460,6 +537,9 @@ fn cmd_info() -> Result<()> {
     println!(
         "          nxfp serve --trace-out trace.jsonl --metrics-out metrics.prom \
          --occupancy on"
+    );
+    println!(
+        "          nxfp serve --replicas 4 --requests 64 --metrics-out fleet.prom"
     );
     println!("          nxfp trace check --in trace.jsonl");
     Ok(())
@@ -552,6 +632,11 @@ mod tests {
             DEFAULT_RETRY_STR.parse::<u32>().unwrap(),
             nxfp::coordinator::DEFAULT_RETRY_MAX
         );
+    }
+
+    #[test]
+    fn replicas_default_is_single_engine() {
+        assert_eq!(DEFAULT_REPLICAS_STR.parse::<usize>().unwrap(), 1);
     }
 
     #[test]
@@ -677,6 +762,11 @@ fn main() {
             .opt("requests", Some("16"), "number of requests")
             .opt("max-new", Some("32"), "tokens to generate per request")
             .opt("max-batch", Some("4"), "batch lanes (must match artifact)")
+            .opt(
+                "replicas",
+                Some(DEFAULT_REPLICAS_STR),
+                "decode-engine replicas; >1 serves through the prefix-affinity fleet router",
+            )
             .opt(
                 "kv-page-rows",
                 Some(DEFAULT_PAGE_ROWS_STR),

@@ -207,6 +207,165 @@ pub fn render_metrics_json(m: &Metrics, s: &ServingMetrics, occ: &[CodeOccupancy
     out
 }
 
+/// Emit one histogram's series, optionally labeled `replica="i"`. No
+/// HELP/TYPE header — the caller emits that once per metric name, so a
+/// rollup series and its per-replica series can share one family.
+fn prom_hist_series(out: &mut String, name: &str, h: &Histogram, replica: Option<usize>) {
+    let (pre, plain) = match replica {
+        Some(i) => (format!("replica=\"{i}\","), format!("{{replica=\"{i}\"}}")),
+        None => (String::new(), String::new()),
+    };
+    let mut cum = 0u64;
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let _ = writeln!(out, "{name}_bucket{{{pre}le=\"{:.6e}\"}} {cum}", h.bucket_bound(i));
+    }
+    let _ = writeln!(out, "{name}_bucket{{{pre}le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum{plain} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{plain} {}", h.count());
+}
+
+fn engine_counters(m: &Metrics) -> [(&'static str, &'static str, u64); 3] {
+    [
+        ("nxfp_requests_total", "requests completed", m.requests),
+        ("nxfp_tokens_generated_total", "tokens generated", m.tokens_generated),
+        ("nxfp_decode_steps_total", "batched decode steps", m.decode_steps),
+    ]
+}
+
+fn engine_gauges(m: &Metrics) -> [(&'static str, &'static str, f64); 4] {
+    [
+        ("nxfp_wall_seconds", "wall time spent stepping", m.wall.as_secs_f64()),
+        ("nxfp_kv_bits_packed", "packed KV footprint", m.kv_bits_packed as f64),
+        ("nxfp_kv_bits_fp16", "fp16-equivalent KV footprint", m.kv_bits_fp16 as f64),
+        ("nxfp_kv_savings", "fp16 bits per packed bit", m.kv_savings()),
+    ]
+}
+
+/// Prometheus text for a fleet: every metric family is emitted once
+/// (HELP/TYPE), carrying the unlabeled rollup series — same names as
+/// the single-engine renderer, so existing dashboards read the fleet
+/// total unchanged — plus one `{replica="i"}` series per replica.
+/// Rollup counters are exact sums; histogram rollups were merged via
+/// `Histogram::merge`, with mismatches counted (not silently dropped)
+/// in `nxfp_fleet_merge_errors`.
+pub fn render_fleet_prometheus(
+    m: &Metrics,
+    s: &ServingMetrics,
+    replicas: &[(&Metrics, &ServingMetrics)],
+    merge_errors: &[String],
+) -> String {
+    let mut out = String::new();
+    prom_gauge(&mut out, "nxfp_fleet_replicas", "replicas in this rollup", replicas.len() as f64);
+    prom_gauge(
+        &mut out,
+        "nxfp_fleet_merge_errors",
+        "replica histogram rollups skipped for geometry mismatch",
+        merge_errors.len() as f64,
+    );
+    for e in merge_errors {
+        // comments are legal exposition text: name the gap next to the gauge
+        let _ = writeln!(out, "# merge error: {}", e.replace('\n', " "));
+    }
+    for (ci, (name, help, v)) in engine_counters(m).into_iter().enumerate() {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+        for (i, (rm, _)) in replicas.iter().enumerate() {
+            let rv = engine_counters(rm)[ci].2;
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {rv}");
+        }
+    }
+    for (gi, (name, help, v)) in engine_gauges(m).into_iter().enumerate() {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+        for (i, (rm, _)) in replicas.iter().enumerate() {
+            let rv = engine_gauges(rm)[gi].2;
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {rv}");
+        }
+    }
+    for (ci, (name, help, v)) in serving_counters(s).into_iter().enumerate() {
+        let name = format!("nxfp_{name}_total");
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+        for (i, (_, rs)) in replicas.iter().enumerate() {
+            let rv = serving_counters(rs)[ci].2;
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {rv}");
+        }
+    }
+    for (hi, (name, help, h)) in serving_histograms(s).into_iter().enumerate() {
+        let name = format!("nxfp_{name}");
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        prom_hist_series(&mut out, &name, h, None);
+        for (i, (_, rs)) in replicas.iter().enumerate() {
+            prom_hist_series(&mut out, &name, serving_histograms(rs)[hi].2, Some(i));
+        }
+    }
+    out
+}
+
+/// The fleet as one JSON object: the rollup and each replica rendered
+/// in the single-engine shape (occupancy omitted — probes stay in the
+/// per-replica exports), plus the merge-error strings verbatim.
+pub fn render_fleet_json(
+    m: &Metrics,
+    s: &ServingMetrics,
+    replicas: &[(&Metrics, &ServingMetrics)],
+    merge_errors: &[String],
+) -> String {
+    let one = |m: &Metrics, s: &ServingMetrics| {
+        render_metrics_json(m, s, &[]).trim_end().to_string()
+    };
+    let mut out = String::from("{");
+    let _ = write!(out, "\"replicas\":{},\"merge_errors\":[", replicas.len());
+    for (i, e) in merge_errors.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\"", esc(e));
+    }
+    out.push_str("],\"rollup\":");
+    out.push_str(&one(m, s));
+    out.push_str(",\"per_replica\":[");
+    for (i, (rm, rs)) in replicas.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&one(rm, rs));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Write a fleet export to `path`, picking the format from the
+/// extension exactly like [`write_metrics`].
+pub fn write_fleet_metrics(
+    path: &Path,
+    m: &Metrics,
+    s: &ServingMetrics,
+    replicas: &[(&Metrics, &ServingMetrics)],
+    merge_errors: &[String],
+) -> Result<()> {
+    let text = if path.extension().is_some_and(|e| e == "json") {
+        render_fleet_json(m, s, replicas, merge_errors)
+    } else {
+        render_fleet_prometheus(m, s, replicas, merge_errors)
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, text)
+        .with_context(|| format!("writing fleet metrics {}", path.display()))
+}
+
 /// Write metrics to `path`, choosing the format from the extension
 /// (`.json` → JSON object, anything else → Prometheus text).
 pub fn write_metrics(
@@ -304,6 +463,69 @@ mod tests {
         assert!(text.contains("\"clip_rate\":0.125"));
         // config names with parens/spaces must be escaped-safe
         assert!(!text.contains("\n{"), "single JSON object expected");
+    }
+
+    #[test]
+    fn fleet_prometheus_labels_replicas_and_sums_rollup() {
+        let (m0, s0, _) = sample();
+        let mut m1 = Metrics::default();
+        m1.requests = 5;
+        m1.tokens_generated = 20;
+        let mut s1 = ServingMetrics::default();
+        s1.admitted = 5;
+        s1.latency.record(0.250);
+        // rollup the way the fleet does
+        let mut m = m0;
+        m.merge(&m1);
+        let mut s = s0.clone();
+        s.merge(&s1).unwrap();
+        let reps: Vec<(&Metrics, &ServingMetrics)> = vec![(&m0, &s0), (&m1, &s1)];
+        let text = render_fleet_prometheus(&m, &s, &reps, &[]);
+        // unlabeled rollup is the exact sum; per-replica series labeled
+        assert!(text.contains("nxfp_requests_total 8"));
+        assert!(text.contains("nxfp_requests_total{replica=\"0\"} 3"));
+        assert!(text.contains("nxfp_requests_total{replica=\"1\"} 5"));
+        assert!(text.contains("nxfp_admitted_total 8"));
+        assert!(text.contains("nxfp_admitted_total{replica=\"1\"} 5"));
+        assert!(text.contains("nxfp_latency_seconds_count 5"));
+        assert!(text.contains("nxfp_latency_seconds_count{replica=\"0\"} 4"));
+        assert!(text.contains("nxfp_latency_seconds_bucket{replica=\"1\",le="));
+        assert!(text.contains("nxfp_fleet_replicas 2"));
+        // one HELP per family even with three series under it
+        let helps = text.matches("# HELP nxfp_admitted_total").count();
+        assert_eq!(helps, 1);
+        // a merge error surfaces as a gauge + comment, not a panic
+        let text = render_fleet_prometheus(&m, &s, &reps, &["replica 1: latency".into()]);
+        assert!(text.contains("nxfp_fleet_merge_errors 1"));
+        assert!(text.contains("# merge error: replica 1: latency"));
+    }
+
+    #[test]
+    fn fleet_json_nests_rollup_and_replicas() {
+        let (m0, s0, _) = sample();
+        let reps: Vec<(&Metrics, &ServingMetrics)> = vec![(&m0, &s0)];
+        let text = render_fleet_json(&m0, &s0, &reps, &["replica 0: ttft \"odd\"".into()]);
+        assert!(text.starts_with("{\"replicas\":1"));
+        assert!(text.contains("\"merge_errors\":[\"replica 0: ttft \\\"odd\\\"\"]"));
+        assert!(text.contains("\"rollup\":{\"requests\":3"));
+        assert!(text.contains("\"per_replica\":[{\"requests\":3"));
+        assert!(text.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn write_fleet_metrics_picks_format_from_extension() {
+        let (m, s, _) = sample();
+        let reps: Vec<(&Metrics, &ServingMetrics)> = vec![(&m, &s)];
+        let dir = std::env::temp_dir().join(format!("nxfp-fleet-export-{}", std::process::id()));
+        let prom = dir.join("fleet.prom");
+        let json = dir.join("fleet.json");
+        write_fleet_metrics(&prom, &m, &s, &reps, &[]).unwrap();
+        write_fleet_metrics(&json, &m, &s, &reps, &[]).unwrap();
+        let p = std::fs::read_to_string(&prom).unwrap();
+        let j = std::fs::read_to_string(&json).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(p.contains("nxfp_fleet_replicas 1"));
+        assert!(j.starts_with("{\"replicas\":1"));
     }
 
     #[test]

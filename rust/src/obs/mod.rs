@@ -45,7 +45,10 @@
 pub mod export;
 pub mod occupancy;
 
-pub use export::{render_metrics_json, render_prometheus, write_metrics};
+pub use export::{
+    render_fleet_json, render_fleet_prometheus, render_metrics_json, render_prometheus,
+    write_fleet_metrics, write_metrics,
+};
 pub use occupancy::CodeOccupancy;
 
 use anyhow::{anyhow, Context, Result};

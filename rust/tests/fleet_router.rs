@@ -1,0 +1,287 @@
+//! Fleet-tier invariants on the deterministic `SynthBackend` (no PJRT
+//! runtime or `make artifacts` needed):
+//!
+//! 1. **Zero loss through lifecycle events** — a 4-replica fleet serving
+//!    bursty shared-prefix traffic answers every accepted request exactly
+//!    once through one abrupt `kill_replica` (unserved work replayed
+//!    from the prompt onto survivors) and one graceful `drain_replica`.
+//! 2. **Bit-identity** — every fleet response equals the request's
+//!    single-engine solo run: replicas share nothing, replay is
+//!    from-prompt, and per-slot purity makes placement invisible.
+//! 3. **Exact rollup** — `FleetReport` counters equal the sum of the
+//!    per-replica counters, and histogram rollups merge without
+//!    geometry errors on a homogeneous fleet.
+//! 4. **Snapshot cadence** — `metrics_snapshot_steps` produces periodic
+//!    `--metrics-out` rewrites *before* shutdown in both scheduling
+//!    modes, and suppresses them when the interval is never reached.
+
+use std::time::Duration;
+
+use nxfp::coordinator::router::FleetHandle;
+use nxfp::coordinator::server::{ServeOpts, ServerHandle};
+use nxfp::coordinator::{DecodeEngine, FinishReason, GenRequest, GenResponse, SynthBackend};
+use nxfp::formats::{NxConfig, QuantPolicy};
+use nxfp::models::LmSpec;
+
+fn spec() -> LmSpec {
+    LmSpec { vocab: 48, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 64, seq_len: 24 }
+}
+
+fn kv() -> QuantPolicy {
+    QuantPolicy::uniform(NxConfig::nxfp(4))
+}
+
+fn opts() -> ServeOpts {
+    // 4-row pages: the 10-token shared system prompts span full pages, so
+    // prefix reuse actually fires at this tiny spec (page geometry never
+    // changes generations, only dedup granularity)
+    ServeOpts { max_batch: 2, prefill_budget: 4, kv_page_rows: 4, ..Default::default() }
+}
+
+/// Tokens a request generates running completely alone (batch of 1).
+fn solo_tokens(req: &GenRequest) -> Vec<i32> {
+    let sp = spec();
+    let mut eng =
+        DecodeEngine::with_backend(sp, Box::new(SynthBackend::new(&sp)), &kv(), 1);
+    let resps = eng.serve_wave(vec![req.clone()]).unwrap();
+    resps.into_iter().next().unwrap().tokens
+}
+
+/// Bursty shared-prefix traffic: `n` requests cycling over four distinct
+/// 10-token system prompts with short per-request suffixes.
+fn shared_prefix_requests(n: usize) -> Vec<GenRequest> {
+    let sys: Vec<Vec<i32>> = (0..4)
+        .map(|s| (0..10).map(|t| ((s * 11 + t * 3) % 47) as i32).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let mut prompt = sys[i % 4].clone();
+            prompt.push(((i * 7) % 43) as i32);
+            prompt.push(((i * 13) % 41) as i32);
+            GenRequest { id: i as u64, prompt, max_new: 3 + (i % 4) }
+        })
+        .collect()
+}
+
+fn recv_all(fleet: &mut FleetHandle, n: usize) -> Vec<GenResponse> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(
+            fleet
+                .recv_timeout(Duration::from_secs(300))
+                .expect("fleet dropped a response"),
+        );
+    }
+    out
+}
+
+#[test]
+fn four_replica_fleet_survives_kill_and_drain_bit_identically() {
+    let reqs = shared_prefix_requests(32);
+    let mut fleet = FleetHandle::spawn(4, spec(), kv(), opts());
+    // burst the whole workload in before receiving anything: routing
+    // decisions depend only on submit order, so placement is
+    // deterministic and the lifecycle events below race real work
+    for r in &reqs {
+        assert!(fleet.submit(r.clone()), "submit {} refused", r.id);
+    }
+    // abrupt kill mid-traffic: whatever replica 1 had accepted and not
+    // answered is replayed from the prompt onto survivors
+    let moved = fleet.kill_replica(1).unwrap();
+    // graceful drain of another replica while traffic is still in flight
+    fleet.drain_replica(2);
+    let resps = recv_all(&mut fleet, reqs.len());
+    let report = fleet.shutdown().unwrap();
+    // lost_requests == 0: every id answered exactly once, and completed
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &resps {
+        assert!(seen.insert(r.id), "request {} answered twice", r.id);
+        assert_eq!(r.reason, FinishReason::Completed, "request {} not completed", r.id);
+    }
+    assert_eq!(seen.len(), reqs.len(), "lost requests: {:?}", {
+        let mut missing: Vec<u64> =
+            reqs.iter().map(|r| r.id).filter(|id| !seen.contains(id)).collect();
+        missing.sort_unstable();
+        missing
+    });
+    // bit-identity: placement, kill replay, and drain redistribution are
+    // all invisible in the tokens
+    for req in &reqs {
+        let got = &resps.iter().find(|r| r.id == req.id).unwrap().tokens;
+        assert_eq!(got, &solo_tokens(req), "request {} diverged from solo", req.id);
+    }
+    // the kill'd replica reported; redispatch bookkeeping is consistent
+    assert_eq!(report.replicas.len(), 4);
+    assert!(report.redispatched >= moved as u64);
+    // shared-prefix traffic actually exercised affinity + prefix reuse
+    assert!(report.serving.prefix_hits > 0, "no prefix hits across the fleet");
+    // exact rollup: counters equal the per-replica sums
+    let sum = |f: fn(&nxfp::coordinator::metrics::ServingMetrics) -> u64| -> u64 {
+        report.replicas.iter().map(|r| f(&r.serving)).sum()
+    };
+    assert_eq!(report.serving.admitted, sum(|s| s.admitted));
+    assert_eq!(report.serving.promoted, sum(|s| s.promoted));
+    assert_eq!(report.serving.rejected, sum(|s| s.rejected));
+    assert_eq!(report.serving.prefix_hits, sum(|s| s.prefix_hits));
+    assert_eq!(report.serving.prefix_misses, sum(|s| s.prefix_misses));
+    assert_eq!(report.serving.requeued, sum(|s| s.requeued));
+    assert_eq!(report.serving.backend_failed, sum(|s| s.backend_failed));
+    assert_eq!(report.serving.shed, sum(|s| s.shed));
+    assert_eq!(report.serving.deadline_expired, sum(|s| s.deadline_expired));
+    assert_eq!(
+        report.metrics.requests,
+        report.replicas.iter().map(|r| r.metrics.requests).sum::<u64>()
+    );
+    assert_eq!(
+        report.metrics.tokens_generated,
+        report.replicas.iter().map(|r| r.metrics.tokens_generated).sum::<u64>()
+    );
+    assert_eq!(
+        report.serving.latency.count(),
+        report.replicas.iter().map(|r| r.serving.latency.count()).sum::<u64>()
+    );
+    // homogeneous fleet: the histogram rollup merged cleanly
+    assert!(report.merge_errors.is_empty(), "{:?}", report.merge_errors);
+}
+
+#[test]
+fn fleet_responses_are_reproducible_across_runs() {
+    // same arrival order twice: the sorted (id, tokens) sets must match
+    // exactly — dispatch determinism end to end, not just in the router
+    let reqs = shared_prefix_requests(24);
+    let run = || {
+        let mut fleet = FleetHandle::spawn(3, spec(), kv(), opts());
+        for r in &reqs {
+            assert!(fleet.submit(r.clone()));
+        }
+        let mut got: Vec<(u64, Vec<i32>)> =
+            recv_all(&mut fleet, reqs.len()).into_iter().map(|r| (r.id, r.tokens)).collect();
+        fleet.shutdown().unwrap();
+        got.sort();
+        got
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn drain_replica_mid_traffic_redistributes_without_loss() {
+    let reqs = shared_prefix_requests(16);
+    let mut fleet = FleetHandle::spawn(2, spec(), kv(), opts());
+    for r in &reqs[..8] {
+        assert!(fleet.submit(r.clone()));
+    }
+    // drain replica 0 immediately: its backlog completes, racing
+    // dispatches shed back and are replayed on replica 1
+    fleet.drain_replica(0);
+    for r in &reqs[8..] {
+        assert!(fleet.submit(r.clone()), "submit {} refused during drain", r.id);
+    }
+    let resps = recv_all(&mut fleet, reqs.len());
+    let report = fleet.shutdown().unwrap();
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..reqs.len() as u64).collect::<Vec<_>>());
+    for r in &resps {
+        assert_eq!(r.reason, FinishReason::Completed);
+        assert_eq!(r.tokens, solo_tokens(&reqs[r.id as usize]));
+    }
+    // everything submitted after the drain landed on the survivor
+    assert!(report.replicas[1].metrics.requests >= 8);
+    assert_eq!(
+        report.metrics.requests,
+        report.replicas.iter().map(|r| r.metrics.requests).sum::<u64>()
+    );
+}
+
+#[test]
+fn kill_with_no_survivors_is_an_error_not_a_loss() {
+    let mut fleet = FleetHandle::spawn(1, spec(), kv(), opts());
+    let reqs = shared_prefix_requests(4);
+    for r in &reqs {
+        assert!(fleet.submit(r.clone()));
+    }
+    // killing the only replica: if it still held unserved work there is
+    // no survivor to replay on, and that surfaces as an error — never as
+    // silently missing responses
+    match fleet.kill_replica(0) {
+        Ok(_) => {
+            // replica finished everything before the kill landed: all
+            // responses are still deliverable
+            let resps = recv_all(&mut fleet, reqs.len());
+            assert_eq!(resps.len(), reqs.len());
+        }
+        Err(e) => assert!(
+            e.to_string().contains("no surviving replica"),
+            "unexpected error: {e:#}"
+        ),
+    }
+}
+
+/// Poll until `path` exists (bounded): periodic snapshots are written by
+/// the worker thread, so the test only controls "eventually".
+fn wait_for(path: &std::path::Path) -> bool {
+    for _ in 0..2000 {
+        if path.exists() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+#[test]
+fn metrics_snapshots_fire_periodically_in_both_modes() {
+    use nxfp::coordinator::scheduler::SchedMode;
+    let dir = std::env::temp_dir().join(format!("nxfp-fleet-snap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (mode, name) in [(SchedMode::Continuous, "cont"), (SchedMode::Wave, "wave")] {
+        let path = dir.join(format!("snap-{name}.json"));
+        let mut o = opts();
+        o.mode = mode;
+        o.metrics_out = Some(path.clone());
+        o.metrics_snapshot_steps = 2; // tiny interval: first wave/steps cross it
+        let server = ServerHandle::spawn_synth(spec(), kv(), o);
+        for r in shared_prefix_requests(12) {
+            assert!(server.submit(r));
+        }
+        // the snapshot appears while the worker is still serving (no
+        // drain/shutdown message has been sent yet) — that is the whole
+        // point of the periodic cadence
+        assert!(wait_for(&path), "{name}: no periodic snapshot before shutdown");
+        let early = std::fs::read_to_string(&path).unwrap();
+        assert!(early.starts_with('{'), "{name}: snapshot should be JSON");
+        let mut server = server;
+        for _ in 0..12 {
+            server.recv_timeout(Duration::from_secs(300)).expect("response");
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.metrics.requests, 12);
+        // shutdown rewrote the export with the final counters
+        let final_text = std::fs::read_to_string(&path).unwrap();
+        assert!(final_text.contains("\"requests\":12"), "{name}: {final_text}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn huge_snapshot_interval_suppresses_periodic_writes() {
+    let dir = std::env::temp_dir().join(format!("nxfp-snap-off-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("only-at-shutdown.json");
+    let mut o = opts();
+    o.metrics_out = Some(path.clone());
+    o.metrics_snapshot_steps = u64::MAX;
+    let mut server = ServerHandle::spawn_synth(spec(), kv(), o);
+    let reqs = shared_prefix_requests(6);
+    for r in &reqs {
+        assert!(server.submit(r.clone()));
+    }
+    for _ in 0..reqs.len() {
+        server.recv_timeout(Duration::from_secs(300)).expect("response");
+    }
+    // all work answered, worker idle, nothing written yet
+    assert!(!path.exists(), "snapshot written despite unreachable interval");
+    server.shutdown().unwrap();
+    assert!(path.exists(), "shutdown export missing");
+    std::fs::remove_dir_all(&dir).ok();
+}

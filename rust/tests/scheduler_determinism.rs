@@ -251,7 +251,7 @@ fn move_lane_preserves_generation() {
         assert_eq!(slot.state(), SlotState::Prefilling);
     }
     // reassign to lane 2 mid-prefill: slab copy, no re-decode
-    eng.move_lane(sched.slots_mut(), 0, 2);
+    eng.move_lane(sched.slots_mut(), 0, 2).unwrap();
     assert!(sched.slots()[0].is_none());
     // vacated lane is zeroed for the next occupant
     let (k0, v0) = eng.lane(0);
@@ -259,6 +259,48 @@ fn move_lane_preserves_generation() {
     resps.extend(eng.serve_continuous(&mut sched).unwrap());
     assert_eq!(resps.len(), 1);
     assert_eq!(resps[0].tokens, want, "generation diverged after the lane move");
+}
+
+#[test]
+fn failed_lane_move_requeues_instead_of_panicking() {
+    // two live slots: moving one onto the other is the occupied-target
+    // fault that used to assert-kill the thread. The contained path must
+    // requeue the source slot, keep the target slot untouched, and the
+    // replayed request must still generate its solo tokens bit-exactly.
+    let kv = Some(NxConfig::nxfp(4));
+    let a = GenRequest { id: 0, prompt: vec![6, 1, 9, 2, 8, 4], max_new: 8 };
+    let b = GenRequest { id: 1, prompt: vec![3, 7, 5, 2], max_new: 6 };
+    let want_a = solo_tokens(kv.clone(), &a);
+    let want_b = solo_tokens(kv.clone(), &b);
+
+    let mut eng = engine(kv, 2);
+    let mut sched = Scheduler::new(2, Scheduler::DEFAULT_PROMOTE_AFTER);
+    sched.enqueue(a.clone());
+    sched.enqueue(b.clone());
+    let mut resps = Vec::new();
+    for _ in 0..3 {
+        resps.extend(eng.step_continuous(&mut sched).unwrap());
+    }
+    assert!(sched.slots()[0].is_some() && sched.slots()[1].is_some());
+    // occupied target: Err from the raw call, lanes untouched
+    assert!(eng.move_lane(sched.slots_mut(), 0, 1).is_err());
+    assert!(sched.slots()[0].is_some() && sched.slots()[1].is_some());
+    // contained path: the source slot requeues, the engine keeps serving
+    let mut done = Vec::new();
+    assert!(!eng.move_lane_contained(&mut sched, 0, 1, &mut done));
+    assert!(done.is_empty(), "requeue-eligible slot must not fail outright");
+    assert_eq!(eng.serving.requeued, 1);
+    assert!(sched.slots()[0].is_none(), "faulted source lane must be freed");
+    assert_eq!(sched.queue_depth(), 1, "source slot's request must be requeued");
+    resps.extend(eng.serve_continuous(&mut sched).unwrap());
+    assert_eq!(resps.len(), 2);
+    assert_eq!(by_id(&resps, 0).tokens, want_a, "requeued request diverged from solo");
+    assert_eq!(by_id(&resps, 1).tokens, want_b, "untouched slot diverged from solo");
+    // empty-source fault with no slot to requeue: error contained, no-op
+    let mut done = Vec::new();
+    assert!(!eng.move_lane_contained(&mut sched, 0, 1, &mut done));
+    assert!(done.is_empty());
+    assert_eq!(eng.serving.requeued, 1);
 }
 
 #[test]
