@@ -215,6 +215,13 @@ def selftest():
     assert regression_factor("prefix_hit_rate", 0.9, 0.3) == 3.0
     assert regression_factor("kv_unique_kib", 100.0, 250.0) == 2.5
     assert regression_factor("ttft_mean_steps", 4.0, 10.0) == 2.5
+    # speculative decoding: accept_rate is higher-is-better (a collapsing
+    # draft is the regression); steps_per_token matches the "steps"
+    # substring, so more macro rounds per generated token regresses
+    assert regression_factor("accept_rate", 0.9, 0.3) == 3.0
+    assert regression_factor("accept_rate", 0.3, 0.9) is None
+    assert regression_factor("steps_per_token", 0.3, 0.9) == 3.0
+    assert regression_factor("steps_per_token", 0.9, 0.3) is None
     # non-comparable inputs
     assert regression_factor("tok_s", None, 5.0) is None
     assert regression_factor("tok_s", 0, 5.0) is None

@@ -1,0 +1,273 @@
+"""Executable mirror of the precision-speculative decoding round
+arithmetic (rust/src/spec/mod.rs).
+
+The container has no cargo toolchain, so the Rust side is desk-checked;
+this file re-implements the draft/verify/commit state machine —
+provisional proposals, accepted-prefix scan, correction push, bonus
+token, the clamp at the token/context budget edge, draft KV rollback,
+verifier catch-up, and the accept/reject/forced counters — over a
+deterministic toy next-token model, and pins the invariants the Rust
+tests assert:
+
+* speculative output is **bit-identical** to verifier-alone greedy decode
+  for every draft depth k and every draft-divergence rate (the draft only
+  ever proposes; the verifier always decides);
+* ``accepted + rejected + forced == tokens_generated`` telescopes,
+  including the budget-edge clamp that drops the bonus token;
+* each reject rolls exactly ``m - a - 1`` provisional rows off the draft
+  (never a prompt or confirmed row), bounded by ``rejected * (k - 1)``;
+* the round bookkeeping invariants: zero provisional tokens after every
+  round, draft fill ``== len(output) - 1``, verifier fill ``== F`` at the
+  next round's feed position;
+* one macro round confirms up to ``k + 1`` tokens, so an agreeable draft
+  takes strictly fewer rounds per token at ``k > 1`` than at ``k = 1`` —
+  the direction the scheduler-step bench metric asserts;
+* ``hash01`` and last-max-wins ``greedy_argmax`` match the Rust synthetic
+  backend bit-for-bit (constants pinned on both sides, see
+  ``hash01_pins_cross_language_constants`` in rust/src/coordinator/mod.rs).
+
+The toy model differs from the Rust SynthBackend (no float lanes here) —
+what is pinned is the round arithmetic, whose invariants must hold for
+every deterministic model.
+"""
+
+M32 = 0xFFFFFFFF
+VOCAB = 64
+
+
+def h24(x):
+    """The Rust hash01 pipeline up to its 24-bit integer core."""
+    h = (x * 0x9E3779B9) & M32
+    h ^= h >> 16
+    h = (h * 0x21F0AAAD) & M32
+    h ^= h >> 15
+    return h >> 8
+
+
+def hash01(x):
+    """Integer hash -> float in [-1, 1). Every step is exact in f32 (the
+    mantissa never exceeds 24 bits), so Python's f64 arithmetic produces
+    the identical value the Rust f32 path does."""
+    return h24(x) * (2.0 / (1 << 24)) - 1.0
+
+
+def greedy_argmax(row):
+    """Last-max-wins, exactly like Rust's ``max_by`` reduction."""
+    best, arg = None, -1
+    for i, x in enumerate(row):
+        if best is None or x >= best:
+            best, arg = x, i
+    return arg
+
+
+def test_hash01_pins_cross_language_constants():
+    # the same table is asserted by coordinator::tests in Rust
+    assert h24(0) == 0
+    assert h24(1) == 7_252_763
+    assert h24(42) == 5_672_153
+    assert h24(97) == 2_100_070
+    assert h24(0xDEADBEEF) == 4_914_951
+    assert hash01(0) == -1.0
+    assert -1.0 <= hash01(0xDEADBEEF) < 1.0
+
+
+def test_greedy_argmax_keeps_the_last_of_equal_maxima():
+    assert greedy_argmax([1.0, 3.0, 2.0, 3.0]) == 3
+    assert greedy_argmax([5.0]) == 0
+    assert greedy_argmax([2.0, 2.0, 2.0]) == 2
+
+
+# ---- the toy model -------------------------------------------------------
+#
+# The verifier's next token is a pure function of the context; the draft
+# equals the verifier except where a seeded gate forces a divergence at
+# rate `disagree` — the knob that sweeps the acceptance rate from 1.0
+# (perfect draft) toward 0.0 (useless draft).
+
+
+def verifier_next(ctx):
+    h = 0
+    for t in ctx[-3:]:
+        h = h24((h * 31 + t + 1) & M32) & M32
+    return h24((h + len(ctx)) & M32) % VOCAB
+
+
+def draft_next(ctx, disagree):
+    v = verifier_next(ctx)
+    gate = h24((len(ctx) * 0x9E3779B1 + ctx[-1]) & M32) / float(1 << 24)
+    if gate < disagree:
+        return (v + 1 + h24(len(ctx) & M32) % 5) % VOCAB
+    return v
+
+
+def plain_decode(prompt, max_new, seq_len):
+    """Verifier-alone greedy reference: the bit-identity target."""
+    out = list(prompt)
+    g = 0
+    while g < max_new and len(prompt) + g < seq_len:
+        out.append(verifier_next(out))
+        g += 1
+    return out
+
+
+class SpecSim:
+    """One request through the rust/src/spec round state machine."""
+
+    def __init__(self, prompt, max_new, seq_len, k, disagree):
+        assert k >= 1 and len(prompt) >= 1
+        self.out = list(prompt)
+        self.P = len(prompt)
+        self.max_new = max_new
+        self.seq_len = seq_len
+        self.k = k
+        self.disagree = disagree
+        self.g = 0  # confirmed generations
+        self.fill = self.P - 1  # draft rows (prefill never feeds the last)
+        self.vfill = 0  # verifier rows
+        self.catch_up_rows = 0
+        self.accepted = self.rejected = self.forced = 0
+        self.rollback_rows = self.rounds = self.tokens_generated = 0
+        self.clamped = 0  # all-accept rounds whose bonus hit the budget edge
+
+    def prov(self):
+        return len(self.out) - self.P - self.g
+
+    def round_target(self):
+        rem = min(self.max_new - self.g, self.seq_len - self.P - self.g)
+        assert rem >= 1, "unfinished request with no remaining budget"
+        return min(self.k, rem)
+
+    def draft(self):
+        # micro-steps: each feeds the newest token and proposes the next
+        while self.prov() < self.round_target():
+            self.out.append(draft_next(self.out, self.disagree))
+            self.fill += 1
+            assert self.fill == len(self.out) - 1
+
+    def verify(self):
+        F = self.P + self.g - 1  # feed position of last confirmed token
+        m = self.prov()
+        rem = min(self.max_new - self.g, self.seq_len - self.P - self.g)
+        assert 1 <= m <= rem
+        assert self.fill == F + m, "draft fill out of sync with proposals"
+        if self.vfill < F:  # catch-up: confirmed history, no sampling
+            self.catch_up_rows += F - self.vfill
+            self.vfill = F
+        # judge: feeding out[F + i] yields the verifier's token for
+        # output index P + g + i (== out[F + i + 1] when it matched)
+        a = 0
+        while a < m and self.out[F + a + 1] == verifier_next(self.out[: F + a + 1]):
+            a += 1
+        y = verifier_next(self.out[: F + a + 1])
+        if a < m:
+            # reject: drop the divergent tail, take the correction
+            rolled = self.fill - (F + a + 1)
+            assert rolled == m - a - 1
+            del self.out[self.P + self.g + a:]
+            self.out.append(y)
+            self.fill = F + a + 1
+            self.vfill = F + a + 1
+            emitted = a + 1
+            self.accepted += a
+            self.rejected += 1
+            self.rollback_rows += rolled
+        elif m < rem:
+            # all accepted: the bonus token rides along free and the
+            # draft adopts the verifier's row for position F + m
+            self.out.append(y)
+            self.fill = F + m + 1
+            self.vfill = F + m + 1
+            emitted = m + 1
+            self.accepted += m
+            self.forced += 1
+        else:
+            # all accepted at the exact budget edge: plain greedy stops
+            # at rem tokens, so the bonus is dropped
+            self.vfill = F + m + 1
+            emitted = m
+            self.accepted += m
+            self.clamped += 1
+        self.rounds += 1
+        self.tokens_generated += emitted
+        self.g += emitted
+        # post-round invariants (the Rust debug_asserts)
+        assert self.prov() == 0
+        assert self.fill == len(self.out) - 1
+        done = self.g >= self.max_new or self.P + self.g >= self.seq_len
+        if not done:
+            assert self.vfill == self.P + self.g - 1, "verifier out of feed position"
+        return done
+
+    def run(self):
+        while True:
+            self.draft()
+            if self.verify():
+                return self.out
+
+
+PROMPTS = [[3, 9, 4], [7, 1], [5, 2, 8, 2, 8, 1], [11]]
+
+
+def test_speculative_output_is_bit_identical_for_every_k_and_fidelity():
+    for disagree in [0.0, 0.2, 0.5, 0.9]:
+        for k in [1, 2, 4, 8]:
+            for prompt in PROMPTS:
+                for max_new, seq_len in [(8, 64), (64, 16), (5, 1000)]:
+                    want = plain_decode(prompt, max_new, seq_len)
+                    sim = SpecSim(prompt, max_new, seq_len, k, disagree)
+                    got = sim.run()
+                    assert got == want, (
+                        f"diverged: k={k} disagree={disagree} prompt={prompt} "
+                        f"max_new={max_new} seq_len={seq_len}"
+                    )
+
+
+def test_counters_telescope_and_rollback_is_bounded():
+    saw_reject = saw_forced = saw_clamp = False
+    for disagree in [0.0, 0.3, 0.7]:
+        for k in [1, 2, 4, 8]:
+            for prompt in PROMPTS:
+                sim = SpecSim(prompt, 10, 64, k, disagree)
+                sim.run()
+                assert (
+                    sim.accepted + sim.rejected + sim.forced == sim.tokens_generated
+                ), "accept/reject/bonus counters must telescope"
+                assert sim.tokens_generated == sim.g == 10
+                assert sim.rollback_rows <= sim.rejected * (k - 1)
+                # verifier caught up over exactly the prompt prefix, once
+                assert sim.catch_up_rows == len(prompt) - 1
+                saw_reject |= sim.rejected > 0
+                saw_forced |= sim.forced > 0
+                # context-capped run: the clamp drops the final bonus
+                cap = SpecSim(prompt, 64, len(prompt) + 6, k, disagree)
+                cap.run()
+                assert cap.g == 6
+                assert cap.accepted + cap.rejected + cap.forced == cap.g
+                saw_clamp |= cap.clamped > 0
+    assert saw_reject and saw_forced and saw_clamp
+
+
+def test_draft_gate_actually_sweeps_acceptance():
+    # the fidelity knob must produce both regimes, or the matrix above
+    # silently stops exercising the reject path
+    perfect = SpecSim([3, 9, 4], 30, 64, 4, 0.0)
+    perfect.run()
+    assert perfect.rejected == 0 and perfect.forced > 0
+    lossy = SpecSim([3, 9, 4], 30, 64, 4, 0.9)
+    lossy.run()
+    assert lossy.rejected > 0
+
+
+def test_deeper_draft_takes_fewer_rounds_per_token():
+    # one verify round per macro scheduler step: with an agreeable draft,
+    # k > 1 must confirm the same tokens in strictly fewer rounds than
+    # k = 1 — the direction the hotpath bench asserts on steps_per_token
+    rounds = {}
+    for k in [1, 2, 4, 8]:
+        sim = SpecSim([3, 9, 4], 24, 256, k, 0.0)
+        sim.run()
+        assert sim.g == 24
+        rounds[k] = sim.rounds
+    assert rounds[2] < rounds[1]
+    assert rounds[4] < rounds[2]
+    assert rounds[8] < rounds[4]

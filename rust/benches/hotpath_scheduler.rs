@@ -27,7 +27,12 @@
 //! scenario serves the same shared-prefix burst through 1/2/4 router-fronted
 //! replicas with a mid-run graceful drain, gating on zero lost requests,
 //! bit-identical generations, exact rollup sums, and per-replica prefix
-//! hits. With `NXFP_BENCH_JSON=<dir>`, appends records to
+//! hits. A speculative-decoding scenario sweeps the draft depth k=1/2/4/8
+//! with the serving nxfp4 engine drafting for an fp16 verifier lane,
+//! gating on bit-identical generations versus the verifier-alone run, a
+//! nonzero acceptance rate, and strictly fewer scheduler macro steps per
+//! generated token at every k > 1 than at k = 1.
+//! With `NXFP_BENCH_JSON=<dir>`, appends records to
 //! `BENCH_scheduler.json` (fleet rows go to `BENCH_fleet.json`, keyed
 //! `replicas=N`). Set `NXFP_BENCH_SMOKE=1` for a seconds-scale CI smoke run.
 
@@ -42,6 +47,7 @@ use nxfp::models::LmSpec;
 use nxfp::obs::{
     check_trace, read_jsonl, write_metrics, Trace, TraceSink, TraceSummary, DEFAULT_TRACE_CAP,
 };
+use nxfp::spec::{SpecEngine, SpecPolicy};
 use nxfp::util::rng::Rng;
 use std::time::{Duration, Instant};
 
@@ -162,6 +168,23 @@ fn fleet_shared_traffic(n: usize, sys_len: usize, rng: &mut Rng) -> Vec<GenReque
             let mut prompt = sys[i % 4].clone();
             prompt.extend((0..4).map(|_| rng.below(60) as i32 + 1));
             GenRequest { id: i as u64, prompt, max_new: 4 }
+        })
+        .collect()
+}
+
+/// Decode-heavy traffic for the speculative sweep: short prompts, long
+/// generations. Rounds are dominated by draft/verify decode, so the
+/// macro-step savings of deeper drafts stand clear of prefill, which
+/// costs the same number of steps at every k.
+fn spec_traffic(n: usize, s: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    (0..n)
+        .map(|i| {
+            let plen = 2 + rng.below(4);
+            GenRequest {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(60) as i32 + 1).collect(),
+                max_new: s / 2,
+            }
         })
         .collect()
 }
@@ -757,6 +780,119 @@ fn main() {
         best_tps >= solo_tps * 0.5,
         "fleet serialized: best {best_tps:.0} tok/s vs solo {solo_tps:.0}"
     );
+
+    // ---- speculative decoding: the quantized engine drafts for itself ---
+    banner("HotpathScheduler", "speculative decoding: nxfp4 drafts, fp16 verifies");
+    let verify = "fp16";
+    let spec_reqs = spec_traffic(2 * MAX_BATCH, seq, &mut Rng::seeded(48));
+    println!(
+        "traffic: {} decode-heavy requests (max_new {}), draft {} -> verify {verify}, \
+         lane pairing halves concurrency to {} requests in flight (acceptance: \
+         bit-identical to the verifier-alone run at every k, nonzero acceptance \
+         rate, strictly fewer macro steps per token at every k > 1 than k = 1)\n",
+        spec_reqs.len(),
+        seq / 2,
+        kv.name(),
+        MAX_BATCH / 2
+    );
+    // the bit-identity target: the same checkpoint decoded by the verifier
+    // policy alone — speculation must never change what gets generated
+    let vkv = QuantPolicy::parse(verify).expect("verify policy spec");
+    let mut ref_eng = engine(seq, &vkv);
+    let mut sched = Scheduler::new(MAX_BATCH, Scheduler::DEFAULT_PROMOTE_AFTER);
+    for r in &spec_reqs {
+        sched.enqueue(r.clone());
+    }
+    let mut want: Vec<(u64, Vec<i32>)> = ref_eng
+        .serve_continuous(&mut sched)
+        .expect("spec reference run failed")
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    want.sort();
+    let mut t = Table::new(&[
+        "k", "macro steps", "tokens", "steps/token", "accept rate", "rolled rows", "tok/s",
+    ]);
+    let mut spt_by_k = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let policy = SpecPolicy::parse(k, verify).expect("spec policy");
+        let mut se = SpecEngine::new(engine(seq, &kv), policy).expect("spec engine");
+        let mut sched = se.scheduler(Scheduler::DEFAULT_PROMOTE_AFTER);
+        for r in &spec_reqs {
+            sched.enqueue(r.clone());
+        }
+        let mut resps = Vec::new();
+        // one scheduler tick per step_continuous call: steps counts macro
+        // rounds (draft k + verify + commit each), not backend calls —
+        // per-call accounting would hand k=1 the bonus-token win for free
+        let mut steps = 0u64;
+        while sched.has_work() {
+            let done = se.step_continuous(&mut sched).expect("spec step failed");
+            steps += 1;
+            resps.extend(done);
+        }
+        assert_eq!(resps.len(), spec_reqs.len(), "spec k={k}: lost responses");
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            resps.into_iter().map(|r| (r.id, r.tokens)).collect();
+        toks.sort();
+        assert_eq!(toks, want, "spec k={k}: diverged from the {verify} verifier-alone run");
+        let eng = se.into_engine();
+        let s = &eng.serving;
+        let tokens = eng.metrics.tokens_generated;
+        let spt = steps as f64 / tokens as f64;
+        let accept = s.spec_accept_rate();
+        assert!(s.spec_rounds > 0, "spec k={k}: no verify rounds ran");
+        assert!(accept > 0.0, "spec k={k}: the draft never landed a token");
+        assert_eq!(
+            s.spec_accepted + s.spec_rejected + s.spec_forced,
+            tokens,
+            "spec k={k}: accept/reject/bonus counters drifted off tokens_generated"
+        );
+        t.row(&[
+            format!("{k}"),
+            format!("{steps}"),
+            format!("{tokens}"),
+            format!("{spt:.3}"),
+            format!("{:.0}%", accept * 100.0),
+            format!("{}", s.spec_rollback_rows),
+            format!("{:.0}", eng.metrics.tokens_per_sec()),
+        ]);
+        emit_bench_json(
+            "scheduler",
+            "spec-decode",
+            // config keys the draft depth so bench_compare tracks each k
+            // as its own trajectory
+            &format!("k={k} {}->{verify}", kv.name()),
+            &kv.name(),
+            &[
+                ("accept_rate", accept),
+                ("steps_per_token", spt),
+                ("macro_steps", steps as f64),
+                ("tokens", tokens as f64),
+                ("rollback_rows", s.spec_rollback_rows as f64),
+                ("tok_s", eng.metrics.tokens_per_sec()),
+                ("effective_bits", kv_bits),
+            ],
+        );
+        spt_by_k.push((k, spt, accept));
+    }
+    t.print();
+    let base = spt_by_k[0].1;
+    println!(
+        "\nspeculation at k=8 vs k=1: {:.3} -> {:.3} macro steps per token at \
+         {:.0}% acceptance, bit-identical to the {verify} verifier-alone run \
+         (acceptance: strictly fewer steps per token for every k > 1)",
+        base,
+        spt_by_k[3].1,
+        spt_by_k[3].2 * 100.0
+    );
+    for (k, spt, _) in &spt_by_k[1..] {
+        assert!(
+            *spt < base,
+            "speculation must pay for itself: k={k} took {spt:.3} macro steps \
+             per token vs {base:.3} at k=1"
+        );
+    }
 
     // with NXFP_OBS_OUT=<dir>, write the CI observability artifacts from a
     // traced fault run (so Retry events appear) and re-validate the JSONL

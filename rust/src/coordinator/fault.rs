@@ -239,6 +239,25 @@ impl<B: StepBackend> StepBackend for FaultBackend<B> {
         }
         self.inner.prefill_chunk(tokens, pos0, k_lane, v_lane)
     }
+
+    /// Speculative verifies share the chunk fault gate (and counter):
+    /// both are multi-token calls on one lane, recovered by the same
+    /// retry-then-retire ladder, so the fault-recovery tests keep one
+    /// `chunk_errors == serving.chunk_faults` equality across plain and
+    /// speculative serving.
+    fn verify_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<super::VerifyOut>> {
+        if self.gate(self.plan.chunk_error_rate) {
+            self.stats.borrow_mut().chunk_errors += 1;
+            return Err(transient(format!("injected verify_chunk error (pos0 {pos0})")));
+        }
+        self.inner.verify_chunk(tokens, pos0, k_lane, v_lane)
+    }
 }
 
 #[cfg(test)]

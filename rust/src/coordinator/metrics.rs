@@ -50,6 +50,13 @@ impl Histogram {
         Histogram::new(1.0, 1e6, 108)
     }
 
+    /// Rate-shaped default (per-round speculative acceptance): 0.01 .. 1,
+    /// 36 buckets (~13% relative resolution). Constructed identically
+    /// everywhere so fleet rollups merge without geometry mismatches.
+    pub fn for_rate() -> Self {
+        Histogram::new(0.01, 1.0, 36)
+    }
+
     fn bucket(&self, v: f64) -> usize {
         if v <= self.lo {
             return 0;
@@ -242,6 +249,36 @@ pub struct ServingMetrics {
     /// Backoff slept per retry, in seconds (records zero-length backoffs
     /// too, so `count == retries`).
     pub retry_backoff: Histogram,
+    /// Draft tokens accepted by the speculative verifier (surfaced
+    /// verbatim). Telescoping invariant:
+    /// `spec_accepted + spec_rejected + spec_forced == tokens_generated`
+    /// under speculative serving — every generated token is exactly one
+    /// of accepted draft / verifier correction / verifier bonus.
+    pub spec_accepted: u64,
+    /// Verify rounds that rejected a draft position (each such round
+    /// surfaces the verifier's correction token in its place).
+    pub spec_rejected: u64,
+    /// Verifier bonus tokens surfaced by all-accepted rounds (the free
+    /// token the verifier's last logits buy when every proposal stands).
+    pub spec_forced: u64,
+    /// Draft KV rows rolled back by rejections (proposals past the first
+    /// rejected position: `m - a - 1` per rejecting round).
+    pub spec_rollback_rows: u64,
+    /// Speculative verify rounds run (the engine-call denominator behind
+    /// steps-per-token: one batched verify per round).
+    pub spec_rounds: u64,
+    /// Per-round acceptance rate `a / m` (accepted prefix over proposals
+    /// judged) — the live nxfp-draft-vs-verifier fidelity probe.
+    pub spec_accept: Histogram,
+    /// Fleet routing: dispatches steered to this replica by prefix
+    /// affinity when least-loaded would have picked another replica.
+    /// Populated by the fleet rollup; zero in single-engine serving.
+    /// Read next to `prefix_hit_rate()` — it says what the stickiness
+    /// bought.
+    pub affinity_overrides: u64,
+    /// Fleet routing: dispatches whose affinity owner was this replica
+    /// but fell through to least-loaded (drain/death or slack exceeded).
+    pub affinity_spills: u64,
 }
 
 impl Default for ServingMetrics {
@@ -270,6 +307,14 @@ impl Default for ServingMetrics {
             shed: 0,
             deadline_expired: 0,
             retry_backoff: Histogram::for_seconds(),
+            spec_accepted: 0,
+            spec_rejected: 0,
+            spec_forced: 0,
+            spec_rollback_rows: 0,
+            spec_rounds: 0,
+            spec_accept: Histogram::for_rate(),
+            affinity_overrides: 0,
+            affinity_spills: 0,
         }
     }
 }
@@ -288,6 +333,20 @@ impl ServingMetrics {
             return 0.0;
         }
         self.prefix_hits as f64 / lookups as f64
+    }
+
+    /// Aggregate speculative acceptance rate: accepted draft tokens over
+    /// all draft tokens judged (`accepted + rejected` — a rejecting round
+    /// judges exactly one losing position; bonus tokens are the
+    /// verifier's own and don't enter the ratio). This is the paper's
+    /// offline nxfp-vs-fp16 fidelity plot measured on served traffic
+    /// (0.0 when nothing speculative ran).
+    pub fn spec_accept_rate(&self) -> f64 {
+        let judged = self.spec_accepted + self.spec_rejected;
+        if judged == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / judged as f64
     }
 
     /// Fold another replica's serving metrics into this rollup. Counters
@@ -311,7 +370,14 @@ impl ServingMetrics {
         self.backend_failed += other.backend_failed;
         self.shed += other.shed;
         self.deadline_expired += other.deadline_expired;
-        let pairs: [(&str, &mut Histogram, &Histogram); 10] = [
+        self.spec_accepted += other.spec_accepted;
+        self.spec_rejected += other.spec_rejected;
+        self.spec_forced += other.spec_forced;
+        self.spec_rollback_rows += other.spec_rollback_rows;
+        self.spec_rounds += other.spec_rounds;
+        self.affinity_overrides += other.affinity_overrides;
+        self.affinity_spills += other.affinity_spills;
+        let pairs: [(&str, &mut Histogram, &Histogram); 11] = [
             ("latency", &mut self.latency, &other.latency),
             ("ttft", &mut self.ttft, &other.ttft),
             ("wait_steps", &mut self.wait_steps, &other.wait_steps),
@@ -322,6 +388,7 @@ impl ServingMetrics {
             ("prefix_rows", &mut self.prefix_rows, &other.prefix_rows),
             ("shared_pages", &mut self.shared_pages, &other.shared_pages),
             ("retry_backoff", &mut self.retry_backoff, &other.retry_backoff),
+            ("spec_accept", &mut self.spec_accept, &other.spec_accept),
         ];
         let mut errs = Vec::new();
         for (name, mine, theirs) in pairs {
@@ -373,6 +440,19 @@ impl ServingMetrics {
                 self.prefix_rows.max(),
                 self.shared_pages.mean(),
                 self.shared_pages.max()
+            ));
+        }
+        if self.spec_rounds > 0 {
+            out.push_str(&format!(
+                "\nspec accept rate {:.0}% ({} accepted, {} rejected, {} bonus)  \
+                 rounds {}  rolled-back rows {}  per-round accept p50 {:.2}",
+                self.spec_accept_rate() * 100.0,
+                self.spec_accepted,
+                self.spec_rejected,
+                self.spec_forced,
+                self.spec_rounds,
+                self.spec_rollback_rows,
+                self.spec_accept.p50()
             ));
         }
         if self.total_faults() + self.shed + self.deadline_expired > 0 {
@@ -539,6 +619,36 @@ mod tests {
         assert_eq!(a.latency.count(), 2);
         assert_eq!(a.latency.max(), 0.030);
         assert_eq!(a.ttft.count(), 1);
+    }
+
+    #[test]
+    fn spec_counters_merge_and_rate() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.spec_accept_rate(), 0.0);
+        m.spec_accepted = 6;
+        m.spec_rejected = 2;
+        m.spec_forced = 1;
+        m.spec_rollback_rows = 3;
+        m.spec_rounds = 3;
+        m.spec_accept.record(0.75);
+        assert_eq!(m.spec_accept_rate(), 0.75);
+        // summary gains a spec line only once a verify round ran
+        assert!(ServingMetrics::default().summary().find("spec accept").is_none());
+        let s = m.summary();
+        assert!(s.contains("spec accept rate 75% (6 accepted, 2 rejected, 1 bonus)"));
+        assert!(s.contains("rolled-back rows 3"));
+        let mut rollup = ServingMetrics::default();
+        rollup.spec_accepted = 4;
+        rollup.spec_rounds = 2;
+        rollup.spec_accept.record(1.0);
+        rollup.merge(&m).unwrap();
+        assert_eq!(rollup.spec_accepted, 10);
+        assert_eq!(rollup.spec_rejected, 2);
+        assert_eq!(rollup.spec_forced, 1);
+        assert_eq!(rollup.spec_rollback_rows, 3);
+        assert_eq!(rollup.spec_rounds, 5);
+        assert_eq!(rollup.spec_accept.count(), 2);
+        assert_eq!(rollup.spec_accept_rate(), 10.0 / 12.0);
     }
 
     #[test]

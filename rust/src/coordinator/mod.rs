@@ -247,6 +247,21 @@ pub struct ChunkKv {
     pub v_rows: Vec<f32>,
 }
 
+/// Output of a speculative multi-token verify for **one** slot: the
+/// next-token logits at every fed position plus the KV rows those tokens
+/// append — what [`crate::spec::SpecEngine`] scores a draft's proposals
+/// with in one batched call instead of one step per token.
+pub struct VerifyOut {
+    /// `[n, V]` logits: row `i` is the next-token distribution after
+    /// feeding `tokens[i]` at position `pos0 + i` (each row sees the lane
+    /// plus the rows of the earlier chunk tokens, exactly like `n`
+    /// successive single-token steps over raw rows).
+    pub logits: Vec<f32>,
+    /// KV rows for the fed tokens (layer-major `[L, n, D]`, the
+    /// [`ChunkKv`] layout — accepted prefixes bulk-append per layer).
+    pub kv: ChunkKv,
+}
+
 /// The batched decode-step kernel the engine drives. `tokens`/`pos` are
 /// `[B]`, `k`/`v` are the persistent `[B, L, S, D]` slabs. Implementations
 /// must be **per-slot pure**: slot `b`'s outputs may depend only on
@@ -278,6 +293,26 @@ pub trait StepBackend {
         let _ = (tokens, pos0, k_lane, v_lane);
         Ok(None)
     }
+
+    /// Speculative verify: like [`StepBackend::prefill_chunk`] but with
+    /// logits at **every** fed position — one batched call scores all `k`
+    /// draft proposals at once. Token `i`'s logits must equal what a
+    /// plain [`StepBackend::step`] would produce given the lane state
+    /// after the earlier chunk tokens' raw rows landed (the speculative
+    /// bit-identity guarantee builds on that equivalence). Backends that
+    /// cannot produce intermediate logits in one call return `Ok(None)`
+    /// (the default) and the spec engine refuses to serve speculatively
+    /// rather than silently degrading.
+    fn verify_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<VerifyOut>> {
+        let _ = (tokens, pos0, k_lane, v_lane);
+        Ok(None)
+    }
 }
 
 /// Delegation so wrappers generic over `B: StepBackend` — notably
@@ -296,6 +331,16 @@ impl StepBackend for Box<dyn StepBackend> {
         v_lane: &[f32],
     ) -> Result<Option<ChunkKv>> {
         (**self).prefill_chunk(tokens, pos0, k_lane, v_lane)
+    }
+
+    fn verify_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<VerifyOut>> {
+        (**self).verify_chunk(tokens, pos0, k_lane, v_lane)
     }
 }
 
@@ -360,6 +405,58 @@ fn hash01(x: u32) -> f32 {
     (h >> 8) as f32 * (2.0 / (1 << 24) as f32) - 1.0
 }
 
+/// Greedy sampling reduction shared by the batched step and the
+/// speculative verifier: `max_by` keeps the **last** of equal maxima, and
+/// speculative bit-identity depends on the draft and verify paths using
+/// exactly this reduction (a first-max-wins verifier would disagree with
+/// the step path on ties and break the invariant silently).
+pub fn greedy_argmax(row: &[f32]) -> i32 {
+    row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+}
+
+/// One lane's worth of the synthetic step — the fresh per-layer KV row
+/// plus the attention-like logit reduction — factored out so
+/// `SynthBackend::verify_chunk` scores chunk tokens through the
+/// **identical float-operation order** as `step`. Bit-identity between
+/// speculative and plain decode rests on this sharing: a re-derived
+/// reduction with a different accumulation order would produce different
+/// low bits and be rejected as a draft divergence.
+fn synth_lane_step(
+    (l, s, d, vb): (usize, usize, usize, usize),
+    tok: u32,
+    p: u32,
+    k_lane: &[f32],
+    v_lane: &[f32],
+    lg: &mut [f32],
+    k_new: &mut [f32],
+    v_new: &mut [f32],
+) {
+    for li in 0..l {
+        // fresh KV row: a pure function of (token, pos, layer, dim)
+        for j in 0..d {
+            let key = tok.wrapping_mul(31) ^ p.rotate_left(9) ^ ((li as u32) << 20);
+            k_new[li * d + j] = hash01(key ^ j as u32);
+            v_new[li * d + j] = hash01(key ^ j as u32 ^ 0xA5A5_5A5A);
+        }
+        // attention-like read of the whole lane: every stored row
+        // contributes, zero padding rows vanish
+        let base = li * s * d;
+        for r in 0..s {
+            let mut score = 0.0f32;
+            let mut val = 0.0f32;
+            for j in 0..d {
+                let row = base + r * d + j;
+                score += k_lane[row] * hash01(j as u32 ^ tok.wrapping_mul(0x9E37_79B1));
+                val += v_lane[row] * hash01(j as u32 ^ 0x5851_F42D);
+            }
+            lg[(r * 31 + li * 7 + 3) % vb] += score * val;
+        }
+    }
+    // token/pos spike keeps greedy decoding non-degenerate
+    let spike = (tok as usize).wrapping_mul(7).wrapping_add(p as usize) % vb;
+    lg[spike] += 2.0 * hash01(tok ^ p.wrapping_mul(97));
+}
+
 impl StepBackend for SynthBackend {
     fn step(&mut self, tokens: &[i32], pos: &[i32], k: &[f32], v: &[f32]) -> Result<StepOut> {
         let (l, s, d, vb) = (self.l, self.s, self.d, self.vocab);
@@ -369,35 +466,16 @@ impl StepBackend for SynthBackend {
         let mut k_new = vec![0.0f32; bsz * l * d];
         let mut v_new = vec![0.0f32; bsz * l * d];
         for b in 0..bsz {
-            let tok = tokens[b] as u32;
-            let p = pos[b] as u32;
-            let k_lane = &k[b * lane..(b + 1) * lane];
-            let v_lane = &v[b * lane..(b + 1) * lane];
-            let lg = &mut logits[b * vb..(b + 1) * vb];
-            for li in 0..l {
-                // fresh KV row: a pure function of (token, pos, layer, dim)
-                for j in 0..d {
-                    let key = tok.wrapping_mul(31) ^ p.rotate_left(9) ^ ((li as u32) << 20);
-                    k_new[(b * l + li) * d + j] = hash01(key ^ j as u32);
-                    v_new[(b * l + li) * d + j] = hash01(key ^ j as u32 ^ 0xA5A5_5A5A);
-                }
-                // attention-like read of the whole lane: every stored row
-                // contributes, zero padding rows vanish
-                let base = li * s * d;
-                for r in 0..s {
-                    let mut score = 0.0f32;
-                    let mut val = 0.0f32;
-                    for j in 0..d {
-                        let row = base + r * d + j;
-                        score += k_lane[row] * hash01(j as u32 ^ tok.wrapping_mul(0x9E37_79B1));
-                        val += v_lane[row] * hash01(j as u32 ^ 0x5851_F42D);
-                    }
-                    lg[(r * 31 + li * 7 + 3) % vb] += score * val;
-                }
-            }
-            // token/pos spike keeps greedy decoding non-degenerate
-            let spike = (tok as usize).wrapping_mul(7).wrapping_add(p as usize) % vb;
-            lg[spike] += 2.0 * hash01(tok ^ p.wrapping_mul(97));
+            synth_lane_step(
+                (l, s, d, vb),
+                tokens[b] as u32,
+                pos[b] as u32,
+                &k[b * lane..(b + 1) * lane],
+                &v[b * lane..(b + 1) * lane],
+                &mut logits[b * vb..(b + 1) * vb],
+                &mut k_new[b * l * d..(b + 1) * l * d],
+                &mut v_new[b * l * d..(b + 1) * l * d],
+            );
         }
         Ok(StepOut { logits, k_new, v_new })
     }
@@ -431,6 +509,61 @@ impl StepBackend for SynthBackend {
             }
         }
         Ok(Some(ChunkKv { k_rows, v_rows }))
+    }
+
+    /// Native speculative verify: score each chunk token through the
+    /// exact `step` reduction (`synth_lane_step` — shared code, shared
+    /// float order) against a scratch copy of the lane that accumulates
+    /// the earlier chunk tokens' raw rows, so row `i`'s logits are
+    /// bit-identical to what `i` successive single-token steps would
+    /// have produced over raw (unquantized) lane rows. Callers whose
+    /// verifier re-quantizes KV between steps must feed one token per
+    /// call and route the rows through their packed cache instead (see
+    /// `spec::SpecEngine`).
+    fn verify_chunk(
+        &mut self,
+        tokens: &[i32],
+        pos0: usize,
+        k_lane: &[f32],
+        v_lane: &[f32],
+    ) -> Result<Option<VerifyOut>> {
+        let (l, s, d, vb) = (self.l, self.s, self.d, self.vocab);
+        let n = tokens.len();
+        anyhow::ensure!(pos0 + n <= s, "verify_chunk overruns the context window");
+        let mut k_scratch = k_lane.to_vec();
+        let mut v_scratch = v_lane.to_vec();
+        let mut logits = vec![0.0f32; n * vb];
+        let mut k_rows = vec![0.0f32; l * n * d];
+        let mut v_rows = vec![0.0f32; l * n * d];
+        let mut k_new = vec![0.0f32; l * d];
+        let mut v_new = vec![0.0f32; l * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let p = (pos0 + t) as u32;
+            synth_lane_step(
+                (l, s, d, vb),
+                tok as u32,
+                p,
+                &k_scratch,
+                &v_scratch,
+                &mut logits[t * vb..(t + 1) * vb],
+                &mut k_new,
+                &mut v_new,
+            );
+            // commit this token's rows: into the scratch lane (the next
+            // chunk token's logits must see them, mirroring the engine's
+            // step→append interleave) and into the [L, n, D] output
+            for li in 0..l {
+                let row = &k_new[li * d..(li + 1) * d];
+                let vow = &v_new[li * d..(li + 1) * d];
+                let dst = (li * s + pos0 + t) * d;
+                k_scratch[dst..dst + d].copy_from_slice(row);
+                v_scratch[dst..dst + d].copy_from_slice(vow);
+                let out = (li * n + t) * d;
+                k_rows[out..out + d].copy_from_slice(row);
+                v_rows[out..out + d].copy_from_slice(vow);
+            }
+        }
+        Ok(Some(VerifyOut { logits, kv: ChunkKv { k_rows, v_rows } }))
     }
 }
 
@@ -519,6 +652,18 @@ impl SlotKv {
         for (li, cache) in self.caches.iter_mut().enumerate() {
             let at = li * n * d;
             cache.append_rows(&k_rows[at..at + n * d], &v_rows[at..at + n * d], n);
+        }
+    }
+
+    /// Roll every layer's packed cache back to its first `rows` rows —
+    /// the speculative-decode rejection path ([`KvCache::truncate_rows`]
+    /// per layer: trailing pages release, watermarks clamp, nothing is
+    /// re-decoded). The caller owns zeroing the stale lane rows past the
+    /// cut (`DecodeEngine::zero_lane_rows`), the same division of labor
+    /// `move_lane` has with its vacated lane.
+    pub fn truncate(&mut self, rows: usize) {
+        for cache in &mut self.caches {
+            cache.truncate_rows(rows);
         }
     }
 
@@ -692,6 +837,43 @@ impl Slot {
     pub fn kv(&self) -> Option<&SlotKv> {
         self.kv.as_ref()
     }
+
+    // --- speculative-decode surface (crate-internal): `spec::SpecEngine`
+    // edits a slot's provisional tail in place — truncating rejected
+    // proposals, pushing the verifier's correction, rolling the draft KV
+    // back — while everything else about the slot lifecycle stays owned
+    // by the engine.
+
+    pub(crate) fn request(&self) -> &GenRequest {
+        &self.req
+    }
+
+    pub(crate) fn arrival(&self) -> Instant {
+        self.arrival
+    }
+
+    pub(crate) fn output(&self) -> &[i32] {
+        &self.output
+    }
+
+    pub(crate) fn output_mut(&mut self) -> &mut Vec<i32> {
+        &mut self.output
+    }
+
+    /// Cache fill in rows (the draft lane's, in spec mode).
+    pub(crate) fn fill_rows(&self) -> usize {
+        self.fill
+    }
+
+    /// Reset the fill counter after a speculative rollback (the packed
+    /// caches were truncated to match via [`SlotKv::truncate`]).
+    pub(crate) fn set_fill(&mut self, rows: usize) {
+        self.fill = rows;
+    }
+
+    pub(crate) fn kv_mut(&mut self) -> Option<&mut SlotKv> {
+        self.kv.as_mut()
+    }
 }
 
 /// Occupancy-table interning: streams whose `EncodePlan` is the same
@@ -750,6 +932,12 @@ pub struct DecodeEngine {
     /// `(prefill tokens, decode tokens)` fed by the most recent
     /// [`DecodeEngine::step_slots`] — the step-span token split.
     last_step_split: (u64, u64),
+    /// Speculative hold: when set (only by `spec::SpecEngine`), sampled
+    /// tokens are **provisional draft proposals** — `step_slots` still
+    /// pushes them onto the slot output, but defers `tokens_generated`,
+    /// TTFT, and the whole finish path to the spec round that verifies
+    /// them (an unverified token must never be surfaced or counted).
+    pub(crate) spec_hold: bool,
     /// Shared page pool every quantized slot's caches borrow from — the
     /// substrate of cross-slot prefix sharing (unused in FP32 baseline
     /// mode, where slots carry no packed caches at all).
@@ -820,6 +1008,7 @@ impl DecodeEngine {
             probes: Vec::new(),
             occ_tables: Vec::new(),
             last_step_split: (0, 0),
+            spec_hold: false,
             pool: Rc::new(RefCell::new(PagePool::new(DEFAULT_KV_PAGE_ROWS))),
             k_f32: vec![0.0; n],
             v_f32: vec![0.0; n],
@@ -961,7 +1150,7 @@ impl DecodeEngine {
     }
 
     /// Elements in one `[L, S, D]` lane.
-    fn lane_len(&self) -> usize {
+    pub(crate) fn lane_len(&self) -> usize {
         self.spec.n_layers * self.spec.seq_len * self.spec.d_model
     }
 
@@ -1039,7 +1228,12 @@ impl DecodeEngine {
     /// [`DecodeEngine::step_with_retry`]'s twin for the native
     /// multi-token prefill path (failed attempts count into
     /// `serving.chunk_faults`).
-    fn chunk_with_retry(&mut self, toks: &[i32], pos0: usize, b: usize) -> Result<Option<ChunkKv>> {
+    pub(crate) fn chunk_with_retry(
+        &mut self,
+        toks: &[i32],
+        pos0: usize,
+        b: usize,
+    ) -> Result<Option<ChunkKv>> {
         let lane = self.lane_len();
         let mut attempt = 0u32;
         loop {
@@ -1064,13 +1258,117 @@ impl DecodeEngine {
         }
     }
 
+    /// [`DecodeEngine::chunk_with_retry`]'s twin for the speculative
+    /// verify path: one batched multi-token call over lane `b`, transient
+    /// faults retried in place (counted into `serving.chunk_faults` —
+    /// verifies are chunk-class calls, see `fault::FaultBackend`), and
+    /// non-finite logits caught **before any proposal is judged** exactly
+    /// like `step_slots` catches them before sampling — retried as a
+    /// transient fault, surfaced as one on exhaustion so the affected
+    /// pair retires down the requeue-and-replay ladder.
+    pub(crate) fn verify_with_retry(
+        &mut self,
+        toks: &[i32],
+        pos0: usize,
+        b: usize,
+    ) -> Result<Option<VerifyOut>> {
+        let lane = self.lane_len();
+        let mut attempt = 0u32;
+        let mut nan_attempts = 0u32;
+        loop {
+            let r = self.backend.verify_chunk(
+                toks,
+                pos0,
+                &self.k_f32[b * lane..(b + 1) * lane],
+                &self.v_f32[b * lane..(b + 1) * lane],
+            );
+            match r {
+                Ok(Some(out)) => {
+                    if out.logits.iter().all(|x| x.is_finite()) {
+                        return Ok(Some(out));
+                    }
+                    self.serving.nan_faults += 1;
+                    nan_attempts += 1;
+                    if nan_attempts > self.retry_max {
+                        return Err(fault::transient("non-finite verify logits"));
+                    }
+                    self.backoff(nan_attempts);
+                }
+                Ok(None) => return Ok(None),
+                Err(e) if fault::is_transient(&e) => {
+                    self.serving.chunk_faults += 1;
+                    attempt += 1;
+                    if attempt > self.retry_max {
+                        return Err(e);
+                    }
+                    self.backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Zero lane `b`'s rows `from..` in every layer (the stale tail a
+    /// speculative rollback leaves behind: packed caches truncate via
+    /// [`SlotKv::truncate`], the decoded lane copy is the caller's to
+    /// scrub — same division of labor as `move_lane`'s vacated lane).
+    pub(crate) fn zero_lane_rows(&mut self, b: usize, from: usize) {
+        let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
+        let lane = self.lane_len();
+        for li in 0..l {
+            let at = b * lane + (li * s + from) * d;
+            let end = b * lane + (li + 1) * s * d;
+            self.k_f32[at..end].fill(0.0);
+            self.v_f32[at..end].fill(0.0);
+        }
+    }
+
+    /// Write a layer-major `[L, n, D]` row block straight into lane `b`
+    /// at row `pos0` — the baseline-mode (no packed KV) twin of
+    /// [`SlotKv::append_chunk`], shared by the speculative accept path.
+    pub(crate) fn write_lane_rows(
+        &mut self,
+        b: usize,
+        pos0: usize,
+        n: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) {
+        let (l, s, d) = (self.spec.n_layers, self.spec.seq_len, self.spec.d_model);
+        let lane = self.lane_len();
+        debug_assert_eq!(k_rows.len(), l * n * d);
+        for li in 0..l {
+            let src = li * n * d;
+            let dst = b * lane + (li * s + pos0) * d;
+            self.k_f32[dst..dst + n * d].copy_from_slice(&k_rows[src..src + n * d]);
+            self.v_f32[dst..dst + n * d].copy_from_slice(&v_rows[src..src + n * d]);
+        }
+    }
+
+    /// Mutable view of one lane of the step slabs (the spec engine syncs
+    /// a verifier slot's packed KV into its lane between verify calls).
+    pub(crate) fn lane_mut(&mut self, b: usize) -> (&mut [f32], &mut [f32]) {
+        let lane = self.lane_len();
+        (
+            &mut self.k_f32[b * lane..(b + 1) * lane],
+            &mut self.v_f32[b * lane..(b + 1) * lane],
+        )
+    }
+
+    /// Emit a trace event through the engine's sink (the spec engine's
+    /// Draft/Verify/Rollback lifecycle shares the engine's ring and step
+    /// clock).
+    pub(crate) fn trace_event(&mut self, id: Option<u64>, ev: TraceEvent) {
+        self.trace.event(id, ev);
+    }
+
     /// Retire lane `b`'s slot after a fault the retry policy could not
     /// absorb: drop its packed KV (page references release immediately —
     /// adopted prefix pages included), zero the lane, and either push a
     /// [`Requeue`] for bit-exact replay or fail the request with
     /// [`FinishReason::BackendError`] (requeue disallowed, fatal error,
     /// or the request's requeue budget spent).
-    fn retire_faulted(
+    pub(crate) fn retire_faulted(
         &mut self,
         slots: &mut [Option<Slot>],
         b: usize,
@@ -1109,10 +1407,47 @@ impl DecodeEngine {
         self.metrics.requests += 1;
     }
 
+    /// Complete a slot that generated its full output: account the final
+    /// KV footprint, release the packed buffers, zero the lane exactly
+    /// once, record latency, emit the `Finished` trace, and push the
+    /// response. Extracted from [`DecodeEngine::step_slots`] so the
+    /// speculative engine — which owns the finish decision in spec mode
+    /// (`spec_hold`) — retires slots through the identical lifecycle.
+    pub(crate) fn finish_slot(&mut self, sl: Slot, b: usize, done: &mut Vec<GenResponse>) {
+        let lane = self.lane_len();
+        let generated = sl.output.len() - sl.req.prompt.len();
+        if let Some(kv) = sl.kv {
+            let (kb, vb) = kv.footprint_bits_split();
+            self.metrics.kv_bits_packed += kb + vb;
+            self.metrics.kv_bits_packed_k += kb;
+            self.metrics.kv_bits_packed_v += vb;
+            self.metrics.kv_bits_fp16 += kv.fp16_footprint_bits();
+            // dedup-aware charge: pages shared with earlier completions
+            // were already accounted and add zero here
+            let (dk, dv) = kv.take_dedup_bits();
+            self.metrics.kv_bits_packed_dedup_k += dk;
+            self.metrics.kv_bits_packed_dedup_v += dv;
+        }
+        self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
+        self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
+        let latency = sl.arrival.elapsed();
+        self.serving.latency.record(latency.as_secs_f64());
+        self.trace
+            .event(Some(sl.req.id), TraceEvent::Finished { reason: FinishReason::Completed });
+        done.push(GenResponse {
+            id: sl.req.id,
+            generated,
+            tokens: sl.output,
+            latency,
+            reason: FinishReason::Completed,
+        });
+        self.metrics.requests += 1;
+    }
+
     /// Enforce the wall-clock deadline on occupied lanes: an expired slot
     /// is dropped mid-flight with [`FinishReason::Deadline`] (partial
     /// output shipped, packed pages released, lane zeroed and freed).
-    fn expire_slots(&mut self, slots: &mut [Option<Slot>], done: &mut Vec<GenResponse>) {
+    pub(crate) fn expire_slots(&mut self, slots: &mut [Option<Slot>], done: &mut Vec<GenResponse>) {
         let Some(deadline) = self.deadline else { return };
         let lane = self.lane_len();
         for b in 0..slots.len() {
@@ -1183,7 +1518,7 @@ impl DecodeEngine {
     /// `prefill_chunk` fault that outlives the retry budget (or a fatal
     /// one) retires only the slot it was feeding — the other lanes'
     /// chunks and the batched step proceed untouched.
-    fn chunk_prefill(
+    pub(crate) fn chunk_prefill(
         &mut self,
         slots: &mut [Option<Slot>],
         done: &mut Vec<GenResponse>,
@@ -1385,7 +1720,7 @@ impl DecodeEngine {
     /// the clean lanes commit the same output); a fatal error fails every
     /// occupied slot with [`FinishReason::BackendError`] while the engine
     /// itself keeps serving.
-    fn step_slots(
+    pub(crate) fn step_slots(
         &mut self,
         slots: &mut [Option<Slot>],
         done: &mut Vec<GenResponse>,
@@ -1395,7 +1730,10 @@ impl DecodeEngine {
         let (l, s, d, vb) =
             (self.spec.n_layers, self.spec.seq_len, self.spec.d_model, self.spec.vocab);
         let bsz = self.max_batch;
-        debug_assert_eq!(slots.len(), bsz);
+        // spec mode schedules over the draft half of the lane pool: the
+        // slots vec covers lanes 0..B/2 while the step still runs the
+        // full B-lane slab (verifier lanes carry KV but never sample)
+        debug_assert!(slots.len() == bsz || (self.spec_hold && slots.len() <= bsz));
         let lane = self.lane_len();
         let mut tokens = vec![0i32; bsz];
         let mut pos = vec![0i32; bsz];
@@ -1444,9 +1782,10 @@ impl DecodeEngine {
                     }
                     // exhausted: only the poisoned occupied lanes retire;
                     // per-slot purity lets the clean lanes commit this
-                    // output (an empty poisoned lane is never sampled)
+                    // output (an empty poisoned lane is never sampled;
+                    // a poisoned verifier lane surfaces at verify time)
                     for b in poisoned {
-                        if slots[b].is_some() {
+                        if b < slots.len() && slots[b].is_some() {
                             self.retire_faulted(
                                 slots,
                                 b,
@@ -1463,7 +1802,7 @@ impl DecodeEngine {
                     // retry budget spent: requeue every occupied slot for
                     // bit-exact replay and abandon this step — the engine
                     // keeps serving
-                    for b in 0..bsz {
+                    for b in 0..slots.len() {
                         if slots[b].is_some() {
                             self.retire_faulted(
                                 slots,
@@ -1479,7 +1818,7 @@ impl DecodeEngine {
                 }
                 Err(e) => {
                     // fatal: fail every occupied slot, keep the engine up
-                    for b in 0..bsz {
+                    for b in 0..slots.len() {
                         if slots[b].is_some() {
                             self.retire_faulted(
                                 slots,
@@ -1534,14 +1873,13 @@ impl DecodeEngine {
                 decode_toks += 1;
             }
             // sample greedily from this slot's logits
-            let row = &out.logits[b * vb..(b + 1) * vb];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0 as i32;
+            let next = greedy_argmax(&out.logits[b * vb..(b + 1) * vb]);
             sl.output.push(next);
+            if self.spec_hold {
+                // provisional draft proposal: the spec round verifies it
+                // before anything is counted, surfaced, or finished
+                continue;
+            }
             self.metrics.tokens_generated += 1;
             if sl.output.len() == sl.req.prompt.len() + 1 {
                 self.serving.ttft.record(sl.arrival.elapsed().as_secs_f64());
@@ -1549,37 +1887,8 @@ impl DecodeEngine {
             let generated = sl.output.len() - sl.req.prompt.len();
             let finished = generated >= sl.req.max_new || sl.fill + 1 >= s;
             if finished {
-                // slot lifecycle: account the final footprint, release the
-                // packed buffers, zero the lane exactly once, free the lane
                 let sl = slot.take().unwrap();
-                if let Some(kv) = sl.kv {
-                    let (kb, vb) = kv.footprint_bits_split();
-                    self.metrics.kv_bits_packed += kb + vb;
-                    self.metrics.kv_bits_packed_k += kb;
-                    self.metrics.kv_bits_packed_v += vb;
-                    self.metrics.kv_bits_fp16 += kv.fp16_footprint_bits();
-                    // dedup-aware charge: pages shared with earlier
-                    // completions were already accounted and add zero here
-                    let (dk, dv) = kv.take_dedup_bits();
-                    self.metrics.kv_bits_packed_dedup_k += dk;
-                    self.metrics.kv_bits_packed_dedup_v += dv;
-                }
-                self.k_f32[b * lane..(b + 1) * lane].fill(0.0);
-                self.v_f32[b * lane..(b + 1) * lane].fill(0.0);
-                let latency = sl.arrival.elapsed();
-                self.serving.latency.record(latency.as_secs_f64());
-                self.trace.event(
-                    Some(sl.req.id),
-                    TraceEvent::Finished { reason: FinishReason::Completed },
-                );
-                done.push(GenResponse {
-                    id: sl.req.id,
-                    generated,
-                    tokens: sl.output,
-                    latency,
-                    reason: FinishReason::Completed,
-                });
-                self.metrics.requests += 1;
+                self.finish_slot(sl, b, done);
             }
         }
         if prefill_toks + decode_toks > 0 {
@@ -1639,7 +1948,7 @@ impl DecodeEngine {
     /// Fill free lanes from the scheduler queue. Validation rejections
     /// and queue-expired deadlines complete immediately into `done`
     /// without consuming a lane.
-    fn admit(&mut self, sched: &mut Scheduler, done: &mut Vec<GenResponse>) {
+    pub(crate) fn admit(&mut self, sched: &mut Scheduler, done: &mut Vec<GenResponse>) {
         while let Some(b) = sched.free_lane() {
             let Some(adm) = sched.pop_next() else { break };
             if let Some(resp) = self.validate(&adm.req) {
@@ -1846,6 +2155,37 @@ impl DecodeEngine {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    /// `hash01` is the whole of the synthetic backend's "weights": pin
+    /// its 24-bit hashes against the constants replicated in
+    /// `python/tests/test_spec_decode.py`, so both languages derive the
+    /// same deterministic model. Every arithmetic step here is exact in
+    /// f32 (the mantissa never exceeds 24 bits), which is what makes the
+    /// integer round-trip — and the cross-language pin — well-defined.
+    #[test]
+    fn hash01_pins_cross_language_constants() {
+        let h24 = |x: u32| ((hash01(x) + 1.0) * (1u32 << 23) as f32) as u32;
+        for (x, want) in [
+            (0u32, 0u32),
+            (1, 7_252_763),
+            (42, 5_672_153),
+            (97, 2_100_070),
+            (0xDEAD_BEEF, 4_914_951),
+        ] {
+            assert_eq!(h24(x), want, "hash01({x:#x}) drifted from the cross-language pin");
+        }
+        assert_eq!(hash01(0), -1.0);
+    }
+
+    /// Last-max-wins tie-breaking is load-bearing for speculative
+    /// bit-identity (draft and verifier must reduce ties identically);
+    /// the python mirror pins the same cases.
+    #[test]
+    fn greedy_argmax_keeps_the_last_of_equal_maxima() {
+        assert_eq!(greedy_argmax(&[1.0, 3.0, 2.0, 3.0]), 3);
+        assert_eq!(greedy_argmax(&[5.0]), 0);
+        assert_eq!(greedy_argmax(&[2.0, 2.0, 2.0]), 2);
+    }
 
     /// The incremental sync must leave the lane bit-identical to a full
     /// re-decode of every layer at every step — the exact invariant the

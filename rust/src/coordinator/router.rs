@@ -71,6 +71,22 @@ pub struct Router {
     routable: Vec<bool>,
     min_affinity: usize,
     slack: usize,
+    /// Per-replica steering tallies (see [`SteeringStats`]).
+    steering: Vec<SteeringStats>,
+}
+
+/// How often prefix affinity actually changed a routing decision for one
+/// replica — the counters that tell whether stickiness is earning its
+/// keep (read them next to that replica's prefix hit rate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SteeringStats {
+    /// Dispatches steered to this replica by affinity when least-loaded
+    /// would have picked a different one. Affine routes that agree with
+    /// least-loaded are not overrides — stickiness changed nothing.
+    pub overrides: u64,
+    /// Dispatches whose affinity owner was this replica but fell through
+    /// to least-loaded (owner draining/dead or `slack` exceeded).
+    pub spills: u64,
 }
 
 impl Router {
@@ -90,6 +106,7 @@ impl Router {
             routable: vec![true; n_replicas],
             min_affinity: Self::DEFAULT_MIN_AFFINITY,
             slack: slack.max(1),
+            steering: vec![SteeringStats::default(); n_replicas],
         }
     }
 
@@ -122,13 +139,27 @@ impl Router {
                 if self.routable[r]
                     && self.outstanding[r] < self.outstanding[least] + self.slack =>
             {
+                if r != least {
+                    self.steering[r].overrides += 1;
+                }
                 r
             }
-            _ => least,
+            Some(r) => {
+                // affine owner exists but lost: charge the spill to the
+                // owner so drains show up on the replica they cost
+                self.steering[r].spills += 1;
+                least
+            }
+            None => least,
         };
         self.outstanding[choice] += 1;
         self.register(prompt, choice);
         choice
+    }
+
+    /// Per-replica steering tallies, index-aligned with replicas.
+    pub fn steering(&self) -> &[SteeringStats] {
+        &self.steering
     }
 
     /// A request previously charged to `replica` finished (or was taken
@@ -262,6 +293,12 @@ pub struct FleetReport {
     pub merge_errors: Vec<String>,
     /// Requests replayed onto a survivor after a drain or kill.
     pub redispatched: u64,
+    /// Per-replica prefix-steering tallies from the router, index-aligned
+    /// with `replicas`. Also folded into each replica's serving counters
+    /// (`affinity_overrides` / `affinity_spills`) before the rollup, so
+    /// the metrics exporters carry them under the existing `replica`
+    /// labels.
+    pub steering: Vec<SteeringStats>,
 }
 
 /// Handle to a running fleet: N replica workers, one forwarder thread
@@ -481,11 +518,17 @@ impl FleetHandle {
         for f in self.forwarders.drain(..) {
             let _ = f.join();
         }
-        let replicas: Vec<ServeReport> = self
+        let mut replicas: Vec<ServeReport> = self
             .reports
             .iter_mut()
             .map(|r| r.take().expect("every replica produced a report"))
             .collect();
+        // fold the router's steering tallies into each replica's serving
+        // counters so the rollup and the replica-labeled exports see them
+        for (rep, st) in replicas.iter_mut().zip(self.router.steering()) {
+            rep.serving.affinity_overrides = st.overrides;
+            rep.serving.affinity_spills = st.spills;
+        }
         let mut metrics = Metrics::default();
         let mut serving = ServingMetrics::default();
         let mut merge_errors = Vec::new();
@@ -495,12 +538,14 @@ impl FleetHandle {
                 merge_errors.push(format!("replica {i}: {e:#}"));
             }
         }
+        let steering = self.router.steering().to_vec();
         Ok(FleetReport {
             replicas,
             metrics,
             serving,
             merge_errors,
             redispatched: self.redispatched,
+            steering,
         })
     }
 }
@@ -563,6 +608,41 @@ mod tests {
         s.set_min_affinity(4);
         assert_eq!(s.route(&[5, 6]), 0);
         assert_eq!(s.route(&[5, 7]), 1, "2-token match is below min_affinity");
+    }
+
+    #[test]
+    fn steering_counters_split_overrides_from_spills() {
+        let mut r = Router::new(2, 2);
+        r.set_min_affinity(4);
+        let sys: Vec<i32> = (100..112).collect();
+        let with_suffix = |s: i32| {
+            let mut p = sys.clone();
+            p.push(s);
+            p
+        };
+        // first dispatch: no affinity yet, nothing steered
+        assert_eq!(r.route(&with_suffix(1)), 0);
+        assert_eq!(r.steering()[0], SteeringStats::default());
+        // affine route that disagrees with least-loaded (1 is emptier)
+        assert_eq!(r.route(&with_suffix(2)), 0);
+        assert_eq!(r.steering()[0].overrides, 1);
+        // slack exceeded: the owner is charged a spill, 1 takes the work
+        assert_eq!(r.route(&with_suffix(3)), 1);
+        assert_eq!(r.steering()[0], SteeringStats { overrides: 1, spills: 1 });
+        assert_eq!(r.steering()[1], SteeringStats::default());
+        // draining the owner also counts as a spill on the owner
+        r.complete(0);
+        r.complete(0);
+        r.set_routable(0, false);
+        assert_eq!(r.route(&with_suffix(4)), 1);
+        assert_eq!(r.steering()[0].spills, 2);
+        // an affine route that matches least-loaded is not an override
+        let mut q = Router::new(2, 4);
+        q.set_min_affinity(4);
+        assert_eq!(q.route(&sys), 0);
+        q.complete(0);
+        assert_eq!(q.route(&sys), 0, "affine and least-loaded agree");
+        assert_eq!(q.steering()[0], SteeringStats::default());
     }
 
     #[test]

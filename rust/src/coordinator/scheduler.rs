@@ -465,6 +465,10 @@ pub struct Scheduler {
     max_queue_steps: Option<u64>,
     /// Requests enqueued over the scheduler's lifetime.
     pub enqueued: u64,
+    /// Batch lanes each admitted request occupies (1 = plain decode,
+    /// 2 = speculative draft+verifier pairing). The slot pool is sized in
+    /// whole lane *groups* — see [`Scheduler::with_lanes_per_request`].
+    lanes_per_request: usize,
     /// Trace sink for `Enqueued`/`Requeued` lifecycle events; the no-op
     /// sink (the default) costs one null check per emission site.
     trace: TraceSink,
@@ -479,10 +483,28 @@ impl Scheduler {
     pub const DEFAULT_PREFIX_ENTRIES: usize = 512;
 
     pub fn new(max_batch: usize, promote_after: u64) -> Self {
-        assert!(max_batch > 0);
+        Self::with_lanes_per_request(max_batch, promote_after, 1)
+    }
+
+    /// Scheduler over a `max_batch`-lane pool where every admitted
+    /// request occupies `lanes` lanes (speculative decoding pairs a draft
+    /// lane with a verifier lane: `lanes == 2`). Admission capacity is
+    /// counted in whole **groups** — the slot pool holds
+    /// `max_batch / lanes` entries, so [`Scheduler::free_lane`],
+    /// [`Scheduler::active`], queue-cap shed, promotion, and drain all
+    /// operate on complete groups and a draft lane can never be admitted
+    /// without its verifier lane. With an odd pool under pairing the
+    /// unpairable remainder lane is simply never scheduled (a half-pair
+    /// admission would be a correctness bug, not extra capacity).
+    pub fn with_lanes_per_request(max_batch: usize, promote_after: u64, lanes: usize) -> Self {
+        assert!(lanes >= 1, "lanes_per_request must be at least 1");
+        assert!(
+            max_batch >= lanes,
+            "lane pool of {max_batch} cannot hold one {lanes}-lane request"
+        );
         Scheduler {
             queue: VecDeque::new(),
-            slots: (0..max_batch).map(|_| None).collect(),
+            slots: (0..max_batch / lanes).map(|_| None).collect(),
             promote_after: promote_after.max(1),
             step: 0,
             prefill_budget: 1,
@@ -490,8 +512,15 @@ impl Scheduler {
             queue_cap: usize::MAX,
             max_queue_steps: None,
             enqueued: 0,
+            lanes_per_request: lanes,
             trace: TraceSink::disabled(),
         }
+    }
+
+    /// Lanes each admitted request occupies (see
+    /// [`Scheduler::with_lanes_per_request`]).
+    pub fn lanes_per_request(&self) -> usize {
+        self.lanes_per_request
     }
 
     /// Attach a trace sink (a clone of the engine's, so queue-side and
@@ -987,6 +1016,35 @@ mod tests {
         pc.register(&[8, 8], Vec::new()); // evicts another entry into the free lists
         assert_eq!(pc.live_entries(), 2);
         assert!(pc.entries.len() <= 3, "slab must reuse freed entry slots");
+    }
+
+    #[test]
+    fn paired_lanes_admit_in_whole_groups() {
+        // 5 lanes under draft+verifier pairing -> 2 schedulable pairs;
+        // the unpairable 5th lane must never admit a draft without a
+        // verifier (capacity rounds down, it never half-admits)
+        let s = Scheduler::with_lanes_per_request(5, 10, 2);
+        assert_eq!(s.lanes_per_request(), 2);
+        assert_eq!(s.slots().len(), 2);
+        assert_eq!(s.free_lane(), Some(0));
+        // plain construction is the 1-lane special case
+        let s = Scheduler::new(5, 10);
+        assert_eq!(s.lanes_per_request(), 1);
+        assert_eq!(s.slots().len(), 5);
+        // queue-cap shed and drain count requests, not lanes: the cap
+        // applies to queued work identically under pairing
+        let mut s = Scheduler::with_lanes_per_request(4, 10, 2);
+        s.set_queue_cap(1);
+        assert!(s.enqueue(req(0, 1)).is_none());
+        assert!(s.enqueue(req(1, 1)).is_some(), "cap 1 must shed the second arrival");
+        assert_eq!(s.take_unserved().len(), 1);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot hold")]
+    fn paired_lanes_reject_an_unpairable_pool() {
+        let _ = Scheduler::with_lanes_per_request(1, 10, 2);
     }
 
     #[test]

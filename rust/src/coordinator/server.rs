@@ -37,6 +37,7 @@ use crate::formats::QuantPolicy;
 use crate::models::{Checkpoint, LmSpec};
 use crate::obs::{write_metrics, CodeOccupancy, TraceSink, TraceSummary, DEFAULT_TRACE_CAP};
 use crate::runtime::Runtime;
+use crate::spec::{SpecEngine, SpecPolicy};
 
 /// Default snapshot cadence ([`ServeOpts::metrics_snapshot_steps`]): the
 /// worker rewrites `--metrics-out` every this many engine steps (cheap: a
@@ -114,6 +115,16 @@ pub struct ServeOpts {
     /// a wave never pauses mid-flight to write text). Defaults to
     /// [`METRICS_SNAPSHOT_STEPS`]; tests shrink it.
     pub metrics_snapshot_steps: u64,
+    /// Draft depth for precision-speculative decoding (`--spec-k`): the
+    /// serving-precision lanes propose up to this many tokens per round
+    /// and a paired higher-precision lane verifies them in one chunked
+    /// call. 0 (the default) serves plain per-token decode. Continuous
+    /// mode only — lane pairing halves concurrent requests per step.
+    pub spec_k: usize,
+    /// Verifier-lane KV policy for speculative decoding (`--spec-verify`):
+    /// `fp16` (the default reference) or a higher-precision quantized
+    /// policy such as `nxfp6`. Ignored while `spec_k` is 0.
+    pub spec_verify: String,
 }
 
 impl Default for ServeOpts {
@@ -134,6 +145,8 @@ impl Default for ServeOpts {
             metrics_out: None,
             occupancy: false,
             metrics_snapshot_steps: METRICS_SNAPSHOT_STEPS,
+            spec_k: 0,
+            spec_verify: "fp16".to_string(),
         }
     }
 }
@@ -179,8 +192,8 @@ impl ServerHandle {
             // the runtime outlives the engine on this thread; it cannot
             // move through the generic `spawn_with` seam (not Send)
             let mut rt = Runtime::cpu(artifacts_dir)?;
-            let mut engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
-            serve_thread(&mut engine, &worker_rx, &resp_tx, &opts)
+            let engine = DecodeEngine::new(&mut rt, spec, &ck, &kv, opts.max_batch)?;
+            serve_thread(engine, &worker_rx, &resp_tx, &opts)
         });
         ServerHandle { tx, rx: Some(rx), join: Some(join) }
     }
@@ -197,8 +210,8 @@ impl ServerHandle {
         let (tx, worker_rx) = mpsc::channel::<Msg>();
         let (resp_tx, rx) = mpsc::channel::<GenResponse>();
         let join = std::thread::spawn(move || -> Result<ServeReport> {
-            let mut engine = make_engine(&opts)?;
-            serve_thread(&mut engine, &worker_rx, &resp_tx, &opts)
+            let engine = make_engine(&opts)?;
+            serve_thread(engine, &worker_rx, &resp_tx, &opts)
         });
         ServerHandle { tx, rx: Some(rx), join: Some(join) }
     }
@@ -290,9 +303,11 @@ impl ServerHandle {
 /// Shared worker body: apply every scheduling opt to the freshly built
 /// engine, then run the mode's serve loop. Both spawn flavors (PJRT
 /// artifacts and synthetic backends) funnel through here so they serve
-/// identically.
+/// identically. With `spec_k > 0` the engine is wrapped in a
+/// [`SpecEngine`] and the continuous loop drives draft/verify rounds
+/// instead of per-token steps — same admission, drain, and kill paths.
 fn serve_thread(
-    engine: &mut DecodeEngine,
+    mut engine: DecodeEngine,
     worker_rx: &mpsc::Receiver<Msg>,
     resp_tx: &mpsc::Sender<GenResponse>,
     opts: &ServeOpts,
@@ -312,8 +327,58 @@ fn serve_thread(
     }
     let log = std::env::var("NXFP_SERVE_LOG").is_ok_and(|v| v != "0");
     match opts.mode {
-        SchedMode::Continuous => run_continuous(engine, worker_rx, resp_tx, opts, log),
-        SchedMode::Wave => run_waves(engine, worker_rx, resp_tx, opts, log),
+        SchedMode::Continuous if opts.spec_k > 0 => {
+            let policy = SpecPolicy::parse(opts.spec_k, &opts.spec_verify)?;
+            let mut se = SpecEngine::new(engine, policy)?;
+            let sched = se.scheduler(Scheduler::DEFAULT_PROMOTE_AFTER);
+            run_continuous(&mut se, sched, worker_rx, resp_tx, opts, log)
+        }
+        SchedMode::Continuous => {
+            let sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
+            run_continuous(&mut engine, sched, worker_rx, resp_tx, opts, log)
+        }
+        SchedMode::Wave => {
+            anyhow::ensure!(
+                opts.spec_k == 0,
+                "--spec-k requires continuous scheduling (wave mode runs to completion \
+                 per batch; there is no between-step seam to verify in)"
+            );
+            run_waves(&mut engine, worker_rx, resp_tx, opts, log)
+        }
+    }
+}
+
+/// Seam between the plain engine and the speculative wrapper: the
+/// continuous loop needs the underlying [`DecodeEngine`] for admission,
+/// validation, and observability, plus one macro-step entry point — and
+/// nothing else differs between the two drivers.
+trait ContinuousStepper {
+    fn inner(&self) -> &DecodeEngine;
+    fn inner_mut(&mut self) -> &mut DecodeEngine;
+    fn step(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>>;
+}
+
+impl ContinuousStepper for DecodeEngine {
+    fn inner(&self) -> &DecodeEngine {
+        self
+    }
+    fn inner_mut(&mut self) -> &mut DecodeEngine {
+        self
+    }
+    fn step(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
+        self.step_continuous(sched)
+    }
+}
+
+impl ContinuousStepper for SpecEngine {
+    fn inner(&self) -> &DecodeEngine {
+        self.engine()
+    }
+    fn inner_mut(&mut self) -> &mut DecodeEngine {
+        self.engine_mut()
+    }
+    fn step(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
+        self.step_continuous(sched)
     }
 }
 
@@ -347,25 +412,29 @@ fn finish_kill(
 }
 
 /// Continuous worker loop: drain arrivals into the scheduler between
-/// engine steps; block only when fully idle.
-fn run_continuous(
-    engine: &mut DecodeEngine,
+/// engine steps; block only when fully idle. The caller builds the bare
+/// scheduler (the speculative driver pairs lanes, so its slot count
+/// differs); every policy knob is applied here so both drivers admit
+/// identically.
+fn run_continuous<S: ContinuousStepper>(
+    stepper: &mut S,
+    mut sched: Scheduler,
     worker_rx: &mpsc::Receiver<Msg>,
     resp_tx: &mpsc::Sender<GenResponse>,
     opts: &ServeOpts,
     log: bool,
 ) -> Result<ServeReport> {
-    let mut sched = Scheduler::new(engine.max_batch, Scheduler::DEFAULT_PROMOTE_AFTER);
     // the scheduler shares the engine's trace ring and step clock
-    sched.set_trace_sink(engine.trace_sink());
+    sched.set_trace_sink(stepper.inner().trace_sink());
     // admission ranks by prefill steps under the same budget the engine
     // chunks with (one knob: ServeOpts::prefill_budget)
-    sched.set_prefill_budget(engine.prefill_budget());
+    sched.set_prefill_budget(stepper.inner().prefill_budget());
     sched.set_queue_cap(opts.queue_cap);
     sched.set_max_queue_steps(opts.max_queue_steps);
     // prefix sharing needs packed pages to share: fp16 lanes have none
-    if opts.prefix_cache && engine.kv_plans().is_some() {
-        sched.enable_prefix_cache(engine.page_pool(), Scheduler::DEFAULT_PREFIX_ENTRIES);
+    if opts.prefix_cache && stepper.inner().kv_plans().is_some() {
+        let pool = stepper.inner().page_pool();
+        sched.enable_prefix_cache(pool, Scheduler::DEFAULT_PREFIX_ENTRIES);
     }
     let mut shutting_down = false;
     let mut draining = false;
@@ -401,24 +470,24 @@ fn run_continuous(
                 // (shed), not silently dropped: submit() returned `true`
                 while let Ok(msg) = worker_rx.try_recv() {
                     if let Msg::Req(r) = msg {
-                        shed(&mut *engine, r);
+                        shed(stepper.inner_mut(), r);
                     }
                 }
                 if log {
-                    eprintln!("[serve] continuous summary: {}", engine.serving.summary());
+                    eprintln!("[serve] continuous summary: {}", stepper.inner().serving.summary());
                 }
-                let occ = engine.occupancy_report();
-                write_obs_outputs(engine, opts, &occ);
+                let occ = stepper.inner().occupancy_report();
+                write_obs_outputs(stepper.inner(), opts, &occ);
                 let report = ServeReport {
-                    metrics: engine.metrics,
-                    serving: engine.serving.clone(),
+                    metrics: stepper.inner().metrics,
+                    serving: stepper.inner().serving.clone(),
                     occupancy: occ,
                     unserved: Vec::new(),
                 };
                 return Ok(report);
             }
             match worker_rx.recv() {
-                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched, draining),
+                Ok(Msg::Req(r)) => accept(stepper.inner_mut(), r, &mut sched, draining),
                 Ok(Msg::Drain) => {
                     shutting_down = true;
                     draining = true;
@@ -426,7 +495,7 @@ fn run_continuous(
                 }
                 Ok(Msg::Kill) => {
                     let unserved = sched.take_unserved();
-                    return finish_kill(engine, unserved, worker_rx, opts, log);
+                    return finish_kill(stepper.inner_mut(), unserved, worker_rx, opts, log);
                 }
                 Ok(Msg::Shutdown) | Err(_) => {
                     shutting_down = true;
@@ -438,7 +507,7 @@ fn run_continuous(
         let mut killed = false;
         loop {
             match worker_rx.try_recv() {
-                Ok(Msg::Req(r)) => accept(&mut *engine, r, &mut sched, draining),
+                Ok(Msg::Req(r)) => accept(stepper.inner_mut(), r, &mut sched, draining),
                 Ok(Msg::Drain) => {
                     shutting_down = true;
                     draining = true;
@@ -460,9 +529,9 @@ fn run_continuous(
         }
         if killed {
             let unserved = sched.take_unserved();
-            return finish_kill(engine, unserved, worker_rx, opts, log);
+            return finish_kill(stepper.inner_mut(), unserved, worker_rx, opts, log);
         }
-        for resp in engine.step_continuous(&mut sched)? {
+        for resp in stepper.step(&mut sched)? {
             if log {
                 eprintln!(
                     "[serve] req {} done: {} tokens in {:?} (queue {}, active {})",
@@ -477,9 +546,10 @@ fn run_continuous(
         }
         steps += 1;
         if opts.metrics_out.is_some() && steps % opts.metrics_snapshot_steps.max(1) == 0 {
-            let occ = engine.occupancy_report();
+            let occ = stepper.inner().occupancy_report();
             if let Some(path) = &opts.metrics_out {
-                if let Err(e) = write_metrics(path, &engine.metrics, &engine.serving, &occ) {
+                let eng = stepper.inner();
+                if let Err(e) = write_metrics(path, &eng.metrics, &eng.serving, &occ) {
                     eprintln!("[serve] metrics snapshot failed ({}): {e:#}", path.display());
                 }
             }

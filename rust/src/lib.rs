@@ -29,6 +29,7 @@ pub mod obs;
 pub mod profile;
 pub mod quant;
 pub mod runtime;
+pub mod spec;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -326,6 +326,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
     if replicas == 0 {
         return Err(anyhow!("--replicas must be positive"));
     }
+    let spec_k = a.get_usize("spec-k")?;
+    let spec_verify = a.get_str("spec-verify");
+    if spec_k > 0 {
+        if matches!(mode, SchedMode::Wave) {
+            return Err(anyhow!("--spec-k requires --sched continuous"));
+        }
+        // fail fast on a bad --spec-verify instead of from the worker join
+        QuantPolicy::parse(&spec_verify)?;
+    }
     let opts = ServeOpts {
         max_batch: a.get_usize("max-batch")?,
         batch_window: Duration::from_millis(5),
@@ -341,6 +350,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
         trace_out,
         metrics_out,
         occupancy,
+        spec_k,
+        spec_verify,
         ..ServeOpts::default()
     };
     if replicas > 1 {
@@ -541,6 +552,7 @@ fn cmd_info() -> Result<()> {
     println!(
         "          nxfp serve --replicas 4 --requests 64 --metrics-out fleet.prom"
     );
+    println!("          nxfp serve --spec-k 4 --spec-verify fp16 --kv-format nxfp4");
     println!("          nxfp trace check --in trace.jsonl");
     Ok(())
 }
@@ -803,6 +815,16 @@ fn main() {
                 "occupancy",
                 Some("off"),
                 "live code-occupancy probes on the KV encode path: on|off",
+            )
+            .opt(
+                "spec-k",
+                Some("0"),
+                "speculative draft depth per round (0 = off; continuous sched only)",
+            )
+            .opt(
+                "spec-verify",
+                Some("fp16"),
+                "verifier-lane KV policy for --spec-k, e.g. fp16 or nxfp6",
             )
             .parse(rest)
             .map_err(anyhow::Error::from)

@@ -70,7 +70,7 @@ fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
     let _ = writeln!(out, "{name}_count {}", h.count());
 }
 
-fn serving_counters(s: &ServingMetrics) -> [(&'static str, &'static str, u64); 13] {
+fn serving_counters(s: &ServingMetrics) -> [(&'static str, &'static str, u64); 20] {
     [
         ("admitted", "requests admitted into the batch", s.admitted),
         ("promoted", "admissions via the anti-starvation rule", s.promoted),
@@ -85,10 +85,17 @@ fn serving_counters(s: &ServingMetrics) -> [(&'static str, &'static str, u64); 1
         ("backend_failed", "requests failed after exhausting retries", s.backend_failed),
         ("shed", "requests dropped by overload policy", s.shed),
         ("deadline_expired", "requests dropped by deadline enforcement", s.deadline_expired),
+        ("spec_accepted", "draft tokens accepted by the speculative verifier", s.spec_accepted),
+        ("spec_rejected", "speculative verify rounds that rejected a draft", s.spec_rejected),
+        ("spec_forced", "verifier bonus tokens from all-accepted rounds", s.spec_forced),
+        ("spec_rollback_rows", "draft KV rows rolled back by rejections", s.spec_rollback_rows),
+        ("spec_rounds", "speculative verify rounds run", s.spec_rounds),
+        ("affinity_overrides", "dispatches steered here by prefix affinity", s.affinity_overrides),
+        ("affinity_spills", "affine dispatches that fell through to least-loaded", s.affinity_spills),
     ]
 }
 
-fn serving_histograms(s: &ServingMetrics) -> [(&'static str, &'static str, &Histogram); 10] {
+fn serving_histograms(s: &ServingMetrics) -> [(&'static str, &'static str, &Histogram); 11] {
     [
         ("latency_seconds", "end-to-end request latency", &s.latency),
         ("ttft_seconds", "time to first generated token", &s.ttft),
@@ -100,7 +107,19 @@ fn serving_histograms(s: &ServingMetrics) -> [(&'static str, &'static str, &Hist
         ("prefix_rows_adopted", "cached prefix rows adopted per hit", &s.prefix_rows),
         ("shared_pages", "KV pages shared via prefix COW, per step", &s.shared_pages),
         ("retry_backoff_seconds", "backoff slept before each retry", &s.retry_backoff),
+        ("spec_accept", "per-round speculative acceptance rate", &s.spec_accept),
     ]
+}
+
+/// Derived serving gauges (currently just the speculative acceptance
+/// rate — the live draft-vs-verifier fidelity probe). A helper so the
+/// single-engine and fleet renderers emit the identical family.
+fn serving_gauges(s: &ServingMetrics) -> [(&'static str, &'static str, f64); 1] {
+    [(
+        "nxfp_spec_accept_rate",
+        "accepted draft tokens over all draft tokens judged",
+        s.spec_accept_rate(),
+    )]
 }
 
 /// Render the Prometheus text exposition for one engine's metrics.
@@ -121,6 +140,9 @@ pub fn render_prometheus(m: &Metrics, s: &ServingMetrics, occ: &[CodeOccupancy])
     prom_gauge(&mut out, "nxfp_kv_savings", "fp16 bits per packed bit", m.kv_savings());
     for (name, help, v) in serving_counters(s) {
         prom_counter(&mut out, &format!("nxfp_{name}_total"), help, v);
+    }
+    for (name, help, v) in serving_gauges(s) {
+        prom_gauge(&mut out, name, help, v);
     }
     for (name, help, h) in serving_histograms(s) {
         prom_histogram(&mut out, &format!("nxfp_{name}"), help, h);
@@ -181,6 +203,7 @@ pub fn render_metrics_json(m: &Metrics, s: &ServingMetrics, occ: &[CodeOccupancy
         first = false;
         let _ = write!(out, "\"{name}\":{v}");
     }
+    let _ = write!(out, ",\"spec_accept_rate\":{}", s.spec_accept_rate());
     for (name, _, h) in serving_histograms(s) {
         out.push(',');
         json_hist(&mut out, name, h);
@@ -298,6 +321,15 @@ pub fn render_fleet_prometheus(
             let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {rv}");
         }
     }
+    for (gi, (name, help, v)) in serving_gauges(s).into_iter().enumerate() {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+        for (i, (_, rs)) in replicas.iter().enumerate() {
+            let rv = serving_gauges(rs)[gi].2;
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {rv}");
+        }
+    }
     for (hi, (name, help, h)) in serving_histograms(s).into_iter().enumerate() {
         let name = format!("nxfp_{name}");
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -406,6 +438,12 @@ mod tests {
             s.latency.record(v);
         }
         s.queue_depth.record(2.0);
+        s.spec_accepted = 6;
+        s.spec_rejected = 2;
+        s.spec_forced = 1;
+        s.spec_rollback_rows = 3;
+        s.spec_rounds = 3;
+        s.spec_accept.record(0.75);
         let mut occ = CodeOccupancy::new(&NxConfig::nxfp(4));
         occ.counts[0] = 10;
         occ.counts[3] = 5;
@@ -463,6 +501,35 @@ mod tests {
         assert!(text.contains("\"clip_rate\":0.125"));
         // config names with parens/spaces must be escaped-safe
         assert!(!text.contains("\n{"), "single JSON object expected");
+    }
+
+    #[test]
+    fn spec_accept_rate_surfaces_in_both_renderers_and_fleet() {
+        let (m, s, occ) = sample();
+        let prom = render_prometheus(&m, &s, &occ);
+        assert!(prom.contains("# TYPE nxfp_spec_accept_rate gauge"));
+        assert!(prom.contains("nxfp_spec_accept_rate 0.75"));
+        assert!(prom.contains("nxfp_spec_accepted_total 6"));
+        assert!(prom.contains("nxfp_spec_rounds_total 3"));
+        assert!(prom.contains("# TYPE nxfp_spec_accept histogram"));
+        let json = render_metrics_json(&m, &s, &occ);
+        assert!(json.contains("\"spec_accept_rate\":0.75"));
+        assert!(json.contains("\"spec_accepted\":6"));
+        assert!(json.contains("\"spec_rollback_rows\":3"));
+        assert!(json.contains("\"spec_accept\":{\"count\":1"));
+        // fleet: rollup rate derives from summed counters, replicas labeled
+        let s1 = ServingMetrics::default();
+        let m1 = Metrics::default();
+        let mut roll = s.clone();
+        roll.merge(&s1).unwrap();
+        let reps: Vec<(&Metrics, &ServingMetrics)> = vec![(&m, &s), (&m1, &s1)];
+        let fleet = render_fleet_prometheus(&m, &roll, &reps, &[]);
+        assert!(fleet.contains("nxfp_spec_accept_rate 0.75"));
+        assert!(fleet.contains("nxfp_spec_accept_rate{replica=\"0\"} 0.75"));
+        assert!(fleet.contains("nxfp_spec_accept_rate{replica=\"1\"} 0"));
+        assert!(fleet.contains("nxfp_spec_accepted_total{replica=\"0\"} 6"));
+        let fjson = render_fleet_json(&m, &roll, &reps, &[]);
+        assert!(fjson.contains("\"spec_accept_rate\":0.75"));
     }
 
     #[test]

@@ -33,7 +33,8 @@
 //! New ──Enqueued──► Queued ──Admitted──► Active ──Finished──► Done
 //!  │                  │  ▲                 │ │
 //!  │                  │  └────Requeued─────┘ ├─ Promoted / PrefixAdopted
-//!  │                  │                      └─ PrefillChunk
+//!  │                  │                      ├─ PrefillChunk
+//!  │                  │                      └─ Draft / Verify / Rollback
 //!  ├──Admitted──► Active            (wave mode skips the queue)
 //!  └──Shed / Finished{…}──► …       (cap shed, drain shed, rejection)
 //! ```
@@ -90,6 +91,16 @@ pub enum TraceEvent {
     Shed,
     /// Deadline enforcement dropped the request (admission or in-flight).
     DeadlineExpired,
+    /// Speculative round drafted `k` provisional tokens on the
+    /// low-precision lane (one event per verify round; `k` is the actual
+    /// proposal count after tail clamping, not the configured target).
+    Draft { k: usize },
+    /// Verifier judged the drafted prefix: `accepted` proposals stood.
+    /// Paired 1:1 with the preceding `Draft` for the same request.
+    Verify { accepted: usize },
+    /// Rejection rolled back `rows` draft KV rows (proposals past the
+    /// first rejected position). Emitted only when a `Verify` rejected.
+    Rollback { rows: usize },
     /// Response produced; `reason` matches the `GenResponse` exactly.
     Finished { reason: FinishReason },
 }
@@ -107,6 +118,9 @@ impl TraceEvent {
             TraceEvent::PrefixAdopted { .. } => "prefix_adopted",
             TraceEvent::Shed => "shed",
             TraceEvent::DeadlineExpired => "deadline_expired",
+            TraceEvent::Draft { .. } => "draft",
+            TraceEvent::Verify { .. } => "verify",
+            TraceEvent::Rollback { .. } => "rollback",
             TraceEvent::Finished { .. } => "finished",
         }
     }
@@ -342,6 +356,8 @@ pub struct TraceSummary {
     pub shed: u64,
     pub deadline_expired: u64,
     pub prefix_hits: u64,
+    pub spec_rounds: u64,
+    pub spec_rejected: u64,
     pub dropped: u64,
 }
 
@@ -357,6 +373,8 @@ impl TraceSummary {
             shed: s.shed,
             deadline_expired: s.deadline_expired,
             prefix_hits: s.prefix_hits,
+            spec_rounds: s.spec_rounds,
+            spec_rejected: s.spec_rejected,
             dropped: 0,
         }
     }
@@ -365,7 +383,8 @@ impl TraceSummary {
         format!(
             "{{\"type\":\"summary\",\"admitted\":{},\"promoted\":{},\"rejected\":{},\
              \"retries\":{},\"requeued\":{},\"backend_failed\":{},\"shed\":{},\
-             \"deadline_expired\":{},\"prefix_hits\":{},\"dropped\":{}}}",
+             \"deadline_expired\":{},\"prefix_hits\":{},\"spec_rounds\":{},\
+             \"spec_rejected\":{},\"dropped\":{}}}",
             self.admitted,
             self.promoted,
             self.rejected,
@@ -375,6 +394,8 @@ impl TraceSummary {
             self.shed,
             self.deadline_expired,
             self.prefix_hits,
+            self.spec_rounds,
+            self.spec_rejected,
             self.dropped
         )
     }
@@ -403,6 +424,15 @@ fn entry_to_json(e: &TraceEntry) -> String {
                     let _ = write!(s, ",\"attempt\":{attempt}");
                 }
                 TraceEvent::PrefixAdopted { rows } => {
+                    let _ = write!(s, ",\"rows\":{rows}");
+                }
+                TraceEvent::Draft { k } => {
+                    let _ = write!(s, ",\"k\":{k}");
+                }
+                TraceEvent::Verify { accepted } => {
+                    let _ = write!(s, ",\"accepted\":{accepted}");
+                }
+                TraceEvent::Rollback { rows } => {
                     let _ = write!(s, ",\"rows\":{rows}");
                 }
                 TraceEvent::Finished { reason } => {
@@ -596,6 +626,9 @@ fn entry_from_fields(obj: &[(String, Jv)]) -> Option<TraceEntry> {
                 }
                 "shed" => TraceEvent::Shed,
                 "deadline_expired" => TraceEvent::DeadlineExpired,
+                "draft" => TraceEvent::Draft { k: num_field(obj, "k")? as usize },
+                "verify" => TraceEvent::Verify { accepted: num_field(obj, "accepted")? as usize },
+                "rollback" => TraceEvent::Rollback { rows: num_field(obj, "rows")? as usize },
                 "finished" => {
                     TraceEvent::Finished { reason: reason_from_name(str_field(obj, "reason")?)? }
                 }
@@ -619,6 +652,8 @@ fn summary_from_fields(obj: &[(String, Jv)]) -> Option<TraceSummary> {
         shed: g("shed"),
         deadline_expired: g("deadline_expired"),
         prefix_hits: g("prefix_hits"),
+        spec_rounds: g("spec_rounds"),
+        spec_rejected: g("spec_rejected"),
         dropped: g("dropped"),
     })
 }
@@ -696,7 +731,10 @@ pub fn check_trace(trace: &Trace) -> Vec<String> {
             (
                 TraceEvent::Promoted
                 | TraceEvent::PrefixAdopted { .. }
-                | TraceEvent::PrefillChunk { .. },
+                | TraceEvent::PrefillChunk { .. }
+                | TraceEvent::Draft { .. }
+                | TraceEvent::Verify { .. }
+                | TraceEvent::Rollback { .. },
                 St::Active,
             ) => {}
             (TraceEvent::Shed, St::New | St::Queued) => {}
@@ -729,6 +767,11 @@ pub fn check_trace(trace: &Trace) -> Vec<String> {
             ("shed events", c(&by_name, "shed"), sum.shed),
             ("deadline events", c(&by_name, "deadline_expired"), sum.deadline_expired),
             ("prefix_adopted events", c(&by_name, "prefix_adopted"), sum.prefix_hits),
+            // every verify round emits exactly one Draft and one Verify;
+            // every rejecting round emits exactly one Rollback
+            ("draft events", c(&by_name, "draft"), sum.spec_rounds),
+            ("verify events", c(&by_name, "verify"), sum.spec_rounds),
+            ("rollback events", c(&by_name, "rollback"), sum.spec_rejected),
             ("finished(rejected)", c(&finished, "rejected"), sum.rejected),
             ("finished(backend_error)", c(&finished, "backend_error"), sum.backend_failed),
             ("finished(shed)", c(&finished, "shed"), sum.shed),
@@ -963,6 +1006,44 @@ mod tests {
         sink.event(Some(5), TraceEvent::Admitted { lane: 1 });
         let trace = Trace { entries: sink.entries(), summary: None };
         assert_eq!(check_trace(&trace).len(), 1);
+    }
+
+    #[test]
+    fn spec_events_round_trip_and_count_check() {
+        let sink = TraceSink::enabled(64);
+        sink.event(Some(9), TraceEvent::Admitted { lane: 0 });
+        sink.event(Some(9), TraceEvent::Draft { k: 4 });
+        sink.event(Some(9), TraceEvent::Verify { accepted: 2 });
+        sink.event(Some(9), TraceEvent::Rollback { rows: 1 });
+        sink.event(Some(9), TraceEvent::Draft { k: 4 });
+        sink.event(Some(9), TraceEvent::Verify { accepted: 4 });
+        sink.event(Some(9), TraceEvent::Finished { reason: FinishReason::Completed });
+        let dir = std::env::temp_dir().join(format!("nxfp-obs-spec-{}", std::process::id()));
+        let path = dir.join("trace.jsonl");
+        let summary =
+            TraceSummary { admitted: 1, spec_rounds: 2, spec_rejected: 1, ..TraceSummary::default() };
+        sink.write_jsonl(&path, &summary).unwrap();
+        let trace = read_jsonl(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(trace.entries, sink.entries());
+        assert_eq!(trace.summary.as_ref().unwrap().spec_rounds, 2);
+        assert!(check_trace(&trace).is_empty(), "{:?}", check_trace(&trace));
+        // a dropped Verify breaks the draft==verify==spec_rounds equality
+        let mut pruned = trace.clone();
+        pruned.entries.remove(5);
+        let viol = check_trace(&pruned);
+        assert!(viol.iter().any(|v| v.contains("verify events")), "{viol:?}");
+    }
+
+    #[test]
+    fn spec_events_are_illegal_outside_active() {
+        let sink = TraceSink::enabled(16);
+        sink.event(Some(7), TraceEvent::Enqueued);
+        sink.event(Some(7), TraceEvent::Draft { k: 2 });
+        let trace = Trace { entries: sink.entries(), summary: None };
+        let viol = check_trace(&trace);
+        assert_eq!(viol.len(), 1, "{viol:?}");
+        assert!(viol[0].contains("Draft"));
     }
 
     #[test]

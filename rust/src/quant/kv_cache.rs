@@ -279,6 +279,35 @@ impl Stream {
         self.rows = rows;
     }
 
+    /// Truncate to `rows` logical rows (speculative-decode rollback),
+    /// releasing every wholly-trailing page back to the pool. The tail
+    /// page is handled like an adopted tail: if it is exclusively owned
+    /// its extra rows are dropped eagerly (cheap [`BlockStore`]
+    /// truncation); if it is shared, the extra rows stay — exactly the
+    /// slack the struct invariant allows — and the next append truncates
+    /// or copy-on-writes them away via [`Stream::writable_tail`].
+    /// [`Stream::dequant_rows`] and [`Stream::materialize`] never read
+    /// past `self.rows`, so readers are oblivious either way.
+    fn truncate(&mut self, rows: usize) {
+        assert!(rows <= self.rows, "truncate cannot grow a stream");
+        if rows == self.rows {
+            return;
+        }
+        let mut pool = self.pool.borrow_mut();
+        let page_rows = pool.page_rows();
+        let keep = rows.div_ceil(page_rows);
+        for id in self.pages.drain(keep..) {
+            pool.release(id);
+        }
+        self.rows = rows;
+        if let Some(&tail) = self.pages.last() {
+            let local = rows - (keep - 1) * page_rows;
+            if pool.refs(tail) == 1 && pool.rows(tail) > local {
+                pool.store_mut(tail).truncate_rows(local);
+            }
+        }
+    }
+
     /// Shared decode routine: rows `from..to` into the row-major `out`
     /// slab (`dim` floats per row). Both the full and the incremental
     /// path go through here, which is what makes them bit-identical by
@@ -560,6 +589,25 @@ impl KvCache {
     /// fresh cache in: packed rows, watermark 0.)
     pub fn reset_watermark(&mut self) {
         self.clean = 0;
+    }
+
+    /// Roll the cache back to its first `rows` rows (the
+    /// speculative-decode rejection path): wholly-trailing pages are
+    /// released per stream, both logical lengths shrink, and the dirty-row
+    /// watermark clamps — lane rows `0..rows` were decoded bit-exactly and
+    /// are never re-synced, while the next
+    /// [`KvCache::dequantize_into_slab`] resumes from the truncation
+    /// point. The caller owns zeroing any stale lane rows beyond `rows`
+    /// (the same division of labor `move_lane` has with its vacated lane).
+    pub fn truncate_rows(&mut self, rows: usize) {
+        assert!(rows <= self.len, "truncate_rows cannot grow a cache");
+        if rows == self.len {
+            return;
+        }
+        self.k.truncate(rows);
+        self.v.truncate(rows);
+        self.len = rows;
+        self.clean = self.clean.min(rows);
     }
 
     /// Bit-true stored footprint of the cache (both K and V).
@@ -1045,5 +1093,117 @@ mod tests {
         assert_eq!(cache.len, 0);
         assert_eq!(cache.watermark(), 0);
         assert_eq!(cache.footprint_bits(), 0);
+    }
+
+    #[test]
+    fn truncate_rows_rolls_back_to_a_bitwise_prefix() {
+        // the speculative-decode rollback primitive: cut an overshooting
+        // cache back to a prefix and everything — packed stores, released
+        // pages, watermark resume, appends after the cut — must match a
+        // cache that never overshot
+        let dim = 48usize;
+        let mut rng = Rng::seeded(97);
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let plan = KvStreamPlan::new(&NxConfig::nxfp(4));
+        let mut cache = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        let mut control = KvCache::with_plans_in(dim, plan.clone(), plan, 0, pool.clone());
+        let rows: Vec<Vec<f32>> = (0..11)
+            .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        for r in &rows {
+            cache.append(r, r);
+        }
+        for r in &rows[..5] {
+            control.append(r, r);
+        }
+        // decode everything so the watermark sits past the cut
+        let mut k = vec![0.0f32; 16 * dim];
+        let mut v = vec![0.0f32; 16 * dim];
+        assert_eq!(cache.dequantize_into_slab(&mut k, &mut v), 0..11);
+        let live_before = pool.borrow().live_pages();
+        cache.truncate_rows(5);
+        assert_eq!(cache.len, 5);
+        assert_eq!(cache.watermark(), 5);
+        // rows 8..11 lived on a wholly-trailing page per stream (page
+        // geometry 4): exactly those two pages are released; the tail
+        // page (rows 4..8) survives truncated in place
+        assert_eq!(pool.borrow().live_pages(), live_before - 2);
+        let (ck, cv) = cache.stores();
+        let (wk, wv) = control.stores();
+        assert_eq!(ck, wk);
+        assert_eq!(cv, wv);
+        // appends after the rollback continue bit-identically to a cache
+        // that never overshot
+        let fresh: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        cache.append(&fresh, &fresh);
+        control.append(&fresh, &fresh);
+        let (ck, cv) = cache.stores();
+        let (wk, wv) = control.stores();
+        assert_eq!(ck, wk);
+        assert_eq!(cv, wv);
+        // incremental decode resumes at the truncation point: only the
+        // fresh row is re-synced and the decoded prefix matches a clean
+        // control sync bit for bit (rows past the cut are the caller's
+        // to zero — dequant never reads them)
+        let mut k2 = vec![0.0f32; 16 * dim];
+        let mut v2 = vec![0.0f32; 16 * dim];
+        assert_eq!(cache.dequantize_into_slab(&mut k, &mut v), 5..6);
+        control.dequantize_into_slab(&mut k2, &mut v2);
+        assert_eq!(&k[..6 * dim], &k2[..6 * dim]);
+        assert_eq!(&v[..6 * dim], &v2[..6 * dim]);
+    }
+
+    #[test]
+    fn truncate_rows_leaves_shared_tails_for_cow() {
+        // a rollback cutting into a *shared* (adopted) tail page must not
+        // touch the stored rows — sharers keep reading them — and the
+        // next divergent append copy-on-writes exactly like an adopted
+        // prefix does
+        let dim = 32usize;
+        let mut rng = Rng::seeded(98);
+        let pool = Rc::new(RefCell::new(PagePool::new(4)));
+        let plan = KvStreamPlan::new(&NxConfig::nxfp(5));
+        let mut donor = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        for r in &rows {
+            donor.append(r, r);
+        }
+        let mut slot = KvCache::with_plans_in(dim, plan.clone(), plan.clone(), 0, pool.clone());
+        {
+            let (k_ids, v_ids) = donor.page_ids();
+            let (k_ids, v_ids) = (k_ids.to_vec(), v_ids.to_vec());
+            slot.adopt_pages(6, &k_ids, &v_ids);
+        }
+        slot.truncate_rows(5);
+        assert_eq!(slot.len, 5);
+        // the shared tail keeps both donor rows in storage (refcount > 1
+        // forbids in-place truncation)…
+        let tail = slot.page_ids().0[1];
+        assert_eq!(pool.borrow().rows(tail), 2);
+        // …but reads clip to the logical length
+        let mut control = KvCache::with_plans_in(dim, plan.clone(), plan, 0, pool.clone());
+        for r in &rows[..5] {
+            control.append(r, r);
+        }
+        let (sk, sv) = slot.stores();
+        let (wk, wv) = control.stores();
+        assert_eq!(sk, wk);
+        assert_eq!(sv, wv);
+        // divergent append past the cut copy-on-writes the tail; the
+        // donor's full 6 rows survive bit-exactly
+        let div: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        slot.append(&div, &div);
+        assert_ne!(slot.page_ids().0[1], donor.page_ids().0[1]);
+        let mut donor_control =
+            KvCache::with_plans_in(dim, KvStreamPlan::new(&NxConfig::nxfp(5)), KvStreamPlan::new(&NxConfig::nxfp(5)), 0, pool.clone());
+        for r in &rows {
+            donor_control.append(r, r);
+        }
+        let (dk, dv) = donor.stores();
+        let (gk, gv) = donor_control.stores();
+        assert_eq!(dk, gk);
+        assert_eq!(dv, gv);
     }
 }

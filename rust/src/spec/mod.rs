@@ -1,0 +1,708 @@
+//! Precision-speculative decoding: the quantized model **drafts for
+//! itself** (paper §2 direct-cast fidelity, turned into a latency win).
+//!
+//! NxFP's claim is that direct-cast nxfp4/5 tracks fp16 closely enough to
+//! serve from. Speculative decoding makes that claim operational: the
+//! low-precision *draft* lane greedily proposes `k` tokens one step at a
+//! time, then a *verifier* lane holding the **same checkpoint** at high
+//! precision (fp16 or nxfp6) scores all `k` proposals in one batched
+//! multi-token call ([`crate::coordinator::StepBackend::verify_chunk`]).
+//! The accepted prefix is committed to both lanes, the first rejected
+//! position takes the verifier's token, and the draft rolls its packed KV
+//! back ([`SlotKv::truncate`]) — the verifier **never** rolls back. There
+//! is no separate draft model to train or load: both lanes run the same
+//! weights, only the KV precision differs.
+//!
+//! # Lane pairing
+//!
+//! A [`SpecEngine`] wraps one [`DecodeEngine`] whose `B`-lane slab is
+//! split into `pairs = B / 2` draft lanes (`0..pairs`, scheduled by a
+//! [`Scheduler`] built with `lanes_per_request = 2`) and `pairs` verifier
+//! lanes (`pairs + p` for pair `p`). The scheduler's paired-lane capacity
+//! math guarantees a draft lane is never admitted without its verifier
+//! lane. Draft lanes carry the engine's serving `QuantPolicy`; verifier
+//! lanes carry [`SpecPolicy::verify`]'s resolution (an independent
+//! [`KvPlans`] table — `None` = raw fp16 rows in the slab).
+//!
+//! # The round invariant
+//!
+//! With `P` prompt tokens and `g` *confirmed* generations, the last
+//! confirmed token sits at output index `F = P + g - 1` and the draft
+//! lane holds exactly `F + prov` rows, where `prov` is the number of
+//! provisional proposals currently on the output tail (the engine runs
+//! with `spec_hold` set, so sampled tokens are pushed but never counted,
+//! surfaced, or finished until a verify round judges them). Each round:
+//!
+//! 1. **Draft** — micro-steps ([`DecodeEngine::step_slots`]) until every
+//!    decoding pair holds `target = min(k, max_new - g, S - P - g)`
+//!    proposals (pairs already at target are held out of the step).
+//! 2. **Verify** — feed the `m + 1` tokens `output[F..=F+m]` at positions
+//!    `F..=F+m` through the verifier lane; row `i`'s greedy argmax is the
+//!    verifier's token for output index `P + g + i`.
+//! 3. **Commit** — accept the longest matching prefix `a`. On a reject
+//!    (`a < m`): truncate the output to `P + g + a`, push the verifier's
+//!    correction, roll the draft KV back to `F + a + 1` rows, zero the
+//!    stale lane tail, and append the `a + 1` verified rows to the
+//!    verifier lane. On an all-accept: the verifier's next token rides
+//!    along free (the classic bonus token) and the draft adopts the
+//!    verifier's row for position `F + m` — backend KV rows are pure
+//!    functions of `(token, position, layer)`, so each lane quantizes (or
+//!    keeps raw) its own copy of the same row.
+//!
+//! Greedy sampling makes the construction exact: every confirmed token is
+//! either verified-equal to the verifier's argmax or *is* the verifier's
+//! argmax, so speculative output is **bit-identical** to verifier-alone
+//! greedy decode for every `k` — the fp16-verifier configuration equals
+//! plain fp16 serving, and the nxfp6-verifier configuration equals plain
+//! nxfp6 serving. A quantized verifier feeds one token per verify call
+//! (re-quantizing between tokens); only the raw-lane fp16 verifier may
+//! take the whole chunk in one call, because intra-chunk scratch rows are
+//! raw by construction.
+//!
+//! # Acceptance rate as a fidelity probe
+//!
+//! The acceptance rate of an nxfp4 draft against an fp16 verifier is
+//! exactly the online nxfp-vs-fp16 agreement the paper argues for —
+//! surfaced per round in `ServingMetrics::spec_accept`, as the
+//! `nxfp_spec_accept_rate` gauge in both metrics exporters, and in bench
+//! JSON, so the fidelity-vs-format trade becomes a served-traffic
+//! observable.
+
+use anyhow::{bail, ensure, Result};
+use std::time::Instant;
+
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::{
+    fault, greedy_argmax, DecodeEngine, GenResponse, Requeue, Slot, SlotKv, SlotState,
+};
+use crate::formats::QuantPolicy;
+use crate::obs::TraceEvent;
+use crate::quant::kv_cache::KvPlans;
+
+/// Speculative-decoding policy: how many tokens the draft proposes per
+/// round and the precision the verifier lane holds the checkpoint at.
+#[derive(Clone, Debug)]
+pub struct SpecPolicy {
+    /// Proposals per round (`--spec-k`; 1 degenerates to plain decode
+    /// with a free bonus token per accepted round).
+    pub k: usize,
+    /// Verifier-lane KV policy (`--spec-verify`; `fp16` = raw rows, the
+    /// reference the paper compares against).
+    pub verify: QuantPolicy,
+}
+
+impl SpecPolicy {
+    pub fn new(k: usize, verify: QuantPolicy) -> Self {
+        SpecPolicy { k, verify }
+    }
+
+    /// Parse the CLI shape: a draft depth plus a `--spec-verify` policy
+    /// spec string (`fp16`, `nxfp6`, or any `selector=format` policy).
+    pub fn parse(k: usize, verify: &str) -> Result<Self> {
+        Ok(SpecPolicy { k, verify: QuantPolicy::parse(verify)? })
+    }
+}
+
+/// Verifier-side state for one lane pair: the packed KV mirror (for a
+/// quantized verifier; `None` = raw fp16 rows live only in the slab), the
+/// verifier lane's row count, and the confirmed-generation counter the
+/// round invariant is anchored to.
+struct PairState {
+    req_id: u64,
+    vkv: Option<SlotKv>,
+    /// Rows present in the verifier lane (tokens `output[0..vfill]` fed).
+    vfill: usize,
+    /// Confirmed (verified) generations; `output.len() - P - confirmed`
+    /// tokens on the tail are provisional proposals.
+    confirmed: usize,
+}
+
+/// Draft-then-verify serving loop over a paired-lane [`DecodeEngine`].
+///
+/// Construction splits the engine's lane pool in half (see the module
+/// docs) and flips the engine into `spec_hold` mode; drive it with a
+/// scheduler from [`SpecEngine::scheduler`] via
+/// [`SpecEngine::serve_continuous`] or [`SpecEngine::step_continuous`].
+pub struct SpecEngine {
+    engine: DecodeEngine,
+    policy: SpecPolicy,
+    /// Verifier-lane KV resolution (`None` = raw fp16 rows).
+    verify_plans: Option<KvPlans>,
+    pairs: usize,
+    vstate: Vec<Option<PairState>>,
+}
+
+/// Gather rows `n0..n0 + n` of every layer out of a layer-major
+/// `[L, total, D]` chunk tensor pair (the verifier commits only the rows
+/// of verified tokens; the draft adopts the bonus row).
+fn gather_rows(
+    k_rows: &[f32],
+    v_rows: &[f32],
+    l: usize,
+    total: usize,
+    n0: usize,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::with_capacity(l * n * d);
+    let mut v = Vec::with_capacity(l * n * d);
+    for li in 0..l {
+        let at = (li * total + n0) * d;
+        k.extend_from_slice(&k_rows[at..at + n * d]);
+        v.extend_from_slice(&v_rows[at..at + n * d]);
+    }
+    (k, v)
+}
+
+impl SpecEngine {
+    /// Wrap `engine` for speculative serving. Fails on a verifier policy
+    /// the engine cannot resolve, `k == 0`, or a lane pool too small to
+    /// hold one draft/verifier pair.
+    pub fn new(engine: DecodeEngine, policy: SpecPolicy) -> Result<Self> {
+        ensure!(policy.k >= 1, "--spec-k must be at least 1");
+        ensure!(
+            engine.max_batch >= 2,
+            "speculative decoding needs at least 2 lanes (one draft/verifier pair), got {}",
+            engine.max_batch
+        );
+        let verify_plans = KvPlans::from_policy(&policy.verify, engine.spec.n_layers)?;
+        let pairs = engine.max_batch / 2;
+        let mut engine = engine;
+        engine.spec_hold = true;
+        Ok(SpecEngine {
+            vstate: (0..pairs).map(|_| None).collect(),
+            engine,
+            policy,
+            verify_plans,
+            pairs,
+        })
+    }
+
+    /// A continuous scheduler shaped for this engine's paired lanes
+    /// (`lanes_per_request = 2`: every admission reserves a draft lane
+    /// *and* its verifier lane; queue-cap, promotion, and drain all count
+    /// pair slots).
+    pub fn scheduler(&self, promote_after: u64) -> Scheduler {
+        Scheduler::with_lanes_per_request(self.engine.max_batch, promote_after, 2)
+    }
+
+    pub fn pairs(&self) -> usize {
+        self.pairs
+    }
+
+    pub fn policy(&self) -> &SpecPolicy {
+        &self.policy
+    }
+
+    pub fn engine(&self) -> &DecodeEngine {
+        &self.engine
+    }
+
+    /// Mutable engine access for serving configuration (trace sinks,
+    /// retry policy, deadlines, prefill budget, fault injection).
+    pub fn engine_mut(&mut self) -> &mut DecodeEngine {
+        &mut self.engine
+    }
+
+    /// Unwrap the engine (metrics extraction after a drain).
+    pub fn into_engine(self) -> DecodeEngine {
+        self.engine
+    }
+
+    /// Confirmed generations of pair `p`'s current occupant (0 until its
+    /// first verify round).
+    fn confirmed(&self, p: usize, sl: &Slot) -> usize {
+        match &self.vstate[p] {
+            Some(st) if st.req_id == sl.request_id() => st.confirmed,
+            _ => 0,
+        }
+    }
+
+    /// Provisional (unverified) proposals on pair `p`'s output tail.
+    fn proposals(&self, p: usize, sl: &Slot) -> usize {
+        sl.output().len() - sl.request().prompt.len() - self.confirmed(p, sl)
+    }
+
+    /// This round's draft depth for pair `p`: `k` clamped to the
+    /// request's remaining token budget and the context window (both at
+    /// least 1 for any slot that has not finished).
+    fn round_target(&self, p: usize, sl: &Slot) -> usize {
+        let pp = sl.request().prompt.len();
+        let g = self.confirmed(p, sl);
+        let rem = (sl.request().max_new - g).min(self.engine.spec.seq_len - pp - g);
+        debug_assert!(rem >= 1, "unfinished slot with no remaining budget");
+        self.policy.k.min(rem)
+    }
+
+    /// Drop verifier state whose pair lane no longer holds the request it
+    /// was built for (finished, expired, faulted, or re-admitted): clear
+    /// the [`PairState`] and zero the verifier lane, restoring the
+    /// free-lanes-are-zero invariant for the next occupant.
+    fn reconcile(&mut self, sched: &Scheduler) {
+        for p in 0..self.pairs {
+            let keep = match (&self.vstate[p], sched.slots()[p].as_ref()) {
+                (Some(st), Some(sl)) => st.req_id == sl.request_id(),
+                (Some(_), None) => false,
+                (None, _) => true,
+            };
+            if !keep {
+                self.vstate[p] = None;
+                self.engine.zero_lane_rows(self.pairs + p, 0);
+            }
+        }
+    }
+
+    /// One speculative serving round: admit, chunk-prefill, draft to
+    /// target, verify every drafted pair, and advance the scheduler
+    /// clock. One call is one scheduler step — the unit the spec bench's
+    /// steps-per-token measurement counts — and may confirm up to `k + 1`
+    /// tokens per pair.
+    pub fn step_continuous(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
+        ensure!(
+            sched.slots().len() == self.pairs && sched.lanes_per_request() == 2,
+            "scheduler shape mismatch: want {} pair slots at 2 lanes each (use \
+             SpecEngine::scheduler)",
+            self.pairs
+        );
+        let t0 = Instant::now();
+        let mut done = Vec::new();
+        let mut requeue = Vec::new();
+        self.engine.expire_slots(sched.slots_mut(), &mut done);
+        self.engine.admit(sched, &mut done);
+        self.reconcile(sched);
+        if sched.active() > 0 {
+            self.engine.chunk_prefill(sched.slots_mut(), &mut done, &mut requeue, true);
+            self.reconcile(sched);
+        }
+        if sched.active() > 0 {
+            self.draft(sched, &mut done, &mut requeue);
+            self.verify(sched, &mut done, &mut requeue)?;
+            self.reconcile(sched);
+        }
+        for r in requeue {
+            sched.requeue(r);
+        }
+        if sched.prefix_enabled() {
+            let pool = self.engine.page_pool();
+            let shared = pool.borrow().shared_pages() as f64;
+            self.engine.serving.shared_pages.record(shared);
+        }
+        let depth = sched.tick();
+        self.engine.serving.queue_depth.record(depth as f64);
+        self.engine.metrics.wall += t0.elapsed();
+        Ok(done)
+    }
+
+    /// Drive the paired-lane scheduler until the queue and all pairs
+    /// drain.
+    pub fn serve_continuous(&mut self, sched: &mut Scheduler) -> Result<Vec<GenResponse>> {
+        let mut out = Vec::new();
+        while sched.has_work() {
+            out.extend(self.step_continuous(sched)?);
+        }
+        Ok(out)
+    }
+
+    /// Draft phase: engine micro-steps until every decoding pair holds
+    /// its round target of proposals. Pairs already at target are lifted
+    /// out of the lane pool for the step (their lanes are untouched —
+    /// per-slot purity keeps the others bit-identical); prefilling pairs
+    /// keep stepping through their prompt and start proposing the moment
+    /// prefill finishes. Prefix registration runs after every micro-step
+    /// so a freshly decoded prompt is offered to the cache at exactly the
+    /// fill the plain engine would have registered it at.
+    fn draft(
+        &mut self,
+        sched: &mut Scheduler,
+        done: &mut Vec<GenResponse>,
+        requeue: &mut Vec<Requeue>,
+    ) {
+        loop {
+            let mut pending = 0usize;
+            let mut held: Vec<(usize, Slot)> = Vec::new();
+            for p in 0..self.pairs {
+                let at_target = match sched.slots()[p].as_ref() {
+                    Some(sl) if sl.state() == SlotState::Decoding => {
+                        self.proposals(p, sl) >= self.round_target(p, sl)
+                    }
+                    Some(_) => false, // still prefilling
+                    None => continue,
+                };
+                if at_target {
+                    held.push((p, sched.slots_mut()[p].take().unwrap()));
+                } else {
+                    pending += 1;
+                }
+            }
+            if pending == 0 {
+                for (p, sl) in held {
+                    sched.slots_mut()[p] = Some(sl);
+                }
+                return;
+            }
+            self.engine.step_slots(sched.slots_mut(), done, requeue, true);
+            for (p, sl) in held {
+                sched.slots_mut()[p] = Some(sl);
+            }
+            sched.register_prefixes();
+            self.reconcile(sched);
+        }
+    }
+
+    /// Verify phase: judge every decoding pair's proposals. A verify
+    /// fault retires the pair down the same requeue-and-replay ladder as
+    /// a step fault; a backend with no native verify path aborts serving
+    /// (speculation must never silently degrade to unverified output).
+    fn verify(
+        &mut self,
+        sched: &mut Scheduler,
+        done: &mut Vec<GenResponse>,
+        requeue: &mut Vec<Requeue>,
+    ) -> Result<()> {
+        for p in 0..self.pairs {
+            let judge = match sched.slots()[p].as_ref() {
+                Some(sl) if sl.state() == SlotState::Decoding => self.proposals(p, sl) > 0,
+                _ => false,
+            };
+            if !judge {
+                continue;
+            }
+            let vlane = self.pairs + p;
+            let mut sl = sched.slots_mut()[p].take().expect("verify: empty pair lane");
+            match self.verify_slot(&mut sl, p, vlane) {
+                Ok(Some(true)) => {
+                    // confirmed through its budget: retire the pair
+                    self.engine.finish_slot(sl, p, done);
+                    self.engine.zero_lane_rows(vlane, 0);
+                    self.vstate[p] = None;
+                }
+                Ok(Some(false)) => sched.slots_mut()[p] = Some(sl),
+                Ok(None) => {
+                    sched.slots_mut()[p] = Some(sl);
+                    bail!(
+                        "backend has no speculative verify path (verify_chunk returned \
+                         None); serve without --spec-k"
+                    );
+                }
+                Err(e) => {
+                    let transient = fault::is_transient(&e);
+                    sched.slots_mut()[p] = Some(sl);
+                    self.engine.retire_faulted(
+                        sched.slots_mut(),
+                        p,
+                        done,
+                        requeue,
+                        transient,
+                        &format!("speculative verify: {e:#}"),
+                    );
+                    self.vstate[p] = None;
+                    self.engine.zero_lane_rows(vlane, 0);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One verify round for pair `p` (slot taken out of its lane).
+    /// Returns `Ok(None)` when the backend has no native verify path,
+    /// otherwise `Ok(Some(finished))`.
+    fn verify_slot(&mut self, sl: &mut Slot, p: usize, vlane: usize) -> Result<Option<bool>> {
+        let (s, d, l, vb) = {
+            let sp = &self.engine.spec;
+            (sp.seq_len, sp.d_model, sp.n_layers, sp.vocab)
+        };
+        let id = sl.request_id();
+        let pp = sl.request().prompt.len();
+        let max_new = sl.request().max_new;
+
+        // first verify round of this occupant: fresh verifier state
+        let fresh = !matches!(&self.vstate[p], Some(st) if st.req_id == id);
+        if fresh {
+            self.engine.zero_lane_rows(vlane, 0);
+            let pool = self.engine.page_pool();
+            let vkv = self
+                .verify_plans
+                .as_ref()
+                .map(|plans| SlotKv::from_plans_in(plans, d, s, pool));
+            self.vstate[p] = Some(PairState { req_id: id, vkv, vfill: 0, confirmed: 0 });
+        }
+        let g = self.vstate[p].as_ref().unwrap().confirmed;
+        let f = pp + g - 1; // feed position of the last confirmed token
+        let m = sl.output().len() - pp - g; // proposals to judge
+        let rem = (max_new - g).min(s - pp - g);
+        debug_assert!(m >= 1 && m <= rem, "verify round with {m} proposals (budget {rem})");
+        debug_assert_eq!(sl.fill_rows(), f + m, "draft fill out of sync with proposals");
+
+        // catch-up: the verifier lane needs rows 0..f (tokens output[0..f])
+        let vfill = self.vstate[p].as_ref().unwrap().vfill;
+        if vfill < f && !self.catch_up(sl, p, vlane, vfill, f)? {
+            return Ok(None);
+        }
+
+        self.engine.trace_event(Some(id), TraceEvent::Draft { k: m });
+        let toks: Vec<i32> = sl.output()[f..].to_vec(); // last confirmed + m proposals
+
+        // judge: a = accepted prefix length; y = the verifier's token for
+        // output index P + g + a (correction on a reject, bonus on an
+        // all-accept); bonus_rows = the verifier's KV row for position
+        // f + m, which the draft adopts when the bonus token is taken
+        let (a, y, bonus_rows) = if self.verify_plans.is_none() {
+            // raw verifier lane: one batched call scores every proposal;
+            // intra-chunk tokens see each other's raw scratch rows,
+            // exactly like the baseline per-token schedule
+            let Some(v) = self.engine.verify_with_retry(&toks, f, vlane)? else {
+                return Ok(None);
+            };
+            let mut a = 0usize;
+            while a < m
+                && sl.output()[pp + g + a] == greedy_argmax(&v.logits[a * vb..(a + 1) * vb])
+            {
+                a += 1;
+            }
+            let y = greedy_argmax(&v.logits[a * vb..(a + 1) * vb]);
+            let (ka, va) = gather_rows(&v.kv.k_rows, &v.kv.v_rows, l, m + 1, 0, a + 1, d);
+            self.commit_verifier_rows(p, vlane, f, a + 1, &ka, &va);
+            let bonus =
+                (a == m).then(|| gather_rows(&v.kv.k_rows, &v.kv.v_rows, l, m + 1, m, 1, d));
+            (a, y, bonus)
+        } else {
+            // quantized verifier lane: intra-chunk raw rows would diverge
+            // from verifier-alone quantized decode, so feed one token per
+            // call and re-quantize (append + resync) between tokens
+            let mut a = 0usize;
+            let mut y;
+            let mut bonus = None;
+            loop {
+                let Some(v) = self.engine.verify_with_retry(&toks[a..a + 1], f + a, vlane)?
+                else {
+                    return Ok(None);
+                };
+                y = greedy_argmax(&v.logits[..vb]);
+                self.commit_verifier_rows(p, vlane, f + a, 1, &v.kv.k_rows, &v.kv.v_rows);
+                if a == m {
+                    bonus = Some((v.kv.k_rows, v.kv.v_rows));
+                    break;
+                }
+                if sl.output()[pp + g + a] != y {
+                    break; // y is the correction for index P + g + a
+                }
+                a += 1;
+            }
+            (a, y, bonus)
+        };
+
+        // commit the verdict
+        let emitted;
+        if a < m {
+            // reject: drop the divergent tail, take the verifier's token
+            let keep = f + a + 1; // draft rows for tokens output[0..=f+a]
+            let rolled = sl.fill_rows() - keep; // = m - a - 1
+            let out = sl.output_mut();
+            out.truncate(pp + g + a);
+            out.push(y);
+            if let Some(kv) = sl.kv_mut() {
+                kv.truncate(keep);
+            }
+            sl.set_fill(keep);
+            self.engine.zero_lane_rows(p, keep);
+            emitted = a + 1;
+            self.engine.serving.spec_accepted += a as u64;
+            self.engine.serving.spec_rejected += 1;
+            self.engine.serving.spec_rollback_rows += rolled as u64;
+            self.engine.trace_event(Some(id), TraceEvent::Verify { accepted: a });
+            self.engine.trace_event(Some(id), TraceEvent::Rollback { rows: rolled });
+        } else if m < rem {
+            // all accepted: the verifier's next token rides along free and
+            // the draft adopts the verifier's row for position f + m
+            sl.output_mut().push(y);
+            let (bk, bv) = bonus_rows.expect("all-accept without a bonus row");
+            if let Some(kv) = sl.kv_mut() {
+                kv.append_chunk(1, &bk, &bv);
+            } else {
+                self.engine.write_lane_rows(p, f + m, 1, &bk, &bv);
+            }
+            sl.set_fill(f + m + 1);
+            emitted = m + 1;
+            self.engine.serving.spec_accepted += m as u64;
+            self.engine.serving.spec_forced += 1;
+            self.engine.trace_event(Some(id), TraceEvent::Verify { accepted: m });
+        } else {
+            // all accepted at the exact token/context budget: the bonus
+            // token would overshoot — plain greedy decode stops at
+            // exactly rem tokens, so drop it
+            emitted = m;
+            self.engine.serving.spec_accepted += m as u64;
+            self.engine.trace_event(Some(id), TraceEvent::Verify { accepted: m });
+        }
+
+        self.engine.serving.spec_rounds += 1;
+        self.engine.serving.spec_accept.record(a as f64 / m as f64);
+        self.engine.metrics.tokens_generated += emitted as u64;
+        if g == 0 {
+            // first *confirmed* token: TTFT is deferred past drafting
+            self.engine.serving.ttft.record(sl.arrival().elapsed().as_secs_f64());
+        }
+        let st = self.vstate[p].as_mut().unwrap();
+        st.confirmed = g + emitted;
+        let g2 = g + emitted;
+        Ok(Some(g2 >= max_new || pp + g2 >= s))
+    }
+
+    /// Bring the verifier lane up to the draft's confirmed history: rows
+    /// `from..to` (tokens `output[from..to]`), preferring the backend's
+    /// native multi-token prefill path (chunks carry no logits — catch-up
+    /// never samples) and falling back to single-token verify calls when
+    /// there is none. Returns `false` if the backend has neither path.
+    fn catch_up(
+        &mut self,
+        sl: &Slot,
+        p: usize,
+        vlane: usize,
+        from: usize,
+        to: usize,
+    ) -> Result<bool> {
+        let toks: Vec<i32> = sl.output()[from..to].to_vec();
+        let n = toks.len();
+        if let Some(ck) = self.engine.chunk_with_retry(&toks, from, vlane)? {
+            self.commit_verifier_rows(p, vlane, from, n, &ck.k_rows, &ck.v_rows);
+            return Ok(true);
+        }
+        for (i, t) in toks.iter().enumerate() {
+            let Some(v) = self.engine.verify_with_retry(&[*t], from + i, vlane)? else {
+                return Ok(false);
+            };
+            self.commit_verifier_rows(p, vlane, from + i, 1, &v.kv.k_rows, &v.kv.v_rows);
+        }
+        Ok(true)
+    }
+
+    /// Land `n` verified rows (layer-major `[L, n, D]`, starting at row
+    /// `pos0`) in pair `p`'s verifier lane: quantize-append + resync for a
+    /// packed verifier, raw slab write for the fp16 one. Advances `vfill`.
+    fn commit_verifier_rows(
+        &mut self,
+        p: usize,
+        vlane: usize,
+        pos0: usize,
+        n: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) {
+        let mut st = self.vstate[p].take().expect("verifier rows without pair state");
+        debug_assert_eq!(st.vfill, pos0, "verifier rows must append at the fill");
+        match st.vkv.as_mut() {
+            Some(vkv) => {
+                vkv.append_chunk(n, k_rows, v_rows);
+                let (k_lane, v_lane) = self.engine.lane_mut(vlane);
+                vkv.sync_into(k_lane, v_lane);
+            }
+            None => self.engine.write_lane_rows(vlane, pos0, n, k_rows, v_rows),
+        }
+        st.vfill = pos0 + n;
+        self.vstate[p] = Some(st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{DecodeEngine, GenRequest, SynthBackend};
+    use crate::models::LmSpec;
+
+    fn reqs() -> Vec<GenRequest> {
+        vec![
+            GenRequest { id: 1, prompt: vec![3, 9, 4], max_new: 8 },
+            GenRequest { id: 2, prompt: vec![7, 1], max_new: 64 }, // context-capped
+            GenRequest { id: 3, prompt: vec![5, 2, 8, 2, 8, 1], max_new: 4 },
+        ]
+    }
+
+    fn plain_reference(kv: &QuantPolicy) -> Vec<(u64, Vec<i32>)> {
+        let spec = LmSpec::tiny();
+        let mut eng = DecodeEngine::with_backend(
+            spec,
+            Box::new(SynthBackend::new(&spec)),
+            kv,
+            2,
+        );
+        let mut sched = Scheduler::new(2, 8);
+        for r in reqs() {
+            assert!(sched.enqueue(r).is_none());
+        }
+        let mut out: Vec<(u64, Vec<i32>)> = eng
+            .serve_continuous(&mut sched)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        out.sort();
+        out
+    }
+
+    fn spec_run(draft: &str, verify: &str, k: usize) -> (Vec<(u64, Vec<i32>)>, DecodeEngine) {
+        let spec = LmSpec::tiny();
+        let engine = DecodeEngine::with_backend(
+            spec,
+            Box::new(SynthBackend::new(&spec)),
+            &QuantPolicy::parse(draft).unwrap(),
+            4,
+        );
+        let mut se = SpecEngine::new(engine, SpecPolicy::parse(k, verify).unwrap()).unwrap();
+        let mut sched = se.scheduler(8);
+        for r in reqs() {
+            assert!(sched.enqueue(r).is_none());
+        }
+        let mut out: Vec<(u64, Vec<i32>)> = se
+            .serve_continuous(&mut sched)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        out.sort();
+        (out, se.into_engine())
+    }
+
+    #[test]
+    fn new_rejects_bad_configs() {
+        let spec = LmSpec::tiny();
+        let eng = DecodeEngine::with_backend(
+            spec,
+            Box::new(SynthBackend::new(&spec)),
+            &QuantPolicy::fp16(),
+            1,
+        );
+        assert!(SpecEngine::new(eng, SpecPolicy::parse(4, "fp16").unwrap()).is_err());
+        let eng = DecodeEngine::with_backend(
+            spec,
+            Box::new(SynthBackend::new(&spec)),
+            &QuantPolicy::fp16(),
+            4,
+        );
+        assert!(SpecEngine::new(eng, SpecPolicy::parse(0, "fp16").unwrap()).is_err());
+    }
+
+    #[test]
+    fn spec_matches_fp16_verifier_alone_and_counters_telescope() {
+        let want = plain_reference(&QuantPolicy::fp16());
+        let (got, eng) = spec_run("nxfp4", "fp16", 3);
+        assert_eq!(got, want, "speculative output diverged from verifier-alone decode");
+        let s = &eng.serving;
+        assert!(s.spec_rounds > 0);
+        assert_eq!(
+            s.spec_accepted + s.spec_rejected + s.spec_forced,
+            eng.metrics.tokens_generated,
+            "accept/reject/bonus counters must telescope to tokens generated"
+        );
+        assert_eq!(s.spec_accept.count(), s.spec_rounds);
+    }
+
+    #[test]
+    fn spec_matches_quantized_verifier_alone() {
+        // nxfp6 verifier: one token per verify call, re-quantized between
+        // — must equal a plain engine serving at nxfp6
+        let want = plain_reference(&QuantPolicy::parse("nxfp6").unwrap());
+        let (got, eng) = spec_run("nxfp4", "nxfp6", 4);
+        assert_eq!(got, want, "quantized-verifier spec diverged from nxfp6-alone decode");
+        assert!(eng.serving.spec_rounds > 0);
+    }
+}

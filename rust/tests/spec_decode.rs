@@ -1,0 +1,305 @@
+//! Precision-speculative decoding integration tests: the nxfp draft lane
+//! proposes, the high-precision verifier lane judges, and the served
+//! output must be **bit-identical** to the verifier serving alone — for
+//! every draft depth, under rejection-heavy drafts, under injected
+//! faults, and composed with prefix sharing. Everything runs on the
+//! deterministic [`SynthBackend`]; no artifacts needed.
+
+use std::time::Duration;
+
+use nxfp::coordinator::fault::{FaultPlan, FaultStats};
+use nxfp::coordinator::scheduler::{SchedMode, Scheduler};
+use nxfp::coordinator::server::{ServeOpts, ServerHandle};
+use nxfp::coordinator::{DecodeEngine, FinishReason, GenRequest, GenResponse, SynthBackend};
+use nxfp::formats::QuantPolicy;
+use nxfp::models::LmSpec;
+use nxfp::obs::{check_trace, read_jsonl, TraceSink, TraceSummary, DEFAULT_TRACE_CAP};
+use nxfp::spec::{SpecEngine, SpecPolicy};
+
+/// Deterministic request mix on the tiny spec (seq_len 16): varied prompt
+/// lengths, varied budgets, and one context-capped request (`max_new` far
+/// past the window) so the bonus-token clamp at the budget edge fires.
+fn requests() -> Vec<GenRequest> {
+    (0..6u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: if i % 2 == 0 {
+                vec![1, 2, 3, 4, 5 + i as i32]
+            } else {
+                vec![7 + i as i32, 9]
+            },
+            max_new: if i == 5 { 64 } else { 3 + (i as usize % 3) },
+        })
+        .collect()
+}
+
+/// Verifier-alone reference: a plain engine serving `reqs` at `policy`.
+fn plain_serve(policy: &str, lanes: usize, reqs: &[GenRequest]) -> Vec<GenResponse> {
+    let spec = LmSpec::tiny();
+    let mut eng = DecodeEngine::with_backend(
+        spec,
+        Box::new(SynthBackend::new(&spec)),
+        &QuantPolicy::parse(policy).unwrap(),
+        lanes,
+    );
+    eng.set_prefill_budget(4);
+    let mut sched = Scheduler::new(lanes, Scheduler::DEFAULT_PROMOTE_AFTER);
+    sched.set_prefill_budget(eng.prefill_budget());
+    for r in reqs {
+        assert!(sched.enqueue(r.clone()).is_none());
+    }
+    let mut out = eng.serve_continuous(&mut sched).unwrap();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+/// Speculative run: `max_batch / 2` draft/verifier pairs serving `reqs`,
+/// returning the sorted responses, the unwrapped engine (counters), and
+/// the fault injector's ground truth when a plan was given.
+#[allow(clippy::too_many_arguments)]
+fn spec_serve(
+    draft: &str,
+    verify: &str,
+    k: usize,
+    max_batch: usize,
+    reqs: &[GenRequest],
+    plan: Option<FaultPlan>,
+    prefix_cache: bool,
+    cfg_engine: impl FnOnce(&mut DecodeEngine),
+) -> (Vec<GenResponse>, DecodeEngine, Option<FaultStats>) {
+    let spec = LmSpec::tiny();
+    let mut eng = DecodeEngine::with_backend(
+        spec,
+        Box::new(SynthBackend::new(&spec)),
+        &QuantPolicy::parse(draft).unwrap(),
+        max_batch,
+    );
+    eng.set_prefill_budget(4);
+    let stats = plan.map(|p| eng.inject_faults(&p));
+    cfg_engine(&mut eng);
+    let mut se = SpecEngine::new(eng, SpecPolicy::parse(k, verify).unwrap()).unwrap();
+    let mut sched = se.scheduler(Scheduler::DEFAULT_PROMOTE_AFTER);
+    sched.set_trace_sink(se.engine().trace_sink());
+    sched.set_prefill_budget(se.engine().prefill_budget());
+    if prefix_cache {
+        sched.enable_prefix_cache(se.engine().page_pool(), Scheduler::DEFAULT_PREFIX_ENTRIES);
+    }
+    for r in reqs {
+        assert!(sched.enqueue(r.clone()).is_none());
+    }
+    let mut out = se.serve_continuous(&mut sched).unwrap();
+    out.sort_by_key(|r| r.id);
+    (out, se.into_engine(), stats.map(|s| *s.borrow()))
+}
+
+fn assert_same_tokens(want: &[GenResponse], got: &[GenResponse]) {
+    assert_eq!(want.len(), got.len());
+    for (w, g) in want.iter().zip(got) {
+        assert_eq!(w.id, g.id);
+        assert_eq!(g.reason, FinishReason::Completed, "req {} did not complete", g.id);
+        assert_eq!(w.tokens, g.tokens, "req {} diverged from verifier-alone decode", w.id);
+        assert_eq!(w.generated, g.generated, "req {} token count diverged", w.id);
+    }
+}
+
+/// accept + reject + bonus counters must telescope to every token the
+/// engine reported generated, and every round records one histogram
+/// sample — for any k and any draft/verifier pairing.
+fn assert_counters_coherent(eng: &DecodeEngine) {
+    let s = &eng.serving;
+    assert!(s.spec_rounds > 0, "speculative serving must run verify rounds");
+    assert_eq!(
+        s.spec_accepted + s.spec_rejected + s.spec_forced,
+        eng.metrics.tokens_generated,
+        "accept/reject/bonus counters must telescope to tokens generated"
+    );
+    assert_eq!(s.spec_accept.count(), s.spec_rounds);
+    let rate = s.spec_accept_rate();
+    assert!((0.0..=1.0).contains(&rate), "accept rate {rate} out of range");
+}
+
+#[test]
+fn speculative_output_is_bit_identical_for_every_k() {
+    let want = plain_serve("fp16", 2, &requests());
+    for k in [1usize, 2, 4, 8] {
+        let (got, eng, _) =
+            spec_serve("nxfp4", "fp16", k, 4, &requests(), None, false, |_| {});
+        assert_same_tokens(&want, &got);
+        assert_counters_coherent(&eng);
+    }
+}
+
+#[test]
+fn quantized_verifier_matches_nxfp6_alone_for_every_k() {
+    // the verifier lane re-quantizes between tokens, so speculative
+    // output must equal a *plain nxfp6* engine, not fp16
+    let want = plain_serve("nxfp6", 2, &requests());
+    for k in [1usize, 2, 4, 8] {
+        let (got, eng, _) =
+            spec_serve("nxfp4", "nxfp6", k, 4, &requests(), None, false, |_| {});
+        assert_same_tokens(&want, &got);
+        assert_counters_coherent(&eng);
+    }
+}
+
+#[test]
+fn lossy_drafts_roll_back_and_never_corrupt_output() {
+    // coarser draft formats disagree with fp16 more often; whatever the
+    // rejection rate, the committed output may never drift. At least one
+    // scanned format must actually reject (a draft that never diverges
+    // would leave the rollback path untested).
+    let want = plain_serve("fp16", 2, &requests());
+    let mut fired = false;
+    for draft in ["bfp4", "mxfp4", "nxfp4"] {
+        let (got, eng, _) = spec_serve(draft, "fp16", 4, 4, &requests(), None, false, |_| {});
+        assert_same_tokens(&want, &got);
+        assert_counters_coherent(&eng);
+        let s = &eng.serving;
+        // each reject rolls at most k - 1 provisional rows off the draft
+        assert!(s.spec_rollback_rows <= s.spec_rejected * 3, "rollback rows out of bound");
+        if s.spec_rejected > 0 {
+            fired = true;
+        }
+    }
+    assert!(fired, "no scanned draft format ever rejected");
+}
+
+#[test]
+fn transient_faults_retry_to_bit_identical_output() {
+    // step faults hit the draft micro-steps; chunk faults share a gate
+    // with verify_chunk, so they hit the verifier too. In-place retry
+    // mutates nothing — every seed must stay bit-identical, and at least
+    // one scanned seed must fire.
+    let want = plain_serve("fp16", 2, &requests());
+    for (name, mk) in [
+        ("step", (|seed| FaultPlan::transient_steps(seed, 0.2)) as fn(u64) -> FaultPlan),
+        ("chunk", |seed| FaultPlan { seed, chunk_error_rate: 0.3, ..FaultPlan::default() }),
+    ] {
+        let mut fired = false;
+        for seed in 0..8 {
+            let (got, eng, stats) =
+                spec_serve("nxfp4", "fp16", 3, 4, &requests(), Some(mk(seed)), false, |e| {
+                    e.set_retry_policy(8, Duration::ZERO);
+                });
+            assert_same_tokens(&want, &got);
+            assert_counters_coherent(&eng);
+            assert_eq!(eng.serving.backend_failed, 0, "rate cannot beat 8 retries");
+            let st = stats.unwrap();
+            if st.step_errors + st.chunk_errors > 0 {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "no scanned seed fired a {name} fault");
+    }
+}
+
+#[test]
+fn verify_faults_requeue_and_replay_bit_identically() {
+    // retry budget 0: a verify fault retires the whole pair and requeues
+    // the request at the queue front; replay re-drafts and re-verifies
+    // from the prompt and must land on the same tokens
+    let want = plain_serve("fp16", 2, &requests());
+    let mut fired = false;
+    for seed in 0..12 {
+        let plan = FaultPlan { seed, chunk_error_rate: 0.25, ..FaultPlan::default() };
+        let (got, eng, stats) =
+            spec_serve("nxfp4", "fp16", 3, 4, &requests(), Some(plan), false, |e| {
+                e.set_retry_policy(0, Duration::ZERO);
+                e.set_requeue_max(10_000);
+            });
+        assert_same_tokens(&want, &got);
+        assert_eq!(eng.serving.backend_failed, 0);
+        if stats.unwrap().chunk_errors > 0 {
+            assert!(eng.serving.requeued > 0, "retry budget 0 must route through requeue");
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "no scanned seed fired a verify fault");
+}
+
+#[test]
+fn prefix_adoption_composes_with_speculation() {
+    // one pair (serial admission): the donor registers its prompt pages,
+    // the adopter picks up the 12 shared rows, and both still match the
+    // verifier-alone reference exactly
+    let shared: Vec<i32> = (1..=12).collect();
+    let mut pa = shared.clone();
+    pa.extend([45, 3]);
+    let mut pb = shared;
+    pb.extend([46, 44]);
+    let reqs = vec![
+        GenRequest { id: 0, prompt: pa, max_new: 2 },
+        GenRequest { id: 1, prompt: pb, max_new: 2 },
+    ];
+    let want = plain_serve("fp16", 1, &reqs);
+    let (got, eng, _) = spec_serve("nxfp4", "fp16", 3, 2, &reqs, None, true, |e| {
+        e.set_kv_page_rows(4);
+    });
+    assert_same_tokens(&want, &got);
+    assert_eq!(eng.serving.prefix_hits, 1, "the adopter must reuse the donor's pages");
+    assert_eq!(eng.serving.prefix_rows.max(), 12.0);
+}
+
+#[test]
+fn trace_checker_accepts_a_speculative_trace() {
+    // draft/verify/rollback events must satisfy the trace state machine
+    // and reconcile with the counter summary under `nxfp trace check`
+    let (_, eng, _) = spec_serve("bfp4", "fp16", 4, 4, &requests(), None, false, |e| {
+        e.set_trace_sink(TraceSink::enabled(DEFAULT_TRACE_CAP));
+    });
+    let path = std::env::temp_dir().join(format!("nxfp_spec_trace_{}.jsonl", std::process::id()));
+    let summary = TraceSummary::from_serving(&eng.serving);
+    eng.trace_sink().write_jsonl(&path, &summary).unwrap();
+    let trace = read_jsonl(&path).unwrap();
+    let violations = check_trace(&trace);
+    assert!(violations.is_empty(), "trace violations: {violations:?}");
+    assert!(eng.serving.spec_rounds > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn server_handle_serves_speculatively_end_to_end() {
+    // the threaded front-end: --spec-k through ServeOpts, synth backend
+    let want = plain_serve("fp16", 2, &requests());
+    let opts = ServeOpts {
+        max_batch: 4,
+        prefill_budget: 4,
+        prefix_cache: false,
+        spec_k: 3,
+        spec_verify: "fp16".to_string(),
+        ..Default::default()
+    };
+    let mut server = ServerHandle::spawn_synth(
+        LmSpec::tiny(),
+        QuantPolicy::parse("nxfp4").unwrap(),
+        opts,
+    );
+    for r in requests() {
+        assert!(server.submit(r));
+    }
+    let mut got: Vec<GenResponse> = (0..requests().len())
+        .map(|_| server.recv().expect("worker died mid-serve"))
+        .collect();
+    got.sort_by_key(|r| r.id);
+    let report = server.shutdown().unwrap();
+    assert_same_tokens(&want, &got);
+    assert!(report.serving.spec_rounds > 0);
+    assert!(report.serving.spec_accept_rate() > 0.0, "accept rate must surface in the report");
+}
+
+#[test]
+fn wave_mode_refuses_speculation() {
+    // wave scheduling has no between-step seam to verify in: the worker
+    // must fail loudly at startup, never silently serve unverified
+    let opts = ServeOpts {
+        max_batch: 4,
+        mode: SchedMode::Wave,
+        spec_k: 2,
+        ..Default::default()
+    };
+    let mut server =
+        ServerHandle::spawn_synth(LmSpec::tiny(), QuantPolicy::parse("nxfp4").unwrap(), opts);
+    assert!(server.shutdown().is_err(), "wave + spec must be a startup error");
+}
